@@ -1,0 +1,117 @@
+"""Model configurations — the tiny Llama-architecture stand-ins.
+
+Single source of truth for the build path; `aot.py` embeds these into
+``artifacts/manifest.json`` so the rust side (``rust/src/model/config.rs``)
+can cross-check its mirrored constants in an integration test.
+
+Dims are chosen so every rotation site has a constructible Hadamard
+(n = m * 2^k, m in {1, 12, 20}), mirroring how QuaRot handles real Llama
+dims with had12/had20 Kronecker blocks:
+
+* llama2-tiny  (7B stand-in):  d=256,          ffn=512  (2^k)
+* llama2-small (13B stand-in): d=320 = 20*16,  ffn=768  = 12*64
+* llama2-large (70B stand-in): d=512,          ffn=1280 = 20*64
+* llama3-small (8B stand-in):  d=384 = 12*32,  ffn=1024, GQA 6q/2kv
+* llama3-large (70B stand-in): d=640 = 20*32,  ffn=1536 = 12*128, GQA 10q/2kv
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    ffn_dim: int
+    vocab: int
+    head_dim: int = 64
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # MoE (0 experts == dense)
+    n_experts: int = 0
+    top_k: int = 0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def to_dict(self):
+        d = asdict(self)
+        d["kv_dim"] = self.kv_dim
+        return d
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        ModelConfig("llama2-tiny", dim=256, n_layers=4, n_heads=4, n_kv_heads=4,
+                    ffn_dim=512, vocab=512),
+        ModelConfig("llama2-small", dim=320, n_layers=5, n_heads=5, n_kv_heads=5,
+                    ffn_dim=768, vocab=512),
+        ModelConfig("llama2-large", dim=512, n_layers=8, n_heads=8, n_kv_heads=8,
+                    ffn_dim=1280, vocab=512),
+        ModelConfig("llama3-small", dim=384, n_layers=4, n_heads=6, n_kv_heads=2,
+                    ffn_dim=1024, vocab=1024),
+        ModelConfig("llama3-large", dim=640, n_layers=8, n_heads=10, n_kv_heads=2,
+                    ffn_dim=1536, vocab=1024),
+        # MoE stand-ins (Appendix H): dense attention + top-2 routed experts.
+        ModelConfig("mixtral-tiny", dim=256, n_layers=4, n_heads=4, n_kv_heads=4,
+                    ffn_dim=512, vocab=512, n_experts=4, top_k=2),
+    ]
+}
+
+# Sequence geometry shared by all fwd/train artifacts.
+BATCH = 8
+SEQ = 256
+
+# Calibration activation batch: sampled token rows per optimizer step.
+CALIB_TOKENS = 1024
+
+# Hidden sizes for which standalone calibration artifacts are emitted:
+# every model dim plus the shared head_dim (R2 calibration site).
+CALIB_DIMS = sorted({64} | {c.dim for c in CONFIGS.values()})
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Flat, ordered parameter list — the weight-passing convention shared
+    with rust. Order matters: rust builds its input Vec in this order."""
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo"]
+        if cfg.is_moe:
+            names += [f"l{l}.router"]
+            for e in range(cfg.n_experts):
+                names += [f"l{l}.e{e}.wg", f"l{l}.e{e}.wu", f"l{l}.e{e}.wd"]
+        else:
+            names += [f"l{l}.wg", f"l{l}.wu", f"l{l}.wd"]
+    names += ["head"]
+    return names
+
+
+def param_shape(cfg: ModelConfig, name: str) -> tuple[int, ...]:
+    """Shape of each named parameter (all linear weights stored [out, in],
+    applied as x @ W.T — torch nn.Linear convention, matching the paper's
+    Y = X W^T notation)."""
+    d, f, v, kd = cfg.dim, cfg.ffn_dim, cfg.vocab, cfg.kv_dim
+    if name == "embed":
+        return (v, d)
+    if name == "head":
+        return (v, d)
+    leaf = name.split(".")[-1]
+    return {
+        "wq": (cfg.n_heads * cfg.head_dim, d),
+        "wk": (kd, d),
+        "wv": (kd, d),
+        "wo": (d, cfg.n_heads * cfg.head_dim),
+        "wg": (f, d),
+        "wu": (f, d),
+        "wd": (d, f),
+        "router": (cfg.n_experts, d),
+    }[leaf]

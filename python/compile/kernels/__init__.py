@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref)."""
+
+from .hadamard import fwht
+from .quantize import fake_quant
+from .rotate import matmul, rotate
+from .whip import whip_loss
+from . import ref
+
+__all__ = ["fwht", "fake_quant", "matmul", "rotate", "whip_loss", "ref"]

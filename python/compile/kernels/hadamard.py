@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: fast Walsh-Hadamard transform (the online R3/R4
+rotations of the inference graph, Appendix A).
+
+TPU shaping: the whole (BT, n) tile sits in VMEM (n <= 1536 here), so the
+log2(n) butterfly stages run register-to-VMEM without the shared-memory
+staging a CUDA FWHT needs. The stage loop is a Python loop — unrolled at
+trace time into log2(n) reshaped add/sub pairs, which XLA fuses into a
+handful of elementwise ops.
+
+Non-power-of-two orders (12*2^k, 20*2^k) are handled one level up in
+`model.py` by a Kronecker factorization: FWHT on the 2^k factor (this
+kernel) then a dense (m, m) base multiply.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _fwht_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]
+    bt = x.shape[0]
+    h = 1
+    while h < n:
+        x = x.reshape(bt, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(bt, n)
+        h *= 2
+    o_ref[...] = x * (1.0 / jnp.sqrt(float(n)))
+
+
+def fwht(x, *, block_t: int = BLOCK_T, interpret: bool = True):
+    """Orthonormal FWHT along the last axis of x (tokens, n), n = 2^k."""
+    t, n = x.shape
+    assert n & (n - 1) == 0, f"FWHT needs power-of-two length, got {n}"
+    bt = min(block_t, t)
+    assert t % bt == 0, f"tokens {t} not a multiple of block {bt}"
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(x)

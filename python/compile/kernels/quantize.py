@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: per-token asymmetric fake quantization.
+
+TPU shaping: per-token asymmetric quantization reduces along the lane axis
+(min/max of each row) then applies scale/round/dequant element-wise — one
+pass over a (BT, dim) tile, no cross-tile communication. The row must be
+resident in full (the reduction spans it), so tiles are full-width, which
+also matches how a real int4 epilogue would fuse into the preceding GEMM.
+
+The level count arrives as a (1, 1) tensor block rather than a baked
+constant so one compiled artifact serves every bit-width (the paper's
+4-8-16 / 4-4-16 / 4-4-4 settings).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _quant_kernel(x_ref, lv_ref, o_ref):
+    x = x_ref[...]
+    lv = lv_ref[0, 0]
+    mn = jnp.min(x, axis=-1, keepdims=True)
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    scale = (mx - mn) / jnp.maximum(lv - 1.0, 1.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round((x - mn) / safe)
+    o_ref[...] = jnp.where(scale > 0, q * safe + mn, x)
+
+
+def fake_quant(x, n_levels, *, block_t: int = BLOCK_T, interpret: bool = True):
+    """Per-token asymmetric fake quantization of x (tokens, dim) to
+    `n_levels` uniform levels (scalar or () array)."""
+    t, n = x.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, f"tokens {t} not a multiple of block {bt}"
+    lv = jnp.asarray(n_levels, dtype=x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(x, lv)

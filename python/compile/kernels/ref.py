@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel — the L1 correctness ground
+truth. The pytest suite sweeps shapes/values (hypothesis) asserting each
+kernel matches its oracle; the L2 graphs may call either implementation
+(`model.py` uses the kernels inside calibration artifacts and these
+references inside the big forward graphs, where interpret-mode grid
+emulation would dominate runtime)."""
+
+import jax.numpy as jnp
+
+
+def whip_ref(x):
+    """Whip loss (Eq. 4), averaged over tokens: mean_t sum_c exp(-|x_tc|).
+
+    Token-averaging makes the loss (and learning rates) independent of the
+    calibration batch size, matching the per-vector definition in the paper.
+    """
+    return jnp.mean(jnp.sum(jnp.exp(-jnp.abs(x)), axis=-1))
+
+
+def rotate_ref(x, r):
+    """Rotation application O = X @ R."""
+    return x @ r
+
+
+def fake_quant_ref(x, n_levels):
+    """Per-token (row-wise) asymmetric uniform fake quantization.
+
+    scale = (max - min) / (levels - 1), zero-point at min; degenerate rows
+    (constant) pass through unchanged.
+    """
+    mn = jnp.min(x, axis=-1, keepdims=True)
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    scale = (mx - mn) / jnp.maximum(n_levels - 1.0, 1.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round((x - mn) / safe)
+    out = q * safe + mn
+    return jnp.where(scale > 0, out, x)
+
+
+def fwht_ref(x):
+    """Orthonormal fast Walsh-Hadamard transform along the last axis
+    (power-of-two length), matching rust `linalg::fwht_row` ordering."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT needs power-of-two length, got {n}"
+    orig_shape = x.shape
+    x = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+        h *= 2
+    return (x / jnp.sqrt(float(n))).reshape(orig_shape)
+
+
+def quant_error_ref(x, n_levels):
+    """Mean squared fake-quantization error — the 'Quant' ablation
+    objective (Fig 7a) and the quant-error metric of Fig 3b."""
+    return jnp.mean((fake_quant_ref(x, n_levels) - x) ** 2)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: rotation application O = X @ R (and the general
+blocked GEMM it is built from).
+
+TPU shaping: a classic MXU-blocked GEMM. The CUDA threadblock tiling of the
+paper's rotation kernels becomes a BlockSpec grid over
+(rows/BT, cols/BN, depth/BK) with an f32 output block accumulated across
+the K-steps (K innermost so the accumulator block stays resident in VMEM).
+
+Autodiff: Pallas cannot differentiate through grid-accumulator kernels, so
+`rotate` carries a hand-written VJP — the backward passes are themselves
+calls into the same GEMM kernel (dX = dO @ Rᵀ, dR = Xᵀ @ dO), exactly how a
+production QAT stack wires its custom kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128  # row tile
+BLOCK_N = 128  # column tile (MXU lane width multiple)
+BLOCK_K = 128  # contraction depth per step
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BT, BK) @ (BK, BN) — lands on the MXU systolic array on real TPU.
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _block(dim, pref):
+    """Largest tile <= pref that divides dim (dims here are 2^a * m with
+    small m, so this terminates at a sane tile quickly)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(a, b, *, interpret: bool = True):
+    """Blocked Pallas GEMM: (m, k) @ (k, n) -> (m, n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bt, bn, bk = _block(m, BLOCK_T), _block(n, BLOCK_N), _block(k, BLOCK_K)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bt, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+@jax.custom_vjp
+def rotate(x, r):
+    """O = X @ R for X (tokens, n), R (n, n) orthogonal."""
+    return matmul(x, r)
+
+
+def _rotate_fwd(x, r):
+    return matmul(x, r), (x, r)
+
+
+def _rotate_bwd(res, g):
+    x, r = res
+    # dX = g @ Rᵀ ; dR = Xᵀ @ g — both through the same MXU-blocked kernel.
+    return matmul(g, r.T), matmul(x.T, g)
+
+
+rotate.defvjp(_rotate_fwd, _rotate_bwd)

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: Whip loss (Eq. 4) with a hand-written backward kernel.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the CUDA warp-reduction the
+paper would use becomes a row-tiled VPU reduction with a grid-carried (1,1)
+accumulator block — every grid step adds its tile's partial sum into the
+same output block, and step 0 initializes it.
+
+Autodiff: grid-accumulator kernels are not Pallas-differentiable, so the
+VJP is explicit: dL/dx = -sign(x)·exp(-|x|)/tokens, a pure element-wise
+kernel over the same tiling.
+
+`interpret=True` everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO grid emulation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile height. 128 rows keeps the (tile × dim) block plus the
+# accumulator well inside a TPU core's ~16 MiB VMEM for every dim we emit
+# (max 640: 128*640*4 B = 320 KiB/block, double-buffered 640 KiB).
+BLOCK_T = 128
+
+
+def _whip_fwd_kernel(x_ref, o_ref, *, inv_tokens):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = 0.0
+
+    # exp(-|x|) is pure VPU element-wise work; the tile reduction happens
+    # in-register before touching the accumulator.
+    o_ref[0, 0] += jnp.sum(jnp.exp(-jnp.abs(x_ref[...]))) * inv_tokens
+
+
+def _whip_bwd_kernel(x_ref, o_ref, *, inv_tokens):
+    x = x_ref[...]
+    o_ref[...] = -jnp.sign(x) * jnp.exp(-jnp.abs(x)) * inv_tokens
+
+
+def _tile(t, block_t):
+    bt = min(block_t, t)
+    assert t % bt == 0, f"tokens {t} not a multiple of block {bt}"
+    return bt
+
+
+@jax.custom_vjp
+def whip_loss(x):
+    """mean_t sum_c exp(-|x_tc|) for x of shape (tokens, dim)."""
+    return _whip_value(x)
+
+
+def _whip_value(x, *, block_t: int = BLOCK_T, interpret: bool = True):
+    t, _ = x.shape
+    bt = _tile(t, block_t)
+    out = pl.pallas_call(
+        functools.partial(_whip_fwd_kernel, inv_tokens=1.0 / t),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, x.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[0, 0]
+
+
+def whip_grad(x, *, block_t: int = BLOCK_T, interpret: bool = True):
+    """dWhip/dx — exposed for tests; also the backward kernel."""
+    t, n = x.shape
+    bt = _tile(t, block_t)
+    return pl.pallas_call(
+        functools.partial(_whip_bwd_kernel, inv_tokens=1.0 / t),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _whip_fwd(x):
+    return _whip_value(x), x
+
+
+def _whip_bwd(x, g):
+    return (whip_grad(x) * g,)
+
+
+whip_loss.defvjp(_whip_fwd, _whip_bwd)

@@ -1,0 +1,557 @@
+"""L2 — the JAX compute graphs lowered to AOT artifacts.
+
+Contents:
+  * differentiable Householder QR (pure-jnp scan — no LAPACK custom-calls,
+    sign-canonicalized to match ``rust/src/linalg/qr.rs``),
+  * the four calibration objectives (whip / variance / kurtosis / quant),
+  * QR-Orth calibration steps (SGD-momentum and Adam) — Algorithm 1,
+  * the Cayley-SGD baseline step — Algorithm 3 (SpinQuant's optimizer),
+  * the tiny Llama-architecture forward (fp + fake-quant variants, with the
+    online R3/R4 Hadamard sites of Appendix A), NLL outputs for PPL /
+    zero-shot scoring, activation capture for the coordinator,
+  * the SpinQuant-style end-to-end fine-tuning step (fuse R1 in-graph,
+    pseudo-quantize, task loss, Cayley update) used by the overfitting and
+    cost experiments,
+  * an Adam training step for the end-to-end example's tiny-model training.
+
+Everything here runs exactly once, inside ``aot.py``; the rust coordinator
+executes the lowered HLO through PJRT.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import ref
+from .kernels.rotate import rotate
+from .kernels.whip import whip_loss
+
+# --------------------------------------------------------------------------
+# Householder QR (pure jnp, differentiable, sign-canonical)
+# --------------------------------------------------------------------------
+
+
+def householder_qr_q(z):
+    """Orthogonal factor Q of the QR decomposition of square ``z``.
+
+    Implemented as a ``lax.scan`` of Householder reflections so that it
+    (a) lowers to pure HLO (the 0.5.1 CPU runtime cannot run LAPACK
+    custom-calls), (b) differentiates through scan's transpose rule, and
+    (c) matches ``rust/src/linalg/qr.rs`` bit-for-convention: columns are
+    sign-flipped so diag(R) >= 0.
+    """
+    n = z.shape[0]
+    eye = jnp.eye(n, dtype=z.dtype)
+
+    def body(carry, k):
+        r, qt = carry
+        idx = jnp.arange(n)
+        mask = (idx >= k).astype(z.dtype)
+        x = r[:, k] * mask
+        alpha = jnp.sqrt(jnp.sum(x * x) + 1e-30)
+        sign = jnp.where(x[k] >= 0, 1.0, -1.0).astype(z.dtype)
+        v = x + sign * alpha * (idx == k).astype(z.dtype)
+        vnorm2 = jnp.sum(v * v) + 1e-30
+        coef = 2.0 / vnorm2
+        r = r - coef * jnp.outer(v, v @ r)
+        qt = qt - coef * jnp.outer(v, v @ qt)
+        return (r, qt), None
+
+    (r, qt), _ = jax.lax.scan(body, (z, eye), jnp.arange(n))
+    d = jnp.sign(jnp.diagonal(r))
+    d = jnp.where(d == 0, 1.0, d).astype(z.dtype)
+    return qt.T * d[None, :]
+
+
+# --------------------------------------------------------------------------
+# Calibration objectives (rotated activations O = X @ R)
+# --------------------------------------------------------------------------
+
+
+def objective_whip(o):
+    """Whip loss (Eq. 4) via the Pallas kernel."""
+    return whip_loss(o)
+
+
+def objective_variance(o):
+    """Mean per-token variance across channels — the 'Variance' ablation.
+    Norm invariance of R makes this nearly constant (Fig 7a)."""
+    return jnp.mean(jnp.var(o, axis=-1))
+
+
+def objective_kurtosis(o):
+    """Mean per-token excess kurtosis — heavy-tail measure; slow to
+    optimize because rotated activations are already near-Gaussian."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.mean((o - mu) ** 2, axis=-1, keepdims=True)
+    m4 = jnp.mean((o - mu) ** 4, axis=-1)
+    return jnp.mean(m4 / (var[..., 0] ** 2 + 1e-12) - 3.0)
+
+
+def objective_quant(o, bits: int = 4):
+    """Mean squared int4 fake-quant error. ``round`` has zero gradient, so
+    signal only flows through the min/max scale terms — reproducing the
+    paper's observation that direct quant-loss optimization barely moves."""
+    return ref.quant_error_ref(o, float(2 ** bits))
+
+
+OBJECTIVES = {
+    "whip": objective_whip,
+    "variance": objective_variance,
+    "kurtosis": objective_kurtosis,
+    "quant": objective_quant,
+}
+
+
+# --------------------------------------------------------------------------
+# QR-Orth calibration steps (Algorithm 1)
+# --------------------------------------------------------------------------
+
+
+def make_calib_step_sgd(objective: str, momentum: float = 0.9):
+    """One QR-Orth SGD-momentum step on the latent Z.
+
+    (Z, M, X, lr) -> (Z', M', loss). R = qr(Z).Q is recomputed inside the
+    step; the latent Z is unconstrained, which is the whole point — any
+    Euclidean optimizer applies.
+    """
+    obj = OBJECTIVES[objective]
+
+    def loss_fn(z, x):
+        r = householder_qr_q(z)
+        return obj(rotate(x, r))
+
+    def step(z, m, x, lr):
+        loss, g = jax.value_and_grad(loss_fn)(z, x)
+        m_new = momentum * m + g
+        z_new = z - lr * m_new
+        return z_new, m_new, loss
+
+    return step
+
+
+def make_calib_step_adam(objective: str, b1=0.9, b2=0.999, eps=1e-8):
+    """One QR-Orth Adam step: (Z, M, V, t, X, lr) -> (Z', M', V', t', loss)."""
+    obj = OBJECTIVES[objective]
+
+    def loss_fn(z, x):
+        r = householder_qr_q(z)
+        return obj(rotate(x, r))
+
+    def step(z, m, v, t, x, lr):
+        loss, g = jax.value_and_grad(loss_fn)(z, x)
+        t_new = t + 1.0
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** t_new)
+        vhat = v_new / (1 - b2 ** t_new)
+        z_new = z - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return z_new, m_new, v_new, t_new, loss
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Cayley SGD baseline (Algorithm 3) — SpinQuant's manifold optimizer
+# --------------------------------------------------------------------------
+
+
+def make_cayley_step(objective: str, momentum: float = 0.9, q: float = 0.5,
+                     s: int = 2, eps: float = 1e-8):
+    """One Cayley-SGD-with-momentum step directly on the rotation R.
+
+    (R, M, X, lr) -> (R', M', loss). Implements the paper's Algorithm 3:
+    skew-projection of the momentum followed by ``s`` fixed-point
+    iterations of the Cayley retraction — the ~6n^3 extra work QR-Orth
+    avoids (Appendix B.2).
+    """
+    obj = OBJECTIVES[objective]
+
+    def loss_fn(r, x):
+        return obj(rotate(x, r))
+
+    def step(r, m, x, lr):
+        loss, g = jax.value_and_grad(loss_fn)(r, x)
+        m1 = momentum * m - g
+        w_hat = m1 @ r.T - 0.5 * r @ (r.T @ m1 @ r.T)
+        w = w_hat - w_hat.T
+        m2 = w @ r
+        wnorm = jnp.sqrt(jnp.sum(w * w))
+        alpha = jnp.minimum(lr, 2.0 * q / (wnorm + eps))
+        y = r + alpha * m2
+        for _ in range(s):
+            y = r + (alpha / 2.0) * (w @ (r + y))
+        return y, m2, loss
+
+    return step
+
+
+def make_cayley_step_adam(objective: str, b1=0.9, b2=0.999, q: float = 0.5,
+                          s: int = 2, eps: float = 1e-8):
+    """Cayley-Adam variant: Adam preconditioning of the Euclidean gradient
+    followed by the same skew-projection + retraction.
+    (R, M, V, t, X, lr) -> (R', M', V', t', loss)."""
+    obj = OBJECTIVES[objective]
+
+    def loss_fn(r, x):
+        return obj(rotate(x, r))
+
+    def step(r, m, v, t, x, lr):
+        loss, g = jax.value_and_grad(loss_fn)(r, x)
+        t_new = t + 1.0
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** t_new)
+        vhat = v_new / (1 - b2 ** t_new)
+        gp = mhat / (jnp.sqrt(vhat) + eps)
+        w_hat = -gp @ r.T - 0.5 * r @ (r.T @ (-gp) @ r.T)
+        w = w_hat - w_hat.T
+        wnorm = jnp.sqrt(jnp.sum(w * w))
+        alpha = jnp.minimum(lr, 2.0 * q / (wnorm + eps))
+        y = r + alpha * (w @ r)
+        for _ in range(s):
+            y = r + (alpha / 2.0) * (w @ (r + y))
+        return y, m_new, v_new, t_new, loss
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Hadamard transforms for the in-graph R3/R4 sites
+# --------------------------------------------------------------------------
+
+
+def _legendre(a: int, p: int) -> int:
+    a %= p
+    if a == 0:
+        return 0
+    return 1 if pow(a, (p - 1) // 2, p) == 1 else -1
+
+
+@functools.lru_cache(maxsize=None)
+def _paley_base(m: int):
+    """Paley-I ±1 Hadamard matrix of order m in {12, 20} as a tuple-of-
+    tuples (hashable for the lru_cache); mirrors rust `linalg::hadamard`."""
+    q = m - 1
+    rows = []
+    for i in range(m):
+        row = []
+        for j in range(m):
+            if i == 0 and j == 0:
+                s = 0
+            elif i == 0:
+                s = 1
+            elif j == 0:
+                s = -1
+            else:
+                s = _legendre(i - j, q)
+            row.append(float(s + (1 if i == j else 0)))
+        rows.append(tuple(row))
+    return tuple(rows)
+
+
+def hadamard_transform(x):
+    """x @ H_n along the last axis, H_n orthonormal, n = m * 2^k with
+    m in {1, 12, 20}. Matches rust ``linalg::hadamard_matrix`` (Sylvester
+    doubling prepends the 2^k factor: H_n = H_{2^k} (x) H_m)."""
+    n = x.shape[-1]
+    m = n
+    while m % 2 == 0:
+        m //= 2
+    if m == 3:
+        m = 12
+    elif m == 5:
+        m = 20
+    elif m != 1:
+        raise ValueError(f"no Hadamard construction for order {n}")
+    p2 = n // m
+    if m == 1:
+        return ref.fwht_ref(x)
+    base = jnp.asarray(_paley_base(m), dtype=x.dtype) / jnp.sqrt(float(m))
+    shape = x.shape
+    # index i = a*m + b (a over 2^k, b over m): FWHT over a, base over b.
+    xr = x.reshape(*shape[:-1], p2, m)
+    xr = jnp.swapaxes(xr, -1, -2)            # (..., m, p2)
+    xr = ref.fwht_ref(xr)                    # FWHT over the 2^k axis
+    xr = jnp.swapaxes(xr, -1, -2)            # (..., p2, m)
+    xr = xr @ base                           # dense base multiply
+    return xr.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Tiny Llama-architecture forward
+# --------------------------------------------------------------------------
+
+
+def _top_k(x, k):
+    """Iterative top-k over the last axis. `lax.top_k` lowers to an HLO
+    `topk(..., largest=true)` attribute the xla_extension 0.5.1 text
+    parser rejects; this unrolled argmax version lowers to plain HLO
+    (k is tiny — the MoE top-2)."""
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i)
+        cur = cur - jax.nn.one_hot(i, x.shape[-1], dtype=x.dtype) * jnp.float32(1e30)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def rmsnorm(x, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, theta):
+    """Rotary embedding over (B, H, T, hd)."""
+    b, h, t, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=x.dtype) / half)
+    ang = jnp.arange(t, dtype=x.dtype)[:, None] * freqs[None, :]
+    cos = jnp.cos(ang)[None, None]
+    sin = jnp.sin(ang)[None, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _fq_act(x, levels):
+    """Per-token asymmetric fake quant over the last axis; `levels` is a
+    traced scalar — levels >= 2^15 means 'off' (the fp16 settings)."""
+    return jnp.where(levels >= 32767.0, x, ref.fake_quant_ref(x, levels))
+
+
+def _fq_weight(w, bits: int):
+    """Per-output-channel symmetric fake quant (host-side quantization is
+    the rust default; this in-graph version feeds the SpinQuant-sim e2e
+    step where W depends on the trainable R1)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-10)
+    return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
+
+
+def forward_nll(cfg: configs.ModelConfig, params: dict, tokens,
+                a_levels=None, kv_levels=None, use_had=None):
+    """Causal-LM forward returning per-position NLL (B, T-1).
+
+    ``a_levels``/``kv_levels`` are traced scalars (quant level counts) or
+    None for the pure fp path; ``use_had`` (traced 0/1 scalar or None)
+    gates the online R3/R4 Hadamard sites — when 1, the caller must pass
+    ``wd`` pre-fused with H_f (rust `rotation::fuse_r4`).
+    """
+    eps = cfg.norm_eps
+    b, t = tokens.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = params["embed"][tokens]  # (B, T, d)
+
+    fq = (lambda v: _fq_act(v, a_levels)) if a_levels is not None else (lambda v: v)
+    fqkv = (lambda v: _fq_act(v, kv_levels)) if kv_levels is not None else (lambda v: v)
+
+    def maybe_had(v):
+        if use_had is None:
+            return v
+        return jnp.where(use_had > 0.5, hadamard_transform(v), v)
+
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+
+    for l in range(cfg.n_layers):
+        p = lambda leaf: params[f"l{l}.{leaf}"]
+        h = rmsnorm(x, eps)
+        hq = fq(h)
+        q = (hq @ p("wq").T).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        k = (hq @ p("wk").T).reshape(b, t, nkv, hd).transpose(0, 2, 1, 3)
+        v = (hq @ p("wv").T).reshape(b, t, nkv, hd).transpose(0, 2, 1, 3)
+        q = rope(q, cfg.rope_theta)
+        k = rope(k, cfg.rope_theta)
+        # R3: per-head online Hadamard — cancels inside q·kᵀ, but K enters
+        # the (quantized) KV cache in the rotated basis.
+        q = maybe_had(q)
+        k = maybe_had(k)
+        k = fqkv(k)
+        v = fqkv(v)
+        if nkv != nh:  # GQA: repeat kv heads across query groups
+            rep = nh // nkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        scores = q @ jnp.swapaxes(k, -1, -2) / math.sqrt(hd)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, nh * hd)
+        out = fq(out)
+        x = x + out @ p("wo").T
+
+        h2 = rmsnorm(x, eps)
+        h2q = fq(h2)
+        if cfg.is_moe:
+            gate_logits = h2q @ p("router").T  # (B, T, E)
+            topv, topi = _top_k(gate_logits, cfg.top_k)
+            gates = jax.nn.softmax(topv, axis=-1)
+            ffn_out = jnp.zeros_like(x)
+            for e in range(cfg.n_experts):
+                pe = lambda leaf: params[f"l{l}.e{e}.{leaf}"]
+                a = jax.nn.silu(h2q @ pe("wg").T) * (h2q @ pe("wu").T)
+                a = maybe_had(a)
+                a = fq(a)
+                y = a @ pe("wd").T
+                # weight of expert e = sum of gate probs where topi == e
+                w_e = jnp.sum(jnp.where(topi == e, gates, 0.0), axis=-1)
+                ffn_out = ffn_out + w_e[..., None] * y
+            x = x + ffn_out
+        else:
+            a = jax.nn.silu(h2q @ p("wg").T) * (h2q @ p("wu").T)
+            a = maybe_had(a)  # R4 (inverse fused into wd by the caller)
+            a = fq(a)
+            x = x + a @ p("wd").T
+
+    h = rmsnorm(x, eps)
+    logits = h @ params["head"].T  # (B, T, V)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+    return nll  # (B, T-1)
+
+
+def capture_sites(cfg: configs.ModelConfig, params: dict, tokens):
+    """Forward pass that records the calibration sites:
+
+    returns (x_sites, v_sites) with
+      x_sites (2L, B*T, d)  — post-RMSNorm hidden states feeding the
+                               attention and FFN linears (the R1 site),
+      v_sites (L, B*T, kv)  — value-projection outputs (the R2 site).
+    """
+    eps = cfg.norm_eps
+    b, t = tokens.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = params["embed"][tokens]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    xs, vs = [], []
+
+    for l in range(cfg.n_layers):
+        p = lambda leaf: params[f"l{l}.{leaf}"]
+        h = rmsnorm(x, eps)
+        xs.append(h.reshape(b * t, -1))
+        q = (h @ p("wq").T).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        k = (h @ p("wk").T).reshape(b, t, nkv, hd).transpose(0, 2, 1, 3)
+        v = (h @ p("wv").T).reshape(b, t, nkv, hd).transpose(0, 2, 1, 3)
+        vs.append(v.transpose(0, 2, 1, 3).reshape(b * t, nkv * hd))
+        q = rope(q, cfg.rope_theta)
+        k = rope(k, cfg.rope_theta)
+        if nkv != nh:
+            rep = nh // nkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        scores = q @ jnp.swapaxes(k, -1, -2) / math.sqrt(hd)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, nh * hd)
+        x = x + out @ p("wo").T
+        h2 = rmsnorm(x, eps)
+        xs.append(h2.reshape(b * t, -1))
+        if cfg.is_moe:
+            gate_logits = h2 @ p("router").T
+            topv, topi = _top_k(gate_logits, cfg.top_k)
+            gates = jax.nn.softmax(topv, axis=-1)
+            ffn_out = jnp.zeros_like(x)
+            for e in range(cfg.n_experts):
+                pe = lambda leaf: params[f"l{l}.e{e}.{leaf}"]
+                a = jax.nn.silu(h2 @ pe("wg").T) * (h2 @ pe("wu").T)
+                y = a @ pe("wd").T
+                w_e = jnp.sum(jnp.where(topi == e, gates, 0.0), axis=-1)
+                ffn_out = ffn_out + w_e[..., None] * y
+            x = x + ffn_out
+        else:
+            a = jax.nn.silu(h2 @ p("wg").T) * (h2 @ p("wu").T)
+            x = x + a @ p("wd").T
+
+    return jnp.stack(xs), jnp.stack(vs)
+
+
+# --------------------------------------------------------------------------
+# SpinQuant-style end-to-end step (the expensive baseline)
+# --------------------------------------------------------------------------
+
+
+def fuse_r1(cfg: configs.ModelConfig, params: dict, r1):
+    """Fuse a global rotation R1 into the weights (Appendix A):
+    input-side weights get W @ R1, output-side get R1ᵀ @ W, embeddings and
+    head rotate rows. Exact — fp outputs are unchanged."""
+    out = {}
+    for name, w in params.items():
+        leaf = name.split(".")[-1]
+        if leaf in ("embed", "head"):
+            out[name] = w @ r1
+        elif leaf in ("wq", "wk", "wv", "wg", "wu", "router"):
+            out[name] = w @ r1
+        elif leaf in ("wo", "wd"):
+            out[name] = r1.T @ w
+        else:
+            out[name] = w
+    return out
+
+
+def make_spin_step(cfg: configs.ModelConfig, wbits: int = 4,
+                   a_bits: int = 4, momentum: float = 0.9,
+                   q: float = 0.5, s: int = 2, eps: float = 1e-8):
+    """SpinQuant-sim: one end-to-end Cayley step on R1.
+
+    (R1, M, *weights, tokens, lr) -> (R1', M', loss). In-graph: fuse R1,
+    pseudo-quantize weights and activations, task cross-entropy loss,
+    Cayley retraction. Deliberately holds the whole computation graph —
+    this is the memory/time cost Table 3 contrasts with DartQuant.
+    """
+    a_levels = float(2 ** a_bits)
+
+    def loss_fn(r1, params, tokens):
+        fused = fuse_r1(cfg, params, r1)
+        fused = {
+            k: (_fq_weight(w, wbits) if k not in ("embed", "head") else w)
+            for k, w in fused.items()
+        }
+        nll = forward_nll(cfg, fused, tokens, a_levels=jnp.asarray(a_levels))
+        return jnp.mean(nll)
+
+    def step(r1, m, params, tokens, lr):
+        loss, g = jax.value_and_grad(loss_fn)(r1, params, tokens)
+        m1 = momentum * m - g
+        w_hat = m1 @ r1.T - 0.5 * r1 @ (r1.T @ m1 @ r1.T)
+        w = w_hat - w_hat.T
+        m2 = w @ r1
+        wnorm = jnp.sqrt(jnp.sum(w * w))
+        alpha = jnp.minimum(lr, 2.0 * q / (wnorm + eps))
+        y = r1 + alpha * m2
+        for _ in range(s):
+            y = r1 + (alpha / 2.0) * (w @ (r1 + y))
+        return y, m2, loss
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Training step (Adam) for the end-to-end example
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: configs.ModelConfig, b1=0.9, b2=0.98, eps=1e-8):
+    """(params, m, v, t, tokens, lr) -> (params', m', v', t', loss) where
+    params/m/v are dicts over configs.param_names(cfg)."""
+
+    def loss_fn(params, tokens):
+        return jnp.mean(forward_nll(cfg, params, tokens))
+
+    def step(params, m, v, t, tokens, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        t_new = t + 1.0
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            new_m[k] = b1 * m[k] + (1 - b1) * g
+            new_v[k] = b2 * v[k] + (1 - b2) * g * g
+            mhat = new_m[k] / (1 - b1 ** t_new)
+            vhat = new_v[k] / (1 - b2 ** t_new)
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v, t_new, loss
+
+    return step

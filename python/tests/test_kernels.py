@@ -1,0 +1,183 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes/values with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, fwht, ref, whip_loss
+from compile.kernels.rotate import matmul, rotate
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- whip ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 64, 128, 256, 512]),
+    n=st.sampled_from([8, 64, 256, 320]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 30.0),
+)
+def test_whip_matches_ref(t, n, seed, scale):
+    x = rand(seed, (t, n), scale)
+    np.testing.assert_allclose(whip_loss(x), ref.whip_ref(x), rtol=2e-4, atol=1e-5)
+
+
+def test_whip_grad_matches_autodiff_of_ref():
+    x = rand(0, (128, 64))
+    g = jax.grad(lambda x: whip_loss(x))(x)
+    gref = jax.grad(lambda x: ref.whip_ref(x))(x)
+    np.testing.assert_allclose(g, gref, rtol=1e-4, atol=1e-6)
+
+
+def test_whip_of_zeros_is_dim():
+    # exp(0) = 1 summed over channels.
+    x = jnp.zeros((64, 32))
+    assert float(whip_loss(x)) == pytest.approx(32.0, rel=1e-5)
+
+
+def test_whip_decreases_with_magnitude():
+    small = jnp.full((64, 32), 0.1)
+    large = jnp.full((64, 32), 5.0)
+    assert float(whip_loss(large)) < float(whip_loss(small))
+
+
+# -------------------------------------------------------------- rotate ----
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 256, 320, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rotate_matches_ref(t, n, seed):
+    x = rand(seed, (t, n))
+    r = jnp.linalg.qr(rand(seed + 1, (n, n), 1.0))[0]
+    np.testing.assert_allclose(
+        rotate(x, r), ref.rotate_ref(x, r), rtol=1e-3, atol=1e-3)
+
+
+def test_rotate_vjp_matches_ref_vjp():
+    x = rand(0, (128, 64))
+    r = jnp.linalg.qr(rand(1, (64, 64), 1.0))[0]
+
+    def f(x, r):
+        return jnp.sum(jnp.sin(rotate(x, r)))
+
+    def fr(x, r):
+        return jnp.sum(jnp.sin(ref.rotate_ref(x, r)))
+
+    gx, gr = jax.grad(f, argnums=(0, 1))(x, r)
+    gxr, grr = jax.grad(fr, argnums=(0, 1))(x, r)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gr, grr, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([32, 100, 256]),
+    k=st.sampled_from([64, 320]),
+    n=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_general_matmul_odd_shapes(m, k, n, seed):
+    a = rand(seed, (m, k), 1.0)
+    b = rand(seed + 7, (k, n), 1.0)
+    np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_rotate_preserves_norms():
+    x = rand(5, (128, 256))
+    r = jnp.linalg.qr(rand(6, (256, 256), 1.0))[0]
+    o = rotate(x, r)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=1), jnp.linalg.norm(o, axis=1), rtol=1e-3)
+
+
+# ---------------------------------------------------------- fake_quant ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 64, 128, 256]),
+    n=st.sampled_from([16, 64, 320]),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(t, n, bits, seed):
+    x = rand(seed, (t, n), 10.0)
+    lv = float(2**bits)
+    np.testing.assert_allclose(
+        fake_quant(x, lv), ref.fake_quant_ref(x, lv), rtol=1e-5, atol=1e-5)
+
+
+def test_fake_quant_level_count():
+    x = rand(3, (64, 256), 10.0)
+    y = np.asarray(fake_quant(x, 16.0))
+    for row in y:
+        assert len(np.unique(np.round(row, 5))) <= 16
+
+
+def test_fake_quant_constant_row_passthrough():
+    x = jnp.full((64, 32), 3.25)
+    np.testing.assert_allclose(fake_quant(x, 16.0), x)
+
+
+def test_fake_quant_error_bound():
+    x = rand(4, (128, 64), 5.0)
+    y = fake_quant(x, 16.0)
+    step = (jnp.max(x, 1) - jnp.min(x, 1)) / 15.0
+    assert jnp.all(jnp.abs(y - x) <= step[:, None] / 2 + 1e-5)
+
+
+def test_more_levels_less_error():
+    x = rand(9, (128, 64), 5.0)
+    e4 = float(ref.quant_error_ref(x, 16.0))
+    e8 = float(ref.quant_error_ref(x, 256.0))
+    assert e8 < e4
+
+
+# ---------------------------------------------------------------- fwht ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 64, 128]),
+    logn=st.integers(0, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_ref(t, logn, seed):
+    n = 2**logn
+    x = rand(seed, (t, n))
+    np.testing.assert_allclose(fwht(x), ref.fwht_ref(x), rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_is_involution_and_isometry():
+    x = rand(11, (128, 256))
+    y = fwht(x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=1), jnp.linalg.norm(y, axis=1), rtol=1e-4)
+    np.testing.assert_allclose(fwht(y), x, rtol=1e-3, atol=1e-4)
+
+
+def test_fwht_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        fwht(jnp.zeros((8, 12)))
+
+
+def test_fwht_smooths_outliers():
+    # A single huge spike spreads to magnitude spike/sqrt(n) everywhere —
+    # the outlier-smoothing property rotations exploit.
+    x = jnp.zeros((1, 256)).at[0, 3].set(100.0)
+    y = np.asarray(fwht(x))
+    assert np.abs(y).max() == pytest.approx(100.0 / 16.0, rel=1e-4)

@@ -1,0 +1,270 @@
+"""L2 graph correctness: QR, calibration steps, Cayley, rotation fusion
+invariance, hadamard transforms, forward/NLL sanity, train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.configs import CONFIGS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+# ------------------------------------------------------------------ QR ----
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 64])
+def test_householder_qr_orthogonal_and_matches_lapack(n):
+    z = jax.random.normal(key(n), (n, n), jnp.float32)
+    q = model.householder_qr_q(z)
+    np.testing.assert_allclose(q @ q.T, jnp.eye(n), atol=5e-5)
+    qref, rref = jnp.linalg.qr(z)
+    d = jnp.sign(jnp.diagonal(rref))
+    np.testing.assert_allclose(q, qref * d[None, :], atol=5e-4)
+
+
+def test_qr_grad_is_finite_and_nonzero():
+    z = jax.random.normal(key(1), (16, 16), jnp.float32)
+    x = jax.random.normal(key(2), (64, 16), jnp.float32)
+
+    def loss(z):
+        return jnp.sum(jnp.exp(-jnp.abs(x @ model.householder_qr_q(z))))
+
+    g = jax.grad(loss)(z)
+    assert jnp.all(jnp.isfinite(g))
+    assert float(jnp.linalg.norm(g)) > 1e-4
+
+
+def test_qr_grad_matches_finite_difference():
+    n = 8
+    z = jax.random.normal(key(3), (n, n), jnp.float32)
+    x = jax.random.normal(key(4), (32, n), jnp.float32)
+
+    def loss(z):
+        return jnp.mean((x @ model.householder_qr_q(z)) ** 4)
+
+    g = jax.grad(loss)(z)
+    eps = 1e-3
+    for idx in [(0, 0), (3, 5), (7, 2)]:
+        dz = jnp.zeros_like(z).at[idx].set(eps)
+        fd = (loss(z + dz) - loss(z - dz)) / (2 * eps)
+        assert float(jnp.abs(g[idx] - fd)) < 2e-2, f"{idx}: {g[idx]} vs {fd}"
+
+
+# ---------------------------------------------------- calibration steps ----
+
+
+def heavy_tailed_acts(k, t, n):
+    """Laplace body + planted outlier channels (the paper's regime)."""
+    x = jax.random.laplace(key(k), (t, n), jnp.float32)
+    cols = jax.random.choice(key(k + 1), n, (max(1, n // 32),), replace=False)
+    return x.at[:, cols].multiply(25.0)
+
+
+@pytest.mark.parametrize("objective", ["whip", "variance", "kurtosis", "quant"])
+def test_calib_step_runs_and_outputs_finite(objective):
+    n, t = 64, 256
+    step = jax.jit(model.make_calib_step_sgd(objective))
+    z = jnp.eye(n) + 0.01 * jax.random.normal(key(5), (n, n))
+    m = jnp.zeros((n, n))
+    x = heavy_tailed_acts(6, t, n)
+    z2, m2, loss = step(z, m, x, 1e-2)
+    assert jnp.all(jnp.isfinite(z2)) and jnp.all(jnp.isfinite(loss))
+
+
+def test_whip_calibration_reduces_loss_and_outliers():
+    n, t = 64, 512
+    step = jax.jit(model.make_calib_step_sgd("whip"))
+    x = heavy_tailed_acts(7, t, n)
+    z = jnp.eye(n)
+    m = jnp.zeros((n, n))
+    losses = []
+    for _ in range(30):
+        z, m, loss = step(z, m, x, 5e-3)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, f"whip did not descend: {losses[:3]}...{losses[-3:]}"
+    # Outliers after calibrated rotation < before.
+    r = model.householder_qr_q(z)
+    o = x @ r
+    tau = 4.0 * jnp.std(x)
+    assert int(jnp.sum(jnp.abs(o) > tau)) < int(jnp.sum(jnp.abs(x) > tau))
+
+
+def test_adam_step_descends():
+    n, t = 64, 256
+    step = jax.jit(model.make_calib_step_adam("whip"))
+    x = heavy_tailed_acts(8, t, n)
+    z, m, v, t_ = jnp.eye(n), jnp.zeros((n, n)), jnp.zeros((n, n)), jnp.zeros(())
+    first = None
+    for _ in range(15):
+        z, m, v, t_, loss = step(z, m, v, t_, x, 1e-2)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first
+
+
+def test_cayley_step_stays_on_manifold_and_descends():
+    n, t = 64, 256
+    step = jax.jit(model.make_cayley_step("whip"))
+    x = heavy_tailed_acts(9, t, n)
+    r = jnp.eye(n)
+    m = jnp.zeros((n, n))
+    first = None
+    for _ in range(25):
+        r, m, loss = step(r, m, x, 5e-3)
+        first = first if first is not None else float(loss)
+    np.testing.assert_allclose(r @ r.T, jnp.eye(n), atol=1e-2)
+    assert float(loss) < first
+
+
+def test_qr_orth_converges_faster_than_cayley():
+    """Fig 7b's shape: at equal step counts, QR-SGD reaches a lower whip
+    loss than Cayley-SGD from the same init."""
+    n, t, steps = 64, 512, 40
+    x = heavy_tailed_acts(10, t, n)
+    qr_step = jax.jit(model.make_calib_step_sgd("whip"))
+    cay_step = jax.jit(model.make_cayley_step("whip"))
+    z, mz = jnp.eye(n), jnp.zeros((n, n))
+    r, mr = jnp.eye(n), jnp.zeros((n, n))
+    for _ in range(steps):
+        z, mz, ql = qr_step(z, mz, x, 5e-3)
+        r, mr, cl = cay_step(r, mr, x, 5e-3)
+    assert float(ql) <= float(cl) * 1.05, f"qr {ql} vs cayley {cl}"
+
+
+# ------------------------------------------------------------- hadamard ----
+
+
+@pytest.mark.parametrize("n", [64, 256, 768, 320, 1280, 1536])
+def test_hadamard_transform_is_orthogonal(n):
+    x = jax.random.normal(key(n), (8, n), jnp.float32)
+    y = model.hadamard_transform(x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=1), jnp.linalg.norm(y, axis=1), rtol=1e-4)
+    # Matches dense multiply by the explicit matrix (built the same way
+    # rust builds it): apply to identity to extract H, check H Hᵀ = I.
+    h = model.hadamard_transform(jnp.eye(n))
+    np.testing.assert_allclose(h @ h.T, jnp.eye(n), atol=1e-4)
+
+
+def test_hadamard_unsupported_order_raises():
+    with pytest.raises(ValueError):
+        model.hadamard_transform(jnp.zeros((2, 36)))
+
+
+# ------------------------------------------------------- forward / fuse ----
+
+
+def tiny_params(cfg, seed=0, scale=0.5):
+    params = {}
+    k = key(seed)
+    for name in configs.param_names(cfg):
+        k, sub = jax.random.split(k)
+        shape = configs.param_shape(cfg, name)
+        params[name] = jax.random.normal(sub, shape, jnp.float32) * scale / np.sqrt(shape[-1])
+    return params
+
+
+@pytest.mark.parametrize("cname", ["llama2-tiny", "llama3-small", "mixtral-tiny"])
+def test_forward_nll_shape_and_finite(cname):
+    cfg = CONFIGS[cname]
+    params = tiny_params(cfg)
+    toks = jax.random.randint(key(1), (2, 32), 0, cfg.vocab)
+    nll = model.forward_nll(cfg, params, toks)
+    assert nll.shape == (2, 31)
+    assert jnp.all(jnp.isfinite(nll))
+    # Untrained model ≈ uniform: NLL near log(V).
+    assert abs(float(jnp.mean(nll)) - np.log(cfg.vocab)) < 1.5
+
+
+def test_fuse_r1_preserves_fp_outputs():
+    """Computational invariance (Appendix A): fusing any orthogonal R1
+    leaves the fp forward exactly unchanged."""
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 3)
+    toks = jax.random.randint(key(2), (2, 16), 0, cfg.vocab)
+    base = model.forward_nll(cfg, params, toks)
+    r1 = model.householder_qr_q(jax.random.normal(key(4), (cfg.dim, cfg.dim)))
+    fused = model.fuse_r1(cfg, params, r1)
+    rot = model.forward_nll(cfg, fused, toks)
+    np.testing.assert_allclose(base, rot, rtol=2e-2, atol=2e-3)
+
+
+def test_quantized_forward_degrades_gracefully():
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 5)
+    toks = jax.random.randint(key(6), (2, 32), 0, cfg.vocab)
+    fp = float(jnp.mean(model.forward_nll(cfg, params, toks)))
+    q8 = float(jnp.mean(model.forward_nll(
+        cfg, params, toks, a_levels=jnp.float32(256.0),
+        kv_levels=jnp.float32(65536.0))))
+    q4 = float(jnp.mean(model.forward_nll(
+        cfg, params, toks, a_levels=jnp.float32(16.0),
+        kv_levels=jnp.float32(65536.0))))
+    assert abs(q8 - fp) < 0.3, f"8-bit acts should be near-lossless: {fp} vs {q8}"
+    assert q4 >= q8 - 0.05, "4-bit should not beat 8-bit"
+
+
+def test_use_had_flag_with_fused_wd_is_consistent():
+    """R4 convention: graph applies H to the FFN activation, caller fuses
+    H into wd. fp output must be preserved (no act quant)."""
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 7)
+    toks = jax.random.randint(key(8), (2, 16), 0, cfg.vocab)
+    base = model.forward_nll(cfg, params, toks)
+    h_f = model.hadamard_transform(jnp.eye(cfg.ffn_dim))
+    h_hd = model.hadamard_transform(jnp.eye(cfg.head_dim))
+    fused = dict(params)
+    for l in range(cfg.n_layers):
+        fused[f"l{l}.wd"] = params[f"l{l}.wd"] @ h_f
+    huge = jnp.float32(1e9)
+    rot = model.forward_nll(cfg, fused, toks, a_levels=huge, kv_levels=huge,
+                            use_had=jnp.float32(1.0))
+    assert h_hd.shape == (cfg.head_dim, cfg.head_dim)
+    np.testing.assert_allclose(base, rot, rtol=2e-2, atol=2e-3)
+
+
+def test_capture_sites_shapes():
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 9)
+    toks = jax.random.randint(key(10), (2, 16), 0, cfg.vocab)
+    xs, vs = model.capture_sites(cfg, params, toks)
+    assert xs.shape == (2 * cfg.n_layers, 2 * 16, cfg.dim)
+    assert vs.shape == (cfg.n_layers, 2 * 16, cfg.kv_dim)
+    assert jnp.all(jnp.isfinite(xs)) and jnp.all(jnp.isfinite(vs))
+
+
+def test_spin_step_descends_and_stays_orthogonal():
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 11)
+    toks = jax.random.randint(key(12), (2, 32), 0, cfg.vocab)
+    step = jax.jit(model.make_spin_step(cfg))
+    r1 = model.householder_qr_q(jax.random.normal(key(13), (cfg.dim, cfg.dim)))
+    m = jnp.zeros_like(r1)
+    first = None
+    for _ in range(5):
+        r1, m, loss = step(r1, m, params, toks, 0.5)
+        first = first if first is not None else float(loss)
+    np.testing.assert_allclose(r1 @ r1.T, jnp.eye(cfg.dim), atol=5e-2)
+    assert jnp.isfinite(loss)
+
+
+def test_train_step_reduces_loss():
+    cfg = CONFIGS["llama2-tiny"]
+    params = tiny_params(cfg, 14)
+    names = configs.param_names(cfg)
+    m = {n: jnp.zeros_like(params[n]) for n in names}
+    v = {n: jnp.zeros_like(params[n]) for n in names}
+    step = jax.jit(model.make_train_step(cfg))
+    toks = jax.random.randint(key(15), (4, 32), 0, cfg.vocab)
+    t = jnp.zeros(())
+    losses = []
+    for _ in range(10):
+        params, m, v, t, loss = step(params, m, v, t, toks, 3e-3)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"train loss did not drop: {losses}"

@@ -1,0 +1,67 @@
+//! Shared bench scaffolding (criterion is unavailable offline; every bench
+//! is a `harness = false` binary printing paper-style tables through
+//! `util::bench::Table`).
+//!
+//! Environment knobs:
+//!   DQ_FULL=1      run the full grid (all models / more batches) instead
+//!                  of the quick default
+//!   DQ_MODELS=a,b  restrict to specific configs
+
+#![allow(dead_code)]
+
+use dartquant::data::{Corpus, Dialect};
+use dartquant::model::{ModelConfig, Weights};
+use dartquant::runtime::Runtime;
+
+pub fn runtime() -> Runtime {
+    if !Runtime::artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    Runtime::open(Runtime::default_dir()).expect("open runtime")
+}
+
+pub fn full() -> bool {
+    std::env::var("DQ_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Models to exercise: quick mode uses the tiny + small llama2 pair, full
+/// mode all five dense stand-ins.
+pub fn bench_models() -> Vec<ModelConfig> {
+    if let Ok(names) = std::env::var("DQ_MODELS") {
+        return names
+            .split(',')
+            .map(|n| ModelConfig::builtin(n.trim()).expect("model name"))
+            .collect();
+    }
+    let names: &[&str] = if full() {
+        &["llama2-tiny", "llama2-small", "llama2-large", "llama3-small", "llama3-large"]
+    } else {
+        &["llama2-tiny", "llama3-small"]
+    };
+    names.iter().map(|n| ModelConfig::builtin(n).unwrap()).collect()
+}
+
+/// The standard "pretrained" model for a config: grammar planted from its
+/// calibration dialect (Wiki), with the default outlier channels.
+pub fn grammar_model(cfg: &ModelConfig) -> (Weights, Corpus) {
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let w = Weights::default_grammar(cfg, 1, corpus.successor());
+    (w, corpus)
+}
+
+pub fn eval_batches() -> usize {
+    if full() {
+        4
+    } else {
+        2
+    }
+}
+
+pub fn zs_items() -> usize {
+    if full() {
+        16
+    } else {
+        10
+    }
+}

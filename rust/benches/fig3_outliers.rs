@@ -1,0 +1,53 @@
+//! Figure 3 (and appendix Figure 10): number of outliers and mean
+//! quantization error of captured activations under different transforms —
+//! none / random orthogonal / random Hadamard / whip-calibrated (DartQuant)
+//! — per model.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::calib::{calibrate_rotation, CalibConfig};
+use dartquant::coordinator::capture_pools_native;
+use dartquant::eval::stats;
+use dartquant::linalg;
+use dartquant::tensor::matmul;
+use dartquant::util::bench::{fnum, Table};
+use dartquant::util::prng::Pcg64;
+
+fn main() {
+    let rt = common::runtime();
+    for cfg in common::bench_models() {
+        let (weights, corpus) = common::grammar_model(&cfg);
+        // 1000-activation sample from the mid layer (paper: layer 20).
+        let seqs = corpus.calib_sequences(4, 256);
+        let pools = capture_pools_native(&weights, &seqs, 0.25, 3);
+        let mut rng = Pcg64::new(4);
+        let pool = dartquant::calib::sample_tokens(&pools.r1_pool, 1000, &mut rng);
+
+        let tau = stats::outlier_threshold(&pool, 0.995);
+        let mut table = Table::new(&["Transform", "#outliers (|x|>τ)", "quant error (4-bit)"]);
+        let report = |name: &str, x: &dartquant::tensor::Mat, table: &mut Table| {
+            table.row(&[
+                name.into(),
+                format!("{}", stats::count_outliers(x, tau)),
+                fnum(stats::quant_error(x, 4), 5),
+            ]);
+        };
+        report("none", &pool, &mut table);
+        let q = linalg::random_orthogonal(cfg.dim, &mut rng);
+        report("random orthogonal", &matmul(&pool, &q), &mut table);
+        let h = linalg::randomized_hadamard(cfg.dim, &mut rng);
+        report("random Hadamard (QuaRot)", &matmul(&pool, &h), &mut table);
+        let res = calibrate_rotation(
+            &rt,
+            &pools.r1_pool,
+            &CalibConfig { steps: if common::full() { 60 } else { 30 }, ..Default::default() },
+        )
+        .expect("calibrate");
+        report("DartQuant (whip)", &matmul(&pool, &res.rotation), &mut table);
+        table.print(&format!(
+            "Fig 3 — outliers & quant error on 1000 activations ({}, τ=99.5%)",
+            cfg.name
+        ));
+    }
+}

@@ -1,0 +1,63 @@
+//! Figures 2 / 6 / 11: activation-distribution histograms under different
+//! rotations, rendered as ASCII. The paper's shape: the raw distribution
+//! has a sharp Laplace peak with extreme outliers; Hadamard compresses the
+//! range; the whip-calibrated rotation is the most uniform.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::calib::{calibrate_rotation, CalibConfig, Objective};
+use dartquant::coordinator::capture_pools_native;
+use dartquant::eval::stats;
+use dartquant::linalg;
+use dartquant::tensor::{matmul, Mat};
+use dartquant::util::bench::fnum;
+use dartquant::util::prng::Pcg64;
+
+fn show(name: &str, x: &Mat) {
+    let s = stats::activation_stats(x);
+    println!(
+        "\n--- {name}:  range ±{:.2}  var {:.3}  kurtosis {:.1} ---",
+        s.max_abs, s.variance, s.kurtosis
+    );
+    let lim = (s.max_abs as f32).max(1e-3);
+    let h = stats::histogram(x, -lim, lim, 21);
+    print!("{}", stats::render_histogram(&h, -lim, lim, 48));
+}
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = dartquant::model::ModelConfig::builtin("llama2-tiny").unwrap();
+    let (weights, corpus) = common::grammar_model(&cfg);
+    let seqs = corpus.calib_sequences(4, 256);
+    let pools = capture_pools_native(&weights, &seqs, 0.25, 3);
+    let mut rng = Pcg64::new(4);
+    let pool = dartquant::calib::sample_tokens(&pools.r1_pool, 1000, &mut rng);
+
+    show("(a) original (no rotation)", &pool);
+    let h = linalg::randomized_hadamard(cfg.dim, &mut rng);
+    show("(b) random Hadamard", &matmul(&pool, &h));
+    for (label, obj) in [
+        ("(c) quant-loss objective", Objective::Quant),
+        ("(d) variance objective", Objective::Variance),
+        ("(e) kurtosis objective", Objective::Kurtosis),
+        ("(f) Whip objective (DartQuant)", Objective::Whip),
+    ] {
+        let res = calibrate_rotation(
+            &rt,
+            &pools.r1_pool,
+            &CalibConfig {
+                objective: obj,
+                steps: if common::full() { 60 } else { 25 },
+                ..Default::default()
+            },
+        )
+        .expect("calibrate");
+        show(label, &matmul(&pool, &res.rotation));
+    }
+    println!(
+        "\n(range ratio original/whip should be large; uniformity greatest in (f)) — \
+         paper Figs 2/6. 4-bit quant error of the original pool: {}",
+        fnum(stats::quant_error(&pool, 4), 4)
+    );
+}

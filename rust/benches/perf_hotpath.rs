@@ -1,0 +1,115 @@
+//! §Perf: hot-path throughput microbenches — the before/after ledger for
+//! EXPERIMENTS.md §Perf.
+//!
+//! L3-visible costs measured here:
+//!   * one QR-Orth calibration step (PJRT executable) per dim,
+//!   * one Cayley step per dim (the 4/3·n³ vs 6n³ story),
+//!   * eval forward throughput (tokens/s) via fwd artifact vs native rust,
+//!   * native matmul GFLOP/s (the capture/GPTQ substrate),
+//!   * capture artifact throughput.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::calib::{sample_tokens, CALIB_TOKENS};
+use dartquant::model::{TokenBatch, Weights};
+use dartquant::runtime::Value;
+use dartquant::tensor::{matmul, Mat};
+use dartquant::util::bench::{fnum, time, Table};
+use dartquant::util::prng::Pcg64;
+
+fn main() {
+    let rt = common::runtime();
+    let mut table = Table::new(&["path", "median", "throughput"]);
+
+    // --- calibration step per dim --------------------------------------
+    for n in [64usize, 256, 512, 640] {
+        let mut rng = Pcg64::new(1);
+        let pool = Mat::from_fn(CALIB_TOKENS * 2, n, |_, _| rng.laplace(1.0));
+        for kind in ["calib", "cayley"] {
+            let name = format!("{kind}_whip_sgd_n{n}");
+            let Ok(exe) = rt.load(&name) else { continue };
+            let z = dartquant::linalg::randomized_hadamard(n, &mut rng);
+            let m0 = Mat::zeros(n, n);
+            let x = sample_tokens(&pool, CALIB_TOKENS, &mut rng);
+            let meas = time(&name, 1, if common::full() { 10 } else { 4 }, || {
+                let _ = exe
+                    .run(&[
+                        Value::from_mat(&z),
+                        Value::from_mat(&m0),
+                        Value::from_mat(&x),
+                        Value::scalar(1e-2),
+                    ])
+                    .unwrap();
+            });
+            table.row(&[
+                format!("{kind} step n={n}"),
+                dartquant::util::fmt_duration(meas.median),
+                format!("{:.1} steps/s", 1.0 / meas.median.as_secs_f64()),
+            ]);
+        }
+    }
+
+    // --- eval forward: artifact vs native -------------------------------
+    let cfg = dartquant::model::ModelConfig::builtin("llama2-tiny").unwrap();
+    let (weights, corpus) = common::grammar_model(&cfg);
+    let toks = TokenBatch::new(&corpus.valid_batch(8, 256, 0));
+    let meas = time("fwd artifact (8x256)", 1, 5, || {
+        let _ = dartquant::model::artifact_io::run_fwd(&rt, &weights, &toks).unwrap();
+    });
+    let tok_s = 8.0 * 256.0 / meas.median.as_secs_f64();
+    table.row(&[
+        "eval fwd artifact (8×256)".into(),
+        dartquant::util::fmt_duration(meas.median),
+        format!("{:.0} tok/s", tok_s),
+    ]);
+    let rows = toks.rows();
+    let meas = time("fwd native (8x256)", 0, 2, || {
+        let _ = dartquant::model::forward_batch(&weights, &rows, dartquant::model::FwdOptions::FP);
+    });
+    table.row(&[
+        "eval fwd native (8×256)".into(),
+        dartquant::util::fmt_duration(meas.median),
+        format!("{:.0} tok/s", 8.0 * 256.0 / meas.median.as_secs_f64()),
+    ]);
+
+    // --- capture artifact ------------------------------------------------
+    let meas = time("capture artifact", 1, 3, || {
+        let _ = dartquant::model::artifact_io::run_capture(&rt, &weights, &toks).unwrap();
+    });
+    table.row(&[
+        "capture artifact (8×256)".into(),
+        dartquant::util::fmt_duration(meas.median),
+        format!("{:.0} tok/s", 8.0 * 256.0 / meas.median.as_secs_f64()),
+    ]);
+
+    // --- native matmul roofline -----------------------------------------
+    for n in [256usize, 512] {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let meas = time("matmul", 2, 8, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / meas.median.as_secs_f64() / 1e9;
+        table.row(&[
+            format!("native matmul {n}³"),
+            dartquant::util::fmt_duration(meas.median),
+            format!("{} GFLOP/s", fnum(gflops, 1)),
+        ]);
+    }
+
+    // --- GPTQ -------------------------------------------------------------
+    let w = Weights::default_synthetic(&cfg, 3);
+    let seqs = corpus.calib_sequences(2, 128);
+    let meas = time("gptq model", 0, 2, || {
+        let _ = dartquant::quant::gptq_quantize_model(&w, &seqs, Default::default());
+    });
+    table.row(&[
+        "GPTQ full model (tiny)".into(),
+        dartquant::util::fmt_duration(meas.median),
+        "-".into(),
+    ]);
+
+    table.print("§Perf — hot-path measurements");
+}

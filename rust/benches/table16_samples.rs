@@ -1,0 +1,47 @@
+//! Table 16 (Appendix D): sample-size sensitivity — DartQuant calibrated
+//! with {8, 16, 32, 64} sequences (10% token sampling), PPL per dialect.
+//! Paper shape: rows are flat — calibration is robust to tiny sample sets.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::coordinator::{run_pipeline, Method, PipelineConfig};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::eval;
+use dartquant::model::BitSetting;
+use dartquant::util::bench::{fnum, Table};
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = dartquant::model::ModelConfig::builtin("llama2-tiny").unwrap();
+    let (weights, _c) = common::grammar_model(&cfg);
+    let spec = eval::EvalSpec { batch: 8, seq: 256, n_batches: common::eval_batches() };
+    let sizes: &[usize] = if common::full() { &[8, 16, 32, 64] } else { &[8, 32] };
+    let mut table = Table::new(&["#sequences", "Wiki", "PTB", "C4", "Avg"]);
+    for &n in sizes {
+        let mut pcfg = PipelineConfig::new(Method::DartQuant, BitSetting::W4A4);
+        pcfg.calib_sequences = n;
+        pcfg.calib.steps = if common::full() { 60 } else { 30 };
+        let report = run_pipeline(&rt, &weights, &pcfg).expect("pipeline");
+        let mut row = vec![format!("{n}")];
+        let mut total = 0.0;
+        for d in Dialect::ALL {
+            let corpus = Corpus::new(d, cfg.vocab, 7);
+            let ppl = eval::ppl_artifact(
+                &rt,
+                &report.weights,
+                &corpus,
+                spec,
+                BitSetting::levels(4),
+                65536.0,
+                true,
+            )
+            .unwrap();
+            total += ppl;
+            row.push(fnum(ppl, 2));
+        }
+        row.push(fnum(total / 3.0, 2));
+        table.row(&row);
+    }
+    table.print("Table 16 — DartQuant sample-size sensitivity (llama2-tiny, W4A4, 10% tokens)");
+}

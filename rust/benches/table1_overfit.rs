@@ -1,0 +1,67 @@
+//! Table 1: overfitting of end-to-end fine-tuning — SpinQuant-sim
+//! calibrated on each dialect, evaluated on all three. The paper's shape:
+//! e2e fine-tuning improves most on the dialect it calibrated on and
+//! regresses elsewhere (vs the method-free quantized baseline).
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::coordinator::{run_pipeline, Method, PipelineConfig};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::eval;
+use dartquant::model::BitSetting;
+use dartquant::util::bench::{fnum, Table};
+
+fn main() {
+    let rt = common::runtime();
+    let models: Vec<&str> =
+        if common::full() { vec!["llama2-tiny", "llama2-small"] } else { vec!["llama2-tiny"] };
+    for name in models {
+        let cfg = dartquant::model::ModelConfig::builtin(name).unwrap();
+        let (weights, _c) = common::grammar_model(&cfg);
+        let spec = eval::EvalSpec { batch: 8, seq: 256, n_batches: common::eval_batches() };
+        let mut table = Table::new(&["Calib set", "Wiki", "PTB", "C4"]);
+
+        // Baseline: fp16 PPL on each eval dialect.
+        let mut base = Vec::new();
+        for d in Dialect::ALL {
+            let corpus = Corpus::new(d, cfg.vocab, 7);
+            base.push(
+                eval::ppl_artifact(&rt, &weights, &corpus, spec, 65536.0, 65536.0, false).unwrap(),
+            );
+        }
+        table.row(&[
+            "Baseline (fp)".into(),
+            fnum(base[0], 2),
+            fnum(base[1], 2),
+            fnum(base[2], 2),
+        ]);
+
+        for calib_d in Dialect::ALL {
+            let mut pcfg = PipelineConfig::new(Method::SpinQuant, BitSetting::W4A4);
+            pcfg.calib_dialect = calib_d;
+            pcfg.spin.steps = if common::full() { 12 } else { 6 };
+            pcfg.calib_sequences = 16;
+            let report = run_pipeline(&rt, &weights, &pcfg).expect("spin pipeline");
+            let mut row = vec![format!("e2e on {}", calib_d.label())];
+            for d in Dialect::ALL {
+                let corpus = Corpus::new(d, cfg.vocab, 7);
+                let ppl = eval::ppl_artifact(
+                    &rt,
+                    &report.weights,
+                    &corpus,
+                    spec,
+                    BitSetting::levels(4),
+                    65536.0,
+                    true,
+                )
+                .unwrap();
+                row.push(fnum(ppl, 2));
+            }
+            table.row(&row);
+        }
+        table.print(&format!(
+            "Table 1 — e2e fine-tuning calibration-set sensitivity ({name}, W4A4)"
+        ));
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 4: wall time of 100 optimizer iterations — Cayley vs QR-Orth,
+//! SGD and Adam — plus the convergence-derived effective speedup (paper:
+//! 1.4× per-iteration, 41× overall when matching loss levels).
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::calib::{calibrate_rotation, CalibConfig, OptKind, OrthScheme};
+use dartquant::tensor::Mat;
+use dartquant::util::bench::{fnum, Table};
+use dartquant::util::prng::Pcg64;
+
+fn pool(n: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut m = Mat::from_fn(2048, n, |_, _| rng.laplace(1.0));
+    for &c in &rng.sample_indices(n, n / 32) {
+        for i in 0..m.rows {
+            *m.at_mut(i, c) *= 12.0;
+        }
+    }
+    m
+}
+
+fn main() {
+    let rt = common::runtime();
+    let iters = if common::full() { 100 } else { 40 };
+    let n = 256;
+    let p = pool(n, 1);
+    let mut table = Table::new(&["Optimizer", "Scheme", &format!("{iters} iters (s)"), "per-iter (ms)", "final loss"]);
+
+    let mut times = std::collections::BTreeMap::new();
+    for (opt, scheme) in [
+        (OptKind::Sgd, OrthScheme::Cayley),
+        (OptKind::Sgd, OrthScheme::QrOrth),
+        (OptKind::Adam, OrthScheme::Cayley),
+        (OptKind::Adam, OrthScheme::QrOrth),
+    ] {
+        let cfg = CalibConfig { optimizer: opt, scheme, steps: iters, ..Default::default() };
+        let res = calibrate_rotation(&rt, &p, &cfg).expect("calibrate");
+        let secs = res.wall.as_secs_f64();
+        times.insert((opt.name(), format!("{scheme:?}")), secs);
+        table.row(&[
+            opt.name().to_uppercase(),
+            format!("{scheme:?}"),
+            fnum(secs, 2),
+            fnum(secs * 1000.0 / iters as f64, 1),
+            fnum(*res.losses.last().unwrap() as f64, 3),
+        ]);
+    }
+    table.print(&format!("Table 4 — time for {iters} iterations (n={n})"));
+    let s = times[&("sgd", "Cayley".to_string())] / times[&("sgd", "QrOrth".to_string())];
+    let a = times[&("adam", "Cayley".to_string())] / times[&("adam", "QrOrth".to_string())];
+    println!("\nper-iteration speedup  SGD: {:.2}×   Adam: {:.2}×   (paper: 1.44× / 1.42×)", s, a);
+
+    // Effective speedup: steps Cayley-SGD needs to reach QR-SGD's loss
+    // after `probe` steps (paper: 6 vs 100 ⇒ 41×).
+    let probe = 6;
+    let qr = calibrate_rotation(
+        &rt,
+        &p,
+        &CalibConfig { steps: probe, ..Default::default() },
+    )
+    .unwrap();
+    let target = *qr.losses.last().unwrap();
+    let cay = calibrate_rotation(
+        &rt,
+        &p,
+        &CalibConfig { scheme: OrthScheme::Cayley, steps: iters, ..Default::default() },
+    )
+    .unwrap();
+    let reached = cay.losses.iter().position(|&l| l <= target);
+    match reached {
+        Some(k) => println!(
+            "QR-SGD loss after {probe} steps ({target:.3}) reached by Cayley-SGD at step {k} \
+             ⇒ effective speedup ≈ {:.1}× (× the {s:.2}× per-iter factor)",
+            (k + 1) as f64 / probe as f64
+        ),
+        None => println!(
+            "Cayley-SGD did not reach QR-SGD's {probe}-step loss ({target:.3}) within {iters} \
+             steps — effective speedup > {:.0}× (paper: 41×)",
+            iters as f64 / probe as f64
+        ),
+    }
+}

@@ -1,0 +1,230 @@
+//! Rotation calibration — the paper's core contribution (Algorithm 1).
+//!
+//! The hot loop executes pre-compiled PJRT artifacts (`calib_*_n*`,
+//! `cayley_*_n*`, `spin_*`): one artifact call = one optimizer step
+//! (QR → rotate → objective → grad → update, fused into a single XLA
+//! executable). Rust owns token sampling, batching, convergence tracking
+//! and timing; python never runs here.
+
+pub mod objectives;
+mod spin;
+
+pub use spin::{spin_calibrate, SpinConfig, SpinResult};
+
+use crate::linalg;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Calibration objective (Fig 7a / Table 22 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Whip,
+    Variance,
+    Kurtosis,
+    Quant,
+}
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Whip => "whip",
+            Objective::Variance => "variance",
+            Objective::Kurtosis => "kurtosis",
+            Objective::Quant => "quant",
+        }
+    }
+    pub const ALL: [Objective; 4] =
+        [Objective::Whip, Objective::Variance, Objective::Kurtosis, Objective::Quant];
+}
+
+/// Orthogonality enforcement scheme (Fig 7b / Table 4 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrthScheme {
+    /// QR-Orth: optimize latent Z, R = qr(Z).Q — DartQuant.
+    QrOrth,
+    /// Cayley SGD on the Stiefel manifold — SpinQuant's optimizer.
+    Cayley,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+impl OptKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Adam => "adam",
+        }
+    }
+}
+
+/// Calibration hyper-parameters (paper Table 23: SGD, lr model-dependent,
+/// 10 epochs, batch 64 sequences; we express the loop in steps over
+/// sampled token batches).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub objective: Objective,
+    pub scheme: OrthScheme,
+    pub optimizer: OptKind,
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+    /// Early-stop when the relative loss improvement over a 5-step window
+    /// falls below this (0 disables).
+    pub tol: f32,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            objective: Objective::Whip,
+            scheme: OrthScheme::QrOrth,
+            optimizer: OptKind::Sgd,
+            lr: 1e-2,
+            steps: 60,
+            seed: 0,
+            tol: 0.0,
+        }
+    }
+}
+
+/// Result of one rotation calibration.
+#[derive(Clone, Debug)]
+pub struct CalibResult {
+    /// The calibrated orthogonal rotation.
+    pub rotation: Mat,
+    /// Loss trajectory (one entry per step).
+    pub losses: Vec<f32>,
+    /// Wall time of the optimization loop (excludes artifact compile).
+    pub wall: Duration,
+    /// Steps actually executed (≤ cfg.steps with early stopping).
+    pub steps_run: usize,
+}
+
+/// Paper's token sampling: keep a fraction of token rows (Algorithm 1's
+/// `token_sampling`, 10% in Appendix D), by norm-stratified random choice
+/// so outlier rows stay represented.
+pub fn sample_tokens(pool: &Mat, count: usize, rng: &mut Pcg64) -> Mat {
+    if count >= pool.rows {
+        // Upsample with replacement to reach the artifact geometry.
+        let idx: Vec<usize> = (0..count).map(|_| rng.below(pool.rows)).collect();
+        return pool.gather_rows(&idx);
+    }
+    let idx = rng.sample_indices(pool.rows, count);
+    pool.gather_rows(&idx)
+}
+
+/// The artifact geometry for calibration batches.
+pub const CALIB_TOKENS: usize = 1024;
+
+/// Run a rotation calibration against activation pool `x_pool` (rows =
+/// tokens, cols = rotation dim). One PJRT artifact call per step.
+pub fn calibrate_rotation(rt: &Runtime, x_pool: &Mat, cfg: &CalibConfig) -> Result<CalibResult> {
+    let n = x_pool.cols;
+    let name = match cfg.scheme {
+        OrthScheme::QrOrth => {
+            format!("calib_{}_{}_n{n}", cfg.objective.name(), cfg.optimizer.name())
+        }
+        OrthScheme::Cayley => {
+            format!("cayley_{}_{}_n{n}", cfg.objective.name(), cfg.optimizer.name())
+        }
+    };
+    let exe = rt.load(&name).with_context(|| {
+        format!("no calibration artifact {name} — aot.py emits whip at every dim, ablation objectives at n∈{{256,384}}")
+    })?;
+    let mut rng = Pcg64::new(cfg.seed ^ 0xca11b);
+
+    // Z0 / R0: random Hadamard init (paper Table 23 note).
+    let mut z = linalg::randomized_hadamard(n, &mut rng);
+    let mut m = Mat::zeros(n, n);
+    let mut v = Mat::zeros(n, n); // adam only
+    let mut t = 0f32;
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let t0 = Instant::now();
+    let mut steps_run = 0;
+    for _ in 0..cfg.steps {
+        let x = sample_tokens(x_pool, CALIB_TOKENS, &mut rng);
+        let outputs = match cfg.optimizer {
+            OptKind::Sgd => exe.run(&[
+                Value::from_mat(&z),
+                Value::from_mat(&m),
+                Value::from_mat(&x),
+                Value::scalar(cfg.lr),
+            ])?,
+            OptKind::Adam => exe.run(&[
+                Value::from_mat(&z),
+                Value::from_mat(&m),
+                Value::from_mat(&v),
+                Value::scalar(t),
+                Value::from_mat(&x),
+                Value::scalar(cfg.lr),
+            ])?,
+        };
+        match cfg.optimizer {
+            OptKind::Sgd => {
+                z = outputs[0].to_mat()?;
+                m = outputs[1].to_mat()?;
+                losses.push(outputs[2].to_scalar()?);
+            }
+            OptKind::Adam => {
+                z = outputs[0].to_mat()?;
+                m = outputs[1].to_mat()?;
+                v = outputs[2].to_mat()?;
+                t = outputs[3].to_scalar()?;
+                losses.push(outputs[4].to_scalar()?);
+            }
+        }
+        steps_run += 1;
+        if cfg.tol > 0.0 && losses.len() > 6 {
+            let prev = losses[losses.len() - 6];
+            let cur = *losses.last().unwrap();
+            if (prev - cur).abs() / prev.abs().max(1e-9) < cfg.tol {
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    let rotation = match cfg.scheme {
+        OrthScheme::QrOrth => linalg::qr_orthogonalize(&z), // same convention as the jax side
+        OrthScheme::Cayley => z,
+    };
+    let defect = linalg::orthogonality_defect(&rotation);
+    if defect > 5e-2 {
+        bail!("calibrated rotation drifted off the manifold (defect {defect})");
+    }
+    Ok(CalibResult { rotation, losses, wall, steps_run })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gen;
+
+    #[test]
+    fn sample_tokens_geometry() {
+        let mut rng = Pcg64::new(1);
+        let pool = Mat::from_vec(10, 4, gen::vec_f32(&mut rng, 40));
+        let s = sample_tokens(&pool, 4, &mut rng);
+        assert_eq!(s.shape(), (4, 4));
+        let up = sample_tokens(&pool, 32, &mut rng);
+        assert_eq!(up.shape(), (32, 4));
+    }
+
+    #[test]
+    fn objective_and_opt_names_match_artifacts() {
+        assert_eq!(Objective::Whip.name(), "whip");
+        assert_eq!(OptKind::Adam.name(), "adam");
+        assert_eq!(Objective::ALL.len(), 4);
+    }
+
+    // PJRT-backed calibration loops are covered in rust/tests/ (they need
+    // `make artifacts`).
+}

@@ -1,0 +1,93 @@
+//! Native objective implementations — rust mirrors of the L2 objectives,
+//! used by tests (cross-checking the artifacts) and by the figure benches
+//! (evaluating an objective on rotated activations without a PJRT call).
+
+use crate::tensor::Mat;
+
+/// Whip loss (Eq. 4), token-averaged: mean_t Σ_c exp(-|x_tc|).
+pub fn whip(x: &Mat) -> f64 {
+    let mut total = 0f64;
+    for i in 0..x.rows {
+        total += x.row(i).iter().map(|v| (-v.abs()).exp() as f64).sum::<f64>();
+    }
+    total / x.rows as f64
+}
+
+/// Mean per-token variance across channels.
+pub fn variance(x: &Mat) -> f64 {
+    let mut total = 0f64;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let m = row.iter().sum::<f32>() as f64 / row.len() as f64;
+        total += row.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / row.len() as f64;
+    }
+    total / x.rows as f64
+}
+
+/// Mean per-token excess kurtosis.
+pub fn kurtosis(x: &Mat) -> f64 {
+    let mut total = 0f64;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let n = row.len() as f64;
+        let m = row.iter().sum::<f32>() as f64 / n;
+        let var = row.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / n;
+        let m4 = row.iter().map(|&v| (v as f64 - m).powi(4)).sum::<f64>() / n;
+        total += m4 / (var * var + 1e-12) - 3.0;
+    }
+    total / x.rows as f64
+}
+
+/// Mean squared int4 fake-quant error (per-token asymmetric).
+pub fn quant_mse(x: &Mat, bits: u8) -> f64 {
+    crate::eval::stats::quant_error(x, bits)
+}
+
+/// Evaluate a named objective.
+pub fn evaluate(obj: super::Objective, x: &Mat) -> f64 {
+    match obj {
+        super::Objective::Whip => whip(x),
+        super::Objective::Variance => variance(x),
+        super::Objective::Kurtosis => kurtosis(x),
+        super::Objective::Quant => quant_mse(x, 4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn whip_of_zeros_is_channel_count() {
+        let x = Mat::zeros(8, 32);
+        assert!((whip(&x) - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn whip_decreases_as_values_leave_zero() {
+        let near = Mat::from_vec(1, 4, vec![0.1; 4]);
+        let far = Mat::from_vec(1, 4, vec![3.0; 4]);
+        assert!(whip(&far) < whip(&near));
+    }
+
+    #[test]
+    fn variance_and_kurtosis_match_definitions() {
+        let x = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((variance(&x) - 1.25).abs() < 1e-9);
+        let mut rng = Pcg64::new(1);
+        let g = Mat::from_fn(64, 512, |_, _| rng.normal());
+        assert!(kurtosis(&g).abs() < 0.3, "gaussian kurtosis ~0: {}", kurtosis(&g));
+        let l = Mat::from_fn(64, 512, |_, _| rng.laplace(1.0));
+        assert!(kurtosis(&l) > 2.0, "laplace kurtosis ~3: {}", kurtosis(&l));
+    }
+
+    #[test]
+    fn whip_is_norm_constrained_proxy_for_outliers() {
+        // Among equal-norm vectors, the uniform one minimizes whip.
+        let spiky = Mat::from_vec(1, 4, vec![2.0, 0.0, 0.0, 0.0]);
+        let uniform = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        assert!((spiky.fro_norm() - uniform.fro_norm()).abs() < 1e-6);
+        assert!(whip(&uniform) < whip(&spiky));
+    }
+}

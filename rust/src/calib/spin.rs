@@ -1,0 +1,73 @@
+//! SpinQuant-sim: the end-to-end fine-tuning baseline. One `spin_{cfg}`
+//! artifact call = one Cayley step of the full quantized-forward task loss
+//! with respect to R1, holding the entire model + backprop graph — the
+//! cost Table 3 / Fig 1 contrasts with DartQuant's local calibration.
+
+use crate::linalg;
+use crate::model::{TokenBatch, Weights};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+use anyhow::{Context, Result};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct SpinConfig {
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for SpinConfig {
+    fn default() -> Self {
+        SpinConfig { lr: 1.5, steps: 16, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SpinResult {
+    pub r1: Mat,
+    pub losses: Vec<f32>,
+    pub wall: Duration,
+}
+
+/// Run the end-to-end Cayley fine-tuning of R1 on calibration batches
+/// drawn by `next_batch` (one TokenBatch per step).
+pub fn spin_calibrate(
+    rt: &Runtime,
+    weights: &Weights,
+    cfg: &SpinConfig,
+    mut next_batch: impl FnMut(usize) -> TokenBatch,
+) -> Result<SpinResult> {
+    let name = format!("spin_{}", weights.cfg.name);
+    let exe = rt.load(&name).with_context(|| {
+        format!("no spin artifact for {} (emitted for the llama2 configs)", weights.cfg.name)
+    })?;
+    let d = weights.cfg.dim;
+    let mut rng = Pcg64::new(cfg.seed ^ 0x5917);
+    let mut r1 = linalg::randomized_hadamard(d, &mut rng);
+    let mut m = Mat::zeros(d, d);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let t0 = Instant::now();
+    for step in 0..cfg.steps {
+        let toks = next_batch(step);
+        let mut inputs = vec![Value::from_mat(&r1), Value::from_mat(&m)];
+        inputs.extend(weights.ordered().map(|(_, w)| Value::from_mat(w)));
+        inputs.push(toks.to_value());
+        inputs.push(Value::scalar(cfg.lr));
+        let out = exe.run(&inputs)?;
+        r1 = out[0].to_mat()?;
+        m = out[1].to_mat()?;
+        losses.push(out[2].to_scalar()?);
+    }
+    let wall = t0.elapsed();
+    // Cayley retraction is approximate (s = 2 fixed-point iterations);
+    // re-project to the manifold exactly before fusing.
+    let defect = linalg::orthogonality_defect(&r1);
+    if defect > 1e-3 {
+        r1 = linalg::qr_orthogonalize(&r1);
+    }
+    Ok(SpinResult { r1, losses, wall })
+}
+
+// PJRT-backed tests live in rust/tests/calibration.rs (need artifacts).

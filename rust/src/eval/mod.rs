@@ -1,0 +1,9 @@
+//! Evaluation harness: perplexity, the nine-task zero-shot suite, and the
+//! activation statistics behind the paper's figures.
+
+pub mod ppl;
+pub mod stats;
+pub mod zeroshot;
+
+pub use ppl::{ppl_artifact, ppl_native, EvalSpec};
+pub use stats::{activation_stats, count_outliers, histogram, outlier_threshold, quant_error};

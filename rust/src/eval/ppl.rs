@@ -1,0 +1,100 @@
+//! Perplexity evaluation — the paper's primary metric (WikiText2/PTB/C4
+//! columns of Tables 2/5/7/9/...).
+//!
+//! Two execution paths: the PJRT `fwd_*`/`fwdq_*` artifacts (fast path —
+//! XLA-compiled, used by the benches) and the native forward (oracle /
+//! fallback). Both consume held-out batches from a [`Corpus`] dialect.
+
+use crate::data::Corpus;
+use crate::model::{self, FwdOptions, TokenBatch, Weights};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// How many held-out batches one PPL number averages over.
+pub const DEFAULT_EVAL_BATCHES: usize = 4;
+
+/// Evaluation geometry — must match the artifact shapes for the PJRT path.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSpec {
+    pub batch: usize,
+    pub seq: usize,
+    pub n_batches: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        EvalSpec { batch: 8, seq: 256, n_batches: DEFAULT_EVAL_BATCHES }
+    }
+}
+
+/// PPL through the PJRT quantized-forward artifact.
+pub fn ppl_artifact(
+    rt: &Runtime,
+    w: &Weights,
+    corpus: &Corpus,
+    spec: EvalSpec,
+    a_levels: f32,
+    kv_levels: f32,
+    use_had: bool,
+) -> Result<f64> {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for i in 0..spec.n_batches {
+        let toks = TokenBatch::new(&corpus.valid_batch(spec.batch, spec.seq, i as u64));
+        let nll = if a_levels >= 32767.0 && kv_levels >= 32767.0 && !use_had {
+            model::artifact_io::run_fwd(rt, w, &toks)?
+        } else {
+            model::artifact_io::run_fwdq(rt, w, &toks, a_levels, kv_levels, use_had)?
+        };
+        total += nll.data.iter().map(|&v| v as f64).sum::<f64>();
+        count += nll.data.len();
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// PPL through the native forward (no artifacts needed).
+pub fn ppl_native(w: &Weights, corpus: &Corpus, spec: EvalSpec, opt: FwdOptions) -> f64 {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for i in 0..spec.n_batches {
+        let batch = corpus.valid_batch(spec.batch, spec.seq, i as u64);
+        for nll in model::forward_batch(w, &batch, opt) {
+            total += nll.iter().map(|&v| v as f64).sum::<f64>();
+            count += nll.len();
+        }
+    }
+    (total / count as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dialect;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn native_ppl_beats_uniform_on_matching_dialect() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
+        let ppl = ppl_native(&w, &corpus, spec, FwdOptions::FP);
+        // Short-sequence eval on the grammar model: clearly below the
+        // uniform PPL (=vocab) with margin.
+        assert!(ppl < cfg.vocab as f64 / 2.0, "ppl {ppl}");
+        assert!(ppl > 1.5);
+    }
+
+    #[test]
+    fn quantization_hurts_ppl_monotonically() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
+        let fp = ppl_native(&w, &corpus, spec, FwdOptions::FP);
+        let a8 = ppl_native(&w, &corpus, spec, FwdOptions::quant(8, 16, false));
+        let a4 = ppl_native(&w, &corpus, spec, FwdOptions::quant(4, 16, false));
+        assert!((a8 - fp).abs() / fp < 0.2, "8-bit ~lossless: {fp} vs {a8}");
+        assert!(a4 > fp, "4-bit must hurt: {fp} vs {a4}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Activation statistics: outlier counts, quantization error, histograms
+//! and kurtosis — the measurements behind Figures 2/3/6/10/11 and Table 19.
+
+use crate::tensor::Mat;
+
+/// Count of elements with |x| > tau — Fig 3a / Fig 10's outlier metric.
+pub fn count_outliers(x: &Mat, tau: f32) -> usize {
+    x.data.iter().filter(|v| v.abs() > tau).count()
+}
+
+/// The paper sets τ from the unrotated activations; we use a high quantile
+/// so τ tracks each model's scale (Fig 3 protocol).
+pub fn outlier_threshold(x: &Mat, quantile: f64) -> f32 {
+    let mut mags: Vec<f32> = x.data.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((mags.len() - 1) as f64 * quantile) as usize;
+    mags[idx]
+}
+
+/// Mean per-token asymmetric fake-quant MSE — Fig 3b's quantization error.
+pub fn quant_error(x: &Mat, bits: u8) -> f64 {
+    let levels = (1u32 << bits) as f32;
+    let mut total = 0f64;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+        for &v in row {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let scale = (mx - mn) / (levels - 1.0);
+        if scale <= 0.0 {
+            continue;
+        }
+        for &v in row {
+            let q = ((v - mn) / scale).round() * scale + mn;
+            total += ((q - v) as f64).powi(2);
+        }
+    }
+    total / x.data.len() as f64
+}
+
+/// Histogram of all elements over [lo, hi] with `bins` buckets (+ under/
+/// overflow folded into the edge buckets) — Figures 2/6/11.
+pub fn histogram(x: &Mat, lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &v in &x.data {
+        let b = if v <= lo {
+            0
+        } else if v >= hi {
+            bins - 1
+        } else {
+            (((v - lo) / w) as usize).min(bins - 1)
+        };
+        h[b] += 1;
+    }
+    h
+}
+
+/// Render a histogram as ASCII rows (bench output for the figure benches).
+pub fn render_histogram(h: &[usize], lo: f32, hi: f32, width: usize) -> String {
+    let max = *h.iter().max().unwrap_or(&1) as f64;
+    let bins = h.len();
+    let mut out = String::new();
+    for (i, &c) in h.iter().enumerate() {
+        let a = lo + (hi - lo) * i as f32 / bins as f32;
+        let bar = "#".repeat(((c as f64 / max) * width as f64).round() as usize);
+        out.push_str(&format!("{a:>8.2} | {bar} {c}\n"));
+    }
+    out
+}
+
+/// Activation summary for Table 19.
+#[derive(Clone, Copy, Debug)]
+pub struct ActivationStats {
+    pub mean: f64,
+    pub variance: f64,
+    pub kurtosis: f64,
+    pub max_abs: f64,
+}
+
+pub fn activation_stats(x: &Mat) -> ActivationStats {
+    let xs: Vec<f64> = x.data.iter().map(|&v| v as f64).collect();
+    ActivationStats {
+        mean: crate::util::mean(&xs),
+        variance: crate::util::variance(&xs),
+        kurtosis: crate::util::excess_kurtosis(&xs),
+        max_abs: xs.iter().fold(0.0, |a, b| a.max(b.abs())),
+    }
+}
+
+/// Normalize rows to unit RMS (the paper reports stats of RMSNorm-ed
+/// activations: mean ~0, var ~1, high kurtosis).
+pub fn normalize_rows_rms(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let rms = (row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32).sqrt();
+        if rms > 0.0 {
+            for v in row.iter_mut() {
+                *v /= rms;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn spiky(rows: usize, cols: usize) -> Mat {
+        let mut rng = Pcg64::new(1);
+        let mut m = Mat::from_fn(rows, cols, |_, _| rng.laplace(1.0));
+        for i in 0..rows {
+            *m.at_mut(i, 3) *= 30.0;
+        }
+        m
+    }
+
+    #[test]
+    fn outlier_count_and_threshold() {
+        let m = spiky(64, 64);
+        let tau = outlier_threshold(&m, 0.99);
+        let n = count_outliers(&m, tau);
+        // ~1% of elements above the 99th percentile.
+        assert!((20..=60).contains(&n), "n={n}");
+        assert_eq!(count_outliers(&m, f32::MAX), 0);
+    }
+
+    #[test]
+    fn quant_error_decreases_with_bits_and_smoothing() {
+        let m = spiky(64, 64);
+        assert!(quant_error(&m, 8) < quant_error(&m, 4));
+        // Hadamard rotation spreads the spike → lower quant error.
+        let mut r = m.clone();
+        crate::linalg::fwht_rows(&mut r);
+        assert!(quant_error(&r, 4) < quant_error(&m, 4));
+    }
+
+    #[test]
+    fn histogram_partitions_everything() {
+        let m = spiky(16, 64);
+        let h = histogram(&m, -5.0, 5.0, 20);
+        assert_eq!(h.iter().sum::<usize>(), m.data.len());
+        let rendered = render_histogram(&h, -5.0, 5.0, 40);
+        assert_eq!(rendered.lines().count(), 20);
+    }
+
+    #[test]
+    fn stats_of_spiky_have_high_kurtosis() {
+        let m = spiky(128, 64);
+        let s = activation_stats(&normalize_rows_rms(&m));
+        assert!(s.kurtosis > 5.0, "kurtosis {}", s.kurtosis);
+        assert!(s.mean.abs() < 0.2);
+        assert!((s.variance - 1.0).abs() < 0.3, "var {}", s.variance);
+    }
+
+    #[test]
+    fn rotation_reduces_kurtosis() {
+        let m = spiky(128, 64);
+        let mut r = m.clone();
+        crate::linalg::fwht_rows(&mut r);
+        assert!(
+            activation_stats(&r).kurtosis < activation_stats(&m).kurtosis / 2.0,
+            "hadamard should gaussianize"
+        );
+    }
+}

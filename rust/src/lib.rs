@@ -1,0 +1,26 @@
+//! # DartQuant — rotational distribution calibration for LLM quantization
+//!
+//! A reproduction of *DartQuant: Efficient Rotational Distribution
+//! Calibration for LLM Quantization* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the calibration coordinator, quantization
+//!   pipeline, baselines, evaluation harness and CLI. Python is never on
+//!   this path.
+//! * **L2/L1 (`python/compile/`)** — JAX calibration graphs and Pallas
+//!   kernels, AOT-lowered once to `artifacts/*.hlo.txt` by `make artifacts`
+//!   and executed here through the PJRT C API (`runtime`).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod linalg;
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod rotation;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

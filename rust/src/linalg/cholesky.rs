@@ -1,0 +1,117 @@
+//! Cholesky factorization + SPD inverse — the numerical core GPTQ needs
+//! (H⁻¹ of the dampened activation Hessian, consumed column-by-column).
+
+use crate::tensor::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Returns None if A is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // Accumulate in f64: GPTQ Hessians are ill-conditioned and f32
+            // accumulation loses PD-ness at n ≥ a few hundred.
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = (sum.sqrt()) as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn cholesky_inverse(a: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Forward-solve L·X = I → X = L⁻¹ (lower triangular).
+    let mut linv = Mat::zeros(n, n);
+    for col in 0..n {
+        for i in col..n {
+            let mut sum = if i == col { 1.0f64 } else { 0.0 };
+            for k in col..i {
+                sum -= l.at(i, k) as f64 * linv.at(k, col) as f64;
+            }
+            *linv.at_mut(i, col) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    // A⁻¹ = L⁻ᵀ L⁻¹.
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0f64;
+            for k in i.max(j)..n {
+                sum += linv.at(k, i) as f64 * linv.at(k, j) as f64;
+            }
+            *inv.at_mut(i, j) = sum as f32;
+        }
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::prng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = matmul(&b.t(), &b);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32 * 0.1; // damp
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        for n in [1usize, 2, 8, 33] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).expect("SPD");
+            let d = matmul(&l, &l.t()).max_abs_diff(&a);
+            assert!(d < 1e-3 * n as f32, "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Pcg64::new(2);
+        for n in [1usize, 3, 16, 40] {
+            let a = random_spd(n, &mut rng);
+            let inv = cholesky_inverse(&a).expect("SPD");
+            let d = matmul(&a, &inv).max_abs_diff(&Mat::eye(n));
+            assert!(d < 5e-3, "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let mut rng = Pcg64::new(3);
+        let a = random_spd(6, &mut rng);
+        let l = cholesky(&a).unwrap();
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+            assert!(l.at(i, i) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Hadamard transforms — the rotation workhorse of QuaRot and the online
+//! R3/R4 transforms of the DartQuant inference graph (Appendix A).
+//!
+//! Supported orders: n = m·2^k with m ∈ {1, 12, 20}. The 12 and 20 bases
+//! come from the Paley-I construction (q = 11, 19 ≡ 3 mod 4), matching the
+//! had12/had20 blocks QuaRot uses for non-power-of-two LLM dims.
+//! All matrices returned are **orthonormal** (scaled by 1/√n) so they are
+//! valid rotation matrices R with R·Rᵀ = I.
+
+use crate::tensor::{matmul, Mat};
+use crate::util::prng::Pcg64;
+
+/// In-place fast Walsh–Hadamard transform of one row (len must be 2^k),
+/// normalized by 1/√n — i.e. multiplication by the orthonormal H_{2^k}.
+pub fn fwht_row(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= scale;
+    }
+}
+
+/// Apply the orthonormal Hadamard transform of order `cols` to every row.
+/// Fast butterfly path for powers of two; dense multiply for 12·2^k / 20·2^k.
+pub fn fwht_rows(x: &mut Mat) {
+    if x.cols.is_power_of_two() {
+        for i in 0..x.rows {
+            fwht_row(x.row_mut(i));
+        }
+    } else {
+        let h = hadamard_matrix(x.cols);
+        *x = matmul(x, &h);
+    }
+}
+
+/// Whether an orthonormal Hadamard of this order is constructible here.
+pub fn hadamard_supported(n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    let mut m = n;
+    while m % 2 == 0 {
+        m /= 2;
+    }
+    matches!(m, 1 | 3 | 5) && n % 4 == 0 || m == 1
+    // m==3 → 12·2^k (k≥2 folded into the evenness check), m==5 → 20·2^k.
+}
+
+/// Legendre symbol χ(a) in GF(q), χ(0) = 0.
+fn legendre(a: i64, q: i64) -> i64 {
+    let a = a.rem_euclid(q);
+    if a == 0 {
+        return 0;
+    }
+    // Euler's criterion by fast modular exponentiation.
+    let mut base = a;
+    let mut exp = (q - 1) / 2;
+    let mut acc = 1i64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = acc * base % q;
+        }
+        base = base * base % q;
+        exp >>= 1;
+    }
+    if acc == 1 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Paley-I Hadamard matrix of order q+1 (entries ±1), q ≡ 3 mod 4 prime.
+fn paley1(q: i64) -> Mat {
+    let n = (q + 1) as usize;
+    // S[0][j]=1 (j≥1), S[i][0]=-1 (i≥1), S[i][j]=χ(i-j), H = S + I.
+    Mat::from_fn(n, n, |i, j| {
+        let s = if i == 0 && j == 0 {
+            0
+        } else if i == 0 {
+            1
+        } else if j == 0 {
+            -1
+        } else {
+            legendre(i as i64 - j as i64, q)
+        };
+        (s + if i == j { 1 } else { 0 }) as f32
+    })
+}
+
+/// Orthonormal Hadamard matrix of order n = m·2^k, m ∈ {1, 12, 20}.
+pub fn hadamard_matrix(n: usize) -> Mat {
+    assert!(n > 0);
+    let mut m = n;
+    let mut k = 0u32;
+    while m % 2 == 0 {
+        m /= 2;
+        k += 1;
+    }
+    let base = match (m, n) {
+        (1, _) => Mat::from_vec(1, 1, vec![1.0]),
+        (3, _) if n % 12 == 0 => {
+            // reinterpret factorization as 12 · 2^(k-2)
+            k -= 2;
+            paley1(11)
+        }
+        (5, _) if n % 20 == 0 => {
+            k -= 2;
+            paley1(19)
+        }
+        _ => panic!("no Hadamard construction for order {n} (need m·2^k, m ∈ {{1,12,20}})"),
+    };
+    // Sylvester doubling: H_{2s} = [[H, H], [H, -H]].
+    let mut h = base;
+    for _ in 0..k {
+        let s = h.rows;
+        let mut h2 = Mat::zeros(2 * s, 2 * s);
+        for i in 0..s {
+            for j in 0..s {
+                let v = h.at(i, j);
+                *h2.at_mut(i, j) = v;
+                *h2.at_mut(i, j + s) = v;
+                *h2.at_mut(i + s, j) = v;
+                *h2.at_mut(i + s, j + s) = -v;
+            }
+        }
+        h = h2;
+    }
+    assert_eq!(h.rows, n);
+    let scale = 1.0 / (n as f32).sqrt();
+    h.scale(scale);
+    h
+}
+
+/// QuaRot-style randomized Hadamard rotation: H · diag(s), s ∈ {±1}ⁿ.
+/// Still orthogonal; the random signs decorrelate it from weight structure.
+pub fn randomized_hadamard(n: usize, rng: &mut Pcg64) -> Mat {
+    let mut h = hadamard_matrix(n);
+    for j in 0..n {
+        if rng.below(2) == 1 {
+            for i in 0..n {
+                *h.at_mut(i, j) = -h.at(i, j);
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::util::propcheck::{gen, Runner};
+
+    #[test]
+    fn legendre_basics() {
+        // QRs mod 11: {1,3,4,5,9}
+        for (a, want) in [(1, 1), (3, 1), (4, 1), (5, 1), (9, 1), (2, -1), (6, -1), (0, 0)] {
+            assert_eq!(legendre(a, 11), want, "χ({a}) mod 11");
+        }
+    }
+
+    #[test]
+    fn paley_bases_are_hadamard() {
+        for q in [11i64, 19] {
+            let h = paley1(q);
+            let n = h.rows;
+            // entries ±1 and H·Hᵀ = n·I
+            assert!(h.data.iter().all(|&v| v == 1.0 || v == -1.0));
+            let hht = matmul(&h, &h.t());
+            let mut scaled = Mat::eye(n);
+            scaled.scale(n as f32);
+            assert!(hht.max_abs_diff(&scaled) < 1e-3, "q={q}");
+        }
+    }
+
+    #[test]
+    fn orthonormal_for_all_supported_orders() {
+        for n in [1usize, 2, 4, 8, 64, 128, 12, 24, 48, 96, 768, 20, 40, 320, 1280] {
+            let h = hadamard_matrix(n);
+            assert!(orthogonality_defect(&h) < 5e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no Hadamard construction")]
+    fn unsupported_order_panics() {
+        let _ = hadamard_matrix(36); // 9·4 — m=9 unsupported
+    }
+
+    #[test]
+    fn fwht_matches_dense_matrix() {
+        let mut rng = crate::util::prng::Pcg64::new(1);
+        for n in [2usize, 8, 64, 256] {
+            let x = Mat::from_fn(3, n, |_, _| rng.normal());
+            let mut fast = x.clone();
+            fwht_rows(&mut fast);
+            let dense = matmul(&x, &hadamard_matrix(n));
+            // FWHT computes x·H with H symmetric for Sylvester matrices.
+            assert!(fast.max_abs_diff(&dense) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fwht_rows_dense_path_for_had12() {
+        let mut rng = crate::util::prng::Pcg64::new(2);
+        let x = Mat::from_fn(4, 24, |_, _| rng.normal());
+        let mut y = x.clone();
+        fwht_rows(&mut y);
+        let before: f32 = x.fro_norm();
+        assert!((y.fro_norm() - before).abs() < 1e-3, "norm preserved");
+    }
+
+    #[test]
+    fn prop_fwht_is_norm_preserving_involution() {
+        Runner::new().cases(24).run("fwht involution", |rng| {
+            let k = gen::size(rng, 1, 8);
+            let n = 1usize << k;
+            let x = gen::activations(rng, n);
+            let mut y = x.clone();
+            fwht_row(&mut y);
+            let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let n2: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if (n1 - n2).abs() > 1e-2 * n1.max(1.0) {
+                return Err(format!("norm {n1} -> {n2}"));
+            }
+            // Sylvester H is symmetric and orthonormal ⇒ H·H = I.
+            fwht_row(&mut y);
+            let d = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            if d < 1e-2 {
+                Ok(())
+            } else {
+                Err(format!("involution defect {d}"))
+            }
+        });
+    }
+
+    #[test]
+    fn randomized_hadamard_is_orthogonal_and_random() {
+        let mut rng = crate::util::prng::Pcg64::new(3);
+        let a = randomized_hadamard(64, &mut rng);
+        let b = randomized_hadamard(64, &mut rng);
+        assert!(orthogonality_defect(&a) < 5e-4);
+        assert!(a.max_abs_diff(&b) > 0.01, "different sign draws");
+    }
+
+    #[test]
+    fn supported_predicate_matches_constructor() {
+        for n in 1..=64usize {
+            let ok = std::panic::catch_unwind(|| hadamard_matrix(n)).is_ok();
+            assert_eq!(
+                hadamard_supported(n),
+                ok,
+                "hadamard_supported({n}) disagrees with constructor"
+            );
+        }
+    }
+}

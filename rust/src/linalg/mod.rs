@@ -1,0 +1,50 @@
+//! Dense linear-algebra substrate: Householder QR (the QR-Orth projection,
+//! mirroring the paper's Algorithm 2), Cholesky (GPTQ's Hessian inverse),
+//! Hadamard matrix constructions (QuaRot/R3/R4 baselines), and orthogonality
+//! utilities.
+
+mod cholesky;
+mod hadamard;
+mod qr;
+
+pub use cholesky::{cholesky, cholesky_inverse};
+pub use hadamard::{fwht_row, fwht_rows, hadamard_matrix, hadamard_supported, randomized_hadamard};
+pub use qr::{householder_qr, qr_orthogonalize};
+
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+
+/// max |QᵀQ − I| — the orthogonality defect used by tests and calibration
+/// sanity checks.
+pub fn orthogonality_defect(q: &Mat) -> f32 {
+    assert_eq!(q.rows, q.cols);
+    let qtq = crate::tensor::matmul(&q.t(), q);
+    qtq.max_abs_diff(&Mat::eye(q.rows))
+}
+
+/// Random orthogonal matrix: QR of a Gaussian matrix with the sign-fixed Q
+/// (Haar-ish; exact Haar needs the sign fix we apply).
+pub fn random_orthogonal(n: usize, rng: &mut Pcg64) -> Mat {
+    let z = Mat::from_fn(n, n, |_, _| rng.normal());
+    qr_orthogonalize(&z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Pcg64::new(1);
+        for n in [2usize, 3, 17, 64] {
+            let q = random_orthogonal(n, &mut rng);
+            assert!(orthogonality_defect(&q) < 2e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn orthogonality_defect_detects_nonorthogonal() {
+        let m = Mat::from_fn(4, 4, |i, j| if i == j { 2.0 } else { 0.0 });
+        assert!(orthogonality_defect(&m) > 1.0);
+    }
+}

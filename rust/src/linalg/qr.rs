@@ -1,0 +1,170 @@
+//! Householder QR — the paper's Algorithm 2, and the rust-native mirror of
+//! the jnp scan implementation in `python/compile/model.py` (the AOT HLO
+//! path). Both sign-canonicalize Q so that diag(R) ≥ 0, making the rust and
+//! jax factors directly comparable in integration tests.
+//!
+//! Cost: ≈ 4/3·n³ FLOPs (Appendix B.1), vs the ≈6n³ overhead of a Cayley
+//! step (Appendix B.2) — the asymmetry QR-Orth exploits.
+
+use crate::tensor::Mat;
+
+/// Full QR of a square matrix via Householder reflections.
+/// Returns (Q, R) with A = Q·R, Q orthogonal, R upper-triangular with
+/// non-negative diagonal (sign-canonical form).
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    assert_eq!(a.rows, a.cols, "square QR only (rotation matrices)");
+    let n = a.rows;
+    let mut r = a.clone();
+    let mut qt = Mat::eye(n); // accumulates H_{n-1}…H_0 = Qᵀ
+    let mut v = vec![0.0f32; n];
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0f32;
+        for i in k..n {
+            let x = r.at(i, k);
+            v[i] = x;
+            norm2 += x * x;
+        }
+        let alpha = norm2.sqrt();
+        if alpha < 1e-30 {
+            continue; // column already zero below diagonal
+        }
+        let sign = if v[k] >= 0.0 { 1.0 } else { -1.0 };
+        v[k] += sign * alpha;
+        let vnorm2: f32 = v[k..n].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-30 {
+            continue;
+        }
+        let inv = 2.0 / vnorm2;
+
+        // R <- (I - 2vvᵀ/‖v‖²) R, only columns k..n are affected.
+        for j in k..n {
+            let mut dot = 0.0f32;
+            for i in k..n {
+                dot += v[i] * r.at(i, j);
+            }
+            let dot = dot * inv;
+            for i in k..n {
+                *r.at_mut(i, j) -= dot * v[i];
+            }
+        }
+        // Qᵀ <- (I - 2vvᵀ/‖v‖²) Qᵀ, all columns affected.
+        for j in 0..n {
+            let mut dot = 0.0f32;
+            for i in k..n {
+                dot += v[i] * qt.at(i, j);
+            }
+            let dot = dot * inv;
+            for i in k..n {
+                *qt.at_mut(i, j) -= dot * v[i];
+            }
+        }
+    }
+
+    // Sign canonicalization: flip columns of Q (rows of Qᵀ) so diag(R) ≥ 0.
+    for k in 0..n {
+        if r.at(k, k) < 0.0 {
+            for j in k..n {
+                *r.at_mut(k, j) = -r.at(k, j);
+            }
+            for j in 0..n {
+                *qt.at_mut(k, j) = -qt.at(k, j);
+            }
+        }
+        // Zero the strictly-lower triangle exactly (numerical dust).
+        for i in (k + 1)..n {
+            *r.at_mut(i, k) = 0.0;
+        }
+    }
+
+    (qt.t(), r)
+}
+
+/// The QR-Orth projection: latent Z ↦ orthogonal R = qr(Z).Q.
+pub fn qr_orthogonalize(z: &Mat) -> Mat {
+    householder_qr(z).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::tensor::matmul;
+    use crate::util::prng::Pcg64;
+    use crate::util::propcheck::{gen, Runner};
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Pcg64::new(1);
+        for n in [1usize, 2, 5, 32, 64] {
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let (q, r) = householder_qr(&a);
+            let d = matmul(&q, &r).max_abs_diff(&a);
+            assert!(d < 1e-3 * (n as f32).sqrt(), "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal_r_is_upper() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::from_fn(48, 48, |_, _| rng.normal());
+        let (q, r) = householder_qr(&a);
+        assert!(orthogonality_defect(&q) < 2e-4);
+        for i in 0..48 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+            assert!(r.at(i, i) >= 0.0, "sign-canonical diag");
+        }
+    }
+
+    #[test]
+    fn identity_fixed_point() {
+        let (q, r) = householder_qr(&Mat::eye(8));
+        assert!(q.max_abs_diff(&Mat::eye(8)) < 1e-6);
+        assert!(r.max_abs_diff(&Mat::eye(8)) < 1e-6);
+    }
+
+    #[test]
+    fn handles_rank_deficient_without_nan() {
+        // Two identical columns.
+        let a = Mat::from_fn(4, 4, |i, j| if j < 2 { (i + 1) as f32 } else { (i * j) as f32 });
+        let (q, r) = householder_qr(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn prop_qr_orthogonalize_always_orthogonal() {
+        Runner::new().cases(32).run("qr orth", |rng| {
+            let n = gen::size(rng, 2, 40);
+            let z = Mat::from_vec(n, n, gen::vec_f32(rng, n * n));
+            let q = qr_orthogonalize(&z);
+            let d = orthogonality_defect(&q);
+            if d < 5e-4 {
+                Ok(())
+            } else {
+                Err(format!("defect {d} at n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rotation_preserves_norms() {
+        Runner::new().cases(32).run("norm invariance", |rng| {
+            let n = gen::size(rng, 2, 32);
+            let z = Mat::from_vec(n, n, gen::vec_f32(rng, n * n));
+            let q = qr_orthogonalize(&z);
+            let x = Mat::from_vec(1, n, gen::activations(rng, n));
+            let xr = matmul(&x, &q);
+            let a = x.fro_norm();
+            let b = xr.fro_norm();
+            if (a - b).abs() <= 1e-3 * a.max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("‖x‖={a} vs ‖xR‖={b}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,348 @@
+//! `dartquant` — command-line launcher for the DartQuant reproduction.
+//!
+//! Subcommands:
+//!   calibrate  run rotation calibration for one model (prints loss curve)
+//!   quantize   full pipeline: capture → calibrate → fuse → quantize → save
+//!   eval       PPL + zero-shot evaluation of a checkpoint (or fresh model)
+//!   pipeline   quantize + eval in one go, printing a paper-style row
+//!   train      train the tiny config on a synthetic dialect (AOT Adam step)
+//!   info       list artifacts, models and the runtime platform
+
+use anyhow::{bail, Result};
+use dartquant::calib::CalibConfig;
+use dartquant::coordinator::{self, Method, PipelineConfig};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::eval::{self, EvalSpec};
+use dartquant::model::{BitSetting, ModelConfig, TokenBatch, TrainState, Weights};
+use dartquant::runtime::Runtime;
+use dartquant::util::bench::{fnum, Table};
+use dartquant::util::cli::Command;
+use dartquant::util::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dialect_of(s: &str) -> Result<Dialect> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "wiki" | "wikitext2" => Dialect::Wiki,
+        "ptb" => Dialect::Ptb,
+        "c4" => Dialect::C4,
+        other => bail!("unknown dialect {other:?} (wiki|ptb|c4)"),
+    })
+}
+
+fn load_model(args: &dartquant::util::cli::Args) -> Result<(ModelConfig, Weights, Corpus)> {
+    let name = args.get_or("model", "llama2-tiny");
+    let cfg = ModelConfig::builtin(name)?;
+    let dialect = dialect_of(args.get_or("dialect", "wiki"))?;
+    let corpus = Corpus::new(dialect, cfg.vocab, 7);
+    let weights = match args.get("checkpoint") {
+        Some(path) => Weights::load(std::path::Path::new(path))?,
+        None => Weights::default_grammar(&cfg, 1, corpus.successor()),
+    };
+    Ok((cfg, weights, corpus))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd {
+        "calibrate" => cmd_calibrate(rest),
+        "quantize" => cmd_quantize(rest),
+        "eval" => cmd_eval(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "train" => cmd_train(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", help_text()),
+    }
+}
+
+fn help_text() -> String {
+    "dartquant — rotational distribution calibration for LLM quantization\n\
+     \n\
+     commands:\n\
+       calibrate   run rotation calibration, print the loss curve\n\
+       quantize    full pipeline, save the quantized checkpoint\n\
+       eval        PPL + zero-shot of a model/checkpoint\n\
+       pipeline    quantize + eval, print a paper-style row\n\
+       train       train the tiny config (AOT Adam step)\n\
+       info        artifacts + models + runtime platform"
+        .to_string()
+}
+
+fn print_help() {
+    println!("{}", help_text());
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("calibrate", "run rotation calibration for one model")
+        .flag_default("model", "llama2-tiny", "model config")
+        .flag_default("dialect", "wiki", "calibration dialect (wiki|ptb|c4)")
+        .flag_default("steps", "60", "optimizer steps")
+        .flag_default("lr", "0.01", "learning rate")
+        .flag_default("objective", "whip", "whip|variance|kurtosis|quant")
+        .flag_default("scheme", "qr", "qr|cayley")
+        .flag_default("sequences", "32", "calibration sequences")
+        .flag("checkpoint", "load weights from a checkpoint file");
+    let a = cmd.parse(argv)?;
+    let (_cfg, weights, corpus) = load_model(&a)?;
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let seqs = corpus.calib_sequences(a.get_usize("sequences", 32)?, 256);
+    let pools = coordinator::capture_pools(&rt, &weights, &seqs, 0.1, 0)?;
+    let ccfg = CalibConfig {
+        objective: match a.get_or("objective", "whip") {
+            "whip" => dartquant::calib::Objective::Whip,
+            "variance" => dartquant::calib::Objective::Variance,
+            "kurtosis" => dartquant::calib::Objective::Kurtosis,
+            "quant" => dartquant::calib::Objective::Quant,
+            o => bail!("unknown objective {o}"),
+        },
+        scheme: match a.get_or("scheme", "qr") {
+            "qr" => dartquant::calib::OrthScheme::QrOrth,
+            "cayley" => dartquant::calib::OrthScheme::Cayley,
+            o => bail!("unknown scheme {o}"),
+        },
+        steps: a.get_usize("steps", 60)?,
+        lr: a.get_f64("lr", 0.01)? as f32,
+        ..Default::default()
+    };
+    println!(
+        "calibrating R1 on {} pooled activation rows (dim {})",
+        pools.r1_pool.rows, pools.r1_pool.cols
+    );
+    let res = dartquant::calib::calibrate_rotation(&rt, &pools.r1_pool, &ccfg)?;
+    for (i, l) in res.losses.iter().enumerate() {
+        if i % 5 == 0 || i + 1 == res.losses.len() {
+            println!("step {i:4}  loss {l:.4}");
+        }
+    }
+    println!(
+        "done in {} ({} steps); orthogonality defect {:.2e}",
+        fmt_duration(res.wall),
+        res.steps_run,
+        dartquant::linalg::orthogonality_defect(&res.rotation)
+    );
+    Ok(())
+}
+
+fn pipeline_config(a: &dartquant::util::cli::Args) -> Result<PipelineConfig> {
+    let method = Method::parse(a.get_or("method", "dartquant"))?;
+    let bits = BitSetting::parse(a.get_or("bits", "4-4-16"))?;
+    let mut cfg = PipelineConfig::new(method, bits);
+    cfg.calib_dialect = dialect_of(a.get_or("dialect", "wiki"))?;
+    cfg.calib_sequences = a.get_usize("sequences", 32)?;
+    cfg.calib.steps = a.get_usize("steps", 60)?;
+    cfg.workers = a.get_usize("workers", cfg.workers)?;
+    if a.get_bool("budget-3090") {
+        cfg.memory_budget = Some(24 << 20);
+    }
+    if let Some(b) = a.get("budget-bytes") {
+        cfg.memory_budget = Some(b.parse()?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("quantize", "run the full quantization pipeline")
+        .flag_default("model", "llama2-tiny", "model config")
+        .flag_default("method", "dartquant", "rtn|smoothquant|gptq|quarot|spinquant|ostquant|dartquant")
+        .flag_default("bits", "4-4-16", "W-A-KV bit setting")
+        .flag_default("dialect", "wiki", "calibration dialect")
+        .flag_default("sequences", "32", "calibration sequences")
+        .flag_default("steps", "60", "calibration steps")
+        .flag_default("workers", "4", "calibration worker threads")
+        .flag("out", "write the quantized checkpoint here")
+        .flag("checkpoint", "load base weights from a checkpoint")
+        .flag("budget-bytes", "memory budget for calibration jobs")
+        .switch("budget-3090", "scaled single-3090 memory budget (24 MiB)");
+    let a = cmd.parse(argv)?;
+    let (_cfg, weights, _corpus) = load_model(&a)?;
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let pcfg = pipeline_config(&a)?;
+    println!(
+        "pipeline: {} {} on {} ({} params)",
+        pcfg.method.name(),
+        pcfg.bits.label(),
+        weights.cfg.name,
+        weights.cfg.n_params()
+    );
+    let report = coordinator::run_pipeline(&rt, &weights, &pcfg)?;
+    let s = &report.stats;
+    println!(
+        "capture {} | calibrate {} | quantize {} | total {} | peak job bytes {}",
+        fmt_duration(s.capture_time),
+        fmt_duration(s.calibrate_time),
+        fmt_duration(s.quantize_time),
+        fmt_duration(s.total_time),
+        s.peak_job_bytes
+    );
+    if let Some(out) = a.get("out") {
+        report.weights.save(std::path::Path::new(out))?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
+fn eval_row(
+    rt: &Runtime,
+    weights: &Weights,
+    bits: BitSetting,
+    use_had: bool,
+    items: usize,
+) -> Result<(f64, f64, f64, f64, f64)> {
+    let spec = EvalSpec::default();
+    let (a_lv, kv_lv) = (BitSetting::levels(bits.a), BitSetting::levels(bits.kv));
+    let mut ppls = Vec::new();
+    for d in Dialect::ALL {
+        let corpus = Corpus::new(d, weights.cfg.vocab, 7);
+        ppls.push(eval::ppl_artifact(rt, weights, &corpus, spec, a_lv, kv_lv, use_had)?);
+    }
+    let (_per_task, zs) = eval::zeroshot::suite_accuracy_artifact(
+        rt, weights, Dialect::Wiki, items, 256, 99, a_lv, kv_lv, use_had,
+    )?;
+    Ok((ppls[0], ppls[1], ppls[2], (ppls[0] + ppls[1] + ppls[2]) / 3.0, zs * 100.0))
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("eval", "PPL + zero-shot evaluation")
+        .flag_default("model", "llama2-tiny", "model config")
+        .flag_default("bits", "16-16-16", "W-A-KV (activations/KV applied at eval)")
+        .flag_default("items", "8", "zero-shot items per task")
+        .flag_default("dialect", "wiki", "model grammar dialect")
+        .flag("checkpoint", "evaluate this checkpoint")
+        .switch("online-had", "enable online R3/R4 hadamard (rotated ckpts)");
+    let a = cmd.parse(argv)?;
+    let (_cfg, weights, _corpus) = load_model(&a)?;
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let bits = BitSetting::parse(a.get_or("bits", "16-16-16"))?;
+    let (wiki, ptb, c4, avg, zs) = eval_row(
+        &rt,
+        &weights,
+        bits,
+        a.get_bool("online-had"),
+        a.get_usize("items", 8)?,
+    )?;
+    let mut t = Table::new(&["Wiki", "PTB", "C4", "Avg PPL", "0-shot9"]);
+    t.row(&[fnum(wiki, 2), fnum(ptb, 2), fnum(c4, 2), fnum(avg, 2), fnum(zs, 2)]);
+    t.print(&format!("{} @ {}", weights.cfg.name, bits.label()));
+    Ok(())
+}
+
+fn cmd_pipeline(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pipeline", "quantize + eval, print a paper-style row")
+        .flag_default("model", "llama2-tiny", "model config")
+        .flag_default("method", "dartquant", "quantization method")
+        .flag_default("bits", "4-4-16", "W-A-KV bit setting")
+        .flag_default("dialect", "wiki", "calibration dialect")
+        .flag_default("sequences", "32", "calibration sequences")
+        .flag_default("steps", "60", "calibration steps")
+        .flag_default("workers", "4", "worker threads")
+        .flag_default("items", "8", "zero-shot items per task")
+        .flag("checkpoint", "base weights checkpoint")
+        .flag("budget-bytes", "memory budget")
+        .switch("budget-3090", "scaled 3090 budget");
+    let a = cmd.parse(argv)?;
+    let (_cfg, weights, _corpus) = load_model(&a)?;
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let pcfg = pipeline_config(&a)?;
+    let report = coordinator::run_pipeline(&rt, &weights, &pcfg)?;
+    let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);
+    let (wiki, ptb, c4, avg, zs) =
+        eval_row(&rt, &report.weights, pcfg.bits, use_had, a.get_usize("items", 8)?)?;
+    let mut t = Table::new(&["Method", "Bits", "Wiki", "PTB", "C4", "Avg", "0-shot9", "calib time"]);
+    t.row(&[
+        pcfg.method.name().to_string(),
+        pcfg.bits.label(),
+        fnum(wiki, 2),
+        fnum(ptb, 2),
+        fnum(c4, 2),
+        fnum(avg, 2),
+        fnum(zs, 2),
+        fmt_duration(report.stats.calibrate_time),
+    ]);
+    t.print(&format!("{} pipeline", weights.cfg.name));
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train the tiny config via the AOT Adam step")
+        .flag_default("model", "llama2-tiny", "model config (must have a train artifact)")
+        .flag_default("dialect", "wiki", "training dialect")
+        .flag_default("steps", "100", "training steps")
+        .flag_default("lr", "0.0015", "learning rate")
+        .flag("out", "write the trained checkpoint here")
+        .switch("from-scratch", "random init instead of the grammar init");
+    let a = cmd.parse(argv)?;
+    let name = a.get_or("model", "llama2-tiny");
+    let cfg = ModelConfig::builtin(name)?;
+    let dialect = dialect_of(a.get_or("dialect", "wiki"))?;
+    let corpus = Corpus::new(dialect, cfg.vocab, 7);
+    let weights = if a.get_bool("from-scratch") {
+        Weights::default_synthetic(&cfg, 1)
+    } else {
+        Weights::default_grammar(&cfg, 1, corpus.successor())
+    };
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let steps = a.get_usize("steps", 100)?;
+    let lr = a.get_f64("lr", 0.0015)? as f32;
+    let mut state = TrainState::new(weights);
+    for step in 0..steps {
+        let toks = TokenBatch::new(&corpus.train_batch(8, 256, step as u64));
+        let loss = state.step(&rt, &toks, lr)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {loss:.4}  ppl {:.2}", (loss as f64).exp());
+        }
+    }
+    if let Some(out) = a.get("out") {
+        state.weights.save(std::path::Path::new(out))?;
+        println!("saved checkpoint to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifacts + models + platform");
+    let _a = cmd.parse(argv)?;
+    println!("models:");
+    for cfg in ModelConfig::all_builtin() {
+        println!(
+            "  {:13} d={} L={} heads={}/{} ffn={} vocab={} params={:.1}M  — {}",
+            cfg.name,
+            cfg.dim,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.ffn_dim,
+            cfg.vocab,
+            cfg.n_params() as f64 / 1e6,
+            cfg.paper_name()
+        );
+    }
+    if Runtime::artifacts_available() {
+        let rt = Runtime::open(Runtime::default_dir())?;
+        println!("\nruntime platform: {}", rt.platform());
+        println!("artifacts ({}):", rt.manifest().len());
+        for name in rt.manifest().names() {
+            println!("  {name}");
+        }
+    } else {
+        println!("\nartifacts/ not built — run `make artifacts`");
+    }
+    Ok(())
+}

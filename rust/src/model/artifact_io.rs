@@ -1,0 +1,225 @@
+//! Glue between `Weights`/token batches and the PJRT artifact signatures:
+//! builds the ordered `Value` input lists for `fwd_*`, `fwdq_*`,
+//! `capture_*`, `spin_*` and `train_*` entry points, and unpacks their
+//! outputs.
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::runtime::{Executable, Runtime, Value};
+use crate::tensor::Mat;
+use anyhow::{bail, Context, Result};
+
+/// Token batch with the fixed artifact geometry (B, T).
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>, // row-major (B, T)
+}
+
+impl TokenBatch {
+    pub fn new(seqs: &[Vec<i32>]) -> TokenBatch {
+        assert!(!seqs.is_empty());
+        let seq = seqs[0].len();
+        assert!(seqs.iter().all(|s| s.len() == seq), "ragged batch");
+        TokenBatch {
+            batch: seqs.len(),
+            seq,
+            tokens: seqs.iter().flatten().copied().collect(),
+        }
+    }
+
+    pub fn rows(&self) -> Vec<Vec<i32>> {
+        self.tokens.chunks(self.seq).map(|c| c.to_vec()).collect()
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::from_i32(vec![self.batch, self.seq], self.tokens.clone())
+    }
+}
+
+/// Weight tensors as ordered artifact inputs.
+pub fn weight_values(w: &Weights) -> Vec<Value> {
+    w.ordered().map(|(_, m)| Value::from_mat(m)).collect()
+}
+
+/// Run `fwd_{cfg}`: per-position NLL (B, T-1).
+pub fn run_fwd(rt: &Runtime, w: &Weights, toks: &TokenBatch) -> Result<Mat> {
+    let name = format!("fwd_{}", w.cfg.name);
+    let mut inputs = weight_values(w);
+    inputs.push(toks.to_value());
+    let out = rt.run(&name, &inputs)?;
+    out[0].to_mat()
+}
+
+/// Run `fwdq_{cfg}` with activation/KV fake-quant and optional online
+/// Hadamard (wd must be pre-fused when `use_had`).
+pub fn run_fwdq(
+    rt: &Runtime,
+    w: &Weights,
+    toks: &TokenBatch,
+    a_levels: f32,
+    kv_levels: f32,
+    use_had: bool,
+) -> Result<Mat> {
+    let name = format!("fwdq_{}", w.cfg.name);
+    let mut inputs = weight_values(w);
+    inputs.push(toks.to_value());
+    inputs.push(Value::scalar(a_levels));
+    inputs.push(Value::scalar(kv_levels));
+    inputs.push(Value::scalar(if use_had { 1.0 } else { 0.0 }));
+    let out = rt.run(&name, &inputs)?;
+    out[0].to_mat()
+}
+
+/// Captured calibration sites from `capture_{cfg}`.
+pub struct CapturedSites {
+    /// Post-RMSNorm hidden states per site (2L sites), each (B·T, d).
+    pub x_sites: Vec<Mat>,
+    /// Value-projection outputs per layer (L), each (B·T, kv_dim).
+    pub v_sites: Vec<Mat>,
+}
+
+pub fn run_capture(rt: &Runtime, w: &Weights, toks: &TokenBatch) -> Result<CapturedSites> {
+    let name = format!("capture_{}", w.cfg.name);
+    let mut inputs = weight_values(w);
+    inputs.push(toks.to_value());
+    let out = rt.run(&name, &inputs)?;
+    let unstack = |v: &Value, count: usize| -> Result<Vec<Mat>> {
+        let shape = v.shape();
+        if shape.len() != 3 || shape[0] != count {
+            bail!("capture output shape {shape:?}, expected [{count}, ., .]");
+        }
+        let (rows, cols) = (shape[1], shape[2]);
+        let data = v.f32_data()?;
+        Ok((0..count)
+            .map(|s| {
+                Mat::from_vec(rows, cols, data[s * rows * cols..(s + 1) * rows * cols].to_vec())
+            })
+            .collect())
+    };
+    let l = w.cfg.n_layers;
+    // out[2] is the parameter-liveness checksum (see aot.py) — ignored.
+    Ok(CapturedSites {
+        x_sites: unstack(&out[0], 2 * l)?,
+        v_sites: unstack(&out[1], l)?,
+    })
+}
+
+/// One SpinQuant-sim end-to-end Cayley step via `spin_{cfg}`.
+/// Returns (R1', M', loss).
+pub fn run_spin_step(
+    exe: &Executable,
+    r1: &Mat,
+    m: &Mat,
+    w: &Weights,
+    toks: &TokenBatch,
+    lr: f32,
+) -> Result<(Mat, Mat, f32)> {
+    let mut inputs = vec![Value::from_mat(r1), Value::from_mat(m)];
+    inputs.extend(weight_values(w));
+    inputs.push(toks.to_value());
+    inputs.push(Value::scalar(lr));
+    let out = exe.run(&inputs)?;
+    Ok((out[0].to_mat()?, out[1].to_mat()?, out[2].to_scalar()?))
+}
+
+/// Adam training state for `train_{cfg}`.
+pub struct TrainState {
+    pub weights: Weights,
+    m: Vec<Mat>,
+    v: Vec<Mat>,
+    pub t: f32,
+}
+
+impl TrainState {
+    pub fn new(weights: Weights) -> TrainState {
+        let zeros: Vec<Mat> = weights
+            .ordered()
+            .map(|(_, w)| Mat::zeros(w.rows, w.cols))
+            .collect();
+        TrainState { m: zeros.clone(), v: zeros, weights, t: 0.0 }
+    }
+
+    /// One Adam step via the `train_{cfg}` artifact; returns the loss.
+    pub fn step(&mut self, rt: &Runtime, toks: &TokenBatch, lr: f32) -> Result<f32> {
+        let name = format!("train_{}", self.weights.cfg.name);
+        let exe = rt.load(&name).with_context(|| {
+            format!("train artifact for {} (only emitted for the tiny config)", self.weights.cfg.name)
+        })?;
+        let mut inputs = weight_values(&self.weights);
+        inputs.extend(self.m.iter().map(Value::from_mat));
+        inputs.extend(self.v.iter().map(Value::from_mat));
+        inputs.push(Value::scalar(self.t));
+        inputs.push(toks.to_value());
+        inputs.push(Value::scalar(lr));
+        let out = exe.run(&inputs)?;
+        let names: Vec<String> = self.weights.names().to_vec();
+        let k = names.len();
+        for (i, name) in names.iter().enumerate() {
+            self.weights.set(name, out[i].to_mat()?);
+            self.m[i] = out[k + i].to_mat()?;
+            self.v[i] = out[2 * k + i].to_mat()?;
+        }
+        self.t = out[3 * k].to_scalar()?;
+        out[3 * k + 1].to_scalar()
+    }
+}
+
+/// Mean NLL → perplexity.
+pub fn ppl_from_nll(nll: &Mat) -> f64 {
+    let mean: f64 =
+        nll.data.iter().map(|&v| v as f64).sum::<f64>() / nll.data.len() as f64;
+    mean.exp()
+}
+
+/// Load model configs embedded in the manifest (cross-check vs builtin).
+pub fn manifest_models(rt: &Runtime, manifest_path: &std::path::Path) -> Result<Vec<ModelConfig>> {
+    let _ = rt;
+    let text = std::fs::read_to_string(manifest_path)?;
+    let j = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_obj())
+        .context("manifest missing models section")?;
+    models
+        .iter()
+        .map(|(name, spec)| ModelConfig::from_manifest_json(name, spec))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_batch_layout() {
+        let tb = TokenBatch::new(&[vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!((tb.batch, tb.seq), (2, 3));
+        assert_eq!(tb.tokens, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(tb.rows()[1], vec![4, 5, 6]);
+        assert_eq!(tb.to_value().shape(), vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_batch_panics() {
+        TokenBatch::new(&[vec![1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn ppl_of_constant_nll() {
+        let nll = Mat::from_vec(1, 4, vec![2.0; 4]);
+        assert!((ppl_from_nll(&nll) - (2.0f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_values_ordered_like_param_names() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 1);
+        let vals = weight_values(&w);
+        assert_eq!(vals.len(), cfg.param_names().len());
+        assert_eq!(vals[0].shape(), vec![cfg.vocab, cfg.dim]); // embed first
+    }
+}

@@ -1,0 +1,268 @@
+//! Model configurations — rust mirror of `python/compile/configs.py`.
+//!
+//! The python side embeds its configs into `artifacts/manifest.json`; an
+//! integration test asserts both sides agree, so drift is caught at
+//! `make test` time rather than as silent shape errors.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// A tiny Llama-architecture configuration (see DESIGN.md §3 for how these
+/// stand in for the paper's Llama-2/3 7B–70B).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub head_dim: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+    pub n_experts: usize,
+    pub top_k: usize,
+}
+
+impl ModelConfig {
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_names()
+            .iter()
+            .map(|n| {
+                let (r, c) = self.param_shape(n);
+                r * c
+            })
+            .sum()
+    }
+
+    /// Flat ordered parameter list — must match `configs.param_names`.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for l in 0..self.n_layers {
+            for leaf in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("l{l}.{leaf}"));
+            }
+            if self.is_moe() {
+                names.push(format!("l{l}.router"));
+                for e in 0..self.n_experts {
+                    for leaf in ["wg", "wu", "wd"] {
+                        names.push(format!("l{l}.e{e}.{leaf}"));
+                    }
+                }
+            } else {
+                for leaf in ["wg", "wu", "wd"] {
+                    names.push(format!("l{l}.{leaf}"));
+                }
+            }
+        }
+        names.push("head".to_string());
+        names
+    }
+
+    /// Shape of each named parameter ([out, in], applied as x @ Wᵀ).
+    pub fn param_shape(&self, name: &str) -> (usize, usize) {
+        let (d, f, v, kd) = (self.dim, self.ffn_dim, self.vocab, self.kv_dim());
+        match name {
+            "embed" | "head" => (v, d),
+            _ => {
+                let leaf = name.rsplit('.').next().unwrap();
+                match leaf {
+                    "wq" => (self.q_dim(), d),
+                    "wk" | "wv" => (kd, d),
+                    "wo" => (d, self.q_dim()),
+                    "wg" | "wu" => (f, d),
+                    "wd" => (d, f),
+                    "router" => (self.n_experts, d),
+                    other => panic!("unknown param leaf {other:?}"),
+                }
+            }
+        }
+    }
+
+    /// Built-in config set (mirrors python `CONFIGS`).
+    pub fn builtin(name: &str) -> Result<ModelConfig> {
+        let mk = |name: &str, dim, n_layers, n_heads, n_kv_heads, ffn_dim, vocab,
+                  n_experts, top_k| ModelConfig {
+            name: name.to_string(),
+            dim,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            ffn_dim,
+            vocab,
+            head_dim: 64,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            n_experts,
+            top_k,
+        };
+        Ok(match name {
+            "llama2-tiny" => mk("llama2-tiny", 256, 4, 4, 4, 512, 512, 0, 0),
+            "llama2-small" => mk("llama2-small", 320, 5, 5, 5, 768, 512, 0, 0),
+            "llama2-large" => mk("llama2-large", 512, 8, 8, 8, 1280, 512, 0, 0),
+            "llama3-small" => mk("llama3-small", 384, 4, 6, 2, 1024, 1024, 0, 0),
+            "llama3-large" => mk("llama3-large", 640, 8, 10, 2, 1536, 1024, 0, 0),
+            "mixtral-tiny" => mk("mixtral-tiny", 256, 4, 4, 4, 512, 512, 4, 2),
+            other => bail!(
+                "unknown model config {other:?} (expected one of: llama2-tiny, \
+                 llama2-small, llama2-large, llama3-small, llama3-large, mixtral-tiny)"
+            ),
+        })
+    }
+
+    pub fn all_builtin() -> Vec<ModelConfig> {
+        ["llama2-tiny", "llama2-small", "llama2-large", "llama3-small",
+         "llama3-large", "mixtral-tiny"]
+            .iter()
+            .map(|n| Self::builtin(n).unwrap())
+            .collect()
+    }
+
+    /// The paper model each config stands in for (labels in bench output).
+    pub fn paper_name(&self) -> &'static str {
+        match self.name.as_str() {
+            "llama2-tiny" => "Llama-2 7B (tiny stand-in)",
+            "llama2-small" => "Llama-2 13B (tiny stand-in)",
+            "llama2-large" => "Llama-2 70B (tiny stand-in)",
+            "llama3-small" => "Llama-3 8B (tiny stand-in)",
+            "llama3-large" => "Llama-3 70B (tiny stand-in)",
+            "mixtral-tiny" => "Mixtral-8x7B (tiny stand-in)",
+            _ => "custom",
+        }
+    }
+
+    /// Parse from the manifest's `models` section (written by aot.py).
+    pub fn from_manifest_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            j.get_usize(k).with_context(|| format!("model {name}: missing {k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            dim: g("dim")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            n_kv_heads: g("n_kv_heads")?,
+            ffn_dim: g("ffn_dim")?,
+            vocab: g("vocab")?,
+            head_dim: g("head_dim")?,
+            rope_theta: j.get_f64("rope_theta").unwrap_or(10000.0) as f32,
+            norm_eps: j.get_f64("norm_eps").unwrap_or(1e-5) as f32,
+            n_experts: j.get_usize("n_experts").unwrap_or(0),
+            top_k: j.get_usize("top_k").unwrap_or(0),
+        })
+    }
+}
+
+/// Quantization bit setting in the paper's W-A-KV notation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitSetting {
+    pub w: u8,
+    pub a: u8,
+    pub kv: u8,
+}
+
+impl BitSetting {
+    pub const FP: BitSetting = BitSetting { w: 16, a: 16, kv: 16 };
+    pub const W4A8: BitSetting = BitSetting { w: 4, a: 8, kv: 16 };
+    pub const W4A4: BitSetting = BitSetting { w: 4, a: 4, kv: 16 };
+    pub const W4A4KV4: BitSetting = BitSetting { w: 4, a: 4, kv: 4 };
+
+    pub fn parse(s: &str) -> Result<BitSetting> {
+        let parts: Vec<&str> = s.split('-').collect();
+        if parts.len() != 3 {
+            bail!("bit setting must be W-A-KV, e.g. 4-4-16, got {s:?}");
+        }
+        let p = |x: &str| -> Result<u8> {
+            x.parse().map_err(|_| anyhow::anyhow!("bad bit width {x:?}"))
+        };
+        Ok(BitSetting { w: p(parts[0])?, a: p(parts[1])?, kv: p(parts[2])? })
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}", self.w, self.a, self.kv)
+    }
+
+    /// Level count for a bit width (16 ⇒ "off": sentinel ≥ 2^15 disables
+    /// the in-graph fake-quant, matching `model._fq_act`).
+    pub fn levels(bits: u8) -> f32 {
+        if bits >= 16 {
+            65536.0
+        } else {
+            (1u32 << bits) as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_roundtrip_and_shapes() {
+        for cfg in ModelConfig::all_builtin() {
+            assert_eq!(cfg.head_dim * cfg.n_heads, cfg.q_dim());
+            assert!(cfg.n_heads % cfg.n_kv_heads.max(1) == 0, "{}", cfg.name);
+            for n in cfg.param_names() {
+                let (r, c) = cfg.param_shape(&n);
+                assert!(r > 0 && c > 0);
+            }
+            assert!(cfg.n_params() > 100_000, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn param_order_starts_embed_ends_head() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let names = cfg.param_names();
+        assert_eq!(names.first().unwrap(), "embed");
+        assert_eq!(names.last().unwrap(), "head");
+        assert_eq!(names.len(), 1 + 4 * 7 + 1);
+    }
+
+    #[test]
+    fn moe_param_names_include_experts() {
+        let cfg = ModelConfig::builtin("mixtral-tiny").unwrap();
+        let names = cfg.param_names();
+        assert!(names.iter().any(|n| n == "l0.router"));
+        assert!(names.iter().any(|n| n == "l3.e3.wd"));
+        assert_eq!(cfg.param_shape("l0.router"), (4, 256));
+    }
+
+    #[test]
+    fn hadamard_constructible_at_every_rotation_site() {
+        use crate::linalg::hadamard_supported;
+        for cfg in ModelConfig::all_builtin() {
+            assert!(hadamard_supported(cfg.dim), "{} dim", cfg.name);
+            assert!(hadamard_supported(cfg.head_dim), "{} head", cfg.name);
+            assert!(hadamard_supported(cfg.ffn_dim), "{} ffn", cfg.name);
+        }
+    }
+
+    #[test]
+    fn bit_settings_parse_and_label() {
+        assert_eq!(BitSetting::parse("4-4-16").unwrap(), BitSetting::W4A4);
+        assert_eq!(BitSetting::W4A4KV4.label(), "4-4-4");
+        assert!(BitSetting::parse("4-4").is_err());
+        assert_eq!(BitSetting::levels(4), 16.0);
+        assert_eq!(BitSetting::levels(16), 65536.0);
+    }
+
+    #[test]
+    fn unknown_config_is_an_error() {
+        assert!(ModelConfig::builtin("llama9").is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Native (pure-rust) transformer forward — the flexible oracle path.
+//!
+//! The PJRT artifacts (`fwd_*`, `fwdq_*`, `capture_*`) are the fast path;
+//! this implementation mirrors `python/compile/model.py` op-for-op and is
+//! used for (a) cross-checking the artifacts in integration tests,
+//! (b) GPTQ activation capture with arbitrary hooks, and (c) running
+//! configurations for which no artifact was emitted.
+
+use super::weights::Weights;
+use crate::tensor::{matmul_transb, Mat};
+
+/// Per-token asymmetric fake quantization over rows (the activation
+/// quantizer). `levels >= 32768` disables (the fp16 settings) — mirrors
+/// `model._fq_act`.
+pub fn fake_quant_rows(x: &mut Mat, levels: f32) {
+    if levels >= 32767.0 {
+        return;
+    }
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+        for &v in row.iter() {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let scale = (mx - mn) / (levels - 1.0).max(1.0);
+        if scale <= 0.0 {
+            continue;
+        }
+        for v in row.iter_mut() {
+            *v = ((*v - mn) / scale).round() * scale + mn;
+        }
+    }
+}
+
+/// Quantization/rotation switches for the native forward.
+#[derive(Clone, Copy, Debug)]
+pub struct FwdOptions {
+    /// Activation quant levels (65536.0 = off).
+    pub a_levels: f32,
+    /// KV-cache quant levels (65536.0 = off).
+    pub kv_levels: f32,
+    /// Apply the online R3/R4 Hadamards (requires wd pre-fused with H_f).
+    pub use_had: bool,
+}
+
+impl FwdOptions {
+    pub const FP: FwdOptions =
+        FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: false };
+
+    pub fn quant(a_bits: u8, kv_bits: u8, use_had: bool) -> FwdOptions {
+        FwdOptions {
+            a_levels: super::config::BitSetting::levels(a_bits),
+            kv_levels: super::config::BitSetting::levels(kv_bits),
+            use_had,
+        }
+    }
+}
+
+fn rmsnorm(x: &Mat, eps: f32) -> Mat {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// RoPE over one head's (T, hd) block — half-split convention, matching
+/// `model.rope`.
+fn rope_inplace(x: &mut Mat, theta: f32) {
+    let (t, hd) = x.shape();
+    let half = hd / 2;
+    for pos in 0..t {
+        let row = x.row_mut(pos);
+        for i in 0..half {
+            let freq = theta.powf(-(i as f32) / half as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let a = row[i];
+            let b = row[half + i];
+            row[i] = a * cos - b * sin;
+            row[half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Gather a head block: columns [h*hd, (h+1)*hd) of a (T, H*hd) matrix.
+fn head_block(x: &Mat, h: usize, hd: usize) -> Mat {
+    Mat::from_fn(x.rows, hd, |i, j| x.at(i, h * hd + j))
+}
+
+/// Apply the orthonormal Hadamard to every row (native R3/R4).
+fn hadamard_rows(x: &mut Mat) {
+    crate::linalg::fwht_rows(x);
+}
+
+/// Capture hook sites during a forward pass.
+pub trait CaptureHook {
+    /// Post-RMSNorm hidden state feeding attention (site `2l`) or the FFN
+    /// (site `2l+1`) — the R1 calibration site.
+    fn on_x_site(&mut self, _site: usize, _h: &Mat) {}
+    /// Value-projection output of layer `l` — the R2 calibration site.
+    fn on_v_site(&mut self, _layer: usize, _v: &Mat) {}
+    /// Input activations of a named linear (GPTQ Hessian capture).
+    fn on_linear_input(&mut self, _name: &str, _x: &Mat) {}
+}
+
+/// No-op hook.
+pub struct NoCapture;
+impl CaptureHook for NoCapture {}
+
+/// Run the forward pass for one sequence, returning per-position NLL
+/// (length T-1). `hook` observes activations on the way.
+pub fn forward_one(
+    w: &Weights,
+    tokens: &[i32],
+    opt: FwdOptions,
+    hook: &mut dyn CaptureHook,
+) -> Vec<f32> {
+    let cfg = &w.cfg;
+    let t = tokens.len();
+    let (d, hd, nh, nkv) = (cfg.dim, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads);
+    let eps = cfg.norm_eps;
+    let embed = w.get("embed");
+    let mut x = Mat::from_fn(t, d, |i, j| embed.at(tokens[i] as usize, j));
+
+    let fq = |m: &mut Mat| fake_quant_rows(m, opt.a_levels);
+
+    for l in 0..cfg.n_layers {
+        let name = |leaf: &str| format!("l{l}.{leaf}");
+        // ---- attention ----
+        let h = rmsnorm(&x, eps);
+        hook.on_x_site(2 * l, &h);
+        let mut hq = h;
+        fq(&mut hq);
+        hook.on_linear_input(&name("wq"), &hq);
+        let q_all = matmul_transb(&hq, w.get(&name("wq")));
+        let k_all = matmul_transb(&hq, w.get(&name("wk")));
+        let v_all = matmul_transb(&hq, w.get(&name("wv")));
+        hook.on_v_site(l, &v_all);
+
+        let mut attn_out = Mat::zeros(t, nh * hd);
+        let rep = nh / nkv;
+        for head in 0..nh {
+            let kv_head = head / rep;
+            let mut qh = head_block(&q_all, head, hd);
+            let mut kh = head_block(&k_all, kv_head, hd);
+            let mut vh = head_block(&v_all, kv_head, hd);
+            rope_inplace(&mut qh, cfg.rope_theta);
+            rope_inplace(&mut kh, cfg.rope_theta);
+            if opt.use_had {
+                hadamard_rows(&mut qh); // R3 — cancels in q·kᵀ
+                hadamard_rows(&mut kh);
+            }
+            fake_quant_rows(&mut kh, opt.kv_levels);
+            fake_quant_rows(&mut vh, opt.kv_levels);
+            // causal attention
+            let scale = 1.0 / (hd as f32).sqrt();
+            for i in 0..t {
+                let mut scores = vec![0f32; i + 1];
+                let qrow = qh.row(i);
+                let mut mx = f32::MIN;
+                for (j, s) in scores.iter_mut().enumerate() {
+                    *s = qrow.iter().zip(kh.row(j)).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    mx = mx.max(*s);
+                }
+                let mut denom = 0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    denom += *s;
+                }
+                let out_row = attn_out.row_mut(i);
+                for (j, s) in scores.iter().enumerate() {
+                    let p = s / denom;
+                    for (c, vv) in vh.row(j).iter().enumerate() {
+                        out_row[head * hd + c] += p * vv;
+                    }
+                }
+            }
+        }
+        fq(&mut attn_out);
+        hook.on_linear_input(&name("wo"), &attn_out);
+        let proj = matmul_transb(&attn_out, w.get(&name("wo")));
+        x.add_assign(&proj);
+
+        // ---- ffn ----
+        let h2 = rmsnorm(&x, eps);
+        hook.on_x_site(2 * l + 1, &h2);
+        let mut h2q = h2;
+        fq(&mut h2q);
+        if cfg.is_moe() {
+            let router = w.get(&name("router"));
+            let gate_logits = matmul_transb(&h2q, router); // (T, E)
+            let mut ffn = Mat::zeros(t, d);
+            for i in 0..t {
+                // top-k experts by logit (jax lax.top_k tie-break: lower index)
+                let logits = gate_logits.row(i);
+                let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
+                idx.sort_by(|&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap().then(a.cmp(&b))
+                });
+                let top = &idx[..cfg.top_k];
+                let mx = logits[top[0]];
+                let exps: Vec<f32> = top.iter().map(|&e| (logits[e] - mx).exp()).collect();
+                let denom: f32 = exps.iter().sum();
+                for (rank, &e) in top.iter().enumerate() {
+                    let gate = exps[rank] / denom;
+                    let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
+                    let row = h2q.rows_slice(i, i + 1);
+                    let g = matmul_transb(&row, w.get(&ename("wg")));
+                    let u = matmul_transb(&row, w.get(&ename("wu")));
+                    let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
+                    if opt.use_had {
+                        hadamard_rows(&mut a);
+                    }
+                    fake_quant_rows(&mut a, opt.a_levels);
+                    let y = matmul_transb(&a, w.get(&ename("wd")));
+                    for j in 0..d {
+                        *ffn.at_mut(i, j) += gate * y.at(0, j);
+                    }
+                }
+            }
+            x.add_assign(&ffn);
+        } else {
+            hook.on_linear_input(&name("wg"), &h2q);
+            let g = matmul_transb(&h2q, w.get(&name("wg")));
+            let u = matmul_transb(&h2q, w.get(&name("wu")));
+            let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
+            if opt.use_had {
+                hadamard_rows(&mut a); // R4 (wd pre-fused with H)
+            }
+            fq(&mut a);
+            hook.on_linear_input(&name("wd"), &a);
+            let y = matmul_transb(&a, w.get(&name("wd")));
+            x.add_assign(&y);
+        }
+    }
+
+    // ---- head + NLL ----
+    let h = rmsnorm(&x, eps);
+    let logits = matmul_transb(&h, w.get("head")); // (T, V)
+    let mut nll = Vec::with_capacity(t - 1);
+    for i in 0..t - 1 {
+        let row = logits.row(i);
+        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+        let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+        nll.push(lse - row[tokens[i + 1] as usize]);
+    }
+    nll
+}
+
+/// Batch forward: thread-parallel over sequences; returns (B, T-1) NLLs.
+pub fn forward_batch(w: &Weights, batch: &[Vec<i32>], opt: FwdOptions) -> Vec<Vec<f32>> {
+    let pool = crate::util::threadpool::ThreadPool::new(
+        crate::util::threadpool::ThreadPool::default_parallelism().min(batch.len().max(1)),
+    );
+    // Weights are shared read-only across workers.
+    std::thread::scope(|_| {
+        pool.map(batch.to_vec(), {
+            let w = w.clone();
+            move |seq| forward_one(&w, &seq, opt, &mut NoCapture)
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::prng::Pcg64;
+
+    fn setup() -> (Weights, Vec<i32>) {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 1);
+        let mut rng = Pcg64::new(2);
+        let toks: Vec<i32> = (0..24).map(|_| rng.below(cfg.vocab) as i32).collect();
+        (w, toks)
+    }
+
+    #[test]
+    fn nll_is_finite_and_near_uniform_for_random_weights() {
+        let (w, toks) = setup();
+        let nll = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        assert_eq!(nll.len(), toks.len() - 1);
+        let mean: f32 = nll.iter().sum::<f32>() / nll.len() as f32;
+        assert!(mean.is_finite());
+        let uniform = (w.cfg.vocab as f32).ln();
+        assert!((mean - uniform).abs() < 2.0, "mean nll {mean} vs ln V {uniform}");
+    }
+
+    #[test]
+    fn fake_quant_rows_matches_semantics() {
+        let mut x = Mat::from_vec(1, 4, vec![0.0, 1.0, 2.0, 3.0]);
+        fake_quant_rows(&mut x, 4.0); // step = 1 → lossless here
+        assert_eq!(x.data, vec![0.0, 1.0, 2.0, 3.0]);
+        let mut y = Mat::from_vec(1, 3, vec![0.0, 0.4, 1.0]);
+        fake_quant_rows(&mut y, 3.0); // step 0.5 → 0.4 -> 0.5
+        assert_eq!(y.data, vec![0.0, 0.5, 1.0]);
+        // levels >= 2^15 disables
+        let mut z = Mat::from_vec(1, 3, vec![0.123, 4.567, -2.0]);
+        let before = z.clone();
+        fake_quant_rows(&mut z, 65536.0);
+        assert_eq!(z.data, before.data);
+    }
+
+    #[test]
+    fn quantization_increases_nll_mildly() {
+        let (w, toks) = setup();
+        let fp = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let q8 = forward_one(&w, &toks, FwdOptions::quant(8, 16, false), &mut NoCapture);
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!((mean(&fp) - mean(&q8)).abs() < 0.5, "8-bit ≈ lossless");
+    }
+
+    #[test]
+    fn hadamard_r3_cancels_in_fp_attention() {
+        // With no quantization, use_had must not change outputs — but wd
+        // must be pre-fused. Fuse H into each wd first.
+        let (mut w, toks) = setup();
+        let fp = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let h = crate::linalg::hadamard_matrix(w.cfg.ffn_dim);
+        for l in 0..w.cfg.n_layers {
+            let name = format!("l{l}.wd");
+            let fused = crate::tensor::matmul(w.get(&name), &h);
+            w.set(&name, fused);
+        }
+        let had = forward_one(
+            &w,
+            &toks,
+            FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true },
+            &mut NoCapture,
+        );
+        for (a, b) in fp.iter().zip(&had) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn capture_hook_sees_all_sites() {
+        struct Counter {
+            x: usize,
+            v: usize,
+            lin: usize,
+        }
+        impl CaptureHook for Counter {
+            fn on_x_site(&mut self, _s: usize, _h: &Mat) {
+                self.x += 1;
+            }
+            fn on_v_site(&mut self, _l: usize, _v: &Mat) {
+                self.v += 1;
+            }
+            fn on_linear_input(&mut self, _n: &str, _x: &Mat) {
+                self.lin += 1;
+            }
+        }
+        let (w, toks) = setup();
+        let mut c = Counter { x: 0, v: 0, lin: 0 };
+        forward_one(&w, &toks, FwdOptions::FP, &mut c);
+        assert_eq!(c.x, 2 * w.cfg.n_layers);
+        assert_eq!(c.v, w.cfg.n_layers);
+        assert_eq!(c.lin, 4 * w.cfg.n_layers);
+    }
+
+    #[test]
+    fn moe_forward_runs() {
+        let cfg = ModelConfig::builtin("mixtral-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 5);
+        let mut rng = Pcg64::new(6);
+        let toks: Vec<i32> = (0..16).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let nll = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        assert!(nll.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (w, toks) = setup();
+        let single = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let batch = forward_batch(&w, &[toks.clone(), toks], FwdOptions::FP);
+        assert_eq!(batch[0], single);
+        assert_eq!(batch[1], single);
+    }
+}

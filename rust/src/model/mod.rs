@@ -1,0 +1,13 @@
+//! Model substrate: tiny Llama-architecture configs, synthetic weights
+//! with planted outlier channels, the native forward oracle, and the glue
+//! that feeds weights/tokens to the PJRT artifacts.
+
+pub mod artifact_io;
+pub mod config;
+pub mod forward;
+pub mod weights;
+
+pub use artifact_io::{ppl_from_nll, CapturedSites, TokenBatch, TrainState};
+pub use config::{BitSetting, ModelConfig};
+pub use forward::{fake_quant_rows, forward_batch, forward_one, CaptureHook, FwdOptions, NoCapture};
+pub use weights::Weights;

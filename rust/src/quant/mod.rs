@@ -1,0 +1,226 @@
+//! Weight quantization: RTN, GPTQ, and the mixed-precision baselines
+//! (QUIK-like, Atom-like) of Appendix E. Activation/KV quantization is
+//! fake-quant inside the forward graphs (`model::forward`, `fwdq_*`
+//! artifacts); this module quantizes *weights* host-side and returns
+//! dequantized f32 weights ready for the artifacts.
+
+mod gptq;
+mod omniquant;
+
+pub use gptq::{gptq_quantize_layer, gptq_quantize_model, GptqConfig};
+pub use omniquant::{omniquant_quantize_mat, omniquant_quantize_model};
+
+use crate::model::Weights;
+use crate::tensor::Mat;
+
+/// Per-output-channel symmetric RTN fake quantization of a weight matrix
+/// ([out, in]; one scale per output row) — the paper's weight quantizer.
+pub fn rtn_quantize_mat(w: &Mat, bits: u8) -> Mat {
+    if bits >= 16 {
+        return w.clone();
+    }
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut out = w.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let scale = (amax / qmax).max(1e-10);
+        for v in row.iter_mut() {
+            *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+        }
+    }
+    out
+}
+
+/// Quantize all transformer linears (embed/head stay fp, as in the paper).
+pub fn rtn_quantize_model(weights: &Weights, bits: u8) -> Weights {
+    let mut out = weights.clone();
+    out.map_linear_weights(|_, m| {
+        *m = rtn_quantize_mat(m, bits);
+    });
+    out
+}
+
+/// Mean squared error of RTN at a given width (weight-quant metric).
+pub fn rtn_mse(w: &Mat, bits: u8) -> f64 {
+    let q = rtn_quantize_mat(w, bits);
+    let n = w.data.len() as f64;
+    w.data
+        .iter()
+        .zip(&q.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / n
+}
+
+/// QUIK-like mixed precision: protect the `keep` highest-magnitude input
+/// channels (by calibration abs-max) in fp16, quantize the rest to `bits`.
+/// The paper's comparison protects 256 channels on 4096-dim models; we
+/// scale that ratio (1/16 of channels).
+pub fn quik_quantize_mat(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> Mat {
+    assert_eq!(act_absmax.len(), w.cols);
+    let mut idx: Vec<usize> = (0..w.cols).collect();
+    idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    let protected: std::collections::HashSet<usize> = idx.into_iter().take(keep).collect();
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut out = w.clone();
+    for i in 0..out.rows {
+        // Scale from the unprotected columns only.
+        let amax = (0..w.cols)
+            .filter(|c| !protected.contains(c))
+            .map(|c| w.at(i, c).abs())
+            .fold(0.0f32, f32::max);
+        let scale = (amax / qmax).max(1e-10);
+        for c in 0..w.cols {
+            if !protected.contains(&c) {
+                let v = out.at(i, c);
+                *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Atom-like mixed precision: reorder channels by activation magnitude and
+/// quantize in groups with per-group scales (group size 32), keeping the
+/// top group in 8 bits. Captures Atom's grouped + reordered scheme at our
+/// scale.
+pub fn atom_quantize_mat(w: &Mat, act_absmax: &[f32], bits: u8) -> Mat {
+    assert_eq!(act_absmax.len(), w.cols);
+    let mut order: Vec<usize> = (0..w.cols).collect();
+    order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    const GROUP: usize = 32;
+    let qmax_lo = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmax_hi = ((1i32 << 7) - 1) as f32; // top group in 8-bit
+    let mut out = w.clone();
+    for i in 0..out.rows {
+        for (g, chunk) in order.chunks(GROUP).enumerate() {
+            let qmax = if g == 0 { qmax_hi } else { qmax_lo };
+            let amax = chunk.iter().map(|&c| w.at(i, c).abs()).fold(0.0f32, f32::max);
+            let scale = (amax / qmax).max(1e-10);
+            for &c in chunk {
+                let v = out.at(i, c);
+                *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::util::propcheck::{gen, Runner};
+
+    fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_half_step() {
+        let w = rand_mat(1, 16, 64);
+        let q = rtn_quantize_mat(&w, 4);
+        for i in 0..w.rows {
+            let amax = w.row(i).iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+            let step = amax / 7.0;
+            for (a, b) in w.row(i).iter().zip(q.row(i)) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_16_bits_is_identity_and_more_bits_less_error() {
+        let w = rand_mat(2, 8, 32);
+        assert_eq!(rtn_quantize_mat(&w, 16), w);
+        assert!(rtn_mse(&w, 8) < rtn_mse(&w, 4));
+        assert!(rtn_mse(&w, 4) < rtn_mse(&w, 2));
+    }
+
+    #[test]
+    fn rtn_level_count_respected() {
+        let w = rand_mat(3, 4, 256);
+        let q = rtn_quantize_mat(&w, 4);
+        for i in 0..q.rows {
+            let mut vals: Vec<i64> =
+                q.row(i).iter().map(|v| (v * 1e4).round() as i64).collect();
+            vals.sort_unstable();
+            vals.dedup();
+            assert!(vals.len() <= 16, "row {i} has {} levels", vals.len());
+        }
+    }
+
+    #[test]
+    fn rtn_model_keeps_embed_head_fp() {
+        let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 1);
+        let q = rtn_quantize_model(&w, 4);
+        assert_eq!(q.get("embed").data, w.get("embed").data);
+        assert_eq!(q.get("head").data, w.get("head").data);
+        assert_ne!(q.get("l0.wq").data, w.get("l0.wq").data);
+    }
+
+    #[test]
+    fn quik_protects_top_channels_exactly() {
+        let w = rand_mat(4, 8, 64);
+        let mut absmax = vec![1.0f32; 64];
+        absmax[5] = 100.0;
+        absmax[17] = 50.0;
+        let q = quik_quantize_mat(&w, &absmax, 2, 4);
+        for i in 0..w.rows {
+            assert_eq!(w.at(i, 5), q.at(i, 5));
+            assert_eq!(w.at(i, 17), q.at(i, 17));
+        }
+        // and quik beats plain rtn when outlier weight columns align
+        let mut w2 = w.clone();
+        for i in 0..w2.rows {
+            *w2.at_mut(i, 5) *= 30.0;
+        }
+        let mse_rtn = rtn_mse(&w2, 4);
+        let qk = quik_quantize_mat(&w2, &absmax, 2, 4);
+        let mse_quik = w2
+            .data
+            .iter()
+            .zip(&qk.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w2.data.len() as f64;
+        assert!(mse_quik < mse_rtn, "{mse_quik} vs {mse_rtn}");
+    }
+
+    #[test]
+    fn atom_grouping_beats_plain_rtn_on_skewed_weights() {
+        let mut rng = Pcg64::new(5);
+        // Column magnitudes vary wildly (grouped scales should win).
+        let w = Mat::from_fn(8, 128, |_, c| rng.normal() * (1.0 + (c % 13) as f32));
+        let absmax: Vec<f32> = (0..128).map(|c| 1.0 + (c % 13) as f32).collect();
+        let qa = atom_quantize_mat(&w, &absmax, 4);
+        let mse_atom = w
+            .data
+            .iter()
+            .zip(&qa.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.data.len() as f64;
+        assert!(mse_atom < rtn_mse(&w, 4));
+    }
+
+    #[test]
+    fn prop_rtn_idempotent() {
+        Runner::new().cases(24).run("rtn idempotent", |rng| {
+            let r = gen::size(rng, 1, 8);
+            let c = gen::size(rng, 4, 64);
+            let w = Mat::from_vec(r, c, gen::vec_f32(rng, r * c));
+            let q1 = rtn_quantize_mat(&w, 4);
+            let q2 = rtn_quantize_mat(&q1, 4);
+            let d = q1.max_abs_diff(&q2);
+            if d < 1e-4 * q1.max_abs().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("not idempotent: {d}"))
+            }
+        });
+    }
+}

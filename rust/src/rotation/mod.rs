@@ -1,0 +1,403 @@
+//! Rotation machinery: fusing the learned R1/R2 into weights (Appendix A's
+//! computational invariance), the online R3/R4 Hadamard sites, and rotation
+//! initializers (random Hadamard — QuaRot; random orthogonal; identity).
+
+use crate::linalg::{self, hadamard_matrix, randomized_hadamard};
+use crate::model::Weights;
+use crate::tensor::{matmul, Mat};
+use crate::util::prng::Pcg64;
+
+/// Which rotations a calibration/quantization run applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotationScheme {
+    /// No rotation (RTN/GPTQ/SmoothQuant baselines).
+    None,
+    /// Random Hadamard R1/R2 (+ online R3/R4) — QuaRot.
+    Hadamard,
+    /// Learned R1/R2 (+ online R3/R4) — DartQuant / SpinQuant-sim /
+    /// OSTQuant-sim (they differ in *how* R is learned, not where).
+    Learned,
+}
+
+/// A full rotation set for a model: one global R1 (dim×dim) and one shared
+/// per-layer R2 (head_dim×head_dim) per layer.
+#[derive(Clone, Debug)]
+pub struct RotationSet {
+    pub r1: Mat,
+    /// One R2 per layer (shared across heads, as in SpinQuant).
+    pub r2: Vec<Mat>,
+    /// Whether the online R3/R4 Hadamards are enabled at inference.
+    pub online_had: bool,
+}
+
+impl RotationSet {
+    pub fn identity(dim: usize, head_dim: usize, n_layers: usize) -> RotationSet {
+        RotationSet {
+            r1: Mat::eye(dim),
+            r2: (0..n_layers).map(|_| Mat::eye(head_dim)).collect(),
+            online_had: false,
+        }
+    }
+
+    /// QuaRot-style random Hadamard rotations.
+    pub fn random_hadamard(
+        dim: usize,
+        head_dim: usize,
+        n_layers: usize,
+        rng: &mut Pcg64,
+    ) -> RotationSet {
+        RotationSet {
+            r1: randomized_hadamard(dim, rng),
+            r2: (0..n_layers).map(|_| randomized_hadamard(head_dim, rng)).collect(),
+            online_had: true,
+        }
+    }
+
+    /// Haar-random orthogonal rotations (the "random orthogonal" ablation
+    /// QuaRot found inferior to Hadamard).
+    pub fn random_orthogonal(
+        dim: usize,
+        head_dim: usize,
+        n_layers: usize,
+        rng: &mut Pcg64,
+    ) -> RotationSet {
+        RotationSet {
+            r1: linalg::random_orthogonal(dim, rng),
+            r2: (0..n_layers).map(|_| linalg::random_orthogonal(head_dim, rng)).collect(),
+            online_had: true,
+        }
+    }
+
+    /// Orthogonality defect across all members (sanity checks).
+    pub fn max_defect(&self) -> f32 {
+        let mut d = linalg::orthogonality_defect(&self.r1);
+        for r in &self.r2 {
+            d = d.max(linalg::orthogonality_defect(r));
+        }
+        d
+    }
+}
+
+/// Expand a per-head R2 (hd×hd) to the block-diagonal form acting on a
+/// (heads·hd)-dim space.
+fn block_diag(r: &Mat, heads: usize) -> Mat {
+    let hd = r.rows;
+    Mat::from_fn(heads * hd, heads * hd, |i, j| {
+        if i / hd == j / hd {
+            r.at(i % hd, j % hd)
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Fuse a rotation set into model weights (exact; fp outputs unchanged):
+///
+/// * R1: input-side weights (wq wk wv wg wu router) ← W·R1; output-side
+///   (wo wd) ← R1ᵀ·W; embed/head rotate rows (W·R1).
+/// * R2 (per layer ℓ): wv ← blockdiag(R2)ᵀ·wv, wo ← wo·blockdiag(R2)
+///   (value channels rotate per head; GQA repeats kv heads across groups).
+/// * R4 (when `online_had`): wd ← wd·H_f — cancels the in-graph Hadamard
+///   applied to the FFN activation. (R3 needs no weight change: it cancels
+///   inside attention and only re-bases the quantized K cache.)
+pub fn fuse(weights: &Weights, rot: &RotationSet) -> Weights {
+    let cfg = weights.cfg.clone();
+    let mut out = weights.clone();
+    let r1 = &rot.r1;
+    let r1t = r1.t();
+    assert_eq!(r1.rows, cfg.dim);
+    assert_eq!(rot.r2.len(), cfg.n_layers);
+
+    for name in weights.names().to_vec() {
+        let w = weights.get(&name);
+        let leaf = name.rsplit('.').next().unwrap();
+        let fused = match leaf {
+            "embed" | "head" => matmul(w, r1),
+            "wq" | "wk" | "wv" | "wg" | "wu" | "router" => matmul(w, r1),
+            "wo" | "wd" => matmul(&r1t, w),
+            other => panic!("unknown leaf {other}"),
+        };
+        out.set(&name, fused);
+    }
+    // R2 per layer.
+    for l in 0..cfg.n_layers {
+        let r2 = &rot.r2[l];
+        assert_eq!(r2.rows, cfg.head_dim);
+        let bd_kv = block_diag(r2, cfg.n_kv_heads);
+        let bd_q = block_diag(r2, cfg.n_heads);
+        let wv_name = format!("l{l}.wv");
+        let wo_name = format!("l{l}.wo");
+        // v' = v·B  ⇒ wv' = Bᵀ·wv ; attention output per q-head carries the
+        // (repeated) rotated v ⇒ wo' = wo·B_q.
+        out.set(&wv_name, matmul(&bd_kv.t(), out.get(&wv_name)));
+        out.set(&wo_name, matmul(out.get(&wo_name), &bd_q));
+    }
+    // R4: fold H_f into wd so the online activation Hadamard cancels.
+    if rot.online_had {
+        let h = hadamard_matrix(cfg.ffn_dim);
+        for l in 0..cfg.n_layers {
+            if cfg.is_moe() {
+                for e in 0..cfg.n_experts {
+                    let name = format!("l{l}.e{e}.wd");
+                    out.set(&name, matmul(out.get(&name), &h));
+                }
+            } else {
+                let name = format!("l{l}.wd");
+                out.set(&name, matmul(out.get(&name), &h));
+            }
+        }
+    }
+    out
+}
+
+/// SmoothQuant-style per-channel scaling (the scaling baseline, and the
+/// "+scale" part of OSTQuant-sim).
+///
+/// Scaling is applied at the two sites where it is an *exact* invariance
+/// for a gain-free RMSNorm model: the attention-output linear (wo) and
+/// the FFN down-projection (wd) — in real Llamas the down-projection is
+/// the dominant outlier site. (SmoothQuant's residual-stream sites need a
+/// norm gain to fold into, which this architecture deliberately omits;
+/// see DESIGN.md.) For site inputs X and consumer W: X ← X·S⁻¹,
+/// W ← W·S with s_c = max|X_c|^α / max|W_c|^(1-α).
+pub struct SmoothStats {
+    /// Per layer: abs-max per channel of the wo input (attention output).
+    pub wo_absmax: Vec<Vec<f32>>,
+    /// Per layer: abs-max per channel of the wd input (FFN activation).
+    pub wd_absmax: Vec<Vec<f32>>,
+}
+
+impl SmoothStats {
+    /// Capture from a native forward pass over calibration sequences.
+    pub fn capture(weights: &Weights, seqs: &[Vec<i32>]) -> SmoothStats {
+        use crate::model::{forward_one, CaptureHook, FwdOptions};
+        struct Hook {
+            wo: Vec<Vec<f32>>,
+            wd: Vec<Vec<f32>>,
+        }
+        impl CaptureHook for Hook {
+            fn on_linear_input(&mut self, name: &str, x: &Mat) {
+                let leaf = name.rsplit('.').next().unwrap();
+                let l: usize = name[1..name.find('.').unwrap()].parse().unwrap();
+                let target = match leaf {
+                    "wo" => &mut self.wo[l],
+                    "wd" => &mut self.wd[l],
+                    _ => return,
+                };
+                if target.is_empty() {
+                    target.resize(x.cols, 0.0);
+                }
+                for i in 0..x.rows {
+                    for (c, m) in target.iter_mut().enumerate() {
+                        *m = m.max(x.at(i, c).abs());
+                    }
+                }
+            }
+        }
+        let l = weights.cfg.n_layers;
+        let mut hook = Hook { wo: vec![vec![]; l], wd: vec![vec![]; l] };
+        for seq in seqs {
+            forward_one(weights, seq, FwdOptions::FP, &mut hook);
+        }
+        SmoothStats { wo_absmax: hook.wo, wd_absmax: hook.wd }
+    }
+}
+
+/// Apply SmoothQuant scaling. Exact fp invariance (up to f32 rounding).
+pub fn smooth_scales(weights: &Weights, stats: &SmoothStats, alpha: f32) -> Weights {
+    let cfg = weights.cfg.clone();
+    assert!(!cfg.is_moe(), "SmoothQuant baseline implemented for dense configs");
+    let mut out = weights.clone();
+    for l in 0..cfg.n_layers {
+        // --- wo site: attn_out ← attn_out·S⁻¹ via wv rows; wo cols ← ·S.
+        // GQA note: attn_out channel j carries v channel (j/hd/rep)*hd+j%hd,
+        // so scales must be shared within each kv-head group; we take the
+        // max over the group.
+        let (hd, rep) = (cfg.head_dim, cfg.n_heads / cfg.n_kv_heads);
+        let act = &stats.wo_absmax[l];
+        if !act.is_empty() {
+            let wo = weights.get(&format!("l{l}.wo"));
+            let mut w_absmax = vec![1e-6f32; cfg.kv_dim()];
+            let mut a_absmax = vec![1e-6f32; cfg.kv_dim()];
+            for j in 0..cfg.q_dim() {
+                let kv_c = (j / hd / rep) * hd + j % hd;
+                a_absmax[kv_c] = a_absmax[kv_c].max(act[j]);
+                for i in 0..wo.rows {
+                    w_absmax[kv_c] = w_absmax[kv_c].max(wo.at(i, j).abs());
+                }
+            }
+            let s: Vec<f32> = a_absmax
+                .iter()
+                .zip(&w_absmax)
+                .map(|(&a, &w)| (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0))
+                .collect();
+            let wv = out.get_mut(&format!("l{l}.wv"));
+            for (r, sv) in s.iter().enumerate() {
+                for c in 0..wv.cols {
+                    *wv.at_mut(r, c) /= sv;
+                }
+            }
+            let wo = out.get_mut(&format!("l{l}.wo"));
+            for i in 0..wo.rows {
+                for j in 0..wo.cols {
+                    let kv_c = (j / hd / rep) * hd + j % hd;
+                    *wo.at_mut(i, j) *= s[kv_c];
+                }
+            }
+        }
+        // --- wd site: a ← a·S⁻¹ via wu rows; wd cols ← ·S. (Gate wg is
+        // untouched: a = silu(g)·u, scaling u alone scales a.)
+        let act = &stats.wd_absmax[l];
+        if !act.is_empty() {
+            let wd = weights.get(&format!("l{l}.wd"));
+            let mut w_absmax = vec![1e-6f32; cfg.ffn_dim];
+            for i in 0..wd.rows {
+                for (c, m) in w_absmax.iter_mut().enumerate() {
+                    *m = m.max(wd.at(i, c).abs());
+                }
+            }
+            let s: Vec<f32> = act
+                .iter()
+                .zip(&w_absmax)
+                .map(|(&a, &w)| (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0))
+                .collect();
+            let wu = out.get_mut(&format!("l{l}.wu"));
+            for (r, sv) in s.iter().enumerate() {
+                for c in 0..wu.cols {
+                    *wu.at_mut(r, c) /= sv;
+                }
+            }
+            let wd = out.get_mut(&format!("l{l}.wd"));
+            for i in 0..wd.rows {
+                for (c, sv) in s.iter().enumerate() {
+                    *wd.at_mut(i, c) *= sv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, Dialect};
+    use crate::model::{forward_one, FwdOptions, ModelConfig, NoCapture};
+
+    fn setup() -> (Weights, Vec<i32>, Corpus) {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let toks = corpus.valid_batch(1, 48, 0).remove(0);
+        (w, toks, corpus)
+    }
+
+    fn mean(v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+    }
+
+    #[test]
+    fn fuse_r1_r2_preserves_fp_outputs() {
+        let (w, toks, _) = setup();
+        let base = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let mut rng = Pcg64::new(3);
+        let rot = RotationSet {
+            r1: linalg::random_orthogonal(w.cfg.dim, &mut rng),
+            r2: (0..w.cfg.n_layers)
+                .map(|_| linalg::random_orthogonal(w.cfg.head_dim, &mut rng))
+                .collect(),
+            online_had: false,
+        };
+        let fused = fuse(&w, &rot);
+        let got = forward_one(&fused, &toks, FwdOptions::FP, &mut NoCapture);
+        let d = (mean(&base) - mean(&got)).abs();
+        assert!(d < 2e-2, "computational invariance violated: {d}");
+    }
+
+    #[test]
+    fn fuse_with_online_hadamard_preserves_fp_outputs() {
+        let (w, toks, _) = setup();
+        let base = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let mut rng = Pcg64::new(4);
+        let rot = RotationSet::random_hadamard(w.cfg.dim, w.cfg.head_dim, w.cfg.n_layers, &mut rng);
+        let fused = fuse(&w, &rot);
+        let opt = FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true };
+        let got = forward_one(&fused, &toks, opt, &mut NoCapture);
+        let d = (mean(&base) - mean(&got)).abs();
+        assert!(d < 2e-2, "R3/R4 cancellation violated: {d}");
+    }
+
+    #[test]
+    fn hadamard_rotation_recovers_w4_activation_quant() {
+        // The paper's central mechanism: 4-bit activation quantization
+        // hurts; rotating first (QuaRot) recovers most of the damage.
+        let (w, _, corpus) = setup();
+        let spec = crate::eval::ppl::EvalSpec { batch: 2, seq: 64, n_batches: 2 };
+        let fp = crate::eval::ppl_native(&w, &corpus, spec, FwdOptions::FP);
+        let quant = FwdOptions::quant(4, 16, false);
+        let plain = crate::eval::ppl_native(&w, &corpus, spec, quant);
+        let mut rng = Pcg64::new(5);
+        let rot = RotationSet::random_hadamard(w.cfg.dim, w.cfg.head_dim, w.cfg.n_layers, &mut rng);
+        let fused = fuse(&w, &rot);
+        let rotated = crate::eval::ppl_native(&fused, &corpus, spec, FwdOptions::quant(4, 16, true));
+        assert!(plain > fp * 1.05, "quant should hurt: fp {fp} vs {plain}");
+        let recovered = (plain - rotated) / (plain - fp);
+        assert!(
+            recovered > 0.25,
+            "rotation should recover ≥25% of quant damage: fp {fp}, plain {plain}, rotated {rotated}"
+        );
+    }
+
+    #[test]
+    fn identity_rotation_is_a_noop() {
+        let (w, toks, _) = setup();
+        let rot = RotationSet::identity(w.cfg.dim, w.cfg.head_dim, w.cfg.n_layers);
+        let fused = fuse(&w, &rot);
+        let a = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let b = forward_one(&fused, &toks, FwdOptions::FP, &mut NoCapture);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rotation_set_defects_are_small() {
+        let mut rng = Pcg64::new(6);
+        let rot = RotationSet::random_hadamard(256, 64, 4, &mut rng);
+        assert!(rot.max_defect() < 1e-3);
+        let rot = RotationSet::random_orthogonal(64, 64, 2, &mut rng);
+        assert!(rot.max_defect() < 1e-3);
+    }
+
+    #[test]
+    fn smooth_scales_preserve_fp_outputs() {
+        let (w, toks, corpus) = setup();
+        let base = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        let calib = corpus.calib_sequences(2, 48);
+        let stats = SmoothStats::capture(&w, &calib);
+        let smoothed = smooth_scales(&w, &stats, 0.5);
+        let got = forward_one(&smoothed, &toks, FwdOptions::FP, &mut NoCapture);
+        let d = (mean(&base) - mean(&got)).abs();
+        assert!(d < 2e-2, "smoothing must be fp-invariant: {d}");
+    }
+
+    #[test]
+    fn smooth_scales_reduce_site_outliers() {
+        let (w, _, corpus) = setup();
+        let calib = corpus.calib_sequences(2, 48);
+        let stats = SmoothStats::capture(&w, &calib);
+        let smoothed = smooth_scales(&w, &stats, 0.6);
+        let after = SmoothStats::capture(&smoothed, &calib);
+        // abs-max spread across channels at the wd site should shrink.
+        let spread = |v: &Vec<f32>| {
+            let mx = v.iter().cloned().fold(0.0f32, f32::max);
+            let mean = v.iter().sum::<f32>() / v.len() as f32;
+            mx / mean.max(1e-6)
+        };
+        let l = w.cfg.n_layers - 1;
+        assert!(
+            spread(&after.wd_absmax[l]) < spread(&stats.wd_absmax[l]),
+            "smoothing should flatten the wd-site channel maxima"
+        );
+    }
+}

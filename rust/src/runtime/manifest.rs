@@ -1,0 +1,254 @@
+//! Artifact manifest: the typed contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json` next to the HLO text files) and
+//! the rust runtime (which validates every call against it).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a tensor crossing the boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} (expected f32/i32)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Shape + dtype + name of one input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get_str("name").unwrap_or("?").to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get_str("dtype").unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Optional FLOP estimate recorded at lowering time.
+    pub flops: u64,
+    /// Free-form tags (e.g. {"objective": "whip", "n": "256"}).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Check a runtime argument list against the declared signature.
+    pub fn validate_inputs(&self, inputs: &[super::Value]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} inputs, signature wants {} ({})",
+                self.name,
+                inputs.len(),
+                self.inputs.len(),
+                self.inputs.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.inputs) {
+            if v.shape() != spec.shape {
+                bail!(
+                    "{}: input {:?} shape {:?} != expected {:?}",
+                    self.name,
+                    spec.name,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {:?} dtype {} != expected {}",
+                    self.name,
+                    spec.name,
+                    v.dtype().name(),
+                    spec.dtype.name()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest is not valid JSON")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing \"artifacts\" object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| format!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(m) = spec.get("meta").and_then(|m| m.as_obj()) {
+                for (k, v) in m {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.to_string(),
+                    };
+                    meta.insert(k.clone(), s);
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: spec
+                        .get_str("file")
+                        .map(str::to_string)
+                        .unwrap_or_else(|| format!("{name}.hlo.txt")),
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                    flops: spec.get_f64("flops").unwrap_or(0.0) as u64,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// All artifacts whose meta matches every given (key, value) pair —
+    /// e.g. find the calib step for a given objective and hidden size.
+    pub fn find_by_meta(&self, pairs: &[(&str, &str)]) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| pairs.iter().all(|(k, v)| a.meta.get(*k).map(|s| s == v).unwrap_or(false)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Value;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "calib_whip_n8": {
+          "file": "calib_whip_n8.hlo.txt",
+          "inputs": [
+            {"name": "Z", "shape": [8, 8], "dtype": "f32"},
+            {"name": "lr", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "Z_new", "shape": [8, 8], "dtype": "f32"}],
+          "flops": 1234,
+          "meta": {"objective": "whip", "n": 8}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("calib_whip_n8").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![8, 8]);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.flops, 1234);
+        assert_eq!(a.meta.get("objective").unwrap(), "whip");
+        assert_eq!(a.meta.get("n").unwrap(), "8");
+    }
+
+    #[test]
+    fn find_by_meta_matches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.find_by_meta(&[("objective", "whip"), ("n", "8")]).len(), 1);
+        assert!(m.find_by_meta(&[("objective", "kurtosis")]).is_empty());
+    }
+
+    #[test]
+    fn validate_inputs_catches_mismatches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("calib_whip_n8").unwrap();
+        let good = vec![Value::zeros(&[8, 8]), Value::scalar(0.1)];
+        assert!(a.validate_inputs(&good).is_ok());
+        // wrong arity
+        assert!(a.validate_inputs(&good[..1]).is_err());
+        // wrong shape
+        let bad = vec![Value::zeros(&[4, 8]), Value::scalar(0.1)];
+        assert!(a.validate_inputs(&bad).is_err());
+        // wrong dtype
+        let bad = vec![Value::zeros(&[8, 8]), Value::from_i32(vec![], vec![1])];
+        assert!(a.validate_inputs(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {"inputs": 3}}}"#).is_err());
+    }
+}

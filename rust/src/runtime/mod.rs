@@ -1,0 +1,195 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them on the XLA CPU client.
+//!
+//! This is the only bridge between L3 (rust) and L2/L1 (jax/pallas): HLO
+//! **text** files plus a JSON manifest describing each entry point's typed
+//! input/output signature. Python never runs at request time.
+//!
+//! Threading note: the `xla` crate's `PjRtClient` is `Rc`-based (not Send),
+//! so a `Runtime` is bound to the thread that created it. The coordinator
+//! gives each worker thread its own `Runtime`; XLA's internal thread pool
+//! still parallelizes individual executions.
+
+mod manifest;
+mod value;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use value::Value;
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A PJRT runtime bound to an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+/// A compiled entry point with its typed signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Runtime {
+    /// Open `dir` (default: `artifacts/`), reading `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path)
+            .with_context(|| format!("loading {manifest_path:?} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The default artifacts directory: `$DARTQUANT_ARTIFACTS` or
+    /// `artifacts/` found by walking up from the current directory.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("DARTQUANT_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// True if a usable artifacts directory exists (tests use this to skip
+    /// gracefully before `make artifacts`).
+    pub fn artifacts_available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an entry point by manifest name; compiled executables
+    /// are cached for the lifetime of the runtime.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.manifest.names().join(", ")
+                )
+            })?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(Executable { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Convenience: load-and-run in one call.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+impl Executable {
+    /// Execute with typed validation against the manifest signature.
+    /// Outputs are decomposed from the jax `return_tuple=True` tuple.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.spec.validate_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(value::to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.name))?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("no output buffers from {}", self.spec.name))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output of {}: {e:?}", self.spec.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling output of {}: {e:?}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{} returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| value::from_literal(&lit, spec))
+            .collect()
+    }
+
+    /// Rough FLOP estimate recorded by the lowering (0 if absent); used by
+    /// the perf accounting in EXPERIMENTS.md §Perf.
+    pub fn flops_estimate(&self) -> u64 {
+        self.spec.flops
+    }
+}
+
+thread_local! {
+    static THREAD_RT: RefCell<Option<(PathBuf, Rc<Runtime>)>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's cached `Runtime` for `dir` (creating it on
+/// first use). The `xla` crate's client is `Rc`-based (not Send), so the
+/// coordinator's worker threads each own one runtime through this hook.
+pub fn with_thread_runtime<R>(dir: &Path, f: impl FnOnce(&Runtime) -> R) -> Result<R> {
+    THREAD_RT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let needs_new = match &*slot {
+            Some((d, _)) => d != dir,
+            None => true,
+        };
+        if needs_new {
+            *slot = Some((dir.to_path_buf(), Rc::new(Runtime::open(dir)?)));
+        }
+        let rt = Rc::clone(&slot.as_ref().unwrap().1);
+        drop(slot);
+        Ok(f(&rt))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let Err(err) = Runtime::open("/nonexistent-dartquant") else {
+            panic!("expected error")
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "got: {msg}");
+    }
+}

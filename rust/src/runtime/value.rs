@@ -1,0 +1,182 @@
+//! Host-side tensor values crossing the PJRT boundary, plus conversions to
+//! and from `xla::Literal`.
+
+use super::manifest::{DType, TensorSpec};
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+/// An N-dimensional host tensor (f32 or i32).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar(x: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Value {
+        Value::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Value::F32 { shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Value::I32 { shape, data }
+    }
+
+    pub fn from_mat(m: &Mat) -> Value {
+        Value::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape.clone(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32 { .. } => DType::F32,
+            Value::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Scalar extraction (errors on non-1-element tensors).
+    pub fn to_scalar(&self) -> Result<f32> {
+        match self {
+            Value::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            Value::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            v => bail!("expected scalar, got shape {:?}", v.shape()),
+        }
+    }
+
+    /// View as a 2-D matrix (errors unless rank ≤ 2; rank-1 becomes 1×n).
+    pub fn to_mat(&self) -> Result<Mat> {
+        match self {
+            Value::F32 { shape, data } => match shape.len() {
+                0 => Ok(Mat::from_vec(1, 1, data.clone())),
+                1 => Ok(Mat::from_vec(1, shape[0], data.clone())),
+                2 => Ok(Mat::from_vec(shape[0], shape[1], data.clone())),
+                r => bail!("cannot view rank-{r} tensor as Mat"),
+            },
+            Value::I32 { .. } => bail!("i32 tensor cannot be viewed as f32 Mat"),
+        }
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            Value::I32 { .. } => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+}
+
+/// Convert to an `xla::Literal` for execution.
+pub fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64>;
+    let lit = match v {
+        Value::F32 { shape, data } => {
+            dims = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+        Value::I32 { shape, data } => {
+            dims = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshaping literal to {dims:?}: {e:?}"))
+}
+
+/// Convert an output literal back to a host value, checked against the
+/// manifest output spec.
+pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+    let count = lit.element_count();
+    if count != spec.elements() {
+        bail!(
+            "output {:?}: literal has {count} elements, manifest shape {:?} wants {}",
+            spec.name,
+            spec.shape,
+            spec.elements()
+        );
+    }
+    match spec.dtype {
+        DType::F32 => {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading f32 output {:?}: {e:?}", spec.name))?;
+            Ok(Value::F32 { shape: spec.shape.clone(), data })
+        }
+        DType::I32 => {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("reading i32 output {:?}: {e:?}", spec.name))?;
+            Ok(Value::I32 { shape: spec.shape.clone(), data })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_dtype() {
+        let v = Value::from_f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(v.shape(), vec![2, 3]);
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.nbytes(), 24);
+        let i = Value::from_i32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(i.dtype(), DType::I32);
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let v = Value::from_mat(&m);
+        assert_eq!(v.to_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn scalar_conversions() {
+        assert_eq!(Value::scalar(2.5).to_scalar().unwrap(), 2.5);
+        assert!(Value::zeros(&[2, 2]).to_scalar().is_err());
+        assert_eq!(Value::from_i32(vec![], vec![7]).to_scalar().unwrap(), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_f32_checks_shape() {
+        let _ = Value::from_f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn rank_checks() {
+        let v = Value::from_f32(vec![2, 2, 2], vec![0.0; 8]);
+        assert!(v.to_mat().is_err());
+        let r1 = Value::from_f32(vec![5], vec![1.0; 5]);
+        assert_eq!(r1.to_mat().unwrap().shape(), (1, 5));
+    }
+}

@@ -1,0 +1,165 @@
+//! Blocked, threaded f32 matmul. This is the native-path workhorse (model
+//! forward for activation capture, GPTQ Hessians, fusion checks). The PJRT
+//! path handles the calibration hot loop; this one must merely be fast
+//! enough that capture/eval of the tiny configs stays interactive, so we use
+//! the classic i-k-j loop order with row blocking and thread-parallel rows.
+
+use super::Mat;
+use crate::util::threadpool::par_ranges;
+
+/// Threshold below which threading overhead dominates.
+const PAR_FLOPS_THRESHOLD: usize = 1 << 22;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · B into a preallocated output (hot loops reuse the buffer).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let flops = 2 * m * k * n;
+    let threads = if flops < PAR_FLOPS_THRESHOLD {
+        1
+    } else {
+        crate::util::threadpool::ThreadPool::default_parallelism()
+    };
+    let a_data = &a.data;
+    let b_data = &b.data;
+    // SAFETY-free parallelism: split C's rows into disjoint ranges; each
+    // range is written by exactly one thread via raw pointer arithmetic on
+    // non-overlapping row slices.
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    par_ranges(m, threads, |lo, hi| {
+        let c_ptr = &c_ptr;
+        for i in lo..hi {
+            let c_row =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
+            let a_row = &a_data[i * k..(i + 1) * k];
+            for (kk, &aik) in a_row.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b_data[kk * n..(kk + 1) * n];
+                // i-k-j: unit-stride over both C and B; autovectorizes.
+                for (cj, bj) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    });
+}
+
+/// C = A · Bᵀ (B given row-major as (n, k)): the natural layout for
+/// `X · Wᵀ` linear layers, avoiding a materialized transpose of W.
+pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_transb inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    let flops = 2 * m * k * n;
+    let threads = if flops < PAR_FLOPS_THRESHOLD {
+        1
+    } else {
+        crate::util::threadpool::ThreadPool::default_parallelism()
+    };
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    par_ranges(m, threads, |lo, hi| {
+        let c_ptr = &c_ptr;
+        for i in lo..hi {
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
+            let a_row = &a_data[i * k..(i + 1) * k];
+            for (j, cij) in c_row.iter_mut().enumerate() {
+                let b_row = &b_data[j * k..(j + 1) * k];
+                // Dot product with 4-way unrolled accumulation for ILP.
+                let mut s0 = 0.0f32;
+                let mut s1 = 0.0f32;
+                let mut s2 = 0.0f32;
+                let mut s3 = 0.0f32;
+                let chunks = k / 4;
+                for c4 in 0..chunks {
+                    let p = c4 * 4;
+                    s0 += a_row[p] * b_row[p];
+                    s1 += a_row[p + 1] * b_row[p + 1];
+                    s2 += a_row[p + 2] * b_row[p + 2];
+                    s3 += a_row[p + 3] * b_row[p + 3];
+                }
+                let mut s = s0 + s1 + s2 + s3;
+                for p in chunks * 4..k {
+                    s += a_row[p] * b_row[p];
+                }
+                *cij = s;
+            }
+        }
+    });
+    c
+}
+
+/// Shareable raw pointer for the disjoint-rows parallel write pattern.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        Mat::from_fn(a.rows, b.cols, |i, j| {
+            (0..a.cols).map(|k| a.at(i, k) * b.at(k, j)).sum()
+        })
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Pcg64::new(1);
+        for (m, k, n) in [(1, 1, 1), (2, 3, 4), (7, 5, 9), (16, 16, 16)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_naive_large_threaded() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::from_fn(130, 257, |_, _| rng.normal());
+        let b = Mat::from_fn(257, 190, |_, _| rng.normal());
+        let d = matmul(&a, &b).max_abs_diff(&naive(&a, &b));
+        assert!(d < 1e-3, "diff {d}");
+    }
+
+    #[test]
+    fn transb_equals_transpose_then_mul() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::from_fn(33, 48, |_, _| rng.normal());
+        let w = Mat::from_fn(29, 48, |_, _| rng.normal());
+        let d = matmul_transb(&a, &w).max_abs_diff(&matmul(&a, &w.t()));
+        assert!(d < 1e-4, "diff {d}");
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::from_fn(12, 12, |_, _| rng.normal());
+        assert!(matmul(&a, &Mat::eye(12)).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&Mat::eye(12), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn into_buffer_reuse() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::from_fn(8, 6, |_, _| rng.normal());
+        let b = Mat::from_fn(6, 10, |_, _| rng.normal());
+        let mut c = Mat::from_fn(8, 10, |_, _| 999.0); // dirty buffer
+        matmul_into(&a, &b, &mut c);
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-4);
+    }
+}

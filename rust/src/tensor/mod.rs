@@ -1,0 +1,209 @@
+//! Minimal dense f32 tensor substrate (no `ndarray` offline): row-major
+//! matrices with blocked, multi-threaded matmul — enough to run the tiny
+//! Llama-style models natively, compute GPTQ Hessians, and verify the
+//! PJRT-executed artifacts against a pure-rust oracle.
+
+mod matmul;
+
+pub use matmul::{matmul, matmul_into, matmul_transb};
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on the bigger configs.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Take a contiguous row slice [lo, hi) as a new matrix.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat { rows: hi - lo, cols: self.cols, data: self.data[lo * self.cols..hi * self.cols].to_vec() }
+    }
+
+    /// Gather rows by index (token sampling).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather columns by index.
+    pub fn gather_cols(&self, idx: &[usize]) -> Mat {
+        Mat::from_fn(self.rows, idx.len(), |i, j| self.at(i, idx[j]))
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// max |a_ij - b_ij|
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+
+    /// ‖A‖² rows: per-row squared L2 norms.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x * x).sum())
+            .collect()
+    }
+
+    /// Memory footprint in bytes (for the PeakTracker accounting).
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        let _ = Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(37, 53, |i, j| (i * 101 + j * 7) as f32);
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t().at(10, 20), m.at(20, 10));
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let m = Mat::from_fn(5, 3, |i, j| (i * 10 + j) as f32);
+        let g = m.gather_rows(&[4, 0, 2]);
+        assert_eq!(g.row(0), m.row(4));
+        assert_eq!(g.row(2), m.row(2));
+        let s = m.rows_slice(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(0), m.row(1));
+        let c = m.gather_cols(&[2, 0]);
+        assert_eq!(c.at(3, 0), m.at(3, 2));
+    }
+
+    #[test]
+    fn norms_and_arith() {
+        let mut a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        let b = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        assert_eq!(a.sub(&b).data, vec![2.0, 3.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![4.0, 5.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![2.0, 2.5]);
+        assert_eq!(a.max_abs(), 2.5);
+        assert_eq!(Mat::eye(3).row_sq_norms(), vec![1.0, 1.0, 1.0]);
+    }
+}

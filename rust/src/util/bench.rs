@@ -1,0 +1,147 @@
+//! Tiny benchmarking harness used by the `cargo bench` targets (criterion is
+//! not in the offline vendor set). Each bench target sets `harness = false`
+//! and drives this module; reported numbers are median / p10 / p90 over
+//! repeated timed runs after warmup.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} median {:>10}  p10 {:>10}  p90 {:>10}  ({} iters)",
+            self.name,
+            crate::util::fmt_duration(self.median),
+            crate::util::fmt_duration(self.p10),
+            crate::util::fmt_duration(self.p90),
+            self.iters
+        );
+    }
+}
+
+/// Time `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Measurement {
+        name: name.to_string(),
+        median: q(0.5),
+        p10: q(0.1),
+        p90: q(0.9),
+        iters: samples.len(),
+    }
+}
+
+/// Time a single run of `f` and return (result, wall time).
+pub fn once<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Pretty table printer for paper-style result tables: fixed-width columns,
+/// header row, separator. Keeps bench output diffable in EXPERIMENTS.md.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+/// Format a float with `p` decimals; NaN/huge values print like the paper's
+/// divergent-PPL cells.
+pub fn fnum(x: f64, p: usize) -> String {
+    if !x.is_finite() {
+        "inf".to_string()
+    } else if x.abs() >= 1e5 {
+        format!("{:.0}", x)
+    } else {
+        format!("{:.*}", p, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_orders_quantiles() {
+        let m = time("noop", 2, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.p10 <= m.median && m.median <= m.p90);
+        assert_eq!(m.iters, 16);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.rows_str(&["1", "2"]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.rows_str(&["only-one"])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fnum_handles_edge_cases() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(f64::INFINITY, 2), "inf");
+        assert_eq!(fnum(63311.10, 2), "63311.10");
+        assert_eq!(fnum(1.7e6, 2), "1700000");
+    }
+}

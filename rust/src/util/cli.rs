@@ -1,0 +1,181 @@
+//! Declarative CLI flag parsing (clap is not in the offline vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments and subcommands; generates usage text from declarations.
+
+use std::collections::BTreeMap;
+
+/// One declared flag.
+#[derive(Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A command with declared flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, takes_value: true, default: None });
+        self
+    }
+    pub fn flag_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(Flag { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let v = if f.takes_value { " <value>" } else { "" };
+            let d = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the command name itself).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (raw, None),
+                };
+                let decl = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if decl.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} expects a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("--{name} does not take a value");
+                    }
+                    args.bools.insert(name.to_string(), true);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("calibrate", "run rotation calibration")
+            .flag_default("model", "llama2-tiny", "model config name")
+            .flag("steps", "iterations")
+            .switch("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("model"), Some("llama2-tiny"));
+        let a = cmd().parse(&sv(&["--model", "llama2-large"])).unwrap();
+        assert_eq!(a.get("model"), Some("llama2-large"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let a = cmd().parse(&sv(&["--steps=100", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.get_bool("verbose"));
+        assert!(!cmd().parse(&sv(&[])).unwrap().get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_and_errors() {
+        let a = cmd().parse(&sv(&["out.json"])).unwrap();
+        assert_eq!(a.positional, vec!["out.json"]);
+        assert!(cmd().parse(&sv(&["--bogus"])).is_err());
+        assert!(cmd().parse(&sv(&["--steps"])).is_err());
+        assert!(cmd().parse(&sv(&["--steps", "abc"])).unwrap().get_usize("steps", 0).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cmd().usage();
+        assert!(u.contains("--model") && u.contains("default: llama2-tiny"));
+    }
+}

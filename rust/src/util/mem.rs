@@ -1,0 +1,155 @@
+//! Process memory accounting for the cost tables (Table 3 / Fig 1).
+//!
+//! Two complementary views:
+//! * [`rss_bytes`] — actual process resident set (Linux `/proc/self/status`),
+//!   used when measuring our own calibration runs.
+//! * [`PeakTracker`] — a logical-bytes accountant the coordinator charges
+//!   allocations against; this is what lets us *model* the paper's GPU-memory
+//!   comparison (SpinQuant holds the whole model + optimizer state; DartQuant
+//!   holds one layer's activations + one latent matrix) on a substrate where
+//!   everything shares host RAM.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Current resident set size in bytes (Linux). Returns 0 if unreadable.
+pub fn rss_bytes() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Peak RSS in bytes since process start (VmHWM). Some container kernels
+/// omit VmHWM from /proc/self/status; fall back to the current RSS so
+/// callers always get a usable lower bound.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    rss_bytes()
+}
+
+/// Thread-safe logical memory accountant with high-water-mark tracking.
+#[derive(Clone, Default)]
+pub struct PeakTracker {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    current: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl PeakTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `bytes`; returns a guard that releases on drop.
+    pub fn charge(&self, bytes: u64) -> ChargeGuard {
+        let cur = self.inner.current.fetch_add(bytes as i64, Ordering::SeqCst) + bytes as i64;
+        self.inner.peak.fetch_max(cur, Ordering::SeqCst);
+        ChargeGuard { tracker: self.clone(), bytes }
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.inner.current.load(Ordering::SeqCst).max(0) as u64
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.inner.peak.load(Ordering::SeqCst).max(0) as u64
+    }
+
+    pub fn reset_peak(&self) {
+        self.inner
+            .peak
+            .store(self.inner.current.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+}
+
+/// RAII release of a logical charge.
+pub struct ChargeGuard {
+    tracker: PeakTracker,
+    bytes: u64,
+}
+
+impl Drop for ChargeGuard {
+    fn drop(&mut self) {
+        self.tracker.inner.current.fetch_sub(self.bytes as i64, Ordering::SeqCst);
+    }
+}
+
+/// GiB formatting used by the cost tables.
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_nonzero_on_linux() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn tracker_peak_semantics() {
+        let t = PeakTracker::new();
+        {
+            let _a = t.charge(100);
+            assert_eq!(t.current_bytes(), 100);
+            {
+                let _b = t.charge(50);
+                assert_eq!(t.peak_bytes(), 150);
+            }
+            assert_eq!(t.current_bytes(), 100);
+            assert_eq!(t.peak_bytes(), 150, "peak survives release");
+        }
+        assert_eq!(t.current_bytes(), 0);
+        t.reset_peak();
+        assert_eq!(t.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn tracker_is_thread_safe() {
+        let t = PeakTracker::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        let _g = t.charge(10);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.current_bytes(), 0);
+        assert!(t.peak_bytes() >= 10);
+    }
+
+    #[test]
+    fn gib_conversion() {
+        assert!((gib(1 << 30) - 1.0).abs() < 1e-12);
+    }
+}

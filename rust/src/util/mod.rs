@@ -1,0 +1,102 @@
+//! Self-contained utility substrate.
+//!
+//! The offline vendor set ships neither `rand`, `serde`, `clap`, `tokio`,
+//! `criterion` nor `proptest`, so this module provides the minimal,
+//! well-tested equivalents the rest of the crate builds on:
+//!
+//! * [`prng`] — a PCG64-family PRNG with normal/Zipf samplers.
+//! * [`json`] — a small JSON parser + writer (artifact manifests, config
+//!   files, experiment outputs).
+//! * [`cli`] — declarative flag parsing for the `dartquant` binary.
+//! * [`threadpool`] — a fixed-size worker pool used by the coordinator.
+//! * [`propcheck`] — a seeded property-testing helper (proptest stand-in).
+//! * [`bench`] — the harness used by `cargo bench` targets.
+//! * [`mem`] — process RSS sampling for the cost tables.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod propcheck;
+pub mod prng;
+pub mod threadpool;
+
+/// Human-readable duration formatting used across benches and progress logs.
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Excess kurtosis (Gaussian == 0), the statistic in the paper's Table 19.
+pub fn excess_kurtosis(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    let v = variance(xs);
+    if v <= 0.0 {
+        return 0.0;
+    }
+    let m4 = xs.iter().map(|x| (x - m).powi(4)).sum::<f64>() / xs.len() as f64;
+    m4 / (v * v) - 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_of_constant_is_zero() {
+        assert_eq!(excess_kurtosis(&[3.0; 16]), 0.0);
+    }
+
+    #[test]
+    fn kurtosis_sign_matches_tailedness() {
+        // Two-point symmetric distribution has kurtosis -2 (light tails).
+        let light: Vec<f64> = (0..1000).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        assert!(excess_kurtosis(&light) < -1.9);
+        // A spike + rare huge outliers is heavy-tailed.
+        let mut heavy = vec![0.0f64; 1000];
+        heavy[0] = 50.0;
+        heavy[1] = -50.0;
+        assert!(excess_kurtosis(&heavy) > 10.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        use std::time::Duration;
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_secs(360)).ends_with("min"));
+    }
+}

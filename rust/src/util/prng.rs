@@ -1,0 +1,250 @@
+//! Deterministic PRNG substrate (the offline vendor set has no `rand`).
+//!
+//! `Pcg64` implements PCG-XSL-RR 128/64 — a small, fast, statistically solid
+//! generator — plus the samplers the repo needs: uniforms, normals
+//! (Box–Muller), Laplace, Zipf (for the synthetic corpora), permutations and
+//! subsampling (for the paper's 10% token sampling).
+
+/// PCG-XSL-RR 128/64. Deterministic, seedable, portable.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(0xcafe_f00d_d15e_a5e5u128 ^ (seed as u128));
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (used to give each calibration
+    /// worker its own stream).
+    pub fn split(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n). Rejection-free (modulo bias negligible for
+    /// our n ≪ 2^64, but we use Lemire's method for cleanliness).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let hi = ((self.next_u64() as u128 * n as u128) >> 64) as u64;
+        hi as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; cached pair
+    /// intentionally omitted to keep the generator state a pure function of
+    /// call count).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Zero-mean Laplace with scale `b` — the paper's activation model
+    /// (Eq. 2); used when planting synthetic activations.
+    pub fn laplace(&mut self, b: f32) -> f32 {
+        let u = self.uniform() - 0.5; // (-0.5, 0.5)
+        let sign = if u >= 0.0 { 1.0f64 } else { -1.0 };
+        let mag = (1.0 - 2.0 * u.abs()).max(f64::MIN_POSITIVE).ln();
+        (-(b as f64) * sign * mag) as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (floyd's algorithm for k ≪ n,
+    /// shuffle otherwise). Sorted output for cache-friendly gathers.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut out: Vec<usize> = if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all
+        } else {
+            let mut set = std::collections::HashSet::with_capacity(k);
+            let mut v = Vec::with_capacity(k);
+            for j in (n - k)..n {
+                let t = self.below(j + 1);
+                if set.insert(t) {
+                    v.push(t);
+                } else {
+                    set.insert(j);
+                    v.push(j);
+                }
+            }
+            v
+        };
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Zipf(α) sampler over ranks 1..=n via precomputed CDF — drives the
+/// synthetic corpus token marginals (dialects differ in α).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap_or(&1.0);
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Sample a 0-based rank.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.uniform();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(1);
+        let mut buckets = [0usize; 10];
+        for _ in 0..100_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            buckets[(u * 10.0) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Pcg64::new(7);
+        for n in [1usize, 2, 3, 17, 1000] {
+            for _ in 0..200 {
+                assert!(rng.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.normal() as f64).collect();
+        let m = crate::util::mean(&xs);
+        let v = crate::util::variance(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+        assert!(crate::util::excess_kurtosis(&xs).abs() < 0.1);
+    }
+
+    #[test]
+    fn laplace_has_heavy_tails() {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.laplace(1.0) as f64).collect();
+        assert!(crate::util::mean(&xs).abs() < 0.02);
+        // Laplace excess kurtosis is 3.
+        let k = crate::util::excess_kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.5, "kurtosis {k}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut rng = Pcg64::new(9);
+        for (n, k) in [(100, 10), (100, 90), (5, 5), (1000, 1)] {
+            let s = rng.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_rank_decreasing() {
+        let mut rng = Pcg64::new(11);
+        let z = Zipf::new(50, 1.2);
+        let mut counts = [0usize; 50];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > counts[20]);
+    }
+
+    #[test]
+    fn split_streams_decorrelate() {
+        let mut a = Pcg64::new(2);
+        let mut b = a.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

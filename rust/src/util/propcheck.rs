@@ -1,0 +1,150 @@
+//! Seeded property-testing helper — a proptest stand-in for the offline
+//! environment. Runs a property over many generated cases; on failure it
+//! reports the seed and case index so the exact input reproduces with
+//! `Runner::only(seed, case)`.
+
+use crate::util::prng::Pcg64;
+
+/// Property-test runner configuration.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+    only_case: Option<usize>,
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        // Seed overridable for reproduction via env var.
+        let seed = std::env::var("DARTQUANT_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed_d00d);
+        Runner { cases: 64, seed, only_case: None }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Re-run exactly one failing case.
+    pub fn only(seed: u64, case: usize) -> Self {
+        Runner { cases: case + 1, seed, only_case: Some(case) }
+    }
+
+    /// Run `prop` on `cases` independently-seeded generators. `prop` returns
+    /// `Err(msg)` (or panics) to signal failure.
+    pub fn run<F>(&self, name: &str, prop: F)
+    where
+        F: Fn(&mut Pcg64) -> Result<(), String>,
+    {
+        let mut root = Pcg64::new(self.seed);
+        for case in 0..self.cases {
+            let mut rng = root.split();
+            if let Some(only) = self.only_case {
+                if case != only {
+                    continue;
+                }
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+            let failed = match &outcome {
+                Ok(Ok(())) => None,
+                Ok(Err(msg)) => Some(msg.clone()),
+                Err(p) => Some(
+                    p.downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "panic".to_string()),
+                ),
+            };
+            if let Some(msg) = failed {
+                panic!(
+                    "property '{name}' failed on case {case} (seed {:#x}): {msg}\n\
+                     reproduce with Runner::only({:#x}, {case})",
+                    self.seed, self.seed
+                );
+            }
+        }
+    }
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::util::prng::Pcg64;
+
+    /// Size in [lo, hi].
+    pub fn size(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Vector of normals scaled by a random magnitude (exercises a range of
+    /// value scales including subnormal-free small values).
+    pub fn vec_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        let scale = 10f32.powf(rng.uniform_in(-2.0, 2.0));
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Heavy-tailed activation-like vector: Laplace body + planted outliers.
+    pub fn activations(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| rng.laplace(1.0)).collect();
+        let outliers = 1 + rng.below((n / 16).max(1));
+        for _ in 0..outliers {
+            let i = rng.below(n);
+            v[i] = rng.uniform_in(10.0, 50.0) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        let counter = std::cell::Cell::new(0usize);
+        Runner::new().cases(10).run("counting", |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        Runner::new().cases(5).run("fails", |rng| {
+            if rng.below(2) < 2 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panicking_property_reports() {
+        Runner::new().cases(3).run("panics", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::prng::Pcg64::new(1);
+        for _ in 0..100 {
+            let n = gen::size(&mut rng, 3, 9);
+            assert!((3..=9).contains(&n));
+            assert_eq!(gen::vec_f32(&mut rng, n).len(), n);
+            let acts = gen::activations(&mut rng, 32);
+            assert!(acts.iter().any(|a| a.abs() >= 10.0), "has planted outlier");
+        }
+    }
+}

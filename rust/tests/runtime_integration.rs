@@ -1,0 +1,121 @@
+//! Integration tests across the AOT boundary: rust runtime executing the
+//! jax/pallas-lowered artifacts and checking numerics against the native
+//! rust implementations.
+//!
+//! These tests skip (pass vacuously, with a note) when `artifacts/` has not
+//! been built yet — run `make artifacts` first for full coverage.
+
+use dartquant::linalg;
+use dartquant::runtime::{Runtime, Value};
+use dartquant::tensor::Mat;
+use dartquant::util::prng::Pcg64;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(Runtime::default_dir()).expect("open runtime"))
+}
+
+fn rand_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+#[test]
+fn whip_kernel_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::new(1);
+    let x = rand_mat(&mut rng, 256, 256);
+    let out = rt.run("k_whip", &[Value::from_mat(&x)]).expect("run k_whip");
+    let got = out[0].to_scalar().unwrap();
+    // native: mean over rows of sum exp(-|x|)
+    let want: f32 = (0..x.rows)
+        .map(|i| x.row(i).iter().map(|v| (-v.abs()).exp()).sum::<f32>())
+        .sum::<f32>()
+        / x.rows as f32;
+    assert!(
+        (got - want).abs() < 1e-2 * want.max(1.0),
+        "whip {got} vs {want}"
+    );
+}
+
+#[test]
+fn rotate_kernel_matches_native_matmul() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::new(2);
+    let x = rand_mat(&mut rng, 256, 256);
+    let r = linalg::random_orthogonal(256, &mut rng);
+    let out = rt
+        .run("k_rotate", &[Value::from_mat(&x), Value::from_mat(&r)])
+        .expect("run k_rotate");
+    let got = out[0].to_mat().unwrap();
+    let want = dartquant::tensor::matmul(&x, &r);
+    let d = got.max_abs_diff(&want);
+    assert!(d < 1e-3, "rotate mismatch {d}");
+}
+
+#[test]
+fn fwht_kernel_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::new(3);
+    let x = rand_mat(&mut rng, 128, 256);
+    let out = rt.run("k_fwht", &[Value::from_mat(&x)]).expect("run k_fwht");
+    let got = out[0].to_mat().unwrap();
+    let mut want = x.clone();
+    linalg::fwht_rows(&mut want);
+    let d = got.max_abs_diff(&want);
+    assert!(d < 1e-3, "fwht mismatch {d}");
+}
+
+#[test]
+fn quant_kernel_is_idempotent_and_bounded() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::new(4);
+    let x = rand_mat(&mut rng, 128, 256);
+    let out = rt
+        .run("k_quant", &[Value::from_mat(&x), Value::scalar(16.0)])
+        .expect("run k_quant");
+    let y = out[0].to_mat().unwrap();
+    // Quantizing the quantized output must be a fixed point.
+    let out2 = rt
+        .run("k_quant", &[Value::from_mat(&y), Value::scalar(16.0)])
+        .expect("requant");
+    let y2 = out2[0].to_mat().unwrap();
+    assert!(y.max_abs_diff(&y2) < 1e-4, "not idempotent");
+    // Error bounded by step/2 per row.
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let (mn, mx) = row
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        let step = (mx - mn) / 15.0;
+        for (a, b) in row.iter().zip(y.row(i)) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-4);
+        }
+    }
+}
+
+#[test]
+fn qr_kernel_matches_rust_householder() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::new(5);
+    let z = rand_mat(&mut rng, 64, 64);
+    let out = rt.run("k_qr_q", &[Value::from_mat(&z)]).expect("run k_qr_q");
+    let got = out[0].to_mat().unwrap();
+    let want = linalg::qr_orthogonalize(&z);
+    let d = got.max_abs_diff(&want);
+    // Same sign canonicalization on both sides => directly comparable.
+    assert!(d < 5e-3, "QR convention mismatch between jax and rust: {d}");
+    assert!(linalg::orthogonality_defect(&got) < 1e-3);
+}
+
+#[test]
+fn manifest_lists_expected_artifact_families() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    for family in ["calib_whip_sgd_n256", "cayley_whip_sgd_n256", "k_whip"] {
+        assert!(m.get(family).is_some(), "missing {family}");
+    }
+    assert!(!m.find_by_meta(&[("kind", "qr_orth")]).is_empty());
+}
