@@ -1,0 +1,23 @@
+# DartQuant reproduction — build/verify entry points.
+#
+#   make artifacts   AOT-lower the JAX/Pallas graphs to artifacts/ (the one
+#                    python step; everything after runs from rust)
+#   make check       tier-1 verify: release build + tests + fmt check
+#   make bench       run the paper-table bench binaries (needs artifacts)
+
+.PHONY: artifacts check test fmt bench
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+check:
+	./ci.sh
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+bench:
+	cargo bench

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command (also `make check`):
+#   release build, quiet tests, formatting.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+cargo fmt --check

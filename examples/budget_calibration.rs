@@ -7,7 +7,7 @@
 //! make artifacts && cargo run --release --example budget_calibration
 //! ```
 
-use dartquant::coordinator::{run_pipeline, spin_job_bytes, Method, PipelineConfig};
+use dartquant::coordinator::{spin_job_bytes, Method, Pipeline, PipelineConfig, WeightQuant};
 use dartquant::data::{Corpus, Dialect};
 use dartquant::model::{BitSetting, ModelConfig, Weights};
 use dartquant::runtime::Runtime;
@@ -33,13 +33,13 @@ fn main() -> anyhow::Result<()> {
 
     for method in [Method::SpinQuant, Method::DartQuant] {
         let mut pcfg = PipelineConfig::new(method, BitSetting::W4A4);
-        pcfg.memory_budget = Some(budget);
-        pcfg.weight_quant = dartquant::coordinator::WeightQuant::Rtn;
+        pcfg.weight_quant = WeightQuant::Rtn;
         pcfg.calib.steps = 40;
         pcfg.spin.steps = 8;
         pcfg.calib_sequences = 16;
         print!("{:14} → ", method.name());
-        match run_pipeline(&rt, &weights, &pcfg) {
+        // `.budget(...)` is the admission-gate axis of the builder API.
+        match Pipeline::builder(&weights).config(pcfg).budget(Some(budget)).run(&rt) {
             Ok(report) => println!(
                 "OK: calibrated in {} with peak job memory {:.1} MiB (budget {} MiB)",
                 fmt_duration(report.stats.calibrate_time),

@@ -15,13 +15,14 @@
 //! ```
 //! Env: DQ_TRAIN_STEPS (default 200), DQ_E2E_ITEMS (default 8).
 
-use dartquant::coordinator::{run_pipeline, Method, PipelineConfig};
+use dartquant::coordinator::{Method, Pipeline, PipelineConfig, PrintObserver};
 use dartquant::data::{Corpus, Dialect};
 use dartquant::eval;
 use dartquant::model::{BitSetting, ModelConfig, TokenBatch, TrainState, Weights};
 use dartquant::runtime::Runtime;
 use dartquant::util::bench::{fnum, Table};
 use dartquant::util::fmt_duration;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::open(Runtime::default_dir())?;
@@ -75,18 +76,20 @@ fn main() -> anyhow::Result<()> {
         pcfg.calib.steps = 50;
         pcfg.calib_sequences = 32;
         println!("\n== stage 2: {} pipeline ==", method.name());
-        let report = run_pipeline(&rt, &weights, &pcfg)?;
+        // The builder runs discrete stages; the observer prints each one
+        // as it finishes (the same surface the CLI uses).
+        let report = Pipeline::builder(&weights)
+            .config(pcfg)
+            .observer(Arc::new(PrintObserver))
+            .run(&rt)?;
         println!(
-            "  capture {} | calibrate {} | quantize {} | peak job bytes {:.1} MiB",
-            fmt_duration(report.stats.capture_time),
-            fmt_duration(report.stats.calibrate_time),
-            fmt_duration(report.stats.quantize_time),
+            "  peak job bytes {:.1} MiB",
             report.stats.peak_job_bytes as f64 / (1 << 20) as f64
         );
         let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);
         let (ppl, zs) = eval_row(&report.weights, bits, use_had)?;
         table.row(&[
-            method.name().into(),
+            report.method.clone(),
             bits.label(),
             fnum(ppl, 2),
             fnum(zs, 2),

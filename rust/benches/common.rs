@@ -3,9 +3,10 @@
 //! `util::bench::Table`).
 //!
 //! Environment knobs:
-//!   DQ_FULL=1      run the full grid (all models / more batches) instead
-//!                  of the quick default
-//!   DQ_MODELS=a,b  restrict to specific configs
+//!   DQ_FULL=1        run the full grid (all models / more batches) instead
+//!                    of the quick default
+//!   DQ_MODELS=a,b    restrict to specific configs
+//!   DQ_DIALECT=wiki  calibration dialect (wiki|ptb|c4)
 
 #![allow(dead_code)]
 
@@ -23,6 +24,17 @@ pub fn runtime() -> Runtime {
 
 pub fn full() -> bool {
     std::env::var("DQ_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Dialect override (`DQ_DIALECT=wiki|ptb|c4`), through the shared
+/// `Dialect::parse`. Drives both `grammar_model`'s grammar planting and —
+/// in the benches that honor it — `PipelineConfig::calib_dialect`, so the
+/// model and its calibration data stay matched.
+pub fn dialect() -> Dialect {
+    match std::env::var("DQ_DIALECT") {
+        Ok(s) => Dialect::parse(&s).expect("DQ_DIALECT"),
+        Err(_) => Dialect::Wiki,
+    }
 }
 
 /// Models to exercise: quick mode uses the tiny + small llama2 pair, full
@@ -43,9 +55,10 @@ pub fn bench_models() -> Vec<ModelConfig> {
 }
 
 /// The standard "pretrained" model for a config: grammar planted from its
-/// calibration dialect (Wiki), with the default outlier channels.
+/// calibration dialect (Wiki unless DQ_DIALECT overrides), with the
+/// default outlier channels.
 pub fn grammar_model(cfg: &ModelConfig) -> (Weights, Corpus) {
-    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let corpus = Corpus::new(dialect(), cfg.vocab, 7);
     let w = Weights::default_grammar(cfg, 1, corpus.successor());
     (w, corpus)
 }

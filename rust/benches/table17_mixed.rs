@@ -1,74 +1,28 @@
 //! Tables 17/18 (Appendix E): comparison with mixed-precision baselines —
 //! QUIK-like (fp-protected top channels) and Atom-like (grouped, reordered)
 //! weight quantization vs DartQuant's uniform 4-bit after rotation.
+//!
+//! The mixed baselines run through the registry's `WeightQuantizer` impls
+//! (`QuikQuantizer` / `AtomQuantizer`) composed with `NoRotation` — the
+//! same pipeline surface every other method uses.
 
 #[path = "common.rs"]
 mod common;
 
-use dartquant::coordinator::{run_pipeline, Method, PipelineConfig};
+use dartquant::coordinator::{
+    AtomQuantizer, NoRotation, Pipeline, PipelineConfig, QuikQuantizer, WeightQuantizer,
+};
 use dartquant::data::{Corpus, Dialect};
 use dartquant::eval;
 use dartquant::model::{BitSetting, Weights};
-use dartquant::quant;
 use dartquant::util::bench::{fnum, Table};
-
-/// Per-channel activation abs-max at each linear's input (for the mixed-
-/// precision channel selection).
-fn act_absmax(weights: &Weights, corpus: &Corpus) -> std::collections::BTreeMap<String, Vec<f32>> {
-    use dartquant::model::{forward_one, CaptureHook, FwdOptions};
-    struct Hook(std::collections::BTreeMap<String, Vec<f32>>);
-    impl CaptureHook for Hook {
-        fn on_linear_input(&mut self, name: &str, x: &dartquant::tensor::Mat) {
-            let e = self.0.entry(name.to_string()).or_insert_with(|| vec![0.0; x.cols]);
-            for i in 0..x.rows {
-                for (c, m) in e.iter_mut().enumerate() {
-                    *m = m.max(x.at(i, c).abs());
-                }
-            }
-        }
-    }
-    let mut hook = Hook(Default::default());
-    for seq in corpus.calib_sequences(2, 128) {
-        forward_one(weights, &seq, FwdOptions::FP, &mut hook);
-    }
-    hook.0
-}
-
-fn mixed_quantize(weights: &Weights, corpus: &Corpus, atom: bool) -> Weights {
-    let absmax = act_absmax(weights, corpus);
-    let mut out = weights.clone();
-    let shared: Vec<(String, String)> = {
-        let mut v = Vec::new();
-        for l in 0..weights.cfg.n_layers {
-            v.push((format!("l{l}.wq"), format!("l{l}.wq")));
-            v.push((format!("l{l}.wk"), format!("l{l}.wq")));
-            v.push((format!("l{l}.wv"), format!("l{l}.wq")));
-            v.push((format!("l{l}.wo"), format!("l{l}.wo")));
-            v.push((format!("l{l}.wg"), format!("l{l}.wg")));
-            v.push((format!("l{l}.wu"), format!("l{l}.wg")));
-            v.push((format!("l{l}.wd"), format!("l{l}.wd")));
-        }
-        v
-    };
-    for (target, site) in shared {
-        let Some(a) = absmax.get(&site) else { continue };
-        let w = out.get(&target);
-        let q = if atom {
-            quant::atom_quantize_mat(w, a, 4)
-        } else {
-            // QUIK protects 256/4096 channels on real Llamas — 1/16.
-            quant::quik_quantize_mat(w, a, (w.cols / 16).max(2), 4)
-        };
-        out.set(&target, q);
-    }
-    out
-}
+use std::sync::Arc;
 
 fn main() {
     let rt = common::runtime();
     let spec = eval::EvalSpec { batch: 8, seq: 256, n_batches: common::eval_batches() };
     for cfg in common::bench_models() {
-        let (weights, corpus) = common::grammar_model(&cfg);
+        let (weights, _corpus) = common::grammar_model(&cfg);
         let mut table = Table::new(&["Method", "Wiki", "PTB", "C4", "Avg"]);
         let eval_w = |w: &Weights, use_had: bool, table: &mut Table, label: &str| {
             let mut row = vec![label.to_string()];
@@ -83,12 +37,25 @@ fn main() {
             row.push(fnum(total / 3.0, 2));
             table.row(&row);
         };
-        eval_w(&mixed_quantize(&weights, &corpus, false), false, &mut table, "QUIK-like (4+fp16 mixed)");
-        eval_w(&mixed_quantize(&weights, &corpus, true), false, &mut table, "Atom-like (grouped 4/8)");
-        let mut pcfg = PipelineConfig::new(Method::DartQuant, BitSetting::W4A4);
+
+        let mixed = |q: Arc<dyn WeightQuantizer>| -> Weights {
+            Pipeline::builder(&weights)
+                .rotation(Arc::new(NoRotation))
+                .quantizer(q)
+                .bits(BitSetting::W4A4)
+                .configure(|c| c.calib_dialect = common::dialect())
+                .run(&rt)
+                .expect("mixed-precision pipeline")
+                .weights
+        };
+        eval_w(&mixed(Arc::new(QuikQuantizer::default())), false, &mut table, "QUIK-like (4+fp16 mixed)");
+        eval_w(&mixed(Arc::new(AtomQuantizer)), false, &mut table, "Atom-like (grouped 4/8)");
+
+        let mut pcfg = PipelineConfig::new(dartquant::coordinator::Method::DartQuant, BitSetting::W4A4);
+        pcfg.calib_dialect = common::dialect();
         pcfg.calib.steps = if common::full() { 60 } else { 30 };
         pcfg.calib_sequences = 16;
-        let report = run_pipeline(&rt, &weights, &pcfg).expect("pipeline");
+        let report = Pipeline::builder(&weights).config(pcfg).run(&rt).expect("pipeline");
         eval_w(&report.weights, true, &mut table, "DartQuant (uniform 4-bit)");
         table.print(&format!("Tables 17/18 — mixed-precision comparison ({}, A4)", cfg.name));
     }

@@ -8,7 +8,7 @@
 #[path = "common.rs"]
 mod common;
 
-use dartquant::coordinator::{run_pipeline, Method, PipelineConfig};
+use dartquant::coordinator::{MethodRegistry, Pipeline, PipelineConfig};
 use dartquant::data::{Corpus, Dialect};
 use dartquant::eval;
 use dartquant::model::BitSetting;
@@ -17,10 +17,13 @@ use dartquant::util::bench::{fnum, Table};
 fn main() {
     let rt = common::runtime();
     let bit_settings = [BitSetting::W4A8, BitSetting::W4A4, BitSetting::W4A4KV4];
-    let methods: Vec<Method> = if common::full() {
-        Method::ALL.to_vec()
+    // The method grid comes straight from the registry: every registered
+    // spec is a row. Quick mode keeps the four headline methods.
+    let registry = MethodRegistry::builtin();
+    let methods: Vec<String> = if common::full() {
+        registry.names().iter().map(|n| n.to_string()).collect()
     } else {
-        vec![Method::Rtn, Method::QuaRot, Method::SpinQuant, Method::DartQuant]
+        vec!["rtn".into(), "quarot".into(), "spinquant".into(), "dartquant".into()]
     };
 
     for cfg in common::bench_models() {
@@ -33,22 +36,27 @@ fn main() {
         let (wiki, ppl, zs) = eval_cell(&rt, &weights, BitSetting::FP, false);
         table.row(&["16-16-16".into(), "FloatingPoint".into(), fnum(wiki, 2), fnum(ppl, 2), fnum(zs, 2)]);
 
-        for &m in &methods {
-            let mut pcfg = PipelineConfig::new(m, BitSetting::W4A4);
+        for m in &methods {
+            let mut pcfg = PipelineConfig::new(dartquant::coordinator::Method::DartQuant, BitSetting::W4A4);
+            pcfg.calib_dialect = common::dialect();
             pcfg.calib_sequences = if common::full() { 32 } else { 16 };
             pcfg.calib.steps = if common::full() { 60 } else { 25 };
             pcfg.spin.steps = if common::full() { 12 } else { 6 };
-            let report = match run_pipeline(&rt, &weights, &pcfg) {
+            let run = Pipeline::builder(&weights)
+                .config(pcfg)
+                .method_in(&registry, m)
+                .and_then(|b| b.run(&rt));
+            let report = match run {
                 Ok(r) => r,
                 Err(e) => {
-                    table.row(&["*".into(), m.name().into(), "-".into(), format!("err: {e}"), "-".into()]);
+                    table.row(&["*".into(), m.clone(), "-".into(), format!("err: {e}"), "-".into()]);
                     continue;
                 }
             };
             let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);
             for bits in bit_settings {
                 let (wiki, ppl, zs) = eval_cell(&rt, &report.weights, bits, use_had);
-                table.row(&[bits.label(), m.name().into(), fnum(wiki, 2), fnum(ppl, 2), fnum(zs, 2)]);
+                table.row(&[bits.label(), report.method.clone(), fnum(wiki, 2), fnum(ppl, 2), fnum(zs, 2)]);
             }
         }
         table.print(&format!("Table 2 — {} ({})", cfg.name, cfg.paper_name()));

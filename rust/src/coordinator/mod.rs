@@ -6,31 +6,52 @@
 //!        → fuse rotations → quantize weights (RTN/GPTQ) → report
 //! ```
 //!
+//! The pipeline is an open method space: rotation strategies and weight
+//! quantizers are trait objects ([`RotationStrategy`], [`WeightQuantizer`])
+//! composed by name through the [`MethodRegistry`] and executed in
+//! discrete, individually-timed stages by the [`Pipeline`] builder
+//! (`stages`). Progress flows through typed [`PipelineEvent`]s to a
+//! [`PipelineObserver`]; runs summarize to JSON via `report`.
+//!
 //! Calibration jobs run on a worker pool (each worker owns a PJRT runtime;
 //! the xla client is thread-bound) under a [`budget::MemoryGate`]. The
 //! "3090 mode" budget admits DartQuant's per-rotation jobs but rejects the
 //! end-to-end fine-tuning job — reproducing Table 3's resource story.
+//!
+//! [`Method`] survives as a thin compatibility shim over registry lookups,
+//! and [`run_pipeline`] as a thin wrapper over the builder.
 
 pub mod budget;
 pub mod capture;
+pub mod registry;
+pub mod report;
+pub mod stages;
 
 pub use budget::{MemoryGate, OverBudget};
 pub use capture::{capture_pools, capture_pools_native, CalibrationPools};
+pub use registry::{
+    act_absmax, AtomQuantizer, DartCalibrated, GptqQuantizer, MethodRegistry, MethodSpec,
+    NoRotation, OmniQuantQuantizer, QuikQuantizer, RandomHadamard, RandomOrthogonal,
+    RotationOutcome, RotationStrategy, RtnQuantizer, SpinCayley, StageContext, WeightQuantizer,
+};
+pub use report::{
+    CollectingObserver, NullObserver, PipelineEvent, PipelineObserver, PipelineRecord,
+    PipelineReport, PipelineStats, PrintObserver, Stage,
+};
+pub use stages::{Pipeline, PipelineBuilder};
 
-use crate::calib::{self, CalibConfig, SpinConfig};
-use crate::data::{Corpus, Dialect};
-use crate::model::{ModelConfig, TokenBatch, Weights};
-use crate::quant::{self, GptqConfig};
-use crate::rotation::{self, RotationSet, SmoothStats};
-use crate::runtime::{with_thread_runtime, Runtime};
-use crate::util::prng::Pcg64;
+use crate::calib::{CalibConfig, SpinConfig};
+use crate::data::Dialect;
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::Runtime;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::PathBuf;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-/// Quantization method — the rows of Table 2.
+/// Quantization method — the rows of Table 2. A compatibility shim: each
+/// variant names a [`MethodRegistry::builtin`] spec, and parsing goes
+/// through the registry. New methods need only a registry entry, not a
+/// variant here.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     Rtn,
@@ -60,6 +81,7 @@ impl Method {
         Method::DartQuant,
     ];
 
+    /// The registry display name of this method.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Rtn => "RTN",
@@ -73,18 +95,17 @@ impl Method {
         }
     }
 
+    /// Inverse of [`Method::name`] (exact display-name match).
+    pub fn from_name(name: &str) -> Option<Method> {
+        Method::ALL.into_iter().find(|m| m.name() == name)
+    }
+
+    /// Parse a name or alias through the built-in registry.
     pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "rtn" => Method::Rtn,
-            "smoothquant" | "smooth" => Method::SmoothQuant,
-            "gptq" => Method::Gptq,
-            "omniquant" | "omni" => Method::OmniQuant,
-            "quarot" => Method::QuaRot,
-            "spinquant" | "spin" => Method::SpinQuant,
-            "ostquant" | "ost" => Method::OstQuant,
-            "dartquant" | "dart" => Method::DartQuant,
-            other => anyhow::bail!("unknown method {other:?}"),
-        })
+        let registry = MethodRegistry::builtin();
+        let spec = registry.resolve(s)?;
+        Method::from_name(&spec.name)
+            .ok_or_else(|| anyhow::anyhow!("method {:?} has no legacy Method variant", spec.name))
     }
 
     pub fn uses_rotations(&self) -> bool {
@@ -95,11 +116,29 @@ impl Method {
     }
 }
 
-/// How weights are quantized after rotation fusion.
+/// How weights are quantized after rotation fusion (the configurable axis
+/// for methods whose registry spec doesn't fix a quantizer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WeightQuant {
     Rtn,
     Gptq,
+}
+
+impl WeightQuant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightQuant::Rtn => "rtn",
+            WeightQuant::Gptq => "gptq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WeightQuant> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rtn" => WeightQuant::Rtn,
+            "gptq" => WeightQuant::Gptq,
+            other => anyhow::bail!("unknown weight quantizer {other:?} (rtn|gptq)"),
+        })
+    }
 }
 
 /// Full pipeline configuration.
@@ -144,166 +183,23 @@ impl PipelineConfig {
     }
 }
 
-/// Timing + memory accounting of one pipeline run (Table 3 / Fig 1 data).
-#[derive(Clone, Debug, Default)]
-pub struct PipelineStats {
-    pub capture_time: Duration,
-    pub calibrate_time: Duration,
-    pub quantize_time: Duration,
-    pub total_time: Duration,
-    /// Peak job-resident bytes admitted by the memory gate.
-    pub peak_job_bytes: u64,
-    /// Calibration loss curves (R1 first, then R2 per layer).
-    pub loss_curves: Vec<Vec<f32>>,
-}
-
-/// Pipeline output: quantized (dequantized-f32) weights ready for the
-/// `fwdq_*` artifacts, plus the rotation set actually applied.
-pub struct PipelineReport {
-    pub weights: Weights,
-    pub rotation: Option<RotationSet>,
-    pub stats: PipelineStats,
-}
-
 /// Run the full quantization pipeline for one model + method + bits.
+///
+/// Thin compatibility wrapper: equivalent to
+/// `Pipeline::builder(weights).config(cfg.clone()).run(rt)`.
 pub fn run_pipeline(
     rt: &Runtime,
     weights: &Weights,
     cfg: &PipelineConfig,
 ) -> Result<PipelineReport> {
-    let t_total = Instant::now();
-    let model_cfg = weights.cfg.clone();
-    let corpus = Corpus::new(cfg.calib_dialect, model_cfg.vocab, 7);
-    let calib_seqs = corpus.calib_sequences(cfg.calib_sequences, cfg.calib_seq_len);
-    let gate = Arc::new(MemoryGate::new(cfg.memory_budget));
-    let mut stats = PipelineStats::default();
-
-    // ---- rotation stage --------------------------------------------------
-    let mut rng = Pcg64::new(cfg.seed ^ 0x707);
-    let rotation: Option<RotationSet> = match cfg.method {
-        Method::Rtn | Method::SmoothQuant | Method::Gptq | Method::OmniQuant => None,
-        Method::QuaRot => Some(RotationSet::random_hadamard(
-            model_cfg.dim,
-            model_cfg.head_dim,
-            model_cfg.n_layers,
-            &mut rng,
-        )),
-        Method::SpinQuant | Method::OstQuant => {
-            // End-to-end Cayley: ONE job holding the whole model +
-            // optimizer + backprop state; charged in full against the gate.
-            let t0 = Instant::now();
-            let need = spin_job_bytes(&model_cfg);
-            let _lease = gate.admit(need).map_err(|e| {
-                anyhow::anyhow!("{} cannot run under this memory budget: {e}", cfg.method.name())
-            })?;
-            let dialect = cfg.calib_dialect;
-            let (vocab, seq_len) = (model_cfg.vocab, cfg.calib_seq_len);
-            let res = calib::spin_calibrate(rt, weights, &cfg.spin, move |step| {
-                let c = Corpus::new(dialect, vocab, 7);
-                TokenBatch::new(&c.calib_sequences_at(8, seq_len, step as u64))
-            })?;
-            stats.loss_curves.push(res.losses.clone());
-            stats.calibrate_time += t0.elapsed();
-            Some(RotationSet {
-                r1: res.r1,
-                r2: (0..model_cfg.n_layers)
-                    .map(|_| crate::linalg::randomized_hadamard(model_cfg.head_dim, &mut rng))
-                    .collect(),
-                online_had: true,
-            })
-        }
-        Method::DartQuant => {
-            // Capture (data-plane) then R1 + per-layer R2 jobs on workers.
-            let t0 = Instant::now();
-            let pools = capture_pools(rt, weights, &calib_seqs, cfg.token_frac, cfg.seed)?;
-            stats.capture_time = t0.elapsed();
-
-            let t1 = Instant::now();
-            let dir = cfg.artifacts_dir.clone();
-            let pool = ThreadPool::new(cfg.workers);
-            let mut jobs: Vec<(usize, crate::tensor::Mat, CalibConfig)> = Vec::new();
-            jobs.push((0, pools.r1_pool.clone(), cfg.calib.clone()));
-            for (l, p) in pools.r2_pools.iter().enumerate() {
-                let mut c2 = cfg.calib.clone();
-                c2.lr = 1e-3; // paper Table 23: R2 uses lr 1e-3
-                // R2 jobs always use whip (the ablation objectives are
-                // emitted only at the R1 dims; matches the paper, which
-                // ablates the R1 objective only).
-                c2.objective = crate::calib::Objective::Whip;
-                jobs.push((l + 1, p.clone(), c2));
-            }
-            let gate2 = Arc::clone(&gate);
-            let results = pool.map(jobs, move |(id, pool_mat, ccfg)| -> Result<_> {
-                let need = job_bytes(&pool_mat);
-                let _lease = gate2.admit(need)?;
-                let r = with_thread_runtime(&dir, |rt| {
-                    calib::calibrate_rotation(rt, &pool_mat, &ccfg)
-                })??;
-                Ok((id, r))
-            });
-            let mut r1 = None;
-            let mut r2: Vec<Option<crate::tensor::Mat>> = vec![None; model_cfg.n_layers];
-            for res in results {
-                let (id, r) = res.context("calibration job failed")?;
-                stats.loss_curves.push(r.losses.clone());
-                if id == 0 {
-                    r1 = Some(r.rotation);
-                } else {
-                    r2[id - 1] = Some(r.rotation);
-                }
-            }
-            stats.calibrate_time = t1.elapsed();
-            Some(RotationSet {
-                r1: r1.context("missing R1")?,
-                r2: r2.into_iter().map(|r| r.unwrap()).collect(),
-                online_had: true,
-            })
-        }
-    };
-
-    // ---- fuse + smooth -----------------------------------------------------
-    let mut working = match &rotation {
-        Some(rot) => rotation::fuse(weights, rot),
-        None => weights.clone(),
-    };
-    if matches!(cfg.method, Method::SmoothQuant | Method::OstQuant) && !model_cfg.is_moe() {
-        let stats_seqs = corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
-        let sstats = SmoothStats::capture(&working, &stats_seqs);
-        working = rotation::smooth_scales(&working, &sstats, 0.5);
-    }
-
-    // ---- weight quantization -------------------------------------------------
-    let t2 = Instant::now();
-    let quantized = if cfg.bits.w >= 16 {
-        working
-    } else {
-        match (cfg.method, cfg.weight_quant) {
-            (Method::OmniQuant, _) => quant::omniquant_quantize_model(&working, cfg.bits.w),
-            (Method::Rtn | Method::SmoothQuant, _) | (_, WeightQuant::Rtn) => {
-                quant::rtn_quantize_model(&working, cfg.bits.w)
-            }
-            (_, WeightQuant::Gptq) => {
-                let gseqs = corpus.calib_sequences(8.min(cfg.calib_sequences), cfg.calib_seq_len);
-                quant::gptq_quantize_model(
-                    &working,
-                    &gseqs,
-                    GptqConfig { bits: cfg.bits.w, damp: 0.01 },
-                )
-            }
-        }
-    };
-    stats.quantize_time = t2.elapsed();
-    stats.total_time = t_total.elapsed();
-    stats.peak_job_bytes = gate.peak_bytes();
-
-    Ok(PipelineReport { weights: quantized, rotation, stats })
+    Pipeline::builder(weights).config(cfg.clone()).run(rt)
 }
 
 /// Logical bytes a DartQuant calibration job holds: the sampled pool, the
 /// latent + momentum matrices, and the step batch.
 pub fn job_bytes(pool: &crate::tensor::Mat) -> u64 {
     let n = pool.cols as u64;
-    pool.nbytes() + 3 * n * n * 4 + (calib::CALIB_TOKENS as u64) * n * 4
+    pool.nbytes() + 3 * n * n * 4 + (crate::calib::CALIB_TOKENS as u64) * n * 4
 }
 
 /// Logical bytes the end-to-end fine-tuning job holds: weights + gradient
@@ -327,6 +223,21 @@ mod tests {
             assert_eq!(parsed, m, "{}", m.name());
         }
         assert!(Method::parse("awq").is_err());
+    }
+
+    #[test]
+    fn method_from_name_inverts_name() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("rtn"), None); // exact display names only
+    }
+
+    #[test]
+    fn weight_quant_parse() {
+        assert_eq!(WeightQuant::parse("RTN").unwrap(), WeightQuant::Rtn);
+        assert_eq!(WeightQuant::parse("gptq").unwrap(), WeightQuant::Gptq);
+        assert!(WeightQuant::parse("awq").is_err());
     }
 
     #[test]

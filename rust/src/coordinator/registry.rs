@@ -1,0 +1,639 @@
+//! The open method space: `RotationStrategy` × `WeightQuantizer` traits,
+//! the built-in implementations (the rows of Table 2), and the
+//! `MethodRegistry` mapping names/aliases → composed method specs.
+//!
+//! DartQuant's own contribution (whip + QR-Orth calibration) is just one
+//! `RotationStrategy`; new baselines (DFRot-style refined rotations,
+//! ConQuR-style corner objectives) plug in by registering a spec — the
+//! coordinator's hot path never changes.
+
+use super::budget::MemoryGate;
+use super::capture::{self, CalibrationPools};
+use super::report::{PipelineEvent, PipelineObserver};
+use super::{job_bytes, spin_job_bytes, PipelineConfig};
+use crate::calib::{self, CalibConfig};
+use crate::data::Corpus;
+use crate::model::{TokenBatch, Weights};
+use crate::quant::{self, GptqConfig};
+use crate::rotation::RotationSet;
+use crate::runtime::{with_thread_runtime, Runtime};
+use crate::util::prng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Stage context — what every strategy/quantizer sees.
+// ---------------------------------------------------------------------------
+
+/// Everything a pipeline stage may need. Strategies are stateless trait
+/// objects; all run-specific knobs come through here.
+pub struct StageContext<'a> {
+    /// PJRT runtime; `None` for native-only runs. Strategies that need
+    /// AOT artifacts call [`StageContext::runtime`] and surface a
+    /// contextful error when absent.
+    pub rt: Option<&'a Runtime>,
+    pub cfg: &'a PipelineConfig,
+    pub weights: &'a Weights,
+    pub corpus: &'a Corpus,
+    pub gate: Arc<MemoryGate>,
+    pub observer: Arc<dyn PipelineObserver>,
+}
+
+impl StageContext<'_> {
+    pub fn runtime(&self) -> Result<&Runtime> {
+        self.rt.context(
+            "this stage needs the PJRT runtime (run `make artifacts`, then use Pipeline::run)",
+        )
+    }
+
+    pub fn emit(&self, event: PipelineEvent) {
+        self.observer.on_event(&event);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trait families.
+// ---------------------------------------------------------------------------
+
+/// What a rotation-calibration stage produced.
+pub struct RotationOutcome {
+    pub rotation: Option<RotationSet>,
+    /// Loss trajectories (R1 first, then R2 per layer) for methods that
+    /// optimize; empty for closed-form strategies.
+    pub loss_curves: Vec<Vec<f32>>,
+}
+
+impl RotationOutcome {
+    pub fn none() -> RotationOutcome {
+        RotationOutcome { rotation: None, loss_curves: Vec::new() }
+    }
+
+    pub fn some(rotation: RotationSet) -> RotationOutcome {
+        RotationOutcome { rotation: Some(rotation), loss_curves: Vec::new() }
+    }
+}
+
+/// How the rotation set is produced — the open axis of the method space.
+/// Out-of-tree strategies implement this and register a [`MethodSpec`];
+/// the coordinator never needs editing.
+pub trait RotationStrategy: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Capture-stage work (activation pools for pool-based calibration).
+    /// Default: nothing to capture.
+    fn capture(&self, _ctx: &StageContext) -> Result<Option<CalibrationPools>> {
+        Ok(None)
+    }
+
+    /// Calibrate-stage work: produce the rotation set (`None` rotation =
+    /// the method does not rotate).
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome>;
+}
+
+/// How weights are quantized after rotation fusion.
+pub trait WeightQuantizer: Send + Sync {
+    fn name(&self) -> &str;
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights>;
+}
+
+// ---------------------------------------------------------------------------
+// Built-in rotation strategies.
+// ---------------------------------------------------------------------------
+
+/// No rotation (RTN / SmoothQuant / GPTQ / OmniQuant baselines).
+pub struct NoRotation;
+
+impl RotationStrategy for NoRotation {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn calibrate(
+        &self,
+        _ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome> {
+        Ok(RotationOutcome::none())
+    }
+}
+
+/// Random-Hadamard R1/R2 (+ online R3/R4) — QuaRot.
+pub struct RandomHadamard;
+
+impl RotationStrategy for RandomHadamard {
+    fn name(&self) -> &str {
+        "random-hadamard"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome> {
+        let cfg = &ctx.weights.cfg;
+        let mut rng = Pcg64::new(ctx.cfg.seed ^ 0x707);
+        Ok(RotationOutcome::some(RotationSet::random_hadamard(
+            cfg.dim,
+            cfg.head_dim,
+            cfg.n_layers,
+            &mut rng,
+        )))
+    }
+}
+
+/// Haar-random orthogonal rotations — the ablation QuaRot found inferior
+/// to Hadamard (kept as a registered strategy for the method grid).
+pub struct RandomOrthogonal;
+
+impl RotationStrategy for RandomOrthogonal {
+    fn name(&self) -> &str {
+        "random-orthogonal"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome> {
+        let cfg = &ctx.weights.cfg;
+        let mut rng = Pcg64::new(ctx.cfg.seed ^ 0x707);
+        Ok(RotationOutcome::some(RotationSet::random_orthogonal(
+            cfg.dim,
+            cfg.head_dim,
+            cfg.n_layers,
+            &mut rng,
+        )))
+    }
+}
+
+/// End-to-end Cayley fine-tuning of R1 (SpinQuant-sim; + smooth scales =
+/// OSTQuant-sim). ONE job holding the whole model + optimizer + backprop
+/// state; charged in full against the memory gate — Table 3's resource
+/// story.
+pub struct SpinCayley;
+
+impl RotationStrategy for SpinCayley {
+    fn name(&self) -> &str {
+        "spin-cayley"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome> {
+        let rt = ctx.runtime()?;
+        let model_cfg = ctx.weights.cfg.clone();
+        let need = spin_job_bytes(&model_cfg);
+        let _lease = ctx.gate.admit(need).map_err(|e| {
+            anyhow::anyhow!("{} cannot run under this memory budget: {e}", self.name())
+        })?;
+        ctx.emit(PipelineEvent::JobAdmitted { job: 0, bytes: need });
+        let dialect = ctx.cfg.calib_dialect;
+        let (vocab, seq_len) = (model_cfg.vocab, ctx.cfg.calib_seq_len);
+        let res = calib::spin_calibrate(rt, ctx.weights, &ctx.cfg.spin, move |step| {
+            let c = Corpus::new(dialect, vocab, 7);
+            TokenBatch::new(&c.calib_sequences_at(8, seq_len, step as u64))
+        })?;
+        for (step, &loss) in res.losses.iter().enumerate() {
+            ctx.emit(PipelineEvent::LossTick { job: 0, step, loss });
+        }
+        let mut rng = Pcg64::new(ctx.cfg.seed ^ 0x707);
+        let rotation = RotationSet {
+            r1: res.r1,
+            r2: (0..model_cfg.n_layers)
+                .map(|_| crate::linalg::randomized_hadamard(model_cfg.head_dim, &mut rng))
+                .collect(),
+            online_had: true,
+        };
+        Ok(RotationOutcome { rotation: Some(rotation), loss_curves: vec![res.losses] })
+    }
+}
+
+/// Whip + QR-Orth rotational distribution calibration — the paper.
+/// Capture (data-plane) then R1 + per-layer R2 jobs on the worker pool,
+/// each admitted individually by the memory gate.
+pub struct DartCalibrated;
+
+impl RotationStrategy for DartCalibrated {
+    fn name(&self) -> &str {
+        "dart-calibrated"
+    }
+
+    fn capture(&self, ctx: &StageContext) -> Result<Option<CalibrationPools>> {
+        let calib_seqs =
+            ctx.corpus.calib_sequences(ctx.cfg.calib_sequences, ctx.cfg.calib_seq_len);
+        let pools = match ctx.rt {
+            Some(rt) => {
+                capture::capture_pools(rt, ctx.weights, &calib_seqs, ctx.cfg.token_frac, ctx.cfg.seed)?
+            }
+            None => capture::capture_pools_native(
+                ctx.weights,
+                &calib_seqs,
+                ctx.cfg.token_frac,
+                ctx.cfg.seed,
+            ),
+        };
+        Ok(Some(pools))
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        pools: Option<&CalibrationPools>,
+    ) -> Result<RotationOutcome> {
+        let pools = pools.context("DartCalibrated needs the capture stage's activation pools")?;
+        // Jobs execute AOT artifacts on per-worker runtimes; gate on the
+        // session runtime up front so `run_native()` fails with the
+        // contextful error instead of a raw artifact-open failure from a
+        // worker thread.
+        ctx.runtime()?;
+        let model_cfg = ctx.weights.cfg.clone();
+        let dir = ctx.cfg.artifacts_dir.clone();
+        let pool = ThreadPool::new(ctx.cfg.workers);
+        let mut jobs: Vec<(usize, crate::tensor::Mat, CalibConfig)> = Vec::new();
+        jobs.push((0, pools.r1_pool.clone(), ctx.cfg.calib.clone()));
+        for (l, p) in pools.r2_pools.iter().enumerate() {
+            let mut c2 = ctx.cfg.calib.clone();
+            c2.lr = 1e-3; // paper Table 23: R2 uses lr 1e-3
+            // R2 jobs always use whip (the ablation objectives are emitted
+            // only at the R1 dims; matches the paper, which ablates the R1
+            // objective only).
+            c2.objective = crate::calib::Objective::Whip;
+            jobs.push((l + 1, p.clone(), c2));
+        }
+        let gate = Arc::clone(&ctx.gate);
+        let observer = Arc::clone(&ctx.observer);
+        let results = pool.map(jobs, move |(id, pool_mat, ccfg)| -> Result<_> {
+            let need = job_bytes(&pool_mat);
+            let _lease = gate.admit(need)?;
+            observer.on_event(&PipelineEvent::JobAdmitted { job: id, bytes: need });
+            let r = with_thread_runtime(&dir, |rt| {
+                calib::calibrate_rotation(rt, &pool_mat, &ccfg)
+            })??;
+            Ok((id, r))
+        });
+        let mut loss_curves = Vec::new();
+        let mut r1 = None;
+        let mut r2: Vec<Option<crate::tensor::Mat>> = vec![None; model_cfg.n_layers];
+        for res in results {
+            let (id, r) = res.context("calibration job failed")?;
+            for (step, &loss) in r.losses.iter().enumerate() {
+                ctx.emit(PipelineEvent::LossTick { job: id, step, loss });
+            }
+            loss_curves.push(r.losses.clone());
+            if id == 0 {
+                r1 = Some(r.rotation);
+            } else {
+                r2[id - 1] = Some(r.rotation);
+            }
+        }
+        let r2 = r2
+            .into_iter()
+            .enumerate()
+            .map(|(l, r)| {
+                r.with_context(|| {
+                    format!(
+                        "no calibrated R2 for layer {l} ({} layers expected) — \
+                         the worker pool returned no result for this job",
+                        model_cfg.n_layers
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rotation =
+            RotationSet { r1: r1.context("no calibrated R1")?, r2, online_had: true };
+        Ok(RotationOutcome { rotation: Some(rotation), loss_curves })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in weight quantizers.
+// ---------------------------------------------------------------------------
+
+/// Per-output-channel symmetric RTN — the paper's weight quantizer.
+pub struct RtnQuantizer;
+
+impl WeightQuantizer for RtnQuantizer {
+    fn name(&self) -> &str {
+        "rtn"
+    }
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
+        Ok(quant::rtn_quantize_model(weights, ctx.cfg.bits.w))
+    }
+}
+
+/// GPTQ with Hessian capture over calibration sequences.
+pub struct GptqQuantizer {
+    pub damp: f32,
+}
+
+impl Default for GptqQuantizer {
+    fn default() -> Self {
+        GptqQuantizer { damp: 0.01 }
+    }
+}
+
+impl WeightQuantizer for GptqQuantizer {
+    fn name(&self) -> &str {
+        "gptq"
+    }
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
+        let gseqs = ctx
+            .corpus
+            .calib_sequences(8.min(ctx.cfg.calib_sequences), ctx.cfg.calib_seq_len);
+        Ok(quant::gptq_quantize_model(
+            weights,
+            &gseqs,
+            GptqConfig { bits: ctx.cfg.bits.w, damp: self.damp },
+        ))
+    }
+}
+
+/// Learnable weight clipping (OmniQuant-like).
+pub struct OmniQuantQuantizer;
+
+impl WeightQuantizer for OmniQuantQuantizer {
+    fn name(&self) -> &str {
+        "omniquant"
+    }
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
+        Ok(quant::omniquant_quantize_model(weights, ctx.cfg.bits.w))
+    }
+}
+
+/// Per-channel activation abs-max at each linear's input, captured from a
+/// native forward pass — the channel-selection statistic the mixed-
+/// precision quantizers (QUIK/Atom, Appendix E) need.
+pub fn act_absmax(weights: &Weights, seqs: &[Vec<i32>]) -> BTreeMap<String, Vec<f32>> {
+    use crate::model::{forward_one, CaptureHook, FwdOptions};
+    struct Hook(BTreeMap<String, Vec<f32>>);
+    impl CaptureHook for Hook {
+        fn on_linear_input(&mut self, name: &str, x: &crate::tensor::Mat) {
+            let e = self.0.entry(name.to_string()).or_insert_with(|| vec![0.0; x.cols]);
+            for i in 0..x.rows {
+                for (c, m) in e.iter_mut().enumerate() {
+                    *m = m.max(x.at(i, c).abs());
+                }
+            }
+        }
+    }
+    let mut hook = Hook(BTreeMap::new());
+    for seq in seqs {
+        forward_one(weights, seq, FwdOptions::FP, &mut hook);
+    }
+    hook.0
+}
+
+/// (target, capture-site) pairs for the mixed-precision quantizers: wk/wv
+/// share wq's input, wu shares wg's.
+fn mixed_sites(n_layers: usize) -> Vec<(String, String)> {
+    let mut v = Vec::new();
+    for l in 0..n_layers {
+        v.push((format!("l{l}.wq"), format!("l{l}.wq")));
+        v.push((format!("l{l}.wk"), format!("l{l}.wq")));
+        v.push((format!("l{l}.wv"), format!("l{l}.wq")));
+        v.push((format!("l{l}.wo"), format!("l{l}.wo")));
+        v.push((format!("l{l}.wg"), format!("l{l}.wg")));
+        v.push((format!("l{l}.wu"), format!("l{l}.wg")));
+        v.push((format!("l{l}.wd"), format!("l{l}.wd")));
+    }
+    v
+}
+
+/// QUIK-like mixed precision: protect the top activation channels in fp,
+/// quantize the rest (the paper protects 256/4096 — 1/16 of channels).
+pub struct QuikQuantizer {
+    /// Denominator of the protected-channel fraction (16 → 1/16).
+    pub keep_divisor: usize,
+}
+
+impl Default for QuikQuantizer {
+    fn default() -> Self {
+        QuikQuantizer { keep_divisor: 16 }
+    }
+}
+
+impl WeightQuantizer for QuikQuantizer {
+    fn name(&self) -> &str {
+        "quik-mixed"
+    }
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
+        let absmax = act_absmax(weights, &ctx.corpus.calib_sequences(2, 128));
+        let mut out = weights.clone();
+        for (target, site) in mixed_sites(weights.cfg.n_layers) {
+            let Some(a) = absmax.get(&site) else { continue };
+            let w = out.get(&target);
+            let keep = (w.cols / self.keep_divisor).max(2);
+            let q = quant::quik_quantize_mat(w, a, keep, ctx.cfg.bits.w);
+            out.set(&target, q);
+        }
+        Ok(out)
+    }
+}
+
+/// Atom-like mixed precision: reordered, grouped scales with the top group
+/// kept at 8 bits.
+pub struct AtomQuantizer;
+
+impl WeightQuantizer for AtomQuantizer {
+    fn name(&self) -> &str {
+        "atom-mixed"
+    }
+
+    fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
+        let absmax = act_absmax(weights, &ctx.corpus.calib_sequences(2, 128));
+        let mut out = weights.clone();
+        for (target, site) in mixed_sites(weights.cfg.n_layers) {
+            let Some(a) = absmax.get(&site) else { continue };
+            let q = quant::atom_quantize_mat(out.get(&target), a, ctx.cfg.bits.w);
+            out.set(&target, q);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry.
+// ---------------------------------------------------------------------------
+
+/// One named, composed method: a rotation strategy, an optional fixed
+/// weight quantizer (None = honor `PipelineConfig::weight_quant`), and
+/// whether SmoothQuant scaling runs in the fuse stage.
+#[derive(Clone)]
+pub struct MethodSpec {
+    /// Display name (the registry key; matched case-insensitively).
+    pub name: String,
+    /// Lowercase aliases accepted by `resolve` (e.g. "dart").
+    pub aliases: Vec<String>,
+    pub rotation: Arc<dyn RotationStrategy>,
+    pub quantizer: Option<Arc<dyn WeightQuantizer>>,
+    pub smooth: bool,
+}
+
+/// Name → method-spec registry. `builtin()` carries the eight methods of
+/// Table 2; `register` adds (or replaces) entries, so out-of-tree
+/// strategies run through the same pipeline without coordinator edits.
+pub struct MethodRegistry {
+    specs: Vec<MethodSpec>,
+}
+
+impl Default for MethodRegistry {
+    fn default() -> Self {
+        MethodRegistry::builtin()
+    }
+}
+
+impl MethodRegistry {
+    /// An empty registry (tests, fully custom method grids).
+    pub fn empty() -> MethodRegistry {
+        MethodRegistry { specs: Vec::new() }
+    }
+
+    /// The eight built-in methods — the rows of Table 2.
+    pub fn builtin() -> MethodRegistry {
+        let mut reg = MethodRegistry::empty();
+        reg.register(MethodSpec {
+            name: "RTN".into(),
+            aliases: vec!["rtn".into()],
+            rotation: Arc::new(NoRotation),
+            quantizer: Some(Arc::new(RtnQuantizer)),
+            smooth: false,
+        });
+        reg.register(MethodSpec {
+            name: "SmoothQuant".into(),
+            aliases: vec!["smoothquant".into(), "smooth".into()],
+            rotation: Arc::new(NoRotation),
+            quantizer: Some(Arc::new(RtnQuantizer)),
+            smooth: true,
+        });
+        reg.register(MethodSpec {
+            name: "GPTQ".into(),
+            aliases: vec!["gptq".into()],
+            rotation: Arc::new(NoRotation),
+            quantizer: None, // honors weight_quant (GPTQ by default)
+            smooth: false,
+        });
+        reg.register(MethodSpec {
+            name: "OmniQuant".into(),
+            aliases: vec!["omniquant".into(), "omni".into()],
+            rotation: Arc::new(NoRotation),
+            quantizer: Some(Arc::new(OmniQuantQuantizer)),
+            smooth: false,
+        });
+        reg.register(MethodSpec {
+            name: "QuaRot".into(),
+            aliases: vec!["quarot".into()],
+            rotation: Arc::new(RandomHadamard),
+            quantizer: None,
+            smooth: false,
+        });
+        reg.register(MethodSpec {
+            name: "SpinQuant-sim".into(),
+            aliases: vec!["spinquant".into(), "spin".into()],
+            rotation: Arc::new(SpinCayley),
+            quantizer: None,
+            smooth: false,
+        });
+        reg.register(MethodSpec {
+            name: "OSTQuant-sim".into(),
+            aliases: vec!["ostquant".into(), "ost".into()],
+            rotation: Arc::new(SpinCayley),
+            quantizer: None,
+            smooth: true,
+        });
+        reg.register(MethodSpec {
+            name: "DartQuant".into(),
+            aliases: vec!["dartquant".into(), "dart".into()],
+            rotation: Arc::new(DartCalibrated),
+            quantizer: None,
+            smooth: false,
+        });
+        reg
+    }
+
+    /// Add a spec; an existing spec with the same (case-insensitive) name
+    /// is replaced, so callers can override built-ins.
+    pub fn register(&mut self, spec: MethodSpec) -> &mut MethodRegistry {
+        let key = spec.name.to_ascii_lowercase();
+        self.specs.retain(|s| s.name.to_ascii_lowercase() != key);
+        self.specs.push(spec);
+        self
+    }
+
+    /// Look a method up by display name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> Result<&MethodSpec> {
+        let key = name.to_ascii_lowercase();
+        self.specs
+            .iter()
+            .find(|s| s.name.to_ascii_lowercase() == key || s.aliases.iter().any(|a| *a == key))
+            .with_context(|| {
+                format!("unknown method {name:?} (registered: {})", self.names().join(", "))
+            })
+    }
+
+    /// Registered display names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn specs(&self) -> &[MethodSpec] {
+        &self.specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_has_all_eight_methods() {
+        let reg = MethodRegistry::builtin();
+        assert_eq!(reg.names().len(), super::super::Method::ALL.len());
+        for m in super::super::Method::ALL {
+            assert_eq!(reg.resolve(m.name()).unwrap().name, m.name());
+        }
+        assert!(reg.resolve("awq").is_err());
+    }
+
+    #[test]
+    fn aliases_resolve_case_insensitively() {
+        let reg = MethodRegistry::builtin();
+        assert_eq!(reg.resolve("DART").unwrap().name, "DartQuant");
+        assert_eq!(reg.resolve("Smooth").unwrap().name, "SmoothQuant");
+        assert_eq!(reg.resolve("spinquant-SIM").unwrap().name, "SpinQuant-sim");
+    }
+
+    #[test]
+    fn register_replaces_same_name() {
+        let mut reg = MethodRegistry::builtin();
+        let n = reg.names().len();
+        reg.register(MethodSpec {
+            name: "rtn".into(), // replaces the builtin RTN, case-insensitive
+            aliases: vec![],
+            rotation: Arc::new(RandomOrthogonal),
+            quantizer: None,
+            smooth: false,
+        });
+        assert_eq!(reg.names().len(), n);
+        assert_eq!(reg.resolve("rtn").unwrap().rotation.name(), "random-orthogonal");
+    }
+
+    #[test]
+    fn mixed_sites_cover_every_linear() {
+        let sites = mixed_sites(2);
+        assert_eq!(sites.len(), 14);
+        assert!(sites.iter().any(|(t, s)| t == "l1.wu" && s == "l1.wg"));
+    }
+}

@@ -1,0 +1,319 @@
+//! Pipeline reporting surface: typed stage/progress events, the observer
+//! hook every front-end (CLI, examples, benches) consumes, and the
+//! JSON-serializable run report (`util::json`; serde is not vendored).
+
+use crate::data::Dialect;
+use crate::model::Weights;
+use crate::rotation::RotationSet;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The four discrete pipeline stages, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Data-plane activation capture (strategies that calibrate on pools).
+    Capture,
+    /// Rotation calibration / generation.
+    Calibrate,
+    /// Rotation fusion + optional SmoothQuant scaling.
+    Fuse,
+    /// Weight quantization.
+    Quantize,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Capture, Stage::Calibrate, Stage::Fuse, Stage::Quantize];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Capture => "capture",
+            Stage::Calibrate => "calibrate",
+            Stage::Fuse => "fuse",
+            Stage::Quantize => "quantize",
+        }
+    }
+}
+
+/// Typed progress events emitted during a pipeline run.
+///
+/// Stage events arrive strictly in stage order; `JobAdmitted`/`LossTick`
+/// arrive between a stage's started/finished pair (gate admissions in
+/// worker-completion order when calibration jobs run on the pool).
+#[derive(Clone, Debug)]
+pub enum PipelineEvent {
+    StageStarted {
+        stage: Stage,
+    },
+    StageFinished {
+        stage: Stage,
+        elapsed: Duration,
+    },
+    /// A calibration job was admitted by the memory gate.
+    JobAdmitted {
+        /// 0 = R1 (or the single end-to-end job); `l + 1` = layer `l`'s R2.
+        job: usize,
+        bytes: u64,
+    },
+    /// One optimizer step of one calibration job.
+    LossTick {
+        job: usize,
+        step: usize,
+        loss: f32,
+    },
+}
+
+/// Observer hook for [`PipelineEvent`]s. Implementations must be
+/// `Send + Sync`: calibration jobs emit from worker threads.
+pub trait PipelineObserver: Send + Sync {
+    fn on_event(&self, event: &PipelineEvent);
+}
+
+/// Discards every event (the default observer).
+pub struct NullObserver;
+
+impl PipelineObserver for NullObserver {
+    fn on_event(&self, _event: &PipelineEvent) {}
+}
+
+/// Records every event for later inspection (tests, reporting).
+#[derive(Default)]
+pub struct CollectingObserver {
+    events: Mutex<Vec<PipelineEvent>>,
+}
+
+impl CollectingObserver {
+    pub fn new() -> Arc<CollectingObserver> {
+        Arc::new(CollectingObserver::default())
+    }
+
+    pub fn events(&self) -> Vec<PipelineEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// The stage event sequence as `(stage, finished)` pairs, in arrival
+    /// order (loss ticks and admissions filtered out).
+    pub fn stage_sequence(&self) -> Vec<(Stage, bool)> {
+        self.events()
+            .iter()
+            .filter_map(|e| match e {
+                PipelineEvent::StageStarted { stage } => Some((*stage, false)),
+                PipelineEvent::StageFinished { stage, .. } => Some((*stage, true)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+impl PipelineObserver for CollectingObserver {
+    fn on_event(&self, event: &PipelineEvent) {
+        self.events.lock().unwrap().push(event.clone());
+    }
+}
+
+/// Prints one line per finished stage — the CLI's progress surface.
+pub struct PrintObserver;
+
+impl PipelineObserver for PrintObserver {
+    fn on_event(&self, event: &PipelineEvent) {
+        if let PipelineEvent::StageFinished { stage, elapsed } = event {
+            println!("  stage {:9} {}", stage.name(), crate::util::fmt_duration(*elapsed));
+        }
+    }
+}
+
+/// Timing + memory accounting of one pipeline run (Table 3 / Fig 1 data).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PipelineStats {
+    pub capture_time: Duration,
+    pub calibrate_time: Duration,
+    pub fuse_time: Duration,
+    pub quantize_time: Duration,
+    pub total_time: Duration,
+    /// Peak job-resident bytes admitted by the memory gate.
+    pub peak_job_bytes: u64,
+    /// Calibration loss curves (R1 first, then R2 per layer).
+    pub loss_curves: Vec<Vec<f32>>,
+}
+
+fn dur_json(d: Duration) -> Json {
+    // Integer nanoseconds: exact round-trip for any run under ~104 days.
+    Json::Num(d.as_nanos() as f64)
+}
+
+fn json_dur(j: &Json, key: &str) -> Result<Duration> {
+    let ns = j.get_f64(key).with_context(|| format!("stats field {key:?} missing"))?;
+    Ok(Duration::from_nanos(ns as u64))
+}
+
+impl PipelineStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capture_ns", dur_json(self.capture_time)),
+            ("calibrate_ns", dur_json(self.calibrate_time)),
+            ("fuse_ns", dur_json(self.fuse_time)),
+            ("quantize_ns", dur_json(self.quantize_time)),
+            ("total_ns", dur_json(self.total_time)),
+            ("peak_job_bytes", Json::Num(self.peak_job_bytes as f64)),
+            (
+                "loss_curves",
+                Json::Arr(
+                    self.loss_curves
+                        .iter()
+                        .map(|c| Json::Arr(c.iter().map(|&l| Json::Num(l as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineStats> {
+        let curves = j
+            .get("loss_curves")
+            .and_then(|v| v.as_arr())
+            .context("stats field \"loss_curves\" missing")?
+            .iter()
+            .map(|c| {
+                c.as_arr()
+                    .context("loss curve must be an array")
+                    .map(|xs| xs.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+            })
+            .collect::<Result<Vec<Vec<f32>>>>()?;
+        Ok(PipelineStats {
+            capture_time: json_dur(j, "capture_ns")?,
+            calibrate_time: json_dur(j, "calibrate_ns")?,
+            fuse_time: json_dur(j, "fuse_ns")?,
+            quantize_time: json_dur(j, "quantize_ns")?,
+            total_time: json_dur(j, "total_ns")?,
+            peak_job_bytes: j.get_f64("peak_job_bytes").context("peak_job_bytes missing")? as u64,
+            loss_curves: curves,
+        })
+    }
+}
+
+/// Pipeline output: quantized (dequantized-f32) weights ready for the
+/// `fwdq_*` artifacts, plus the rotation set actually applied and the run
+/// accounting. `record()` strips the weights for machine-readable output.
+pub struct PipelineReport {
+    pub weights: Weights,
+    pub rotation: Option<RotationSet>,
+    pub stats: PipelineStats,
+    /// Registry name of the method / rotation strategy that ran.
+    pub method: String,
+    /// Name of the weight quantizer that ran ("none" at W16).
+    pub quantizer: String,
+    /// Calibration dialect the run used.
+    pub dialect: Dialect,
+}
+
+impl PipelineReport {
+    pub fn record(&self) -> PipelineRecord {
+        PipelineRecord {
+            method: self.method.clone(),
+            quantizer: self.quantizer.clone(),
+            dialect: self.dialect,
+            rotated: self.rotation.is_some(),
+            online_had: self.rotation.as_ref().map(|r| r.online_had).unwrap_or(false),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Machine-readable row (everything except the weights themselves).
+    pub fn to_json(&self) -> Json {
+        self.record().to_json()
+    }
+}
+
+/// The serializable summary of one pipeline run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineRecord {
+    pub method: String,
+    pub quantizer: String,
+    pub dialect: Dialect,
+    pub rotated: bool,
+    pub online_had: bool,
+    pub stats: PipelineStats,
+}
+
+impl PipelineRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("quantizer", Json::Str(self.quantizer.clone())),
+            ("dialect", Json::Str(self.dialect.label().to_string())),
+            ("rotated", Json::Bool(self.rotated)),
+            ("online_had", Json::Bool(self.online_had)),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineRecord> {
+        Ok(PipelineRecord {
+            method: j.get_str("method").context("record field \"method\" missing")?.to_string(),
+            quantizer: j
+                .get_str("quantizer")
+                .context("record field \"quantizer\" missing")?
+                .to_string(),
+            dialect: Dialect::parse(j.get_str("dialect").context("record field \"dialect\" missing")?)?,
+            rotated: j.get("rotated").and_then(|v| v.as_bool()).unwrap_or(false),
+            online_had: j.get("online_had").and_then(|v| v.as_bool()).unwrap_or(false),
+            stats: PipelineStats::from_json(j.get("stats").context("record field \"stats\" missing")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_json_roundtrip_is_exact() {
+        let stats = PipelineStats {
+            capture_time: Duration::from_micros(1234),
+            calibrate_time: Duration::from_millis(56),
+            fuse_time: Duration::from_nanos(789),
+            quantize_time: Duration::from_secs(1),
+            total_time: Duration::from_millis(1100),
+            peak_job_bytes: 24 << 20,
+            loss_curves: vec![vec![1.5, 0.75, 0.5], vec![2.0]],
+        };
+        let j = stats.to_json().to_string();
+        let back = PipelineStats::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, stats);
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let rec = PipelineRecord {
+            method: "DartQuant".into(),
+            quantizer: "gptq".into(),
+            dialect: Dialect::Ptb,
+            rotated: true,
+            online_had: true,
+            stats: PipelineStats { peak_job_bytes: 42, ..Default::default() },
+        };
+        let j = rec.to_json().to_string();
+        let back = PipelineRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn stage_order_and_names() {
+        assert_eq!(Stage::ALL[0].name(), "capture");
+        assert_eq!(Stage::ALL[3].name(), "quantize");
+    }
+
+    #[test]
+    fn collecting_observer_preserves_order() {
+        let obs = CollectingObserver::new();
+        obs.on_event(&PipelineEvent::StageStarted { stage: Stage::Capture });
+        obs.on_event(&PipelineEvent::LossTick { job: 0, step: 0, loss: 1.0 });
+        obs.on_event(&PipelineEvent::StageFinished {
+            stage: Stage::Capture,
+            elapsed: Duration::ZERO,
+        });
+        assert_eq!(obs.stage_sequence(), vec![(Stage::Capture, false), (Stage::Capture, true)]);
+        assert_eq!(obs.events().len(), 3);
+    }
+}

@@ -1,0 +1,244 @@
+//! The staged pipeline executor and its builder:
+//!
+//! ```text
+//! Pipeline::builder(&weights)
+//!     .method("dartquant")?          // or .rotation(...) / .quantizer(...)
+//!     .bits(BitSetting::W4A4)
+//!     .budget(Some(24 << 20))
+//!     .observer(obs)
+//!     .run(&rt)?                     // or .run_native() (no artifacts)
+//! ```
+//!
+//! Four discrete, individually-timed stages — capture → calibrate →
+//! fuse/smooth → quantize — each bracketed by [`PipelineEvent`] stage
+//! events on the observer hook.
+
+use super::budget::MemoryGate;
+use super::registry::{
+    GptqQuantizer, MethodRegistry, MethodSpec, RotationStrategy, RtnQuantizer, StageContext,
+    WeightQuantizer,
+};
+use super::report::{PipelineEvent, PipelineObserver, PipelineReport, PipelineStats, Stage};
+use super::report::NullObserver;
+use super::{Method, PipelineConfig, WeightQuant};
+use crate::data::Corpus;
+use crate::model::{BitSetting, Weights};
+use crate::rotation::{self, SmoothStats};
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Namespace for [`Pipeline::builder`].
+pub struct Pipeline;
+
+impl Pipeline {
+    pub fn builder(weights: &Weights) -> PipelineBuilder<'_> {
+        PipelineBuilder {
+            weights,
+            cfg: PipelineConfig::new(Method::DartQuant, BitSetting::W4A4),
+            spec: None,
+            rotation: None,
+            quantizer: None,
+            smooth: None,
+            method_label: None,
+            observer: Arc::new(NullObserver),
+        }
+    }
+}
+
+/// Staged builder over the method space. Each axis resolves with a fixed
+/// precedence, independent of call order: explicit `.rotation()` /
+/// `.quantizer()` / `.smooth()` win, then the spec chosen by `.method()`,
+/// then the built-in registry entry for `PipelineConfig::method` (so
+/// legacy `run_pipeline(rt, weights, cfg)` callers run unchanged), with
+/// `PipelineConfig::weight_quant` as the quantizer fallback.
+pub struct PipelineBuilder<'w> {
+    weights: &'w Weights,
+    cfg: PipelineConfig,
+    spec: Option<MethodSpec>,
+    rotation: Option<Arc<dyn RotationStrategy>>,
+    quantizer: Option<Arc<dyn WeightQuantizer>>,
+    smooth: Option<bool>,
+    method_label: Option<String>,
+    observer: Arc<dyn PipelineObserver>,
+}
+
+impl<'w> PipelineBuilder<'w> {
+    /// Resolve a method by name from the built-in registry.
+    pub fn method(self, name: &str) -> Result<PipelineBuilder<'w>> {
+        self.method_in(&MethodRegistry::builtin(), name)
+    }
+
+    /// Resolve a method by name from a caller-supplied registry — the
+    /// extension point for out-of-tree strategies. Does not clobber axes
+    /// already pinned with `.rotation()` / `.quantizer()` / `.smooth()`.
+    pub fn method_in(mut self, registry: &MethodRegistry, name: &str) -> Result<PipelineBuilder<'w>> {
+        let spec = registry.resolve(name)?;
+        if let Some(m) = Method::from_name(&spec.name) {
+            self.cfg.method = m; // keep the legacy config field in sync
+        }
+        self.method_label = Some(spec.name.clone());
+        self.spec = Some(spec.clone());
+        Ok(self)
+    }
+
+    /// Plug a rotation strategy in directly (no registry entry needed).
+    pub fn rotation(mut self, strategy: Arc<dyn RotationStrategy>) -> PipelineBuilder<'w> {
+        self.method_label.get_or_insert_with(|| strategy.name().to_string());
+        self.rotation = Some(strategy);
+        self
+    }
+
+    pub fn quantizer(mut self, quantizer: Arc<dyn WeightQuantizer>) -> PipelineBuilder<'w> {
+        self.quantizer = Some(quantizer);
+        self
+    }
+
+    /// Apply SmoothQuant scaling in the fuse stage.
+    pub fn smooth(mut self, on: bool) -> PipelineBuilder<'w> {
+        self.smooth = Some(on);
+        self
+    }
+
+    pub fn bits(mut self, bits: BitSetting) -> PipelineBuilder<'w> {
+        self.cfg.bits = bits;
+        self
+    }
+
+    /// Memory budget in bytes for calibration jobs (None = unlimited).
+    pub fn budget(mut self, bytes: Option<u64>) -> PipelineBuilder<'w> {
+        self.cfg.memory_budget = bytes;
+        self
+    }
+
+    pub fn observer(mut self, observer: Arc<dyn PipelineObserver>) -> PipelineBuilder<'w> {
+        self.observer = observer;
+        self
+    }
+
+    /// Replace the whole config (method/bits/calibration knobs). Unpinned
+    /// axes re-resolve from the new `cfg.method` unless a `.method()` call
+    /// already chose a spec.
+    pub fn config(mut self, cfg: PipelineConfig) -> PipelineBuilder<'w> {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Tweak individual config knobs in place.
+    pub fn configure(mut self, f: impl FnOnce(&mut PipelineConfig)) -> PipelineBuilder<'w> {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Run with the PJRT runtime (full artifact-backed pipeline).
+    pub fn run(self, rt: &Runtime) -> Result<PipelineReport> {
+        self.execute(Some(rt))
+    }
+
+    /// Run without a PJRT runtime. Strategies and quantizers that need
+    /// artifacts return a contextful error; native-capable ones (random
+    /// rotations, RTN/GPTQ/OmniQuant/mixed quantizers, smoothing, fusion)
+    /// run end-to-end — which is what the no-artifact tests exercise.
+    pub fn run_native(self) -> Result<PipelineReport> {
+        self.execute(None)
+    }
+
+    fn execute(self, rt: Option<&Runtime>) -> Result<PipelineReport> {
+        let PipelineBuilder {
+            weights,
+            cfg,
+            spec,
+            rotation,
+            quantizer,
+            smooth,
+            method_label,
+            observer,
+        } = self;
+        // Axis precedence: explicit setter → .method() spec → builtin spec
+        // for cfg.method → (quantizer only) cfg.weight_quant.
+        let spec = match spec {
+            Some(s) => s,
+            None => MethodRegistry::builtin().resolve(cfg.method.name())?.clone(),
+        };
+        let rotation = rotation.unwrap_or_else(|| Arc::clone(&spec.rotation));
+        let smooth = smooth.unwrap_or(spec.smooth);
+        let quantizer = quantizer.or_else(|| spec.quantizer.clone()).unwrap_or_else(|| {
+            match cfg.weight_quant {
+                WeightQuant::Rtn => Arc::new(RtnQuantizer) as Arc<dyn WeightQuantizer>,
+                WeightQuant::Gptq => Arc::new(GptqQuantizer::default()),
+            }
+        });
+        let method_label = method_label.unwrap_or_else(|| spec.name.clone());
+
+        let t_total = Instant::now();
+        let model_cfg = weights.cfg.clone();
+        let corpus = Corpus::new(cfg.calib_dialect, model_cfg.vocab, 7);
+        let gate = Arc::new(MemoryGate::new(cfg.memory_budget));
+        let mut stats = PipelineStats::default();
+        let ctx = StageContext {
+            rt,
+            cfg: &cfg,
+            weights,
+            corpus: &corpus,
+            gate: Arc::clone(&gate),
+            observer: Arc::clone(&observer),
+        };
+        let stage = |s: Stage| observer.on_event(&PipelineEvent::StageStarted { stage: s });
+        let stage_done = |s: Stage, t0: Instant| {
+            let elapsed = t0.elapsed();
+            observer.on_event(&PipelineEvent::StageFinished { stage: s, elapsed });
+            elapsed
+        };
+
+        // ---- capture ------------------------------------------------------
+        stage(Stage::Capture);
+        let t0 = Instant::now();
+        let pools = rotation.capture(&ctx)?;
+        stats.capture_time = stage_done(Stage::Capture, t0);
+
+        // ---- calibrate ----------------------------------------------------
+        stage(Stage::Calibrate);
+        let t0 = Instant::now();
+        let outcome = rotation.calibrate(&ctx, pools.as_ref())?;
+        stats.calibrate_time = stage_done(Stage::Calibrate, t0);
+        stats.loss_curves = outcome.loss_curves;
+        let rotation_set = outcome.rotation;
+
+        // ---- fuse + smooth ------------------------------------------------
+        stage(Stage::Fuse);
+        let t0 = Instant::now();
+        let mut working = match &rotation_set {
+            Some(rot) => rotation::fuse(weights, rot),
+            None => weights.clone(),
+        };
+        if smooth && !model_cfg.is_moe() {
+            let stats_seqs =
+                corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
+            let sstats = SmoothStats::capture(&working, &stats_seqs);
+            working = rotation::smooth_scales(&working, &sstats, 0.5);
+        }
+        stats.fuse_time = stage_done(Stage::Fuse, t0);
+
+        // ---- weight quantization -----------------------------------------
+        stage(Stage::Quantize);
+        let t0 = Instant::now();
+        let (quantized, quantizer_label) = if cfg.bits.w >= 16 {
+            (working, "none".to_string())
+        } else {
+            (quantizer.quantize(&ctx, &working)?, quantizer.name().to_string())
+        };
+        stats.quantize_time = stage_done(Stage::Quantize, t0);
+
+        stats.total_time = t_total.elapsed();
+        stats.peak_job_bytes = gate.peak_bytes();
+        Ok(PipelineReport {
+            weights: quantized,
+            rotation: rotation_set,
+            stats,
+            method: method_label,
+            quantizer: quantizer_label,
+            dialect: cfg.calib_dialect,
+        })
+    }
+}

@@ -28,6 +28,18 @@ pub enum Dialect {
 impl Dialect {
     pub const ALL: [Dialect; 3] = [Dialect::Wiki, Dialect::Ptb, Dialect::C4];
 
+    /// Parse a dialect name — the single parser shared by the CLI, the
+    /// benches and the pipeline registry/report. Accepts the short CLI
+    /// names and the paper labels, case-insensitively.
+    pub fn parse(s: &str) -> anyhow::Result<Dialect> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "wiki" | "wikitext2" => Dialect::Wiki,
+            "ptb" => Dialect::Ptb,
+            "c4" => Dialect::C4,
+            other => anyhow::bail!("unknown dialect {other:?} (wiki|ptb|c4)"),
+        })
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             Dialect::Wiki => "WikiText2",
@@ -133,6 +145,16 @@ impl Corpus {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dialect_parse_accepts_cli_names_and_labels() {
+        for d in Dialect::ALL {
+            assert_eq!(Dialect::parse(d.label()).unwrap(), d, "{}", d.label());
+        }
+        assert_eq!(Dialect::parse("wiki").unwrap(), Dialect::Wiki);
+        assert_eq!(Dialect::parse("PTB").unwrap(), Dialect::Ptb);
+        assert!(Dialect::parse("owt").is_err());
+    }
 
     #[test]
     fn deterministic_and_stream_disjoint() {

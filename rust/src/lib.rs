@@ -11,6 +11,46 @@
 //!   kernels, AOT-lowered once to `artifacts/*.hlo.txt` by `make artifacts`
 //!   and executed here through the PJRT C API (`runtime`).
 //!
+//! ## The pipeline API
+//!
+//! Quantization methods are *compositions*: a [`coordinator::RotationStrategy`]
+//! (how R1/R2 are produced — none, random Hadamard, end-to-end Cayley,
+//! DartQuant's whip + QR-Orth calibration) × a
+//! [`coordinator::WeightQuantizer`] (RTN, GPTQ, OmniQuant, QUIK/Atom
+//! mixed precision) × optional SmoothQuant scaling. The
+//! [`coordinator::MethodRegistry`] maps names ("dartquant", "quarot", …)
+//! to composed [`coordinator::MethodSpec`]s; out-of-tree strategies
+//! register a spec and run through the same pipeline without touching the
+//! coordinator.
+//!
+//! Runs go through the staged builder:
+//!
+//! ```no_run
+//! use dartquant::coordinator::Pipeline;
+//! use dartquant::model::{BitSetting, ModelConfig, Weights};
+//! # fn main() -> anyhow::Result<()> {
+//! let cfg = ModelConfig::builtin("llama2-tiny")?;
+//! let weights = Weights::default_synthetic(&cfg, 1);
+//! let rt = dartquant::runtime::Runtime::open(
+//!     dartquant::runtime::Runtime::default_dir())?;
+//! let report = Pipeline::builder(&weights)
+//!     .method("dartquant")?
+//!     .bits(BitSetting::W4A4)
+//!     .budget(Some(24 << 20)) // scaled single-3090 admission gate
+//!     .run(&rt)?;             // or .run_native() without artifacts
+//! println!("{}", report.to_json());
+//! # Ok(()) }
+//! ```
+//!
+//! The four stages (capture → calibrate → fuse/smooth → quantize) are
+//! individually timed and bracketed by typed
+//! [`coordinator::PipelineEvent`]s on an observer hook — the single
+//! progress/reporting surface the CLI, examples and benches consume.
+//! [`coordinator::PipelineReport`] serializes to JSON via [`util::json`].
+//!
+//! The legacy `Method` enum and `run_pipeline` survive as thin shims over
+//! the registry and builder.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod linalg;

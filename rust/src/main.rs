@@ -2,15 +2,21 @@
 //!
 //! Subcommands:
 //!   calibrate  run rotation calibration for one model (prints loss curve)
-//!   quantize   full pipeline: capture → calibrate → fuse → quantize → save
+//!   quantize   staged pipeline (capture → calibrate → fuse → quantize),
+//!              driven through `Pipeline::builder` with a progress observer
 //!   eval       PPL + zero-shot evaluation of a checkpoint (or fresh model)
 //!   pipeline   quantize + eval in one go, printing a paper-style row
+//!              (`--json` emits the machine-readable PipelineReport row)
 //!   train      train the tiny config on a synthetic dialect (AOT Adam step)
-//!   info       list artifacts, models and the runtime platform
+//!   info       artifacts, models, registered methods, runtime platform
+//!
+//! Methods are resolved by name through `coordinator::MethodRegistry`.
 
 use anyhow::{bail, Result};
 use dartquant::calib::CalibConfig;
-use dartquant::coordinator::{self, Method, PipelineConfig};
+use dartquant::coordinator::{
+    self, Method, MethodRegistry, Pipeline, PipelineConfig, PrintObserver, WeightQuant,
+};
 use dartquant::data::{Corpus, Dialect};
 use dartquant::eval::{self, EvalSpec};
 use dartquant::model::{BitSetting, ModelConfig, TokenBatch, TrainState, Weights};
@@ -18,6 +24,7 @@ use dartquant::runtime::Runtime;
 use dartquant::util::bench::{fnum, Table};
 use dartquant::util::cli::Command;
 use dartquant::util::fmt_duration;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,19 +38,10 @@ fn main() {
     std::process::exit(code);
 }
 
-fn dialect_of(s: &str) -> Result<Dialect> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "wiki" | "wikitext2" => Dialect::Wiki,
-        "ptb" => Dialect::Ptb,
-        "c4" => Dialect::C4,
-        other => bail!("unknown dialect {other:?} (wiki|ptb|c4)"),
-    })
-}
-
 fn load_model(args: &dartquant::util::cli::Args) -> Result<(ModelConfig, Weights, Corpus)> {
     let name = args.get_or("model", "llama2-tiny");
     let cfg = ModelConfig::builtin(name)?;
-    let dialect = dialect_of(args.get_or("dialect", "wiki"))?;
+    let dialect = Dialect::parse(args.get_or("dialect", "wiki"))?;
     let corpus = Corpus::new(dialect, cfg.vocab, 7);
     let weights = match args.get("checkpoint") {
         Some(path) => Weights::load(std::path::Path::new(path))?,
@@ -74,16 +72,23 @@ fn run(args: &[String]) -> Result<()> {
 }
 
 fn help_text() -> String {
-    "dartquant — rotational distribution calibration for LLM quantization\n\
-     \n\
-     commands:\n\
-       calibrate   run rotation calibration, print the loss curve\n\
-       quantize    full pipeline, save the quantized checkpoint\n\
-       eval        PPL + zero-shot of a model/checkpoint\n\
-       pipeline    quantize + eval, print a paper-style row\n\
-       train       train the tiny config (AOT Adam step)\n\
-       info        artifacts + models + runtime platform"
-        .to_string()
+    format!(
+        "dartquant — rotational distribution calibration for LLM quantization\n\
+         \n\
+         commands:\n\
+           calibrate   run rotation calibration, print the loss curve\n\
+           quantize    staged pipeline (capture → calibrate → fuse → quantize),\n\
+                       save the quantized checkpoint\n\
+           eval        PPL + zero-shot of a model/checkpoint\n\
+           pipeline    quantize + eval, print a paper-style row (--json for a\n\
+                       machine-readable PipelineReport row)\n\
+           train       train the tiny config (AOT Adam step)\n\
+           info        artifacts + models + registered methods + platform\n\
+         \n\
+         methods are resolved by name through the MethodRegistry (rotation\n\
+         strategy × weight quantizer): {}",
+        MethodRegistry::builtin().names().join(", ")
+    )
 }
 
 fn print_help() {
@@ -145,10 +150,11 @@ fn pipeline_config(a: &dartquant::util::cli::Args) -> Result<PipelineConfig> {
     let method = Method::parse(a.get_or("method", "dartquant"))?;
     let bits = BitSetting::parse(a.get_or("bits", "4-4-16"))?;
     let mut cfg = PipelineConfig::new(method, bits);
-    cfg.calib_dialect = dialect_of(a.get_or("dialect", "wiki"))?;
+    cfg.calib_dialect = Dialect::parse(a.get_or("dialect", "wiki"))?;
     cfg.calib_sequences = a.get_usize("sequences", 32)?;
     cfg.calib.steps = a.get_usize("steps", 60)?;
     cfg.workers = a.get_usize("workers", cfg.workers)?;
+    cfg.weight_quant = WeightQuant::parse(a.get_or("wquant", "gptq"))?;
     if a.get_bool("budget-3090") {
         cfg.memory_budget = Some(24 << 20);
     }
@@ -167,6 +173,7 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         .flag_default("sequences", "32", "calibration sequences")
         .flag_default("steps", "60", "calibration steps")
         .flag_default("workers", "4", "calibration worker threads")
+        .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("out", "write the quantized checkpoint here")
         .flag("checkpoint", "load base weights from a checkpoint")
         .flag("budget-bytes", "memory budget for calibration jobs")
@@ -182,12 +189,16 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         weights.cfg.name,
         weights.cfg.n_params()
     );
-    let report = coordinator::run_pipeline(&rt, &weights, &pcfg)?;
+    let report = Pipeline::builder(&weights)
+        .config(pcfg)
+        .observer(Arc::new(PrintObserver))
+        .run(&rt)?;
     let s = &report.stats;
     println!(
-        "capture {} | calibrate {} | quantize {} | total {} | peak job bytes {}",
+        "capture {} | calibrate {} | fuse {} | quantize {} | total {} | peak job bytes {}",
         fmt_duration(s.capture_time),
         fmt_duration(s.calibrate_time),
+        fmt_duration(s.fuse_time),
         fmt_duration(s.quantize_time),
         fmt_duration(s.total_time),
         s.peak_job_bytes
@@ -254,21 +265,33 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         .flag_default("steps", "60", "calibration steps")
         .flag_default("workers", "4", "worker threads")
         .flag_default("items", "8", "zero-shot items per task")
+        .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("checkpoint", "base weights checkpoint")
         .flag("budget-bytes", "memory budget")
-        .switch("budget-3090", "scaled 3090 budget");
+        .switch("budget-3090", "scaled 3090 budget")
+        .switch("json", "print a machine-readable PipelineReport row");
     let a = cmd.parse(argv)?;
     let (_cfg, weights, _corpus) = load_model(&a)?;
     let rt = Runtime::open(Runtime::default_dir())?;
     let pcfg = pipeline_config(&a)?;
-    let report = coordinator::run_pipeline(&rt, &weights, &pcfg)?;
+    let bits = pcfg.bits;
+    let json = a.get_bool("json");
+    let mut builder = Pipeline::builder(&weights).config(pcfg);
+    if !json {
+        builder = builder.observer(Arc::new(PrintObserver));
+    }
+    let report = builder.run(&rt)?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
     let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);
     let (wiki, ptb, c4, avg, zs) =
-        eval_row(&rt, &report.weights, pcfg.bits, use_had, a.get_usize("items", 8)?)?;
+        eval_row(&rt, &report.weights, bits, use_had, a.get_usize("items", 8)?)?;
     let mut t = Table::new(&["Method", "Bits", "Wiki", "PTB", "C4", "Avg", "0-shot9", "calib time"]);
     t.row(&[
-        pcfg.method.name().to_string(),
-        pcfg.bits.label(),
+        report.method.clone(),
+        bits.label(),
         fnum(wiki, 2),
         fnum(ptb, 2),
         fnum(c4, 2),
@@ -291,7 +314,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let a = cmd.parse(argv)?;
     let name = a.get_or("model", "llama2-tiny");
     let cfg = ModelConfig::builtin(name)?;
-    let dialect = dialect_of(a.get_or("dialect", "wiki"))?;
+    let dialect = Dialect::parse(a.get_or("dialect", "wiki"))?;
     let corpus = Corpus::new(dialect, cfg.vocab, 7);
     let weights = if a.get_bool("from-scratch") {
         Weights::default_synthetic(&cfg, 1)
@@ -317,9 +340,24 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("info", "artifacts + models + platform");
+    let cmd = Command::new("info", "artifacts + models + registered methods + platform");
     let _a = cmd.parse(argv)?;
-    println!("models:");
+    println!("registered methods (rotation strategy × weight quantizer):");
+    for spec in MethodRegistry::builtin().specs() {
+        println!(
+            "  {:14} rotation={:18} quantizer={}{}{}",
+            spec.name,
+            spec.rotation.name(),
+            spec.quantizer.as_ref().map(|q| q.name().to_string()).unwrap_or("<config>".into()),
+            if spec.smooth { " +smooth" } else { "" },
+            if spec.aliases.is_empty() {
+                String::new()
+            } else {
+                format!("  (aliases: {})", spec.aliases.join(", "))
+            }
+        );
+    }
+    println!("\nmodels:");
     for cfg in ModelConfig::all_builtin() {
         println!(
             "  {:13} d={} L={} heads={}/{} ffn={} vocab={} params={:.1}M  — {}",

@@ -1,0 +1,188 @@
+//! Pipeline-API tests — registry round-trips, staged builder runs with
+//! ordered events, out-of-tree strategy registration, and report JSON
+//! round-trips. Everything here runs **without** artifacts: the builder's
+//! `run_native` path uses native-capable strategies/quantizers only.
+
+use dartquant::coordinator::{
+    CalibrationPools, CollectingObserver, Method, MethodRegistry, MethodSpec, Pipeline,
+    PipelineRecord, PipelineStats, RotationOutcome, RotationStrategy, RtnQuantizer, Stage,
+    StageContext,
+};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::model::{BitSetting, ModelConfig, Weights};
+use dartquant::rotation::RotationSet;
+use dartquant::util::json::Json;
+use dartquant::util::prng::Pcg64;
+use std::sync::Arc;
+
+fn tiny() -> (Weights, Corpus) {
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+    (w, corpus)
+}
+
+#[test]
+fn registry_roundtrips_every_builtin_method() {
+    let reg = MethodRegistry::builtin();
+    assert_eq!(reg.names().len(), Method::ALL.len());
+    for m in Method::ALL {
+        // Display name resolves to its own spec…
+        let spec = reg.resolve(m.name()).expect(m.name());
+        assert_eq!(spec.name, m.name());
+        // …and the legacy shim parses the spec name back to the variant.
+        assert_eq!(Method::parse(&spec.name).unwrap(), m);
+    }
+    for alias in ["rtn", "smooth", "gptq", "omni", "quarot", "spin", "ost", "dart"] {
+        assert!(reg.resolve(alias).is_ok(), "alias {alias} must resolve");
+    }
+    assert!(reg.resolve("awq").is_err());
+}
+
+#[test]
+fn builder_emits_stage_events_in_order() {
+    let (w, _corpus) = tiny();
+    let obs = CollectingObserver::new();
+    let report = Pipeline::builder(&w)
+        .method("quarot")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .quantizer(Arc::new(RtnQuantizer))
+        .observer(obs.clone())
+        .run_native()
+        .unwrap();
+    assert_eq!(report.method, "QuaRot");
+    assert_eq!(report.quantizer, "rtn");
+    assert!(report.rotation.is_some(), "QuaRot must rotate");
+    // Every stage starts and finishes, in pipeline order, exactly once.
+    let want: Vec<(Stage, bool)> =
+        Stage::ALL.iter().flat_map(|&s| [(s, false), (s, true)]).collect();
+    assert_eq!(obs.stage_sequence(), want);
+}
+
+#[test]
+fn smooth_method_runs_natively_through_builder() {
+    let (w, _corpus) = tiny();
+    let report = Pipeline::builder(&w)
+        .method("smoothquant")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .run_native()
+        .unwrap();
+    assert_eq!(report.method, "SmoothQuant");
+    assert_eq!(report.quantizer, "rtn"); // fixed by the spec
+    assert!(report.rotation.is_none());
+    assert_ne!(report.weights.get("l0.wq").data, w.get("l0.wq").data, "weights must quantize");
+}
+
+/// An out-of-tree rotation strategy: Haar-random orthogonal R1/R2. Lives
+/// entirely in this test — registering it must be enough to run it
+/// end-to-end, with zero coordinator edits.
+struct HaarRotation;
+
+impl RotationStrategy for HaarRotation {
+    fn name(&self) -> &str {
+        "haar-orthogonal"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> anyhow::Result<RotationOutcome> {
+        let cfg = &ctx.weights.cfg;
+        let mut rng = Pcg64::new(ctx.cfg.seed ^ 0xaa7);
+        Ok(RotationOutcome::some(RotationSet::random_orthogonal(
+            cfg.dim,
+            cfg.head_dim,
+            cfg.n_layers,
+            &mut rng,
+        )))
+    }
+}
+
+#[test]
+fn custom_strategy_registers_and_runs_end_to_end() {
+    let (w, _corpus) = tiny();
+    let mut reg = MethodRegistry::builtin();
+    reg.register(MethodSpec {
+        name: "HaarQuant".into(),
+        aliases: vec!["haar".into()],
+        rotation: Arc::new(HaarRotation),
+        quantizer: Some(Arc::new(RtnQuantizer)),
+        smooth: false,
+    });
+    assert_eq!(reg.names().len(), Method::ALL.len() + 1);
+
+    let obs = CollectingObserver::new();
+    let report = Pipeline::builder(&w)
+        .method_in(&reg, "haar")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .observer(obs.clone())
+        .run_native()
+        .unwrap();
+    assert_eq!(report.method, "HaarQuant");
+    let rot = report.rotation.as_ref().expect("custom strategy must rotate");
+    assert!(rot.max_defect() < 1e-3, "rotation must stay orthogonal");
+    assert_eq!(rot.r2.len(), w.cfg.n_layers);
+    // All four stages ran for the custom method too.
+    assert_eq!(obs.stage_sequence().len(), 2 * Stage::ALL.len());
+}
+
+#[test]
+fn report_json_roundtrip_from_a_real_run() {
+    let (w, _corpus) = tiny();
+    let report = Pipeline::builder(&w)
+        .method("rtn")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .run_native()
+        .unwrap();
+    let rec = report.record();
+    let json = report.to_json().to_string();
+    let back = PipelineRecord::from_json(&Json::parse(&json).unwrap()).unwrap();
+    assert_eq!(back, rec);
+    assert_eq!(back.method, "RTN");
+    assert_eq!(back.dialect, Dialect::Wiki);
+    assert!(!back.rotated);
+    // Stats survive independently too.
+    let stats = PipelineStats::from_json(&Json::parse(&rec.stats.to_json().to_string()).unwrap())
+        .unwrap();
+    assert_eq!(stats, rec.stats);
+}
+
+#[test]
+fn explicit_axes_survive_method_in_any_order() {
+    let (w, _corpus) = tiny();
+    // Quantizer pinned BEFORE the method: resolution is by precedence
+    // (explicit → method spec → config fallback), not call order, so the
+    // spec must not clobber it — without the pin, "gptq"'s fallback would
+    // pick the GPTQ quantizer from weight_quant.
+    let report = Pipeline::builder(&w)
+        .quantizer(Arc::new(RtnQuantizer))
+        .method("gptq")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .run_native()
+        .unwrap();
+    assert_eq!(report.method, "GPTQ");
+    assert_eq!(report.quantizer, "rtn");
+}
+
+#[test]
+fn legacy_config_flows_through_the_builder() {
+    use dartquant::coordinator::PipelineConfig;
+    let (w, _corpus) = tiny();
+    // run_pipeline itself needs a PJRT runtime; its exact construction —
+    // `.config(cfg)` with every axis resolved from cfg.method — is what
+    // this exercises natively.
+    let mut cfg = PipelineConfig::new(Method::QuaRot, BitSetting::W4A4);
+    cfg.weight_quant = dartquant::coordinator::WeightQuant::Rtn;
+    cfg.calib_dialect = Dialect::Ptb;
+    let report = Pipeline::builder(&w).config(cfg).run_native().unwrap();
+    assert_eq!(report.method, "QuaRot");
+    assert_eq!(report.quantizer, "rtn"); // honored weight_quant fallback
+    assert_eq!(report.dialect, Dialect::Ptb);
+    assert!(report.rotation.as_ref().unwrap().online_had);
+}
