@@ -2,10 +2,11 @@
 #
 #   make artifacts   AOT-lower the JAX/Pallas graphs to artifacts/ (the one
 #                    python step; everything after runs from rust)
-#   make check       tier-1 verify: release build + tests + fmt check
+#   make check       tier-1 verify: release build + tests + doc + fmt check
+#   make doc         rustdoc the public API (warnings are errors)
 #   make bench       run the paper-table bench binaries (needs artifacts)
 
-.PHONY: artifacts check test fmt bench
+.PHONY: artifacts check test fmt doc bench
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -18,6 +19,9 @@ test:
 
 fmt:
 	cargo fmt --check
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 bench:
 	cargo bench

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (also `make check`):
-#   release build, quiet tests, formatting.
+#   release build, quiet tests, rustdoc (warnings as errors), formatting.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo fmt --check

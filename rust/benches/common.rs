@@ -7,6 +7,8 @@
 //!                    of the quick default
 //!   DQ_MODELS=a,b    restrict to specific configs
 //!   DQ_DIALECT=wiki  calibration dialect (wiki|ptb|c4)
+//!   DQ_WORKERS=n     scheduler worker threads for pipeline runs
+//!                    (0/unset = available parallelism)
 
 #![allow(dead_code)]
 
@@ -34,6 +36,17 @@ pub fn dialect() -> Dialect {
     match std::env::var("DQ_DIALECT") {
         Ok(s) => Dialect::parse(&s).expect("DQ_DIALECT"),
         Err(_) => Dialect::Wiki,
+    }
+}
+
+/// Scheduler worker threads for pipeline runs (`DQ_WORKERS=n`;
+/// 0/unset = available parallelism, the `PipelineConfig` convention).
+/// Panics on an unparsable value rather than silently benchmarking the
+/// wrong worker count.
+pub fn workers() -> usize {
+    match std::env::var("DQ_WORKERS") {
+        Ok(s) => s.parse().expect("DQ_WORKERS must be an integer"),
+        Err(_) => 0,
     }
 }
 

@@ -1,0 +1,120 @@
+//! Scheduler scaling: calibrate-stage wall clock at workers=1 vs
+//! workers=N over the Table 2 model grid, for the methods whose stages
+//! decompose into per-layer jobs (DartQuant's R1+R2 calibration,
+//! OmniQuant's per-layer clip grid search).
+//!
+//! Also verifies the determinism contract on every pair of runs: the
+//! canonical report JSON (timings stripped) must be byte-identical
+//! between the serial and the parallel run.
+//!
+//! Knobs: DQ_WORKERS (parallel worker count, default = all cores),
+//! DQ_FULL / DQ_MODELS / DQ_DIALECT as in every bench.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::coordinator::{MethodRegistry, Pipeline, PipelineConfig, PipelineReport};
+use dartquant::model::BitSetting;
+use dartquant::util::bench::{fnum, Table};
+use dartquant::util::threadpool::ThreadPool;
+
+fn run(
+    rt: &dartquant::runtime::Runtime,
+    weights: &dartquant::model::Weights,
+    method: &str,
+    workers: usize,
+) -> anyhow::Result<PipelineReport> {
+    let mut pcfg =
+        PipelineConfig::new(dartquant::coordinator::Method::DartQuant, BitSetting::W4A4);
+    pcfg.calib_dialect = common::dialect();
+    pcfg.calib_sequences = if common::full() { 32 } else { 16 };
+    pcfg.calib.steps = if common::full() { 60 } else { 25 };
+    Pipeline::builder(weights)
+        .config(pcfg)
+        .method_in(&MethodRegistry::builtin(), method)?
+        .workers(workers)
+        .run(rt)
+}
+
+fn main() {
+    let rt = common::runtime();
+    let par = match common::workers() {
+        0 => ThreadPool::default_parallelism(),
+        n => n,
+    };
+    let methods = ["dartquant", "omniquant"];
+
+    let mut table = Table::new(&[
+        "Model", "Method", "Workers", "calibrate (s)", "quantize (s)", "total (s)", "speedup",
+        "identical",
+    ]);
+    for cfg in common::bench_models() {
+        let (weights, _corpus) = common::grammar_model(&cfg);
+        for method in methods {
+            // The parallelizable stage differs by method: DartQuant fans
+            // out in calibrate, OmniQuant in quantize.
+            let stage_time = |r: &PipelineReport| {
+                if method == "dartquant" {
+                    r.stats.calibrate_time.as_secs_f64()
+                } else {
+                    r.stats.quantize_time.as_secs_f64()
+                }
+            };
+            let serial = match run(&rt, &weights, method, 1) {
+                Ok(r) => r,
+                Err(e) => {
+                    table.row(&[
+                        cfg.name.clone(),
+                        method.into(),
+                        "1".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        format!("err: {e}"),
+                    ]);
+                    continue;
+                }
+            };
+            let parallel = match run(&rt, &weights, method, par) {
+                Ok(r) => r,
+                Err(e) => {
+                    table.row(&[
+                        cfg.name.clone(),
+                        method.into(),
+                        format!("{par}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        format!("err: {e}"),
+                    ]);
+                    continue;
+                }
+            };
+            // Determinism contract: canonical reports byte-identical.
+            let same = serial.record().canonical().to_json().to_string()
+                == parallel.record().canonical().to_json().to_string();
+            let speedup = stage_time(&serial) / stage_time(&parallel).max(1e-9);
+            for (w, r) in [(1usize, &serial), (par, &parallel)] {
+                table.row(&[
+                    cfg.name.clone(),
+                    r.method.clone(),
+                    format!("{w}"),
+                    fnum(r.stats.calibrate_time.as_secs_f64(), 3),
+                    fnum(r.stats.quantize_time.as_secs_f64(), 3),
+                    fnum(r.stats.total_time.as_secs_f64(), 3),
+                    if w == 1 { "1.00".into() } else { fnum(speedup, 2) },
+                    if same { "yes".into() } else { "MISMATCH".into() },
+                ]);
+            }
+            if !same {
+                eprintln!(
+                    "DETERMINISM VIOLATION: {} {method} workers=1 vs {par} reports differ",
+                    cfg.name
+                );
+            }
+        }
+    }
+    table.print(&format!("perf_scheduler — calibrate-stage scaling (1 vs {par} workers)"));
+}

@@ -20,6 +20,7 @@ fn main() {
     let mut table = Table::new(&["#sequences", "Wiki", "PTB", "C4", "Avg"]);
     for &n in sizes {
         let mut pcfg = PipelineConfig::new(Method::DartQuant, BitSetting::W4A4);
+        pcfg.workers = common::workers();
         pcfg.calib_sequences = n;
         pcfg.calib.steps = if common::full() { 60 } else { 30 };
         let report = run_pipeline(&rt, &weights, &pcfg).expect("pipeline");

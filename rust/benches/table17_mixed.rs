@@ -52,6 +52,7 @@ fn main() {
         eval_w(&mixed(Arc::new(AtomQuantizer)), false, &mut table, "Atom-like (grouped 4/8)");
 
         let mut pcfg = PipelineConfig::new(dartquant::coordinator::Method::DartQuant, BitSetting::W4A4);
+        pcfg.workers = common::workers();
         pcfg.calib_dialect = common::dialect();
         pcfg.calib.steps = if common::full() { 60 } else { 30 };
         pcfg.calib_sequences = 16;

@@ -39,6 +39,7 @@ fn main() {
 
         for calib_d in Dialect::ALL {
             let mut pcfg = PipelineConfig::new(Method::SpinQuant, BitSetting::W4A4);
+            pcfg.workers = common::workers();
             pcfg.calib_dialect = calib_d;
             pcfg.spin.steps = if common::full() { 12 } else { 6 };
             pcfg.calib_sequences = 16;

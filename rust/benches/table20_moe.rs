@@ -31,6 +31,7 @@ fn main() {
     for bits in [BitSetting::W4A4, BitSetting::W4A4KV4] {
         for method in [Method::Rtn, Method::QuaRot, Method::DartQuant] {
             let mut pcfg = PipelineConfig::new(method, bits);
+            pcfg.workers = common::workers();
             pcfg.calib.steps = if common::full() { 60 } else { 30 };
             pcfg.calib_sequences = 16;
             // GPTQ Hessian capture hooks are dense-only; use RTN weights on

@@ -20,6 +20,7 @@ fn main() {
     let mut table = Table::new(&["Loss", "Wiki", "PTB", "C4", "0-shot9"]);
     for obj in Objective::ALL {
         let mut pcfg = PipelineConfig::new(Method::DartQuant, BitSetting::W4A4);
+        pcfg.workers = common::workers();
         pcfg.calib.objective = obj;
         pcfg.calib.steps = if common::full() { 60 } else { 30 };
         pcfg.calib_sequences = 16;

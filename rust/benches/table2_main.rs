@@ -38,6 +38,7 @@ fn main() {
 
         for m in &methods {
             let mut pcfg = PipelineConfig::new(dartquant::coordinator::Method::DartQuant, BitSetting::W4A4);
+            pcfg.workers = common::workers();
             pcfg.calib_dialect = common::dialect();
             pcfg.calib_sequences = if common::full() { 32 } else { 16 };
             pcfg.calib.steps = if common::full() { 60 } else { 25 };

@@ -26,6 +26,7 @@ fn main() {
         let (weights, _corpus) = common::grammar_model(&cfg);
         for (method, steps) in [(Method::SpinQuant, 8), (Method::OstQuant, 8), (Method::DartQuant, 40)] {
             let mut pcfg = PipelineConfig::new(method, dartquant::model::BitSetting::W4A4);
+            pcfg.workers = common::workers();
             pcfg.weight_quant = dartquant::coordinator::WeightQuant::Rtn; // isolate calib cost
             pcfg.calib_sequences = 16;
             pcfg.calib.steps = steps;
@@ -60,6 +61,7 @@ fn main() {
         // 3090-mode rows: budget admits DartQuant, rejects e2e fine-tuning.
         for method in [Method::SpinQuant, Method::DartQuant] {
             let mut pcfg = PipelineConfig::new(method, dartquant::model::BitSetting::W4A4);
+            pcfg.workers = common::workers();
             pcfg.weight_quant = dartquant::coordinator::WeightQuant::Rtn;
             pcfg.calib_sequences = 16;
             pcfg.calib.steps = 40;

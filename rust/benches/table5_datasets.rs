@@ -24,6 +24,7 @@ fn main() {
         let mut spreads: Vec<f64> = Vec::new();
         for calib_d in Dialect::ALL {
             let mut pcfg = PipelineConfig::new(Method::DartQuant, BitSetting::W4A4);
+            pcfg.workers = common::workers();
             pcfg.calib_dialect = calib_d;
             pcfg.calib.steps = if common::full() { 60 } else { 30 };
             pcfg.calib_sequences = 16;

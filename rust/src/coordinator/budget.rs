@@ -7,6 +7,10 @@
 //! outright — which is exactly what happens to end-to-end fine-tuning
 //! (SpinQuant/OSTQuant hold model + optimizer + backprop state) on a
 //! 24 GiB card, while DartQuant's per-rotation jobs stream through.
+//!
+//! The parallel scheduler ([`super::Scheduler`]) admits every job here
+//! before it runs, so the budget — not the worker count — bounds
+//! in-flight activation state; see `docs/CONCURRENCY.md`.
 
 use crate::util::mem::PeakTracker;
 use std::sync::{Condvar, Mutex};
@@ -28,6 +32,8 @@ pub struct OverBudget {
 }
 
 impl MemoryGate {
+    /// A gate with `budget` bytes of capacity (`None` = unlimited, the
+    /// gate still tracks peaks).
     pub fn new(budget: Option<u64>) -> MemoryGate {
         MemoryGate {
             budget,
@@ -44,6 +50,7 @@ impl MemoryGate {
         MemoryGate::new(Some(24 << 20))
     }
 
+    /// The configured budget in bytes (`None` = unlimited).
     pub fn budget(&self) -> Option<u64> {
         self.budget
     }

@@ -13,10 +13,14 @@
 //! (`stages`). Progress flows through typed [`PipelineEvent`]s to a
 //! [`PipelineObserver`]; runs summarize to JSON via `report`.
 //!
-//! Calibration jobs run on a worker pool (each worker owns a PJRT runtime;
-//! the xla client is thread-bound) under a [`budget::MemoryGate`]. The
-//! "3090 mode" budget admits DartQuant's per-rotation jobs but rejects the
-//! end-to-end fine-tuning job — reproducing Table 3's resource story.
+//! Calibration decomposes into independent per-layer jobs executed by the
+//! [`scheduler::Scheduler`] on worker threads (each worker owns a PJRT
+//! runtime; the xla client is thread-bound) under a
+//! [`budget::MemoryGate`]. Per-job seeding and ordered event delivery
+//! make parallel runs bit-identical to serial ones — the determinism
+//! contract in `docs/CONCURRENCY.md`. The "3090 mode" budget admits
+//! DartQuant's per-rotation jobs but rejects the end-to-end fine-tuning
+//! job — reproducing Table 3's resource story.
 //!
 //! [`Method`] survives as a thin compatibility shim over registry lookups,
 //! and [`run_pipeline`] as a thin wrapper over the builder.
@@ -25,6 +29,7 @@ pub mod budget;
 pub mod capture;
 pub mod registry;
 pub mod report;
+pub mod scheduler;
 pub mod stages;
 
 pub use budget::{MemoryGate, OverBudget};
@@ -38,13 +43,13 @@ pub use report::{
     CollectingObserver, NullObserver, PipelineEvent, PipelineObserver, PipelineRecord,
     PipelineReport, PipelineStats, PrintObserver, Stage,
 };
+pub use scheduler::{CalibJob, JobSink, Scheduler};
 pub use stages::{Pipeline, PipelineBuilder};
 
 use crate::calib::{CalibConfig, SpinConfig};
 use crate::data::Dialect;
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::Runtime;
-use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 use std::path::PathBuf;
 
@@ -70,6 +75,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every built-in method, in Table 2 row order.
     pub const ALL: [Method; 8] = [
         Method::Rtn,
         Method::SmoothQuant,
@@ -108,6 +114,7 @@ impl Method {
             .ok_or_else(|| anyhow::anyhow!("method {:?} has no legacy Method variant", spec.name))
     }
 
+    /// Whether this method produces a rotation set.
     pub fn uses_rotations(&self) -> bool {
         matches!(
             self,
@@ -125,6 +132,7 @@ pub enum WeightQuant {
 }
 
 impl WeightQuant {
+    /// Lowercase quantizer name (CLI `--wquant` values).
     pub fn name(&self) -> &'static str {
         match self {
             WeightQuant::Rtn => "rtn",
@@ -132,6 +140,7 @@ impl WeightQuant {
         }
     }
 
+    /// Parse a CLI `--wquant` value.
     pub fn parse(s: &str) -> Result<WeightQuant> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "rtn" => WeightQuant::Rtn,
@@ -144,26 +153,42 @@ impl WeightQuant {
 /// Full pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// The method to run (legacy axis; the builder's `.method()` wins).
     pub method: Method,
+    /// Target W-A-KV bit setting.
     pub bits: crate::model::BitSetting,
+    /// Weight quantizer for methods whose spec doesn't fix one.
     pub weight_quant: WeightQuant,
+    /// Calibration data dialect.
     pub calib_dialect: Dialect,
     /// Calibration sequences (paper: 128).
     pub calib_sequences: usize,
+    /// Calibration sequence length in tokens.
     pub calib_seq_len: usize,
     /// Token sampling fraction (paper: 10%).
     pub token_frac: f64,
+    /// Rotation-calibration hyper-parameters (per-job seeds derive from
+    /// `calib.seed ⊕ job id`).
     pub calib: CalibConfig,
+    /// End-to-end Cayley fine-tuning hyper-parameters (SpinQuant-sim).
     pub spin: SpinConfig,
+    /// Worker threads for the per-layer calibration scheduler
+    /// (`0` = available parallelism, the default).
     pub workers: usize,
+    /// Base seed for capture-stage token sampling.
     pub seed: u64,
-    /// Memory budget in bytes for calibration jobs (None = unlimited;
-    /// `Some(24 << 20)` = the scaled single-3090 mode).
+    /// Memory budget in bytes for scheduler jobs — rotation calibration
+    /// *and* per-layer quantizer jobs (OmniQuant's grid search) charge
+    /// against it (None = unlimited; `Some(24 << 20)` = the scaled
+    /// single-3090 mode).
     pub memory_budget: Option<u64>,
+    /// Where the AOT artifacts live (worker runtimes open this dir).
     pub artifacts_dir: PathBuf,
 }
 
 impl PipelineConfig {
+    /// The default configuration for `method` at `bits` (32 calibration
+    /// sequences, Wiki dialect, GPTQ fallback quantizer, all cores).
     pub fn new(method: Method, bits: crate::model::BitSetting) -> PipelineConfig {
         PipelineConfig {
             method,
@@ -175,7 +200,7 @@ impl PipelineConfig {
             token_frac: 0.1,
             calib: CalibConfig::default(),
             spin: SpinConfig::default(),
-            workers: ThreadPool::default_parallelism().min(4),
+            workers: 0, // 0 = available parallelism, resolved by the scheduler
             seed: 0,
             memory_budget: None,
             artifacts_dir: Runtime::default_dir(),

@@ -10,6 +10,7 @@
 use super::budget::MemoryGate;
 use super::capture::{self, CalibrationPools};
 use super::report::{PipelineEvent, PipelineObserver};
+use super::scheduler::{CalibJob, Scheduler};
 use super::{job_bytes, spin_job_bytes, PipelineConfig};
 use crate::calib::{self, CalibConfig};
 use crate::data::Corpus;
@@ -18,10 +19,10 @@ use crate::quant::{self, GptqConfig};
 use crate::rotation::RotationSet;
 use crate::runtime::{with_thread_runtime, Runtime};
 use crate::util::prng::Pcg64;
-use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 // ---------------------------------------------------------------------------
 // Stage context — what every strategy/quantizer sees.
@@ -34,20 +35,30 @@ pub struct StageContext<'a> {
     /// AOT artifacts call [`StageContext::runtime`] and surface a
     /// contextful error when absent.
     pub rt: Option<&'a Runtime>,
+    /// The run's full configuration (method, bits, calibration knobs,
+    /// worker count).
     pub cfg: &'a PipelineConfig,
+    /// The unquantized model the pipeline started from.
     pub weights: &'a Weights,
+    /// The calibration corpus for `cfg.calib_dialect`.
     pub corpus: &'a Corpus,
+    /// The run's memory-admission gate, shared with the scheduler.
     pub gate: Arc<MemoryGate>,
+    /// The run's event observer, shared with the scheduler.
     pub observer: Arc<dyn PipelineObserver>,
 }
 
 impl StageContext<'_> {
+    /// The PJRT runtime, or a contextful error pointing at
+    /// `make artifacts` when the pipeline runs natively.
     pub fn runtime(&self) -> Result<&Runtime> {
         self.rt.context(
             "this stage needs the PJRT runtime (run `make artifacts`, then use Pipeline::run)",
         )
     }
 
+    /// Forward one event to the run's observer (stage-thread emission;
+    /// scheduler jobs buffer through [`super::JobSink`] instead).
     pub fn emit(&self, event: PipelineEvent) {
         self.observer.on_event(&event);
     }
@@ -66,10 +77,12 @@ pub struct RotationOutcome {
 }
 
 impl RotationOutcome {
+    /// No rotation, no loss curves (non-rotating methods).
     pub fn none() -> RotationOutcome {
         RotationOutcome { rotation: None, loss_curves: Vec::new() }
     }
 
+    /// A rotation with no loss curves (closed-form strategies).
     pub fn some(rotation: RotationSet) -> RotationOutcome {
         RotationOutcome { rotation: Some(rotation), loss_curves: Vec::new() }
     }
@@ -79,6 +92,7 @@ impl RotationOutcome {
 /// Out-of-tree strategies implement this and register a [`MethodSpec`];
 /// the coordinator never needs editing.
 pub trait RotationStrategy: Send + Sync {
+    /// Stable strategy name used in reports and `info` listings.
     fn name(&self) -> &str;
 
     /// Capture-stage work (activation pools for pool-based calibration).
@@ -98,8 +112,11 @@ pub trait RotationStrategy: Send + Sync {
 
 /// How weights are quantized after rotation fusion.
 pub trait WeightQuantizer: Send + Sync {
+    /// Stable quantizer name used in reports and `info` listings.
     fn name(&self) -> &str;
 
+    /// Quantize `weights` (already rotated/smoothed) at `ctx.cfg.bits.w`
+    /// bits, returning the dequantized-f32 model.
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights>;
 }
 
@@ -192,19 +209,35 @@ impl RotationStrategy for SpinCayley {
         let rt = ctx.runtime()?;
         let model_cfg = ctx.weights.cfg.clone();
         let need = spin_job_bytes(&model_cfg);
-        let _lease = ctx.gate.admit(need).map_err(|e| {
-            anyhow::anyhow!("{} cannot run under this memory budget: {e}", self.name())
-        })?;
-        ctx.emit(PipelineEvent::JobAdmitted { job: 0, bytes: need });
+        // ONE monolithic job: bracket it with the same JobStarted/Finished
+        // events the scheduler emits — including JobFinished { ok: false }
+        // on admission/optimizer failure — so observers always see a
+        // balanced stream.
+        ctx.emit(PipelineEvent::JobStarted { job: 0, label: "spin-e2e".into() });
+        let t0 = Instant::now();
         let dialect = ctx.cfg.calib_dialect;
         let (vocab, seq_len) = (model_cfg.vocab, ctx.cfg.calib_seq_len);
-        let res = calib::spin_calibrate(rt, ctx.weights, &ctx.cfg.spin, move |step| {
-            let c = Corpus::new(dialect, vocab, 7);
-            TokenBatch::new(&c.calib_sequences_at(8, seq_len, step as u64))
-        })?;
-        for (step, &loss) in res.losses.iter().enumerate() {
-            ctx.emit(PipelineEvent::LossTick { job: 0, step, loss });
+        let result = (|| {
+            let _lease = ctx.gate.admit(need).map_err(|e| {
+                anyhow::anyhow!("{} cannot run under this memory budget: {e}", self.name())
+            })?;
+            ctx.emit(PipelineEvent::JobAdmitted { job: 0, bytes: need });
+            calib::spin_calibrate(rt, ctx.weights, &ctx.cfg.spin, move |step| {
+                let c = Corpus::new(dialect, vocab, 7);
+                TokenBatch::new(&c.calib_sequences_at(8, seq_len, step as u64))
+            })
+        })();
+        if let Ok(res) = &result {
+            for (step, &loss) in res.losses.iter().enumerate() {
+                ctx.emit(PipelineEvent::LossTick { job: 0, step, loss });
+            }
         }
+        ctx.emit(PipelineEvent::JobFinished {
+            job: 0,
+            elapsed: t0.elapsed(),
+            ok: result.is_ok(),
+        });
+        let res = result?;
         let mut rng = Pcg64::new(ctx.cfg.seed ^ 0x707);
         let rotation = RotationSet {
             r1: res.r1,
@@ -228,20 +261,19 @@ impl RotationStrategy for DartCalibrated {
     }
 
     fn capture(&self, ctx: &StageContext) -> Result<Option<CalibrationPools>> {
+        // calibrate() executes AOT artifacts on per-worker runtimes, so a
+        // native run can never succeed — fail here, before the expensive
+        // capture forward passes, with the contextful runtime error.
+        let rt = ctx.runtime()?;
         let calib_seqs =
             ctx.corpus.calib_sequences(ctx.cfg.calib_sequences, ctx.cfg.calib_seq_len);
-        let pools = match ctx.rt {
-            Some(rt) => {
-                capture::capture_pools(rt, ctx.weights, &calib_seqs, ctx.cfg.token_frac, ctx.cfg.seed)?
-            }
-            None => capture::capture_pools_native(
-                ctx.weights,
-                &calib_seqs,
-                ctx.cfg.token_frac,
-                ctx.cfg.seed,
-            ),
-        };
-        Ok(Some(pools))
+        Ok(Some(capture::capture_pools(
+            rt,
+            ctx.weights,
+            &calib_seqs,
+            ctx.cfg.token_frac,
+            ctx.cfg.seed,
+        )?))
     }
 
     fn calibrate(
@@ -250,16 +282,25 @@ impl RotationStrategy for DartCalibrated {
         pools: Option<&CalibrationPools>,
     ) -> Result<RotationOutcome> {
         let pools = pools.context("DartCalibrated needs the capture stage's activation pools")?;
-        // Jobs execute AOT artifacts on per-worker runtimes; gate on the
-        // session runtime up front so `run_native()` fails with the
-        // contextful error instead of a raw artifact-open failure from a
+        // Belt-and-braces: capture() already failed native runs, but a
+        // caller handing pools in directly still gets the contextful
+        // runtime error instead of a raw artifact-open failure from a
         // worker thread.
         ctx.runtime()?;
         let model_cfg = ctx.weights.cfg.clone();
         let dir = ctx.cfg.artifacts_dir.clone();
-        let pool = ThreadPool::new(ctx.cfg.workers);
-        let mut jobs: Vec<(usize, crate::tensor::Mat, CalibConfig)> = Vec::new();
-        jobs.push((0, pools.r1_pool.clone(), ctx.cfg.calib.clone()));
+        // Decompose into independent scheduler jobs over the *borrowed*
+        // pools (no cloning): R1 is job 0, layer l's R2 is job l + 1, each
+        // drawing its PRNG stream from `calib.seed ⊕ id` so any worker
+        // count produces bit-identical rotations.
+        let mut jobs: Vec<CalibJob<(&crate::tensor::Mat, CalibConfig)>> =
+            Vec::with_capacity(model_cfg.n_layers + 1);
+        jobs.push(CalibJob::new(
+            0,
+            "r1",
+            job_bytes(&pools.r1_pool),
+            (&pools.r1_pool, ctx.cfg.calib.clone()),
+        ));
         for (l, p) in pools.r2_pools.iter().enumerate() {
             let mut c2 = ctx.cfg.calib.clone();
             c2.lr = 1e-3; // paper Table 23: R2 uses lr 1e-3
@@ -267,49 +308,45 @@ impl RotationStrategy for DartCalibrated {
             // only at the R1 dims; matches the paper, which ablates the R1
             // objective only).
             c2.objective = crate::calib::Objective::Whip;
-            jobs.push((l + 1, p.clone(), c2));
+            jobs.push(CalibJob::new(l + 1, format!("r2[{l}]"), job_bytes(p), (p, c2)));
         }
-        let gate = Arc::clone(&ctx.gate);
-        let observer = Arc::clone(&ctx.observer);
-        let results = pool.map(jobs, move |(id, pool_mat, ccfg)| -> Result<_> {
-            let need = job_bytes(&pool_mat);
-            let _lease = gate.admit(need)?;
-            observer.on_event(&PipelineEvent::JobAdmitted { job: id, bytes: need });
-            let r = with_thread_runtime(&dir, |rt| {
-                calib::calibrate_rotation(rt, &pool_mat, &ccfg)
-            })??;
-            Ok((id, r))
-        });
-        let mut loss_curves = Vec::new();
-        let mut r1 = None;
-        let mut r2: Vec<Option<crate::tensor::Mat>> = vec![None; model_cfg.n_layers];
-        for res in results {
-            let (id, r) = res.context("calibration job failed")?;
-            for (step, &loss) in r.losses.iter().enumerate() {
-                ctx.emit(PipelineEvent::LossTick { job: id, step, loss });
-            }
+        let base_seed = ctx.cfg.calib.seed;
+        for job in &mut jobs {
+            let per_job = job.seed(base_seed);
+            job.payload.1.seed = per_job;
+        }
+        let results = Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, sink| {
+                let (pool_mat, ccfg) = (job.payload.0, &job.payload.1);
+                let r = with_thread_runtime(&dir, |rt| {
+                    calib::calibrate_rotation(rt, pool_mat, ccfg)
+                })??;
+                for (step, &loss) in r.losses.iter().enumerate() {
+                    sink.emit(PipelineEvent::LossTick { job: job.id, step, loss });
+                }
+                Ok(r)
+            },
+        )?;
+        // Scheduler results come back in job order: R1 first, then the
+        // per-layer R2s.
+        let mut results = results.into_iter();
+        let r1 = results.next().context("no calibrated R1")?;
+        let mut loss_curves = vec![r1.losses.clone()];
+        let mut r2 = Vec::with_capacity(model_cfg.n_layers);
+        for r in results {
             loss_curves.push(r.losses.clone());
-            if id == 0 {
-                r1 = Some(r.rotation);
-            } else {
-                r2[id - 1] = Some(r.rotation);
-            }
+            r2.push(r.rotation);
         }
-        let r2 = r2
-            .into_iter()
-            .enumerate()
-            .map(|(l, r)| {
-                r.with_context(|| {
-                    format!(
-                        "no calibrated R2 for layer {l} ({} layers expected) — \
-                         the worker pool returned no result for this job",
-                        model_cfg.n_layers
-                    )
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let rotation =
-            RotationSet { r1: r1.context("no calibrated R1")?, r2, online_had: true };
+        anyhow::ensure!(
+            r2.len() == model_cfg.n_layers,
+            "scheduler returned {} R2 rotations, model has {} layers",
+            r2.len(),
+            model_cfg.n_layers
+        );
+        let rotation = RotationSet { r1: r1.rotation, r2, online_had: true };
         Ok(RotationOutcome { rotation: Some(rotation), loss_curves })
     }
 }
@@ -333,6 +370,7 @@ impl WeightQuantizer for RtnQuantizer {
 
 /// GPTQ with Hessian capture over calibration sequences.
 pub struct GptqQuantizer {
+    /// Hessian damping factor (fraction of the mean diagonal).
     pub damp: f32,
 }
 
@@ -359,7 +397,10 @@ impl WeightQuantizer for GptqQuantizer {
     }
 }
 
-/// Learnable weight clipping (OmniQuant-like).
+/// Learnable weight clipping (OmniQuant-like). The per-channel clip-ratio
+/// grid search is independent per weight matrix, so the quantize stage
+/// fans out one scheduler job per layer (same gate/event regime as
+/// rotation calibration).
 pub struct OmniQuantQuantizer;
 
 impl WeightQuantizer for OmniQuantQuantizer {
@@ -368,7 +409,44 @@ impl WeightQuantizer for OmniQuantQuantizer {
     }
 
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
-        Ok(quant::omniquant_quantize_model(weights, ctx.cfg.bits.w))
+        let bits = ctx.cfg.bits.w;
+        // Group transformer weights by layer prefix ("l3.wq" → "l3");
+        // unprefixed weights (final norm, …) form their own groups.
+        let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for n in weights.names() {
+            if n == "embed" || n == "head" {
+                continue;
+            }
+            let key = n.split('.').next().unwrap_or(n).to_string();
+            groups.entry(key).or_default().push(n.clone());
+        }
+        let jobs: Vec<CalibJob<Vec<String>>> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(i, (key, names))| {
+                let bytes: u64 = names.iter().map(|n| weights.get(n).nbytes()).sum();
+                CalibJob::new(i, format!("omniquant[{key}]"), bytes, names)
+            })
+            .collect();
+        let results = Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, _sink| {
+                Ok(job
+                    .payload
+                    .iter()
+                    .map(|n| (n.clone(), quant::omniquant_quantize_mat(weights.get(n), bits)))
+                    .collect::<Vec<_>>())
+            },
+        )?;
+        let mut out = weights.clone();
+        for group in results {
+            for (n, m) in group {
+                out.set(&n, m);
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -573,11 +651,15 @@ impl MethodRegistry {
     }
 
     /// Look a method up by display name or alias (case-insensitive).
+    /// Display names win over aliases, so a spec registered under a name
+    /// that collides with an older spec's alias (e.g. a custom "Dart"
+    /// overriding the builtin DartQuant's alias) is still reachable.
     pub fn resolve(&self, name: &str) -> Result<&MethodSpec> {
         let key = name.to_ascii_lowercase();
         self.specs
             .iter()
-            .find(|s| s.name.to_ascii_lowercase() == key || s.aliases.iter().any(|a| *a == key))
+            .find(|s| s.name.to_ascii_lowercase() == key)
+            .or_else(|| self.specs.iter().find(|s| s.aliases.iter().any(|a| *a == key)))
             .with_context(|| {
                 format!("unknown method {name:?} (registered: {})", self.names().join(", "))
             })
@@ -588,6 +670,7 @@ impl MethodRegistry {
         self.specs.iter().map(|s| s.name.as_str()).collect()
     }
 
+    /// Every registered spec, in registration order.
     pub fn specs(&self) -> &[MethodSpec] {
         &self.specs
     }
@@ -628,6 +711,22 @@ mod tests {
         });
         assert_eq!(reg.names().len(), n);
         assert_eq!(reg.resolve("rtn").unwrap().rotation.name(), "random-orthogonal");
+    }
+
+    #[test]
+    fn display_name_beats_older_alias() {
+        // A custom spec whose *name* collides with a builtin's *alias*
+        // must win resolution for that key (names beat aliases).
+        let mut reg = MethodRegistry::builtin();
+        reg.register(MethodSpec {
+            name: "Dart".into(), // collides with DartQuant's "dart" alias
+            aliases: vec![],
+            rotation: Arc::new(RandomOrthogonal),
+            quantizer: None,
+            smooth: false,
+        });
+        assert_eq!(reg.resolve("dart").unwrap().rotation.name(), "random-orthogonal");
+        assert_eq!(reg.resolve("dartquant").unwrap().name, "DartQuant");
     }
 
     #[test]

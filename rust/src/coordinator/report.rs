@@ -24,8 +24,10 @@ pub enum Stage {
 }
 
 impl Stage {
+    /// All four stages in execution order.
     pub const ALL: [Stage; 4] = [Stage::Capture, Stage::Calibrate, Stage::Fuse, Stage::Quantize];
 
+    /// Lowercase stage name as printed by the CLI and benches.
     pub fn name(&self) -> &'static str {
         match self {
             Stage::Capture => "capture",
@@ -38,35 +40,68 @@ impl Stage {
 
 /// Typed progress events emitted during a pipeline run.
 ///
-/// Stage events arrive strictly in stage order; `JobAdmitted`/`LossTick`
-/// arrive between a stage's started/finished pair (gate admissions in
-/// worker-completion order when calibration jobs run on the pool).
+/// Stage events arrive strictly in stage order. Job events
+/// (`JobStarted`/`JobAdmitted`/`LossTick`/`JobFinished`) arrive between
+/// their stage's started/finished pair; when jobs run on the parallel
+/// scheduler ([`super::Scheduler`]) they are buffered per job and
+/// delivered in **job-id order** after the join, so the stream is
+/// identical at any worker count (the ordered-delivery half of the
+/// determinism contract — see `docs/CONCURRENCY.md`).
 #[derive(Clone, Debug)]
 pub enum PipelineEvent {
+    /// A pipeline stage began.
     StageStarted {
+        /// Which stage.
         stage: Stage,
     },
+    /// A pipeline stage completed.
     StageFinished {
+        /// Which stage.
         stage: Stage,
+        /// Stage wall-clock time.
         elapsed: Duration,
+    },
+    /// A scheduler job began (before memory-gate admission).
+    JobStarted {
+        /// Job id: 0 = R1 (or the single end-to-end job); `l + 1` =
+        /// layer `l`'s R2 job. Quantizer jobs number their own space.
+        job: usize,
+        /// The job's human-readable label (`"r1"`, `"r2[3]"`, …).
+        label: String,
     },
     /// A calibration job was admitted by the memory gate.
     JobAdmitted {
         /// 0 = R1 (or the single end-to-end job); `l + 1` = layer `l`'s R2.
         job: usize,
+        /// The bytes the gate charged for this job.
         bytes: u64,
     },
     /// One optimizer step of one calibration job.
     LossTick {
+        /// The job the step belongs to.
         job: usize,
+        /// Step index within the job's optimization loop.
         step: usize,
+        /// The objective value after this step.
         loss: f32,
+    },
+    /// A scheduler job finished (successfully or not).
+    JobFinished {
+        /// The job that finished.
+        job: usize,
+        /// Wall clock from `JobStarted`, gate wait included.
+        elapsed: Duration,
+        /// Whether the job returned `Ok`.
+        ok: bool,
     },
 }
 
 /// Observer hook for [`PipelineEvent`]s. Implementations must be
 /// `Send + Sync`: calibration jobs emit from worker threads.
 pub trait PipelineObserver: Send + Sync {
+    /// Receive one event. Called synchronously from the pipeline thread
+    /// (scheduler-job events are buffered and replayed there too), so
+    /// implementations should return quickly.
     fn on_event(&self, event: &PipelineEvent);
 }
 
@@ -84,22 +119,40 @@ pub struct CollectingObserver {
 }
 
 impl CollectingObserver {
+    /// A fresh observer behind the `Arc` the builder wants.
     pub fn new() -> Arc<CollectingObserver> {
         Arc::new(CollectingObserver::default())
     }
 
+    /// Snapshot of every event received so far, in arrival order.
     pub fn events(&self) -> Vec<PipelineEvent> {
         self.events.lock().unwrap().clone()
     }
 
     /// The stage event sequence as `(stage, finished)` pairs, in arrival
-    /// order (loss ticks and admissions filtered out).
+    /// order (loss ticks and job events filtered out).
     pub fn stage_sequence(&self) -> Vec<(Stage, bool)> {
         self.events()
             .iter()
             .filter_map(|e| match e {
                 PipelineEvent::StageStarted { stage } => Some((*stage, false)),
                 PipelineEvent::StageFinished { stage, .. } => Some((*stage, true)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The scheduler-job event sequence as `(job, finished)` pairs, in
+    /// arrival order (`JobStarted` → `(id, false)`, `JobFinished` →
+    /// `(id, true)`; admissions and loss ticks filtered out). Under the
+    /// ordered-delivery contract this sequence is identical at any
+    /// worker count.
+    pub fn job_sequence(&self) -> Vec<(usize, bool)> {
+        self.events()
+            .iter()
+            .filter_map(|e| match e {
+                PipelineEvent::JobStarted { job, .. } => Some((*job, false)),
+                PipelineEvent::JobFinished { job, .. } => Some((*job, true)),
                 _ => None,
             })
             .collect()
@@ -126,10 +179,15 @@ impl PipelineObserver for PrintObserver {
 /// Timing + memory accounting of one pipeline run (Table 3 / Fig 1 data).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PipelineStats {
+    /// Wall clock of the capture stage.
     pub capture_time: Duration,
+    /// Wall clock of the calibrate stage (all scheduler jobs joined).
     pub calibrate_time: Duration,
+    /// Wall clock of the fuse/smooth stage.
     pub fuse_time: Duration,
+    /// Wall clock of the weight-quantization stage.
     pub quantize_time: Duration,
+    /// Wall clock of the whole pipeline.
     pub total_time: Duration,
     /// Peak job-resident bytes admitted by the memory gate.
     pub peak_job_bytes: u64,
@@ -148,6 +206,25 @@ fn json_dur(j: &Json, key: &str) -> Result<Duration> {
 }
 
 impl PipelineStats {
+    /// The run-invariant subset of the stats: wall-clock timings and the
+    /// scheduling-dependent `peak_job_bytes` zeroed; the deterministic
+    /// fields (loss curves) kept. Under the scheduler's determinism
+    /// contract two runs of the same configuration serialize identically
+    /// here at **any** worker count — the byte-identity the scheduler
+    /// tests and `pipeline --json --canonical` rely on.
+    pub fn canonical(&self) -> PipelineStats {
+        PipelineStats {
+            capture_time: Duration::ZERO,
+            calibrate_time: Duration::ZERO,
+            fuse_time: Duration::ZERO,
+            quantize_time: Duration::ZERO,
+            total_time: Duration::ZERO,
+            peak_job_bytes: 0,
+            loss_curves: self.loss_curves.clone(),
+        }
+    }
+
+    /// Serialize to the `util::json` tree (nanosecond-integer durations).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("capture_ns", dur_json(self.capture_time)),
@@ -168,6 +245,7 @@ impl PipelineStats {
         ])
     }
 
+    /// Parse the [`PipelineStats::to_json`] representation back.
     pub fn from_json(j: &Json) -> Result<PipelineStats> {
         let curves = j
             .get("loss_curves")
@@ -196,8 +274,12 @@ impl PipelineStats {
 /// `fwdq_*` artifacts, plus the rotation set actually applied and the run
 /// accounting. `record()` strips the weights for machine-readable output.
 pub struct PipelineReport {
+    /// The quantized model (dequantized-f32 representation).
     pub weights: Weights,
+    /// The rotation set that was fused into the weights, if the method
+    /// rotates.
     pub rotation: Option<RotationSet>,
+    /// Timing / memory / loss accounting for the run.
     pub stats: PipelineStats,
     /// Registry name of the method / rotation strategy that ran.
     pub method: String,
@@ -208,6 +290,7 @@ pub struct PipelineReport {
 }
 
 impl PipelineReport {
+    /// The serializable summary row (everything except the weights).
     pub fn record(&self) -> PipelineRecord {
         PipelineRecord {
             method: self.method.clone(),
@@ -228,15 +311,29 @@ impl PipelineReport {
 /// The serializable summary of one pipeline run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PipelineRecord {
+    /// Registry name of the method that ran.
     pub method: String,
+    /// Name of the weight quantizer that ran.
     pub quantizer: String,
+    /// Calibration dialect.
     pub dialect: Dialect,
+    /// Whether a rotation set was produced and fused.
     pub rotated: bool,
+    /// Whether the rotation set enables the online R3/R4 Hadamards.
     pub online_had: bool,
+    /// The run's accounting (see [`PipelineStats`]).
     pub stats: PipelineStats,
 }
 
 impl PipelineRecord {
+    /// The record with [`PipelineStats::canonical`] applied: strips every
+    /// run-varying field so that two runs of the same configuration — at
+    /// any `workers` setting — serialize byte-identically.
+    pub fn canonical(&self) -> PipelineRecord {
+        PipelineRecord { stats: self.stats.canonical(), ..self.clone() }
+    }
+
+    /// Serialize to the `util::json` tree.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("method", Json::Str(self.method.clone())),
@@ -248,6 +345,7 @@ impl PipelineRecord {
         ])
     }
 
+    /// Parse the [`PipelineRecord::to_json`] representation back.
     pub fn from_json(j: &Json) -> Result<PipelineRecord> {
         Ok(PipelineRecord {
             method: j.get_str("method").context("record field \"method\" missing")?.to_string(),
@@ -296,6 +394,51 @@ mod tests {
         let j = rec.to_json().to_string();
         let back = PipelineRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn canonical_strips_run_varying_fields_only() {
+        let rec = PipelineRecord {
+            method: "DartQuant".into(),
+            quantizer: "rtn".into(),
+            dialect: Dialect::Wiki,
+            rotated: true,
+            online_had: true,
+            stats: PipelineStats {
+                capture_time: Duration::from_millis(3),
+                calibrate_time: Duration::from_millis(14),
+                fuse_time: Duration::from_millis(1),
+                quantize_time: Duration::from_millis(5),
+                total_time: Duration::from_millis(23),
+                peak_job_bytes: 999,
+                loss_curves: vec![vec![2.0, 1.0]],
+            },
+        };
+        let canon = rec.canonical();
+        assert_eq!(canon.stats.total_time, Duration::ZERO);
+        assert_eq!(canon.stats.peak_job_bytes, 0);
+        assert_eq!(canon.stats.loss_curves, rec.stats.loss_curves);
+        assert_eq!(canon.method, rec.method);
+        // Canonicalizing twice is a fixpoint and serializes identically.
+        assert_eq!(canon.canonical().to_json().to_string(), canon.to_json().to_string());
+    }
+
+    #[test]
+    fn job_sequence_filters_job_events() {
+        let obs = CollectingObserver::new();
+        obs.on_event(&PipelineEvent::JobStarted { job: 0, label: "r1".into() });
+        obs.on_event(&PipelineEvent::JobAdmitted { job: 0, bytes: 10 });
+        obs.on_event(&PipelineEvent::LossTick { job: 0, step: 0, loss: 1.0 });
+        obs.on_event(&PipelineEvent::JobFinished {
+            job: 0,
+            elapsed: Duration::ZERO,
+            ok: true,
+        });
+        obs.on_event(&PipelineEvent::StageFinished {
+            stage: Stage::Calibrate,
+            elapsed: Duration::ZERO,
+        });
+        assert_eq!(obs.job_sequence(), vec![(0, false), (0, true)]);
     }
 
     #[test]

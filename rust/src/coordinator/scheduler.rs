@@ -1,0 +1,283 @@
+//! Parallel per-layer calibration scheduling.
+//!
+//! DartQuant's headline property is that rotational calibration is
+//! *local*: the R1 problem and every layer's R2/QR-Orth problem are
+//! independent of each other (that locality is what buys the paper's 47×
+//! speedup and 10× memory saving over end-to-end fine-tuning). The
+//! [`Scheduler`] exploits it: a stage decomposes into [`CalibJob`]s, the
+//! scheduler fans them out over `workers` threads
+//! ([`crate::util::threadpool::scoped_try_map`]), and joins the results
+//! in job order.
+//!
+//! Three invariants make parallel runs indistinguishable from serial
+//! ones (the determinism contract, see `docs/CONCURRENCY.md`):
+//!
+//! 1. **Per-job seeding** — every job derives its PRNG seed as
+//!    `base ⊕ id` ([`CalibJob::seed`]), never from shared mutable state,
+//!    so results are bit-identical at any worker count.
+//! 2. **Ordered event delivery** — jobs emit [`PipelineEvent`]s into a
+//!    per-job [`JobSink`]; the scheduler replays all buffered events to
+//!    the observer in job-id order *after* the join, so observers see the
+//!    same stream regardless of completion order.
+//! 3. **Budget admission** — each job's declared bytes are admitted
+//!    against the run's [`MemoryGate`] before it executes, bounding
+//!    in-flight activation state; an over-budget scheduler simply
+//!    degrades to fewer jobs in flight (worst case: serial).
+//!
+//! Failures keep their locus: a job that returns an error (or panics on
+//! a worker) fails the run with the job's id and label in the error
+//! chain, after the surviving jobs have drained.
+
+use super::budget::MemoryGate;
+use super::report::{PipelineEvent, PipelineObserver};
+use crate::util::threadpool::{self, ThreadPool};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// One independent unit of calibrate- or quantize-stage work: an id that
+/// fixes its position in the deterministic ordering, a label for events
+/// and errors, a byte declaration for the memory gate, and a
+/// strategy-specific payload.
+pub struct CalibJob<P> {
+    /// Stable job id. Convention for rotation calibration: `0` is the R1
+    /// (global) job, `l + 1` is layer `l`'s R2 job.
+    pub id: usize,
+    /// Human-readable label used in [`PipelineEvent::JobStarted`] and in
+    /// error contexts (e.g. `"r1"`, `"r2[3]"`, `"omniquant[l2]"`).
+    pub label: String,
+    /// Declared peak resident bytes, admitted against the [`MemoryGate`]
+    /// before the job runs.
+    pub bytes: u64,
+    /// Whatever the runner needs: activation pool + calibration config,
+    /// weight-matrix names, …
+    pub payload: P,
+}
+
+impl<P> CalibJob<P> {
+    /// Build a job.
+    pub fn new(id: usize, label: impl Into<String>, bytes: u64, payload: P) -> CalibJob<P> {
+        CalibJob { id, label: label.into(), bytes, payload }
+    }
+
+    /// Deterministic per-job PRNG seed: `base ⊕ id`. Jobs must draw all
+    /// their randomness from a generator seeded this way (never from
+    /// shared state), which is what makes parallel and serial runs
+    /// bit-identical.
+    pub fn seed(&self, base: u64) -> u64 {
+        base ^ self.id as u64
+    }
+}
+
+/// Buffered event sink handed to a running job. Events accumulate here
+/// (on the worker thread, no locks) and are replayed to the pipeline
+/// observer in job-id order once every job has joined.
+pub struct JobSink {
+    events: Vec<PipelineEvent>,
+}
+
+impl JobSink {
+    fn new() -> JobSink {
+        JobSink { events: Vec::new() }
+    }
+
+    /// Buffer an event for ordered delivery after the join.
+    pub fn emit(&mut self, event: PipelineEvent) {
+        self.events.push(event);
+    }
+}
+
+/// Executes [`CalibJob`]s across worker threads under a memory gate, with
+/// deterministic result and event ordering. Construct one per stage from
+/// the pipeline's worker setting ([`Scheduler::new`]).
+pub struct Scheduler {
+    workers: usize,
+}
+
+impl Scheduler {
+    /// A scheduler with `workers` threads; `0` means the machine's
+    /// available parallelism (the `PipelineConfig::workers` convention).
+    pub fn new(workers: usize) -> Scheduler {
+        let workers = if workers == 0 { ThreadPool::default_parallelism() } else { workers };
+        Scheduler { workers }
+    }
+
+    /// The resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every job, returning their outputs **in job (submission)
+    /// order** regardless of completion order.
+    ///
+    /// Per job, the scheduler: buffers a [`PipelineEvent::JobStarted`],
+    /// blocks until the gate admits `job.bytes` (buffering
+    /// [`PipelineEvent::JobAdmitted`]), invokes `runner(job, sink)`,
+    /// releases the gate lease, and buffers a
+    /// [`PipelineEvent::JobFinished`] with the job's wall clock (gate
+    /// wait included). After all jobs join, buffered events replay to
+    /// `observer` in job order — the ordered-delivery half of the
+    /// determinism contract.
+    ///
+    /// Errors: a job whose `runner` returns `Err` (or whose declared
+    /// bytes exceed the whole budget) fails the run with the job id +
+    /// label in the context chain; when several fail, the earliest in
+    /// submission order wins (= lowest id for the built-in ascending
+    /// decompositions), and events are still delivered first. A job that
+    /// *panics* fails the run the same way but without event delivery
+    /// (the panicking sink's buffer is lost mid-flight).
+    pub fn run<P, T, F>(
+        &self,
+        gate: &MemoryGate,
+        observer: &dyn PipelineObserver,
+        jobs: Vec<CalibJob<P>>,
+        runner: F,
+    ) -> Result<Vec<T>>
+    where
+        P: Sync,
+        T: Send,
+        F: Fn(&CalibJob<P>, &mut JobSink) -> Result<T> + Sync,
+    {
+        let outcomes = threadpool::scoped_try_map(self.workers, &jobs, |_, job| {
+            let mut sink = JobSink::new();
+            let t0 = Instant::now();
+            sink.emit(PipelineEvent::JobStarted { job: job.id, label: job.label.clone() });
+            let result = match gate.admit(job.bytes) {
+                Ok(_lease) => {
+                    sink.emit(PipelineEvent::JobAdmitted { job: job.id, bytes: job.bytes });
+                    runner(job, &mut sink)
+                    // _lease drops here: capacity frees only after the job
+                    // is done with its activation state.
+                }
+                Err(over) => Err(anyhow::Error::new(over)),
+            };
+            sink.emit(PipelineEvent::JobFinished {
+                job: job.id,
+                elapsed: t0.elapsed(),
+                ok: result.is_ok(),
+            });
+            (sink.events, result)
+        })
+        .map_err(|p| {
+            let (id, label) = (jobs[p.index].id, jobs[p.index].label.clone());
+            anyhow::anyhow!("calibration job {id} ({label}) panicked: {}", p.message)
+        })?;
+
+        // Ordered delivery: replay every job's buffered events in job
+        // order, only now that the join is complete.
+        for (events, _) in &outcomes {
+            for e in events {
+                observer.on_event(e);
+            }
+        }
+        let mut out = Vec::with_capacity(outcomes.len());
+        for ((_, result), job) in outcomes.into_iter().zip(&jobs) {
+            let v = result
+                .with_context(|| format!("calibration job {} ({}) failed", job.id, job.label))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::report::{CollectingObserver, NullObserver};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn unit_jobs(n: usize, bytes: u64) -> Vec<CalibJob<()>> {
+        (0..n).map(|i| CalibJob::new(i, format!("j{i}"), bytes, ())).collect()
+    }
+
+    #[test]
+    fn results_arrive_in_job_order() {
+        let gate = MemoryGate::new(None);
+        let sched = Scheduler::new(4);
+        let out = sched
+            .run(&gate, &NullObserver, unit_jobs(16, 1), |job, _| Ok(job.id * 10))
+            .unwrap();
+        assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_workers_means_available_parallelism() {
+        assert_eq!(Scheduler::new(0).workers(), ThreadPool::default_parallelism());
+        assert_eq!(Scheduler::new(3).workers(), 3);
+    }
+
+    #[test]
+    fn events_replay_in_job_order_at_any_worker_count() {
+        let streams: Vec<Vec<(usize, bool)>> = [1usize, 4]
+            .iter()
+            .map(|&w| {
+                let gate = MemoryGate::new(None);
+                let obs = CollectingObserver::new();
+                Scheduler::new(w)
+                    .run(&gate, obs.as_ref(), unit_jobs(8, 1), |job, sink| {
+                        sink.emit(PipelineEvent::LossTick {
+                            job: job.id,
+                            step: 0,
+                            loss: job.id as f32,
+                        });
+                        Ok(())
+                    })
+                    .unwrap();
+                obs.job_sequence()
+            })
+            .collect();
+        let want: Vec<(usize, bool)> = (0..8).flat_map(|i| [(i, false), (i, true)]).collect();
+        assert_eq!(streams[0], want);
+        assert_eq!(streams[1], want, "parallel delivery must match serial");
+    }
+
+    #[test]
+    fn per_job_seed_mixes_id() {
+        let j = CalibJob::new(5, "x", 0, ());
+        assert_eq!(j.seed(0xff), 0xff ^ 5);
+        assert_eq!(CalibJob::new(0, "r1", 0, ()).seed(42), 42);
+    }
+
+    #[test]
+    fn gate_bounds_jobs_in_flight() {
+        // Budget fits exactly one job: concurrency must collapse to 1.
+        let gate = MemoryGate::new(Some(100));
+        let in_flight = AtomicUsize::new(0);
+        let max_seen = AtomicUsize::new(0);
+        Scheduler::new(4)
+            .run(&gate, &NullObserver, unit_jobs(12, 60), |_, _| {
+                let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                max_seen.fetch_max(now, Ordering::SeqCst);
+                std::thread::yield_now();
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(max_seen.load(Ordering::SeqCst), 1, "gate leaked concurrency");
+        assert!(gate.peak_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_job_fails_with_label() {
+        let gate = MemoryGate::new(Some(100));
+        let err = Scheduler::new(2)
+            .run(&gate, &NullObserver, unit_jobs(3, 101), |_, _| Ok(()))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job 0 (j0) failed"), "got: {msg}");
+        assert!(msg.contains("memory budget"), "got: {msg}");
+    }
+
+    #[test]
+    fn lowest_failing_job_wins() {
+        let gate = MemoryGate::new(None);
+        let err = Scheduler::new(4)
+            .run(&gate, &NullObserver, unit_jobs(8, 1), |job, _| {
+                if job.id >= 3 {
+                    anyhow::bail!("sabotaged {}", job.id);
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("job 3 (j3)"), "got: {err:#}");
+    }
+}

@@ -33,6 +33,65 @@ use std::time::Instant;
 pub struct Pipeline;
 
 impl Pipeline {
+    /// Start building a pipeline run over `weights`.
+    ///
+    /// The builder composes a method (by registry name or explicit
+    /// strategy/quantizer), bit setting, memory budget, worker count and
+    /// observer, then executes via [`PipelineBuilder::run`] (PJRT) or
+    /// [`PipelineBuilder::run_native`]. Out-of-tree strategies register a
+    /// [`MethodSpec`] and run through the same stages — no coordinator
+    /// edits:
+    ///
+    /// ```no_run
+    /// use dartquant::coordinator::{
+    ///     CalibrationPools, MethodRegistry, MethodSpec, Pipeline, RotationOutcome,
+    ///     RotationStrategy, RtnQuantizer, StageContext,
+    /// };
+    /// use dartquant::model::{BitSetting, ModelConfig, Weights};
+    /// use dartquant::rotation::RotationSet;
+    /// use std::sync::Arc;
+    ///
+    /// /// An out-of-tree strategy: identity rotations.
+    /// struct NullRotation;
+    ///
+    /// impl RotationStrategy for NullRotation {
+    ///     fn name(&self) -> &str {
+    ///         "null-rotation"
+    ///     }
+    ///     fn calibrate(
+    ///         &self,
+    ///         ctx: &StageContext,
+    ///         _pools: Option<&CalibrationPools>,
+    ///     ) -> anyhow::Result<RotationOutcome> {
+    ///         let cfg = &ctx.weights.cfg;
+    ///         Ok(RotationOutcome::some(RotationSet::identity(
+    ///             cfg.dim,
+    ///             cfg.head_dim,
+    ///             cfg.n_layers,
+    ///         )))
+    ///     }
+    /// }
+    ///
+    /// fn main() -> anyhow::Result<()> {
+    ///     let cfg = ModelConfig::builtin("llama2-tiny")?;
+    ///     let weights = Weights::default_synthetic(&cfg, 1);
+    ///     let mut registry = MethodRegistry::builtin();
+    ///     registry.register(MethodSpec {
+    ///         name: "NullQuant".into(),
+    ///         aliases: vec!["null".into()],
+    ///         rotation: Arc::new(NullRotation),
+    ///         quantizer: Some(Arc::new(RtnQuantizer)),
+    ///         smooth: false,
+    ///     });
+    ///     let report = Pipeline::builder(&weights)
+    ///         .method_in(&registry, "null")?
+    ///         .bits(BitSetting::W4A4)
+    ///         .workers(4) // per-layer calibration jobs fan out on 4 threads
+    ///         .run_native()?;
+    ///     assert_eq!(report.method, "NullQuant");
+    ///     Ok(())
+    /// }
+    /// ```
     pub fn builder(weights: &Weights) -> PipelineBuilder<'_> {
         PipelineBuilder {
             weights,
@@ -90,6 +149,7 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// Plug a weight quantizer in directly (no registry entry needed).
     pub fn quantizer(mut self, quantizer: Arc<dyn WeightQuantizer>) -> PipelineBuilder<'w> {
         self.quantizer = Some(quantizer);
         self
@@ -101,6 +161,7 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// The W-A-KV bit setting the pipeline quantizes to.
     pub fn bits(mut self, bits: BitSetting) -> PipelineBuilder<'w> {
         self.cfg.bits = bits;
         self
@@ -112,6 +173,16 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// Worker threads for the per-layer calibration scheduler
+    /// (`0` = the machine's available parallelism). The determinism
+    /// contract guarantees bit-identical reports at any setting; see
+    /// `docs/CONCURRENCY.md`.
+    pub fn workers(mut self, n: usize) -> PipelineBuilder<'w> {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Receive typed [`PipelineEvent`]s during the run (default: none).
     pub fn observer(mut self, observer: Arc<dyn PipelineObserver>) -> PipelineBuilder<'w> {
         self.observer = observer;
         self

@@ -37,6 +37,7 @@
 //!     .method("dartquant")?
 //!     .bits(BitSetting::W4A4)
 //!     .budget(Some(24 << 20)) // scaled single-3090 admission gate
+//!     .workers(8)             // per-layer calibration jobs in parallel
 //!     .run(&rt)?;             // or .run_native() without artifacts
 //! println!("{}", report.to_json());
 //! # Ok(()) }
@@ -48,10 +49,15 @@
 //! progress/reporting surface the CLI, examples and benches consume.
 //! [`coordinator::PipelineReport`] serializes to JSON via [`util::json`].
 //!
+//! The calibrate stage decomposes into independent per-layer jobs run by
+//! the parallel [`coordinator::Scheduler`]; per-job seeding and ordered
+//! event delivery make parallel runs bit-identical to serial ones (the
+//! determinism contract — `docs/CONCURRENCY.md`).
+//!
 //! The legacy `Method` enum and `run_pipeline` survive as thin shims over
 //! the registry and builder.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! See `README.md` for the architecture map and verify entry points.
 
 pub mod linalg;
 pub mod calib;

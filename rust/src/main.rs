@@ -172,7 +172,7 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         .flag_default("dialect", "wiki", "calibration dialect")
         .flag_default("sequences", "32", "calibration sequences")
         .flag_default("steps", "60", "calibration steps")
-        .flag_default("workers", "4", "calibration worker threads")
+        .flag_default("workers", "0", "calibration worker threads (0 = all cores)")
         .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("out", "write the quantized checkpoint here")
         .flag("checkpoint", "load base weights from a checkpoint")
@@ -263,26 +263,31 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         .flag_default("dialect", "wiki", "calibration dialect")
         .flag_default("sequences", "32", "calibration sequences")
         .flag_default("steps", "60", "calibration steps")
-        .flag_default("workers", "4", "worker threads")
+        .flag_default("workers", "0", "scheduler worker threads (0 = all cores)")
         .flag_default("items", "8", "zero-shot items per task")
         .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("checkpoint", "base weights checkpoint")
         .flag("budget-bytes", "memory budget")
         .switch("budget-3090", "scaled 3090 budget")
-        .switch("json", "print a machine-readable PipelineReport row");
+        .switch("json", "print a machine-readable PipelineReport row")
+        .switch("canonical", "print the run-invariant report row (implies --json): timings and peak bytes stripped, byte-identical at any --workers");
     let a = cmd.parse(argv)?;
     let (_cfg, weights, _corpus) = load_model(&a)?;
     let rt = Runtime::open(Runtime::default_dir())?;
     let pcfg = pipeline_config(&a)?;
     let bits = pcfg.bits;
-    let json = a.get_bool("json");
+    let json = a.get_bool("json") || a.get_bool("canonical");
     let mut builder = Pipeline::builder(&weights).config(pcfg);
     if !json {
         builder = builder.observer(Arc::new(PrintObserver));
     }
     let report = builder.run(&rt)?;
     if json {
-        println!("{}", report.to_json());
+        if a.get_bool("canonical") {
+            println!("{}", report.record().canonical().to_json());
+        } else {
+            println!("{}", report.to_json());
+        }
         return Ok(());
     }
     let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);

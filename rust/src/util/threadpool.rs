@@ -1,41 +1,96 @@
-//! Fixed-size thread pool (tokio is not in the offline vendor set; the
-//! coordinator's concurrency needs — fan out independent per-layer
-//! calibration jobs, join results — map cleanly onto OS threads).
+//! Worker-thread primitives for the coordinator's fan-out/join needs
+//! (tokio is not in the offline vendor set; independent per-layer
+//! calibration jobs map cleanly onto OS threads).
+//!
+//! Two flavors:
+//!
+//! * [`ThreadPool`] — a persistent, shared-queue pool for `'static` jobs
+//!   (fire-and-forget [`ThreadPool::execute`], ordered
+//!   [`ThreadPool::map`] / [`ThreadPool::try_map`]).
+//! * [`scoped_try_map`] — a scoped fan-out/join that borrows from the
+//!   caller's stack, used by the calibration scheduler
+//!   (`coordinator::scheduler`) so activation pools never need cloning
+//!   into `'static` closures.
+//!
+//! Both surfaces convert job panics into [`JobPanic`] errors instead of
+//! killing workers: a dead worker would strand queued jobs and deadlock
+//! the join, and `resume_unwind` across the pool boundary loses which job
+//! failed.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A work-stealing-free, shared-queue thread pool.
+/// Error describing a job that panicked on a worker thread. `index` is
+/// the job's position in the submitted item list (the first panicking
+/// index when several jobs panic).
+#[derive(Debug, thiserror::Error)]
+#[error("job {index} panicked: {message}")]
+pub struct JobPanic {
+    /// Item index (submission order) of the panicking job.
+    pub index: usize,
+    /// Rendered panic payload (`&str`/`String` payloads; a placeholder
+    /// otherwise).
+    pub message: String,
+}
+
+/// Render a `catch_unwind` payload to a human-readable string.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// A work-stealing-free, shared-queue thread pool for `'static` jobs.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    panics: Arc<Mutex<Vec<String>>>,
 }
 
 impl ThreadPool {
-    /// Spawn `n` workers (clamped to ≥1).
+    /// Spawn `n` workers (clamped to ≥1). Spawn failures degrade the pool
+    /// instead of panicking: whatever workers did spawn carry the load,
+    /// and if none did, jobs run inline on the submitting thread.
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(Mutex::new(Vec::new()));
         let workers = (0..n)
-            .map(|i| {
+            .filter_map(|i| {
                 let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
                 std::thread::Builder::new()
                     .name(format!("dartquant-worker-{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker:
+                            // queued jobs would strand and `map`'s join
+                            // would deadlock waiting for their results.
+                            Ok(job) => {
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if let Err(p) = r {
+                                    panics.lock().unwrap().push(panic_message(p.as_ref()));
+                                }
+                            }
                             Err(_) => break, // sender dropped => shutdown
                         }
                     })
-                    .expect("spawn worker")
+                    .ok()
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(tx), workers, panics }
     }
 
     /// Number of logical CPUs (fallback 4).
@@ -43,14 +98,33 @@ impl ThreadPool {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
 
-    /// Submit a fire-and-forget job.
+    /// Submit a fire-and-forget job. Panics inside the job are recorded
+    /// (see [`ThreadPool::drain_panics`]) rather than killing a worker.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        if self.workers.is_empty() {
+            // Every spawn failed (thread exhaustion): run inline so jobs
+            // are never silently dropped.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            if let Err(p) = r {
+                self.panics.lock().unwrap().push(panic_message(p.as_ref()));
+            }
+            return;
+        }
         self.tx.as_ref().expect("pool alive").send(Box::new(f)).expect("worker alive");
     }
 
-    /// Map `f` over `items` on the pool, preserving order. Blocks until all
-    /// results are in. Panics in jobs are converted into a panic here.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    /// Panic messages from `execute` jobs recorded since the last drain.
+    /// (`map`/`try_map` report their jobs' panics through their return
+    /// value instead.)
+    pub fn drain_panics(&self) -> Vec<String> {
+        std::mem::take(&mut *self.panics.lock().unwrap())
+    }
+
+    /// Map `f` over `items` on the pool, preserving item order, joining
+    /// all results. A panicking job surfaces as `Err(JobPanic)` for the
+    /// lowest panicking item index; the remaining jobs still run to
+    /// completion (their results are discarded on error).
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>, JobPanic>
     where
         T: Send + 'static,
         R: Send + 'static,
@@ -69,14 +143,37 @@ impl ThreadPool {
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<JobPanic> = None;
         for _ in 0..n {
             let (i, r) = rrx.recv().expect("all jobs report");
             match r {
                 Ok(v) => out[i] = Some(v),
-                Err(p) => std::panic::resume_unwind(p),
+                Err(p) => {
+                    if first_panic.as_ref().map(|fp| i < fp.index).unwrap_or(true) {
+                        first_panic =
+                            Some(JobPanic { index: i, message: panic_message(p.as_ref()) });
+                    }
+                }
             }
         }
-        out.into_iter().map(|o| o.expect("filled")).collect()
+        match first_panic {
+            Some(p) => Err(p),
+            None => Ok(out.into_iter().map(|o| o.expect("filled")).collect()),
+        }
+    }
+
+    /// [`ThreadPool::try_map`] with the historical panicking surface:
+    /// a job panic re-panics on the caller with the job index attached.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        match self.try_map(items, f) {
+            Ok(v) => v,
+            Err(p) => panic!("{p}"),
+        }
     }
 }
 
@@ -86,6 +183,64 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Scoped fan-out/join: run `f(i, &items[i])` for every item on up to
+/// `threads` scoped worker threads, borrowing `items` from the caller's
+/// stack (no `'static` bound, no cloning), and join all results in item
+/// order.
+///
+/// Workers pull items from a shared queue, so long jobs don't starve a
+/// fixed partition. The calling thread works too: even if every worker
+/// spawn fails, all items still run. Panics are caught per item — every
+/// remaining item still runs — and the lowest panicking index is
+/// surfaced as `Err(JobPanic)`, independent of completion order.
+pub fn scoped_try_map<T, R, F>(threads: usize, items: &[T], f: F) -> Result<Vec<R>, JobPanic>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<std::thread::Result<R>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        let work = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &items[i])));
+            *results[i].lock().unwrap() = Some(r);
+        };
+        for t in 1..threads {
+            let _ = std::thread::Builder::new()
+                .name(format!("dartquant-scoped-{t}"))
+                .spawn_scoped(s, work);
+        }
+        work();
+    });
+    let mut out = Vec::with_capacity(n);
+    let mut first_panic: Option<JobPanic> = None;
+    for (i, cell) in results.into_iter().enumerate() {
+        match cell.into_inner().unwrap().expect("every item ran") {
+            Ok(v) => out.push(v),
+            Err(p) => {
+                if first_panic.is_none() {
+                    first_panic = Some(JobPanic { index: i, message: panic_message(p.as_ref()) });
+                }
+            }
+        }
+    }
+    match first_panic {
+        Some(p) => Err(p),
+        None => Ok(out),
     }
 }
 
@@ -163,5 +318,66 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn try_map_surfaces_panic_as_error_with_index() {
+        let pool = ThreadPool::new(4);
+        let err = pool
+            .try_map((0..16).collect::<Vec<_>>(), |x| {
+                if x == 5 || x == 11 {
+                    panic!("job {x} exploded");
+                }
+                x * 2
+            })
+            .unwrap_err();
+        // Lowest panicking index wins, independent of completion order.
+        assert_eq!(err.index, 5);
+        assert!(err.message.contains("exploded"), "got: {}", err.message);
+        // The pool is still fully usable afterwards.
+        assert_eq!(pool.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn workers_survive_execute_panics() {
+        let pool = ThreadPool::new(1); // single worker: a dead worker would deadlock
+        pool.execute(|| panic!("fire-and-forget boom"));
+        // The same (sole) worker must still process subsequent jobs.
+        let out = pool.map((0..8).collect::<Vec<_>>(), |x| x + 1);
+        assert_eq!(out, (1..9).collect::<Vec<_>>());
+        let panics = pool.drain_panics();
+        assert_eq!(panics.len(), 1);
+        assert!(panics[0].contains("fire-and-forget"));
+        assert!(pool.drain_panics().is_empty());
+    }
+
+    #[test]
+    fn scoped_try_map_borrows_and_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = scoped_try_map(5, &items, |i, &x| {
+            assert_eq!(i, x);
+            x * 3
+        })
+        .unwrap();
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+        assert!(scoped_try_map(3, &[] as &[usize], |_, &x| x).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scoped_try_map_reports_lowest_panicking_index() {
+        let items: Vec<usize> = (0..32).collect();
+        let ran = AtomicUsize::new(0);
+        let err = scoped_try_map(4, &items, |_, &x| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            if x % 10 == 7 {
+                panic!("bad item {x}");
+            }
+            x
+        })
+        .unwrap_err();
+        assert_eq!(err.index, 7);
+        assert!(err.message.contains("bad item 7"), "got: {}", err.message);
+        // Every item still ran — no early abort, no stranded work.
+        assert_eq!(ran.load(Ordering::SeqCst), 32);
     }
 }

@@ -1,0 +1,280 @@
+//! Scheduler integration tests — the determinism contract end-to-end,
+//! without artifacts:
+//!
+//! * workers=1 and workers=4 produce byte-identical canonical report
+//!   JSON, identical weights/rotations, and identical event streams
+//!   (ordered delivery + per-job seeding),
+//! * a panicking job fails the run with the job's id and label in the
+//!   error chain instead of deadlocking the join,
+//! * the memory budget bounds jobs in flight at any worker count.
+//!
+//! A scheduler-driven out-of-tree strategy stands in for DartQuant's
+//! artifact-backed jobs (`DartCalibrated` shares the same `Scheduler`
+//! path); the OmniQuant method exercises the quantize-stage fan-out.
+
+use dartquant::coordinator::{
+    CalibJob, CalibrationPools, CollectingObserver, MethodRegistry, MethodSpec, Pipeline,
+    PipelineEvent, PipelineReport, RotationOutcome, RotationStrategy, RtnQuantizer, Scheduler,
+    StageContext,
+};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::linalg;
+use dartquant::model::{BitSetting, ModelConfig, Weights};
+use dartquant::rotation::RotationSet;
+use dartquant::util::prng::Pcg64;
+use std::sync::Arc;
+
+fn tiny() -> Weights {
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    Weights::default_grammar(&cfg, 1, corpus.successor())
+}
+
+/// Render an event stream without its run-varying fields (durations), so
+/// serial and parallel streams can be compared exactly.
+fn summarize(events: &[PipelineEvent]) -> Vec<String> {
+    events
+        .iter()
+        .map(|e| match e {
+            PipelineEvent::StageStarted { stage } => format!("stage+{}", stage.name()),
+            PipelineEvent::StageFinished { stage, .. } => format!("stage-{}", stage.name()),
+            PipelineEvent::JobStarted { job, label } => format!("job+{job}:{label}"),
+            PipelineEvent::JobAdmitted { job, bytes } => format!("admit:{job}:{bytes}"),
+            PipelineEvent::LossTick { job, step, loss } => format!("loss:{job}:{step}:{loss}"),
+            PipelineEvent::JobFinished { job, ok, .. } => format!("job-{job}:{ok}"),
+        })
+        .collect()
+}
+
+/// A scheduler-driven rotation strategy: R1 (job 0) + one R2 job per
+/// layer (job l + 1), each drawing randomness only from its per-job seed
+/// — the same decomposition `DartCalibrated` uses for its artifact jobs,
+/// runnable without artifacts.
+struct ShardedHadamard {
+    job_bytes: u64,
+}
+
+impl RotationStrategy for ShardedHadamard {
+    fn name(&self) -> &str {
+        "sharded-hadamard"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> anyhow::Result<RotationOutcome> {
+        let cfg = ctx.weights.cfg.clone();
+        let base_seed = ctx.cfg.seed;
+        let jobs: Vec<CalibJob<usize>> = (0..cfg.n_layers + 1)
+            .map(|id| {
+                let label =
+                    if id == 0 { "r1".to_string() } else { format!("r2[{}]", id - 1) };
+                let dim = if id == 0 { cfg.dim } else { cfg.head_dim };
+                CalibJob::new(id, label, self.job_bytes, dim)
+            })
+            .collect();
+        let results = Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, sink| {
+                let mut rng = Pcg64::new(job.seed(base_seed));
+                let rot = linalg::randomized_hadamard(job.payload, &mut rng);
+                for step in 0..3 {
+                    sink.emit(PipelineEvent::LossTick {
+                        job: job.id,
+                        step,
+                        loss: ((job.id + 1) * (step + 1)) as f32,
+                    });
+                }
+                Ok(rot)
+            },
+        )?;
+        let mut results = results.into_iter();
+        let r1 = results.next().expect("scheduler returns R1 first");
+        let loss_curves = (0..cfg.n_layers + 1)
+            .map(|id| (1..=3).map(|s| ((id + 1) * s) as f32).collect())
+            .collect();
+        Ok(RotationOutcome {
+            rotation: Some(RotationSet { r1, r2: results.collect(), online_had: true }),
+            loss_curves,
+        })
+    }
+}
+
+fn sharded_registry(job_bytes: u64) -> MethodRegistry {
+    let mut reg = MethodRegistry::builtin();
+    reg.register(MethodSpec {
+        name: "ShardedQuant".into(),
+        aliases: vec!["sharded".into()],
+        rotation: Arc::new(ShardedHadamard { job_bytes }),
+        quantizer: Some(Arc::new(RtnQuantizer)),
+        smooth: false,
+    });
+    reg
+}
+
+fn run_sharded(w: &Weights, workers: usize, budget: Option<u64>) -> (PipelineReport, Vec<String>) {
+    let obs = CollectingObserver::new();
+    let report = Pipeline::builder(w)
+        .method_in(&sharded_registry(1000), "sharded")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .budget(budget)
+        .workers(workers)
+        .observer(obs.clone())
+        .run_native()
+        .unwrap();
+    (report, summarize(&obs.events()))
+}
+
+fn assert_same_weights(a: &Weights, b: &Weights) {
+    for n in a.names() {
+        assert_eq!(a.get(n).data, b.get(n).data, "weight {n} diverged");
+    }
+}
+
+#[test]
+fn reports_are_byte_identical_across_worker_counts() {
+    let w = tiny();
+    let (serial, serial_events) = run_sharded(&w, 1, None);
+    let (parallel, parallel_events) = run_sharded(&w, 4, None);
+
+    // Byte-identical canonical report JSON (loss curves included).
+    assert_eq!(
+        serial.record().canonical().to_json().to_string(),
+        parallel.record().canonical().to_json().to_string()
+    );
+    assert!(!serial.stats.loss_curves.is_empty());
+
+    // Bit-identical rotations and quantized weights.
+    let (ra, rb) = (serial.rotation.as_ref().unwrap(), parallel.rotation.as_ref().unwrap());
+    assert_eq!(ra.r1.data, rb.r1.data);
+    assert_eq!(ra.r2.len(), rb.r2.len());
+    for (a, b) in ra.r2.iter().zip(&rb.r2) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_same_weights(&serial.weights, &parallel.weights);
+
+    // Identical event streams: ordered delivery makes worker count
+    // unobservable (modulo durations, stripped by summarize()).
+    assert_eq!(serial_events, parallel_events);
+}
+
+#[test]
+fn events_arrive_in_job_order_even_when_parallel() {
+    let w = tiny();
+    let n_layers = w.cfg.n_layers;
+    let obs = CollectingObserver::new();
+    Pipeline::builder(&w)
+        .method_in(&sharded_registry(1000), "sharded")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .workers(4)
+        .observer(obs.clone())
+        .run_native()
+        .unwrap();
+    let want: Vec<(usize, bool)> =
+        (0..n_layers + 1).flat_map(|id| [(id, false), (id, true)]).collect();
+    assert_eq!(obs.job_sequence(), want);
+}
+
+#[test]
+fn omniquant_quantize_stage_is_deterministic_across_worker_counts() {
+    let w = tiny();
+    let run = |workers: usize| {
+        Pipeline::builder(&w)
+            .method("omniquant")
+            .unwrap()
+            .bits(BitSetting::W4A4)
+            .workers(workers)
+            .run_native()
+            .unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.quantizer, "omniquant");
+    assert_eq!(
+        serial.record().canonical().to_json().to_string(),
+        parallel.record().canonical().to_json().to_string()
+    );
+    assert_same_weights(&serial.weights, &parallel.weights);
+    // The parallel run actually quantized something.
+    assert_ne!(parallel.weights.get("l0.wq").data, w.get("l0.wq").data);
+}
+
+/// A strategy whose third scheduler job panics.
+struct Sabotaged;
+
+impl RotationStrategy for Sabotaged {
+    fn name(&self) -> &str {
+        "sabotaged"
+    }
+
+    fn calibrate(
+        &self,
+        ctx: &StageContext,
+        _pools: Option<&CalibrationPools>,
+    ) -> anyhow::Result<RotationOutcome> {
+        let jobs: Vec<CalibJob<()>> =
+            (0..4).map(|id| CalibJob::new(id, format!("r2[{id}]"), 0, ())).collect();
+        Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, _sink| {
+                if job.id == 2 {
+                    panic!("sabotaged optimizer step");
+                }
+                Ok(())
+            },
+        )?;
+        Ok(RotationOutcome::none())
+    }
+}
+
+#[test]
+fn panicking_job_fails_the_run_with_context() {
+    let w = tiny();
+    let mut reg = MethodRegistry::builtin();
+    reg.register(MethodSpec {
+        name: "Sabotaged".into(),
+        aliases: vec![],
+        rotation: Arc::new(Sabotaged),
+        quantizer: Some(Arc::new(RtnQuantizer)),
+        smooth: false,
+    });
+    let err = Pipeline::builder(&w)
+        .method_in(&reg, "sabotaged")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .workers(4)
+        .run_native()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("job 2 (r2[2])"), "error must name the job, got: {msg}");
+    assert!(msg.contains("sabotaged optimizer step"), "error must carry the panic, got: {msg}");
+}
+
+#[test]
+fn budget_bounds_jobs_in_flight_at_any_worker_count() {
+    let w = tiny();
+    // Budget fits one 1000-byte job but never two: with 4 workers the
+    // gate must serialize admissions, and peak accounting must agree.
+    let (report, _) = run_sharded(&w, 4, Some(1500));
+    assert_eq!(report.stats.peak_job_bytes, 1000);
+
+    // A job bigger than the whole budget is rejected with its label.
+    let err = Pipeline::builder(&w)
+        .method_in(&sharded_registry(99_999), "sharded")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .budget(Some(1500))
+        .workers(4)
+        .run_native()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("(r1)") || msg.contains("(r2["), "got: {msg}");
+    assert!(msg.contains("memory budget"), "got: {msg}");
+}
