@@ -2,11 +2,13 @@
 #
 #   make artifacts   AOT-lower the JAX/Pallas graphs to artifacts/ (the one
 #                    python step; everything after runs from rust)
-#   make check       tier-1 verify: release build + tests + doc + fmt check
+#   make check       tier-1 verify: release build + tests + clippy + doc +
+#                    fmt check
+#   make clippy      cargo clippy over every target (warnings are errors)
 #   make doc         rustdoc the public API (warnings are errors)
 #   make bench       run the paper-table bench binaries (needs artifacts)
 
-.PHONY: artifacts check test fmt doc bench
+.PHONY: artifacts check test fmt clippy doc bench
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -19,6 +21,9 @@ test:
 
 fmt:
 	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

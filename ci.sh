@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (also `make check`):
-#   release build, quiet tests, rustdoc (warnings as errors), formatting.
+#   release build, quiet tests, clippy (warnings as errors), rustdoc
+#   (warnings as errors), formatting.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo fmt --check

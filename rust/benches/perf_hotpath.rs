@@ -6,6 +6,9 @@
 //!   * one Cayley step per dim (the 4/3·n³ vs 6n³ story),
 //!   * eval forward throughput (tokens/s) via fwd artifact vs native rust,
 //!   * native matmul GFLOP/s (the capture/GPTQ substrate),
+//!   * f32 vs packed-i8/i4 `matmul_transb` (the quantized linear path:
+//!     GFLOP/s and true weight bytes; honors `DQ_WORKERS` like the
+//!     pipeline benches),
 //!   * capture artifact throughput.
 
 #[path = "common.rs"]
@@ -14,7 +17,10 @@ mod common;
 use dartquant::calib::{sample_tokens, CALIB_TOKENS};
 use dartquant::model::{TokenBatch, Weights};
 use dartquant::runtime::Value;
-use dartquant::tensor::{matmul, Mat};
+use dartquant::tensor::{
+    matmul, matmul_transb_deq_with, matmul_transb_q_with, matmul_transb_with, Mat, QMat,
+    QuantSpec,
+};
 use dartquant::util::bench::{fnum, time, Table};
 use dartquant::util::prng::Pcg64;
 
@@ -99,6 +105,53 @@ fn main() {
         ]);
     }
 
+    // --- packed weight matmul: f32 vs i8 vs i4 ---------------------------
+    // DQ_WORKERS pins the thread count of every row (0 = the kernels'
+    // flops-based default), mirroring the pipeline benches.
+    let threads = common::workers();
+    let mut ptable = Table::new(&["packed path", "median", "GFLOP/s", "weight bytes"]);
+    for n in [256usize, 512] {
+        let mut rng = Pcg64::new(7);
+        let x = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut xq = x.clone();
+        dartquant::model::fake_quant_rows(&mut xq, 16.0); // the W4A4 activation grid
+        let w = Mat::from_fn(n, n, |_, _| rng.normal());
+        let q8 = QMat::quantize_rtn(&w, QuantSpec::new(8));
+        let q4 = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        let gflops = |median: std::time::Duration| {
+            fnum(2.0 * (n as f64).powi(3) / median.as_secs_f64() / 1e9, 1)
+        };
+        let meas = time("transb f32", 2, 8, || {
+            std::hint::black_box(matmul_transb_with(&x, &w, threads));
+        });
+        ptable.row(&[
+            format!("f32 transb {n}³"),
+            dartquant::util::fmt_duration(meas.median),
+            gflops(meas.median),
+            format!("{}", w.nbytes()),
+        ]);
+        for (label, q) in [("i8", &q8), ("i4", &q4)] {
+            let meas = time("transb deq", 2, 8, || {
+                std::hint::black_box(matmul_transb_deq_with(&x, q, threads));
+            });
+            ptable.row(&[
+                format!("packed-{label} deq {n}³"),
+                dartquant::util::fmt_duration(meas.median),
+                gflops(meas.median),
+                format!("{}", q.nbytes()),
+            ]);
+            let meas = time("transb int", 2, 8, || {
+                std::hint::black_box(matmul_transb_q_with(&xq, q, 16.0, threads));
+            });
+            ptable.row(&[
+                format!("packed-{label} int {n}³"),
+                dartquant::util::fmt_duration(meas.median),
+                gflops(meas.median),
+                format!("{}", q.nbytes()),
+            ]);
+        }
+    }
+
     // --- GPTQ -------------------------------------------------------------
     let w = Weights::default_synthetic(&cfg, 3);
     let seqs = corpus.calib_sequences(2, 128);
@@ -112,4 +165,5 @@ fn main() {
     ]);
 
     table.print("§Perf — hot-path measurements");
+    ptable.print("§Perf — packed quantized-weight matmul");
 }

@@ -175,6 +175,12 @@ pub struct PipelineConfig {
     /// Worker threads for the per-layer calibration scheduler
     /// (`0` = available parallelism, the default).
     pub workers: usize,
+    /// Emit packed low-bit weight storage (`tensor::QMat`) from the
+    /// quantize stage instead of dequantized f32 — the true-footprint
+    /// serving representation (CLI `--packed`). Applies when the weight
+    /// bit width packs (2..=8); the eval path then runs the native
+    /// integer forward (packed models cannot feed the f32 artifacts).
+    pub packed: bool,
     /// Base seed for capture-stage token sampling.
     pub seed: u64,
     /// Memory budget in bytes for scheduler jobs — rotation calibration
@@ -201,6 +207,7 @@ impl PipelineConfig {
             calib: CalibConfig::default(),
             spin: SpinConfig::default(),
             workers: 0, // 0 = available parallelism, resolved by the scheduler
+            packed: false,
             seed: 0,
             memory_budget: None,
             artifacts_dir: Runtime::default_dir(),

@@ -14,8 +14,9 @@ use super::scheduler::{CalibJob, Scheduler};
 use super::{job_bytes, spin_job_bytes, PipelineConfig};
 use crate::calib::{self, CalibConfig};
 use crate::data::Corpus;
-use crate::model::{TokenBatch, Weights};
+use crate::model::{Tensor, TokenBatch, Weights};
 use crate::quant::{self, GptqConfig};
+use crate::tensor::{QMat, QuantSpec};
 use crate::rotation::RotationSet;
 use crate::runtime::{with_thread_runtime, Runtime};
 use crate::util::prng::Pcg64;
@@ -116,8 +117,16 @@ pub trait WeightQuantizer: Send + Sync {
     fn name(&self) -> &str;
 
     /// Quantize `weights` (already rotated/smoothed) at `ctx.cfg.bits.w`
-    /// bits, returning the dequantized-f32 model.
+    /// bits. With `ctx.cfg.packed` (and a packable bit width) the
+    /// transformer linears come back as packed `QMat` storage; otherwise
+    /// the historical dequantized-f32 model.
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights>;
+}
+
+/// Whether this run emits packed storage: the `--packed` switch and a
+/// bit width the packed representation covers.
+fn packed_run(cfg: &PipelineConfig) -> bool {
+    cfg.packed && QuantSpec::supports(cfg.bits.w)
 }
 
 // ---------------------------------------------------------------------------
@@ -364,7 +373,11 @@ impl WeightQuantizer for RtnQuantizer {
     }
 
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
-        Ok(quant::rtn_quantize_model(weights, ctx.cfg.bits.w))
+        Ok(if packed_run(ctx.cfg) {
+            quant::rtn_quantize_model_packed(weights, ctx.cfg.bits.w)
+        } else {
+            quant::rtn_quantize_model(weights, ctx.cfg.bits.w)
+        })
     }
 }
 
@@ -389,11 +402,12 @@ impl WeightQuantizer for GptqQuantizer {
         let gseqs = ctx
             .corpus
             .calib_sequences(8.min(ctx.cfg.calib_sequences), ctx.cfg.calib_seq_len);
-        Ok(quant::gptq_quantize_model(
-            weights,
-            &gseqs,
-            GptqConfig { bits: ctx.cfg.bits.w, damp: self.damp },
-        ))
+        let cfg = GptqConfig { bits: ctx.cfg.bits.w, damp: self.damp };
+        Ok(if packed_run(ctx.cfg) {
+            quant::gptq_quantize_model_packed(weights, &gseqs, cfg)
+        } else {
+            quant::gptq_quantize_model(weights, &gseqs, cfg)
+        })
     }
 }
 
@@ -410,6 +424,7 @@ impl WeightQuantizer for OmniQuantQuantizer {
 
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
         let bits = ctx.cfg.bits.w;
+        let packed = packed_run(ctx.cfg);
         // Group transformer weights by layer prefix ("l3.wq" → "l3");
         // unprefixed weights (final norm, …) form their own groups.
         let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
@@ -424,7 +439,21 @@ impl WeightQuantizer for OmniQuantQuantizer {
             .into_iter()
             .enumerate()
             .map(|(i, (key, names))| {
-                let bytes: u64 = names.iter().map(|n| weights.get(n).nbytes()).sum();
+                // Dense runs charge the historical input bytes; --packed
+                // runs additionally charge the packed output the job
+                // materializes, so the gate accounts true packed bytes.
+                let bytes: u64 = names
+                    .iter()
+                    .map(|n| {
+                        let m = weights.get(n);
+                        let out = if packed {
+                            QMat::packed_estimate(m.rows, m.cols, QuantSpec::new(bits))
+                        } else {
+                            0
+                        };
+                        m.nbytes() + out
+                    })
+                    .sum();
                 CalibJob::new(i, format!("omniquant[{key}]"), bytes, names)
             })
             .collect();
@@ -436,14 +465,22 @@ impl WeightQuantizer for OmniQuantQuantizer {
                 Ok(job
                     .payload
                     .iter()
-                    .map(|n| (n.clone(), quant::omniquant_quantize_mat(weights.get(n), bits)))
+                    .map(|n| {
+                        let m = weights.get(n);
+                        let t = if packed {
+                            Tensor::Packed(quant::omniquant_quantize_qmat(m, bits))
+                        } else {
+                            Tensor::F32(quant::omniquant_quantize_mat(m, bits))
+                        };
+                        (n.clone(), t)
+                    })
                     .collect::<Vec<_>>())
             },
         )?;
         let mut out = weights.clone();
         for group in results {
-            for (n, m) in group {
-                out.set(&n, m);
+            for (n, t) in group {
+                out.set_tensor(&n, t);
             }
         }
         Ok(out)
@@ -509,13 +546,18 @@ impl WeightQuantizer for QuikQuantizer {
 
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
         let absmax = act_absmax(weights, &ctx.corpus.calib_sequences(2, 128));
+        let packed = packed_run(ctx.cfg);
         let mut out = weights.clone();
         for (target, site) in mixed_sites(weights.cfg.n_layers) {
             let Some(a) = absmax.get(&site) else { continue };
-            let w = out.get(&target);
-            let keep = (w.cols / self.keep_divisor).max(2);
-            let q = quant::quik_quantize_mat(w, a, keep, ctx.cfg.bits.w);
-            out.set(&target, q);
+            let keep = (out.get(&target).cols / self.keep_divisor).max(2);
+            if packed {
+                let q = quant::quik_quantize_qmat(out.get(&target), a, keep, ctx.cfg.bits.w);
+                out.set_packed(&target, q);
+            } else {
+                let q = quant::quik_quantize_mat(out.get(&target), a, keep, ctx.cfg.bits.w);
+                out.set(&target, q);
+            }
         }
         Ok(out)
     }
@@ -532,11 +574,17 @@ impl WeightQuantizer for AtomQuantizer {
 
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
         let absmax = act_absmax(weights, &ctx.corpus.calib_sequences(2, 128));
+        let packed = packed_run(ctx.cfg);
         let mut out = weights.clone();
         for (target, site) in mixed_sites(weights.cfg.n_layers) {
             let Some(a) = absmax.get(&site) else { continue };
-            let q = quant::atom_quantize_mat(out.get(&target), a, ctx.cfg.bits.w);
-            out.set(&target, q);
+            if packed {
+                let q = quant::atom_quantize_qmat(out.get(&target), a, ctx.cfg.bits.w);
+                out.set_packed(&target, q);
+            } else {
+                let q = quant::atom_quantize_mat(out.get(&target), a, ctx.cfg.bits.w);
+                out.set(&target, q);
+            }
         }
         Ok(out)
     }

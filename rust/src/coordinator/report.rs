@@ -270,11 +270,12 @@ impl PipelineStats {
     }
 }
 
-/// Pipeline output: quantized (dequantized-f32) weights ready for the
-/// `fwdq_*` artifacts, plus the rotation set actually applied and the run
-/// accounting. `record()` strips the weights for machine-readable output.
+/// Pipeline output: quantized weights (packed `QMat` linears under
+/// `--packed`, dequantized f32 otherwise), plus the rotation set actually
+/// applied and the run accounting. `record()` strips the weights for
+/// machine-readable output.
 pub struct PipelineReport {
-    /// The quantized model (dequantized-f32 representation).
+    /// The quantized model.
     pub weights: Weights,
     /// The rotation set that was fused into the weights, if the method
     /// rotates.
@@ -287,9 +288,22 @@ pub struct PipelineReport {
     pub quantizer: String,
     /// Calibration dialect the run used.
     pub dialect: Dialect,
+    /// True resident weight bytes of the output model (packed
+    /// codes + scales for packed tensors, dense f32 otherwise).
+    pub model_bytes: u64,
+    /// Dense-f32-equivalent bytes of the transformer linears.
+    pub linear_dense_bytes: u64,
+    /// Actual stored bytes of the transformer linears.
+    pub linear_actual_bytes: u64,
 }
 
 impl PipelineReport {
+    /// Dense-f32 bytes ÷ actual bytes over the transformer linears (the
+    /// quantized weight residency; 1.0 for dense fake-quant output).
+    pub fn compression_ratio(&self) -> f64 {
+        ratio(self.linear_dense_bytes, self.linear_actual_bytes)
+    }
+
     /// The serializable summary row (everything except the weights).
     pub fn record(&self) -> PipelineRecord {
         PipelineRecord {
@@ -298,6 +312,9 @@ impl PipelineReport {
             dialect: self.dialect,
             rotated: self.rotation.is_some(),
             online_had: self.rotation.as_ref().map(|r| r.online_had).unwrap_or(false),
+            model_bytes: self.model_bytes,
+            linear_dense_bytes: self.linear_dense_bytes,
+            linear_actual_bytes: self.linear_actual_bytes,
             stats: self.stats.clone(),
         }
     }
@@ -305,6 +322,14 @@ impl PipelineReport {
     /// Machine-readable row (everything except the weights themselves).
     pub fn to_json(&self) -> Json {
         self.record().to_json()
+    }
+}
+
+fn ratio(dense: u64, actual: u64) -> f64 {
+    if actual == 0 {
+        1.0
+    } else {
+        dense as f64 / actual as f64
     }
 }
 
@@ -321,19 +346,33 @@ pub struct PipelineRecord {
     pub rotated: bool,
     /// Whether the rotation set enables the online R3/R4 Hadamards.
     pub online_had: bool,
+    /// True resident weight bytes of the output model.
+    pub model_bytes: u64,
+    /// Dense-f32-equivalent bytes of the transformer linears.
+    pub linear_dense_bytes: u64,
+    /// Actual stored bytes of the transformer linears.
+    pub linear_actual_bytes: u64,
     /// The run's accounting (see [`PipelineStats`]).
     pub stats: PipelineStats,
 }
 
 impl PipelineRecord {
+    /// Dense-f32 bytes ÷ actual bytes over the transformer linears.
+    pub fn compression_ratio(&self) -> f64 {
+        ratio(self.linear_dense_bytes, self.linear_actual_bytes)
+    }
+
     /// The record with [`PipelineStats::canonical`] applied: strips every
     /// run-varying field so that two runs of the same configuration — at
-    /// any `workers` setting — serialize byte-identically.
+    /// any `workers` setting — serialize byte-identically. (The byte
+    /// accounting is deterministic, so it survives canonicalization.)
     pub fn canonical(&self) -> PipelineRecord {
         PipelineRecord { stats: self.stats.canonical(), ..self.clone() }
     }
 
-    /// Serialize to the `util::json` tree.
+    /// Serialize to the `util::json` tree. `compression_ratio` is a
+    /// derived convenience field; the integer byte counts are
+    /// authoritative (and exactly round-trippable).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("method", Json::Str(self.method.clone())),
@@ -341,6 +380,10 @@ impl PipelineRecord {
             ("dialect", Json::Str(self.dialect.label().to_string())),
             ("rotated", Json::Bool(self.rotated)),
             ("online_had", Json::Bool(self.online_had)),
+            ("model_bytes", Json::Num(self.model_bytes as f64)),
+            ("linear_dense_bytes", Json::Num(self.linear_dense_bytes as f64)),
+            ("linear_actual_bytes", Json::Num(self.linear_actual_bytes as f64)),
+            ("compression_ratio", Json::Num(self.compression_ratio())),
             ("stats", self.stats.to_json()),
         ])
     }
@@ -356,6 +399,9 @@ impl PipelineRecord {
             dialect: Dialect::parse(j.get_str("dialect").context("record field \"dialect\" missing")?)?,
             rotated: j.get("rotated").and_then(|v| v.as_bool()).unwrap_or(false),
             online_had: j.get("online_had").and_then(|v| v.as_bool()).unwrap_or(false),
+            model_bytes: j.get_f64("model_bytes").unwrap_or(0.0) as u64,
+            linear_dense_bytes: j.get_f64("linear_dense_bytes").unwrap_or(0.0) as u64,
+            linear_actual_bytes: j.get_f64("linear_actual_bytes").unwrap_or(0.0) as u64,
             stats: PipelineStats::from_json(j.get("stats").context("record field \"stats\" missing")?)?,
         })
     }
@@ -389,11 +435,15 @@ mod tests {
             dialect: Dialect::Ptb,
             rotated: true,
             online_had: true,
+            model_bytes: 123_456,
+            linear_dense_bytes: 800_000,
+            linear_actual_bytes: 100_000,
             stats: PipelineStats { peak_job_bytes: 42, ..Default::default() },
         };
         let j = rec.to_json().to_string();
         let back = PipelineRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, rec);
+        assert_eq!(back.compression_ratio(), 8.0);
     }
 
     #[test]
@@ -404,6 +454,9 @@ mod tests {
             dialect: Dialect::Wiki,
             rotated: true,
             online_had: true,
+            model_bytes: 4096,
+            linear_dense_bytes: 2048,
+            linear_actual_bytes: 512,
             stats: PipelineStats {
                 capture_time: Duration::from_millis(3),
                 calibrate_time: Duration::from_millis(14),
@@ -419,6 +472,9 @@ mod tests {
         assert_eq!(canon.stats.peak_job_bytes, 0);
         assert_eq!(canon.stats.loss_curves, rec.stats.loss_curves);
         assert_eq!(canon.method, rec.method);
+        // The deterministic byte accounting survives canonicalization.
+        assert_eq!(canon.model_bytes, rec.model_bytes);
+        assert_eq!(canon.compression_ratio(), 4.0);
         // Canonicalizing twice is a fixpoint and serializes identically.
         assert_eq!(canon.canonical().to_json().to_string(), canon.to_json().to_string());
     }

@@ -173,6 +173,16 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// Emit packed low-bit weight storage (`tensor::QMat`) from the
+    /// quantize stage instead of dequantized f32 — the true-footprint
+    /// serving representation (CLI `--packed`). The report's
+    /// `model_bytes`/`compression_ratio` then account real codes+scales
+    /// bytes, and eval runs the native integer forward.
+    pub fn packed(mut self, on: bool) -> PipelineBuilder<'w> {
+        self.cfg.packed = on;
+        self
+    }
+
     /// Worker threads for the per-layer calibration scheduler
     /// (`0` = the machine's available parallelism). The determinism
     /// contract guarantees bit-identical reports at any setting; see
@@ -303,6 +313,8 @@ impl<'w> PipelineBuilder<'w> {
 
         stats.total_time = t_total.elapsed();
         stats.peak_job_bytes = gate.peak_bytes();
+        let model_bytes = quantized.nbytes();
+        let (linear_dense_bytes, linear_actual_bytes) = quantized.linear_bytes();
         Ok(PipelineReport {
             weights: quantized,
             rotation: rotation_set,
@@ -310,6 +322,9 @@ impl<'w> PipelineBuilder<'w> {
             method: method_label,
             quantizer: quantizer_label,
             dialect: cfg.calib_dialect,
+            model_bytes,
+            linear_dense_bytes,
+            linear_actual_bytes,
         })
     }
 }

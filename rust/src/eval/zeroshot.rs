@@ -222,6 +222,27 @@ pub fn suite_accuracy_artifact(
     Ok((out, avg))
 }
 
+/// Run the whole nine-task suite through the native forward (no
+/// artifacts) — the eval path for packed models, whose weights cannot
+/// feed the f32 artifact signatures.
+pub fn suite_accuracy_native(
+    w: &Weights,
+    dialect: Dialect,
+    items_per_task: usize,
+    seq_len: usize,
+    seed: u64,
+    opt: model::FwdOptions,
+) -> (Vec<(&'static str, f64)>, f64) {
+    let corpus = Corpus::new(dialect, w.cfg.vocab, seed);
+    let mut out = Vec::new();
+    for task in &SUITE {
+        let items = generate_items(task, &corpus, items_per_task, seq_len, seed);
+        out.push((task.name, task_accuracy_native(w, &items, opt)));
+    }
+    let avg = out.iter().map(|(_, a)| a).sum::<f64>() / out.len() as f64;
+    (out, avg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -154,6 +154,7 @@ fn pipeline_config(a: &dartquant::util::cli::Args) -> Result<PipelineConfig> {
     cfg.calib_sequences = a.get_usize("sequences", 32)?;
     cfg.calib.steps = a.get_usize("steps", 60)?;
     cfg.workers = a.get_usize("workers", cfg.workers)?;
+    cfg.packed = a.get_bool("packed");
     cfg.weight_quant = WeightQuant::parse(a.get_or("wquant", "gptq"))?;
     if a.get_bool("budget-3090") {
         cfg.memory_budget = Some(24 << 20);
@@ -177,7 +178,8 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         .flag("out", "write the quantized checkpoint here")
         .flag("checkpoint", "load base weights from a checkpoint")
         .flag("budget-bytes", "memory budget for calibration jobs")
-        .switch("budget-3090", "scaled single-3090 memory budget (24 MiB)");
+        .switch("budget-3090", "scaled single-3090 memory budget (24 MiB)")
+        .switch("packed", "store quantized linears as packed low-bit codes (true footprint)");
     let a = cmd.parse(argv)?;
     let (_cfg, weights, _corpus) = load_model(&a)?;
     let rt = Runtime::open(Runtime::default_dir())?;
@@ -203,9 +205,18 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         fmt_duration(s.total_time),
         s.peak_job_bytes
     );
+    println!(
+        "model bytes {} | linear compression {:.2}x",
+        report.model_bytes,
+        report.compression_ratio()
+    );
     if let Some(out) = a.get("out") {
         report.weights.save(std::path::Path::new(out))?;
-        println!("saved quantized checkpoint to {out}");
+        if report.weights.has_packed() {
+            println!("saved quantized checkpoint to {out} (dense dequantization; the checkpoint format is f32)");
+        } else {
+            println!("saved quantized checkpoint to {out}");
+        }
     }
     Ok(())
 }
@@ -217,6 +228,11 @@ fn eval_row(
     use_had: bool,
     items: usize,
 ) -> Result<(f64, f64, f64, f64, f64)> {
+    if weights.has_packed() {
+        // Packed weights can't feed the f32 artifacts: run the native
+        // quantized forward (integer path on the packed linears).
+        return Ok(eval_row_native(weights, bits, use_had, items));
+    }
     let spec = EvalSpec::default();
     let (a_lv, kv_lv) = (BitSetting::levels(bits.a), BitSetting::levels(bits.kv));
     let mut ppls = Vec::new();
@@ -228,6 +244,24 @@ fn eval_row(
         rt, weights, Dialect::Wiki, items, 256, 99, a_lv, kv_lv, use_had,
     )?;
     Ok((ppls[0], ppls[1], ppls[2], (ppls[0] + ppls[1] + ppls[2]) / 3.0, zs * 100.0))
+}
+
+fn eval_row_native(
+    weights: &Weights,
+    bits: BitSetting,
+    use_had: bool,
+    items: usize,
+) -> (f64, f64, f64, f64, f64) {
+    let spec = EvalSpec::default();
+    let opt = dartquant::model::FwdOptions::quant(bits.a, bits.kv, use_had);
+    let mut ppls = Vec::new();
+    for d in Dialect::ALL {
+        let corpus = Corpus::new(d, weights.cfg.vocab, 7);
+        ppls.push(eval::ppl_native(weights, &corpus, spec, opt));
+    }
+    let (_per_task, zs) =
+        eval::zeroshot::suite_accuracy_native(weights, Dialect::Wiki, items, 256, 99, opt);
+    (ppls[0], ppls[1], ppls[2], (ppls[0] + ppls[1] + ppls[2]) / 3.0, zs * 100.0)
 }
 
 fn cmd_eval(argv: &[String]) -> Result<()> {
@@ -269,6 +303,7 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         .flag("checkpoint", "base weights checkpoint")
         .flag("budget-bytes", "memory budget")
         .switch("budget-3090", "scaled 3090 budget")
+        .switch("packed", "packed low-bit weight storage + native integer-forward eval")
         .switch("json", "print a machine-readable PipelineReport row")
         .switch("canonical", "print the run-invariant report row (implies --json): timings and peak bytes stripped, byte-identical at any --workers");
     let a = cmd.parse(argv)?;
@@ -293,7 +328,9 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
     let use_had = report.rotation.as_ref().map(|r| r.online_had).unwrap_or(false);
     let (wiki, ptb, c4, avg, zs) =
         eval_row(&rt, &report.weights, bits, use_had, a.get_usize("items", 8)?)?;
-    let mut t = Table::new(&["Method", "Bits", "Wiki", "PTB", "C4", "Avg", "0-shot9", "calib time"]);
+    let mut t = Table::new(&[
+        "Method", "Bits", "Wiki", "PTB", "C4", "Avg", "0-shot9", "weight bytes", "calib time",
+    ]);
     t.row(&[
         report.method.clone(),
         bits.label(),
@@ -302,6 +339,7 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         fnum(c4, 2),
         fnum(avg, 2),
         fnum(zs, 2),
+        format!("{} ({:.1}x)", report.model_bytes, report.compression_ratio()),
         fmt_duration(report.stats.calibrate_time),
     ]);
     t.print(&format!("{} pipeline", weights.cfg.name));

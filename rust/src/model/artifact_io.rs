@@ -38,13 +38,29 @@ impl TokenBatch {
     }
 }
 
-/// Weight tensors as ordered artifact inputs.
+/// Weight tensors as ordered artifact inputs (dense models only; the
+/// artifact entry points bail first when the model holds packed weights,
+/// which cannot feed the f32-shaped artifact signatures).
 pub fn weight_values(w: &Weights) -> Vec<Value> {
     w.ordered().map(|(_, m)| Value::from_mat(m)).collect()
 }
 
+/// Contextful guard for the artifact entry points: packed models must
+/// evaluate through the native forward instead.
+fn ensure_dense(w: &Weights) -> Result<()> {
+    anyhow::ensure!(
+        !w.has_packed(),
+        "model '{}' holds packed weights, which cannot feed the PJRT artifacts \
+         (dense f32 inputs) — evaluate with the native path (eval::ppl_native, \
+         zeroshot::*_native) or rerun the pipeline without --packed",
+        w.cfg.name
+    );
+    Ok(())
+}
+
 /// Run `fwd_{cfg}`: per-position NLL (B, T-1).
 pub fn run_fwd(rt: &Runtime, w: &Weights, toks: &TokenBatch) -> Result<Mat> {
+    ensure_dense(w)?;
     let name = format!("fwd_{}", w.cfg.name);
     let mut inputs = weight_values(w);
     inputs.push(toks.to_value());
@@ -62,6 +78,7 @@ pub fn run_fwdq(
     kv_levels: f32,
     use_had: bool,
 ) -> Result<Mat> {
+    ensure_dense(w)?;
     let name = format!("fwdq_{}", w.cfg.name);
     let mut inputs = weight_values(w);
     inputs.push(toks.to_value());
@@ -81,6 +98,7 @@ pub struct CapturedSites {
 }
 
 pub fn run_capture(rt: &Runtime, w: &Weights, toks: &TokenBatch) -> Result<CapturedSites> {
+    ensure_dense(w)?;
     let name = format!("capture_{}", w.cfg.name);
     let mut inputs = weight_values(w);
     inputs.push(toks.to_value());

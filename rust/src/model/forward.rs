@@ -6,8 +6,8 @@
 //! (b) GPTQ activation capture with arbitrary hooks, and (c) running
 //! configurations for which no artifact was emitted.
 
-use super::weights::Weights;
-use crate::tensor::{matmul_transb, Mat};
+use super::weights::{Tensor, Weights};
+use crate::tensor::{matmul_transb, matmul_transb_q, Mat};
 
 /// Per-token asymmetric fake quantization over rows (the activation
 /// quantizer). `levels >= 32768` disables (the fp16 settings) — mirrors
@@ -103,6 +103,17 @@ fn hadamard_rows(x: &mut Mat) {
     crate::linalg::fwht_rows(x);
 }
 
+/// One linear (`y = x · Wᵀ`): dense weights take the f32 kernel; packed
+/// weights stream their codes — the i8×i8 → i32 integer path when the
+/// (already fake-quantized) activations sit on a ≤ 8-bit grid, the
+/// bit-exact dequantizing path otherwise (see `tensor::matmul_transb_q`).
+fn linear(w: &Weights, name: &str, x: &Mat, a_levels: f32) -> Mat {
+    match w.tensor(name) {
+        Tensor::F32(m) => matmul_transb(x, m),
+        Tensor::Packed(q) => matmul_transb_q(x, q, a_levels),
+    }
+}
+
 /// Capture hook sites during a forward pass.
 pub trait CaptureHook {
     /// Post-RMSNorm hidden state feeding attention (site `2l`) or the FFN
@@ -143,9 +154,9 @@ pub fn forward_one(
         let mut hq = h;
         fq(&mut hq);
         hook.on_linear_input(&name("wq"), &hq);
-        let q_all = matmul_transb(&hq, w.get(&name("wq")));
-        let k_all = matmul_transb(&hq, w.get(&name("wk")));
-        let v_all = matmul_transb(&hq, w.get(&name("wv")));
+        let q_all = linear(w, &name("wq"), &hq, opt.a_levels);
+        let k_all = linear(w, &name("wk"), &hq, opt.a_levels);
+        let v_all = linear(w, &name("wv"), &hq, opt.a_levels);
         hook.on_v_site(l, &v_all);
 
         let mut attn_out = Mat::zeros(t, nh * hd);
@@ -189,7 +200,7 @@ pub fn forward_one(
         }
         fq(&mut attn_out);
         hook.on_linear_input(&name("wo"), &attn_out);
-        let proj = matmul_transb(&attn_out, w.get(&name("wo")));
+        let proj = linear(w, &name("wo"), &attn_out, opt.a_levels);
         x.add_assign(&proj);
 
         // ---- ffn ----
@@ -198,8 +209,7 @@ pub fn forward_one(
         let mut h2q = h2;
         fq(&mut h2q);
         if cfg.is_moe() {
-            let router = w.get(&name("router"));
-            let gate_logits = matmul_transb(&h2q, router); // (T, E)
+            let gate_logits = linear(w, &name("router"), &h2q, opt.a_levels); // (T, E)
             let mut ffn = Mat::zeros(t, d);
             for i in 0..t {
                 // top-k experts by logit (jax lax.top_k tie-break: lower index)
@@ -216,14 +226,14 @@ pub fn forward_one(
                     let gate = exps[rank] / denom;
                     let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
                     let row = h2q.rows_slice(i, i + 1);
-                    let g = matmul_transb(&row, w.get(&ename("wg")));
-                    let u = matmul_transb(&row, w.get(&ename("wu")));
+                    let g = linear(w, &ename("wg"), &row, opt.a_levels);
+                    let u = linear(w, &ename("wu"), &row, opt.a_levels);
                     let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
                     if opt.use_had {
                         hadamard_rows(&mut a);
                     }
                     fake_quant_rows(&mut a, opt.a_levels);
-                    let y = matmul_transb(&a, w.get(&ename("wd")));
+                    let y = linear(w, &ename("wd"), &a, opt.a_levels);
                     for j in 0..d {
                         *ffn.at_mut(i, j) += gate * y.at(0, j);
                     }
@@ -232,15 +242,15 @@ pub fn forward_one(
             x.add_assign(&ffn);
         } else {
             hook.on_linear_input(&name("wg"), &h2q);
-            let g = matmul_transb(&h2q, w.get(&name("wg")));
-            let u = matmul_transb(&h2q, w.get(&name("wu")));
+            let g = linear(w, &name("wg"), &h2q, opt.a_levels);
+            let u = linear(w, &name("wu"), &h2q, opt.a_levels);
             let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
             if opt.use_had {
                 hadamard_rows(&mut a); // R4 (wd pre-fused with H)
             }
             fq(&mut a);
             hook.on_linear_input(&name("wd"), &a);
-            let y = matmul_transb(&a, w.get(&name("wd")));
+            let y = linear(w, &name("wd"), &a, opt.a_levels);
             x.add_assign(&y);
         }
     }
@@ -368,6 +378,38 @@ mod tests {
         assert_eq!(c.x, 2 * w.cfg.n_layers);
         assert_eq!(c.v, w.cfg.n_layers);
         assert_eq!(c.lin, 4 * w.cfg.n_layers);
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_fake_quant_forward() {
+        let (w, toks) = setup();
+        let dense_q = crate::quant::rtn_quantize_model(&w, 4);
+        let packed_q = crate::quant::rtn_quantize_model_packed(&w, 4);
+        assert!(packed_q.has_packed());
+        // W4A4: the packed path runs i8×i8 → i32 with exact integer
+        // accumulation; only f32 reassociation separates it from the
+        // dense fake-quant oracle.
+        let opt = FwdOptions::quant(4, 16, false);
+        let a = forward_one(&dense_q, &toks, opt, &mut NoCapture);
+        let b = forward_one(&packed_q, &toks, opt, &mut NoCapture);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-3 * x.abs().max(1.0), "{x} vs {y}");
+        }
+        // With fp activations the packed path is the bit-exact deq oracle.
+        let fp_dense = forward_one(&dense_q, &toks, FwdOptions::FP, &mut NoCapture);
+        let fp_packed = forward_one(&packed_q, &toks, FwdOptions::FP, &mut NoCapture);
+        assert_eq!(fp_dense, fp_packed);
+    }
+
+    #[test]
+    fn packed_moe_forward_runs() {
+        let cfg = ModelConfig::builtin("mixtral-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 5);
+        let q = crate::quant::rtn_quantize_model_packed(&w, 4);
+        let mut rng = Pcg64::new(6);
+        let toks: Vec<i32> = (0..16).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let nll = forward_one(&q, &toks, FwdOptions::quant(4, 16, false), &mut NoCapture);
+        assert!(nll.iter().all(|v| v.is_finite()));
     }
 
     #[test]

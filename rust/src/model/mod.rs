@@ -10,4 +10,4 @@ pub mod weights;
 pub use artifact_io::{ppl_from_nll, CapturedSites, TokenBatch, TrainState};
 pub use config::{BitSetting, ModelConfig};
 pub use forward::{fake_quant_rows, forward_batch, forward_one, CaptureHook, FwdOptions, NoCapture};
-pub use weights::Weights;
+pub use weights::{Tensor, Weights};

@@ -5,19 +5,75 @@
 //! trained checkpoints.
 
 use super::config::ModelConfig;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QMat};
 use crate::util::prng::Pcg64;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// One weight tensor: dense f32, or packed low-bit codes + scales. The
+/// pipeline starts dense; `--packed` quantization swaps the transformer
+/// linears to `Packed` so the model holds its true low-bit footprint
+/// end-to-end (embed/head always stay dense, as in the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Mat),
+    Packed(QMat),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Tensor::F32(m) => m.shape(),
+            Tensor::Packed(q) => q.shape(),
+        }
+    }
+
+    /// True resident bytes (packed codes + scales for `Packed`).
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Tensor::F32(m) => m.nbytes(),
+            Tensor::Packed(q) => q.nbytes(),
+        }
+    }
+
+    /// Bytes of the dense f32 equivalent.
+    pub fn dense_nbytes(&self) -> u64 {
+        let (r, c) = self.shape();
+        (r * c * 4) as u64
+    }
+
+    /// The dense view: a clone for `F32`, a dequantization for `Packed`
+    /// (bit-identical to the fake-quant output, per the QMat contract).
+    pub fn to_mat(&self) -> Mat {
+        match self {
+            Tensor::F32(m) => m.clone(),
+            Tensor::Packed(q) => q.dequantize(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Mat> {
+        match self {
+            Tensor::F32(m) => Some(m),
+            Tensor::Packed(_) => None,
+        }
+    }
+
+    pub fn as_packed(&self) -> Option<&QMat> {
+        match self {
+            Tensor::F32(_) => None,
+            Tensor::Packed(q) => Some(q),
+        }
+    }
+}
+
 /// Named weight collection with a stable parameter order.
 #[derive(Clone, Debug)]
 pub struct Weights {
     pub cfg: ModelConfig,
     order: Vec<String>,
-    map: BTreeMap<String, Mat>,
+    map: BTreeMap<String, Tensor>,
 }
 
 impl Weights {
@@ -62,7 +118,7 @@ impl Weights {
                 }
             }
         }
-        Weights { cfg: cfg.clone(), order, map }
+        Weights { cfg: cfg.clone(), order, map: dense_map(map) }
     }
 
     /// Default synthetic model used by the benches: ~3% outlier channels
@@ -208,11 +264,11 @@ impl Weights {
 
         // Residual-stream outlier amplification through wo/wd of the other
         // layers keeps the outlier channels alive at every rotation site.
-        let mut w = Weights { cfg: cfg.clone(), order, map };
+        let mut w = Weights { cfg: cfg.clone(), order, map: dense_map(map) };
         for name in w.order.clone() {
             let leaf = name.rsplit('.').next().unwrap().to_string();
             if (leaf == "wo") && !name.starts_with(&format!("l{last}.")) {
-                let m = w.map.get_mut(&name).unwrap();
+                let m = w.get_mut(&name);
                 for &c in &channels {
                     for j in 0..m.cols {
                         *m.at_mut(c, j) *= outlier_scale;
@@ -229,38 +285,109 @@ impl Weights {
         Weights::init_grammar(cfg, seed, successor, n_out, 10.0)
     }
 
+    /// The dense matrix for `name`. Panics for packed tensors — use
+    /// [`Weights::tensor`] (or [`Tensor::to_mat`]) on models that may
+    /// hold packed weights.
     pub fn get(&self, name: &str) -> &Mat {
-        self.map.get(name).unwrap_or_else(|| panic!("no weight {name:?}"))
+        match self.tensor(name) {
+            Tensor::F32(m) => m,
+            Tensor::Packed(_) => {
+                panic!("weight {name:?} is packed; use tensor()/to_mat() instead of get()")
+            }
+        }
     }
 
     pub fn get_mut(&mut self, name: &str) -> &mut Mat {
-        self.map.get_mut(name).unwrap_or_else(|| panic!("no weight {name:?}"))
+        match self.map.get_mut(name).unwrap_or_else(|| panic!("no weight {name:?}")) {
+            Tensor::F32(m) => m,
+            Tensor::Packed(_) => {
+                panic!("weight {name:?} is packed; packed tensors are immutable")
+            }
+        }
+    }
+
+    /// The representation-agnostic view of a weight.
+    pub fn tensor(&self, name: &str) -> &Tensor {
+        self.map.get(name).unwrap_or_else(|| panic!("no weight {name:?}"))
     }
 
     pub fn set(&mut self, name: &str, m: Mat) {
-        let (r, c) = self.cfg.param_shape(name);
-        assert_eq!((m.rows, m.cols), (r, c), "shape mismatch for {name}");
-        self.map.insert(name.to_string(), m);
+        self.set_tensor(name, Tensor::F32(m));
     }
 
-    /// Ordered iteration (the artifact input convention).
+    /// Swap a weight to packed storage.
+    pub fn set_packed(&mut self, name: &str, q: QMat) {
+        self.set_tensor(name, Tensor::Packed(q));
+    }
+
+    pub fn set_tensor(&mut self, name: &str, t: Tensor) {
+        let (r, c) = self.cfg.param_shape(name);
+        assert_eq!(t.shape(), (r, c), "shape mismatch for {name}");
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Whether any weight is held packed (such models cannot feed the
+    /// PJRT artifacts, which take dense f32 inputs).
+    pub fn has_packed(&self) -> bool {
+        self.map.values().any(|t| matches!(t, Tensor::Packed(_)))
+    }
+
+    /// Ordered iteration over dense matrices (the artifact input
+    /// convention). Panics on packed tensors — artifact callers check
+    /// [`Weights::has_packed`] first.
     pub fn ordered(&self) -> impl Iterator<Item = (&str, &Mat)> {
         self.order.iter().map(|n| (n.as_str(), self.get(n)))
+    }
+
+    /// Ordered iteration over the per-tensor representations.
+    pub fn ordered_tensors(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.order.iter().map(|n| (n.as_str(), self.tensor(n)))
     }
 
     pub fn names(&self) -> &[String] {
         &self.order
     }
 
+    /// True resident weight bytes: dense f32 bytes plus packed
+    /// codes + scales for packed tensors.
     pub fn nbytes(&self) -> u64 {
-        self.map.values().map(|m| m.nbytes()).sum()
+        self.map.values().map(|t| t.nbytes()).sum()
     }
 
-    /// Apply `f` to every transformer weight (not embed/head).
+    /// (dense-equivalent bytes, actual bytes) over the transformer
+    /// linears (embed/head excluded) — the weight-residency measure
+    /// behind `PipelineReport::compression_ratio`.
+    pub fn linear_bytes(&self) -> (u64, u64) {
+        let mut dense = 0u64;
+        let mut actual = 0u64;
+        for (n, t) in self.map.iter() {
+            if n == "embed" || n == "head" {
+                continue;
+            }
+            dense += t.dense_nbytes();
+            actual += t.nbytes();
+        }
+        (dense, actual)
+    }
+
+    /// Apply `f` to every transformer weight (not embed/head). Panics on
+    /// packed tensors (these passes run pre-quantization, on dense
+    /// models).
     pub fn map_linear_weights(&mut self, mut f: impl FnMut(&str, &mut Mat)) {
         for n in self.order.clone() {
             if n != "embed" && n != "head" {
-                f(&n, self.map.get_mut(&n).unwrap());
+                f(&n, self.get_mut(&n));
+            }
+        }
+    }
+
+    /// Replace every transformer weight (not embed/head) with the packed
+    /// matrix `f` produces from its dense value.
+    pub fn pack_linear_weights(&mut self, mut f: impl FnMut(&str, &Mat) -> QMat) {
+        for n in self.order.clone() {
+            if n != "embed" && n != "head" {
+                let q = f(&n, self.get(&n));
+                self.set_packed(&n, q);
             }
         }
     }
@@ -270,13 +397,24 @@ impl Weights {
     const MAGIC: &'static [u8; 8] = b"DARTQWT1";
 
     /// Save to a simple binary format: magic, config name, then per weight
-    /// (name, rows, cols, f32 LE data).
+    /// (name, rows, cols, f32 LE data). Packed tensors are written as
+    /// their dense dequantization (bit-identical by the QMat contract),
+    /// so checkpoints stay format-compatible; re-pack after loading if
+    /// the packed footprint matters.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(Self::MAGIC)?;
         write_str(&mut f, &self.cfg.name)?;
         f.write_all(&(self.order.len() as u32).to_le_bytes())?;
-        for (name, m) in self.ordered() {
+        for (name, t) in self.ordered_tensors() {
+            let dequant;
+            let m: &Mat = match t {
+                Tensor::F32(m) => m,
+                Tensor::Packed(q) => {
+                    dequant = q.dequantize();
+                    &dequant
+                }
+            };
             write_str(&mut f, name)?;
             f.write_all(&(m.rows as u32).to_le_bytes())?;
             f.write_all(&(m.cols as u32).to_le_bytes())?;
@@ -318,8 +456,13 @@ impl Weights {
                 bail!("checkpoint missing weight {n:?}");
             }
         }
-        Ok(Weights { cfg, order, map })
+        Ok(Weights { cfg, order, map: dense_map(map) })
     }
+}
+
+/// Wrap a dense construction map into the per-tensor representation.
+fn dense_map(map: BTreeMap<String, Mat>) -> BTreeMap<String, Tensor> {
+    map.into_iter().map(|(k, v)| (k, Tensor::F32(v))).collect()
 }
 
 fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
@@ -411,6 +554,41 @@ mod tests {
         let w = Weights::default_synthetic(&cfg, 1);
         assert_eq!(w.get("l0.router").shape(), (4, 256));
         assert_eq!(w.get("l2.e1.wg").shape(), (512, 256));
+    }
+
+    #[test]
+    fn packed_tensors_report_true_bytes_and_save_dense() {
+        use crate::tensor::{QMat, QuantSpec};
+        let mut w = Weights::default_synthetic(&tiny(), 9);
+        assert!(!w.has_packed());
+        let dense_bytes = w.nbytes();
+        let q = QMat::quantize_rtn(w.get("l0.wq"), QuantSpec::new(4));
+        let deq = q.dequantize();
+        w.set_packed("l0.wq", q);
+        assert!(w.has_packed());
+        assert!(w.nbytes() < dense_bytes);
+        assert_eq!(w.tensor("l0.wq").to_mat().data, deq.data);
+        let (d, a) = w.linear_bytes();
+        assert!(a < d, "packed linears must shrink: {a} vs {d}");
+        // save writes the dense dequantization; load round-trips it
+        let dir = std::env::temp_dir().join("dartquant-test-wts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("packed.bin");
+        w.save(&path).unwrap();
+        let l = Weights::load(&path).unwrap();
+        assert!(!l.has_packed());
+        assert_eq!(l.get("l0.wq").data, deq.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "is packed")]
+    fn get_panics_on_packed_weight() {
+        use crate::tensor::{QMat, QuantSpec};
+        let mut w = Weights::default_synthetic(&tiny(), 9);
+        let q = QMat::quantize_rtn(w.get("l0.wq"), QuantSpec::new(4));
+        w.set_packed("l0.wq", q);
+        let _ = w.get("l0.wq");
     }
 }
 

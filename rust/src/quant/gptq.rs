@@ -8,9 +8,10 @@
 //! form). This is the standard "act-order off, no grouping" GPTQ, scaled
 //! to our matrix sizes.
 
+use super::{snap, wide_qmax};
 use crate::linalg::cholesky;
 use crate::model::{CaptureHook, FwdOptions, Weights};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QMat, QuantSpec};
 
 /// GPTQ hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -26,15 +27,15 @@ impl Default for GptqConfig {
     }
 }
 
-/// Quantize one weight matrix ([out, in]) given the layer's input Hessian
-/// H = XᵀX (in-dim × in-dim). Returns the dequantized reconstruction.
-pub fn gptq_quantize_layer(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
+/// The GPTQ core: column-by-column quantize with Cholesky error
+/// propagation. Returns the propagated working matrix (entries on or near
+/// the per-row grid) plus the per-row scales — callers snap it onto the
+/// grid as packed codes ([`gptq_quantize_layer_qmat`]) or dense f32
+/// ([`gptq_quantize_layer`]).
+fn gptq_propagate(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
     assert_eq!(hessian.rows, w.cols);
-    if cfg.bits >= 16 {
-        return w.clone();
-    }
     let n = w.cols;
-    let qmax = ((1i32 << (cfg.bits - 1)) - 1) as f32;
+    let qmax = wide_qmax(cfg.bits);
 
     // Dampened Hessian.
     let mut h = hessian.clone();
@@ -70,7 +71,7 @@ pub fn gptq_quantize_layer(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
         let ljj = l.at(j, j).max(1e-10);
         for i in 0..w.rows {
             let v = out.at(i, j);
-            let q = (v / scales[i]).round().clamp(-qmax - 1.0, qmax) * scales[i];
+            let q = snap(v, scales[i], qmax);
             *out.at_mut(i, j) = q;
             let e = (v - q) / ljj;
             if e != 0.0 {
@@ -83,12 +84,32 @@ pub fn gptq_quantize_layer(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
             }
         }
     }
-    // Snap the propagated (still fp) values one more time so every entry
-    // lies on its row's grid.
+    (out, scales)
+}
+
+/// GPTQ into packed codes: the final grid snap becomes the QMat encode
+/// on the propagated working matrix (bits ∈ [2, 8]).
+pub fn gptq_quantize_layer_qmat(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> QMat {
+    let (working, scales) = gptq_propagate(w, hessian, cfg);
+    QMat::quantize_with_scales(&working, QuantSpec::new(cfg.bits), scales)
+}
+
+/// Quantize one weight matrix ([out, in]) given the layer's input Hessian
+/// H = XᵀX (in-dim × in-dim). Returns the dequantized reconstruction.
+pub fn gptq_quantize_layer(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
+    if cfg.bits >= 16 {
+        return w.clone();
+    }
+    if QuantSpec::supports(cfg.bits) {
+        return gptq_quantize_layer_qmat(w, hessian, cfg).dequantize();
+    }
+    // Wide grids: snap the propagated values onto the f32 grid directly.
+    let (mut out, scales) = gptq_propagate(w, hessian, cfg);
+    let qmax = wide_qmax(cfg.bits);
     for i in 0..out.rows {
         let s = scales[i];
         for v in out.row_mut(i) {
-            *v = (*v / s).round().clamp(-qmax - 1.0, qmax) * s;
+            *v = snap(*v, s, qmax);
         }
     }
     out
@@ -118,6 +139,26 @@ impl CaptureHook for HessianHook {
 /// GPTQ over every transformer linear of a model, capturing Hessians from
 /// `calib_seqs` via the native forward. Quantizes in place of RTN.
 pub fn gptq_quantize_model(weights: &Weights, calib_seqs: &[Vec<i32>], cfg: GptqConfig) -> Weights {
+    gptq_quantize_model_with(weights, calib_seqs, cfg, false)
+}
+
+/// [`gptq_quantize_model`] with packed storage: every reconstructed
+/// linear lands as a [`QMat`]. Falls back to the dense model when
+/// `cfg.bits` doesn't pack.
+pub fn gptq_quantize_model_packed(
+    weights: &Weights,
+    calib_seqs: &[Vec<i32>],
+    cfg: GptqConfig,
+) -> Weights {
+    gptq_quantize_model_with(weights, calib_seqs, cfg, QuantSpec::supports(cfg.bits))
+}
+
+fn gptq_quantize_model_with(
+    weights: &Weights,
+    calib_seqs: &[Vec<i32>],
+    cfg: GptqConfig,
+    packed: bool,
+) -> Weights {
     // The capture hook reports wq (shared input with wk/wv), wo, wg
     // (shared with wu), wd — covering every linear's input.
     let mut names = Vec::new();
@@ -141,8 +182,13 @@ pub fn gptq_quantize_model(weights: &Weights, calib_seqs: &[Vec<i32>], cfg: Gptq
         for (site, targets) in sites {
             let Some(h) = hook.hessians.get(&site) else { continue };
             for t in targets {
-                let q = gptq_quantize_layer(out.get(&t), h, cfg);
-                out.set(&t, q);
+                if packed {
+                    let q = gptq_quantize_layer_qmat(out.get(&t), h, cfg);
+                    out.set_packed(&t, q);
+                } else {
+                    let q = gptq_quantize_layer(out.get(&t), h, cfg);
+                    out.set(&t, q);
+                }
             }
         }
     }
@@ -227,6 +273,88 @@ mod tests {
             .sum::<f64>()
             / w.data.len() as f64;
         assert!(mse < rtn_mse(&w, 4) * 2.5, "{mse} vs rtn {}", rtn_mse(&w, 4));
+    }
+
+    /// Verbatim pre-refactor GPTQ layer (inline snap + final snap) — the
+    /// oracle for the QMat bit-identity property test.
+    fn pre_refactor_gptq(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
+        let n = w.cols;
+        let qmax = ((1i32 << (cfg.bits - 1)) - 1) as f32;
+        let mut h = hessian.clone();
+        let mean_diag: f32 = (0..n).map(|i| h.at(i, i)).sum::<f32>() / n as f32;
+        let lambda = cfg.damp * mean_diag.max(1e-8);
+        for i in 0..n {
+            *h.at_mut(i, i) += lambda;
+        }
+        let hinv = crate::linalg::cholesky_inverse(&h).expect("dampened Hessian SPD");
+        let l = crate::linalg::cholesky(&hinv).expect("Hinv SPD");
+        let mut out = w.clone();
+        let scales: Vec<f32> = (0..w.rows)
+            .map(|i| {
+                let amax = w.row(i).iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+                (amax / qmax).max(1e-10)
+            })
+            .collect();
+        for j in 0..n {
+            let ljj = l.at(j, j).max(1e-10);
+            for i in 0..w.rows {
+                let v = out.at(i, j);
+                let q = (v / scales[i]).round().clamp(-qmax - 1.0, qmax) * scales[i];
+                *out.at_mut(i, j) = q;
+                let e = (v - q) / ljj;
+                if e != 0.0 {
+                    for k in (j + 1)..n {
+                        let lkj = l.at(k, j);
+                        if lkj != 0.0 {
+                            *out.at_mut(i, k) -= e * lkj;
+                        }
+                    }
+                }
+            }
+        }
+        for i in 0..out.rows {
+            let s = scales[i];
+            for v in out.row_mut(i) {
+                *v = (*v / s).round().clamp(-qmax - 1.0, qmax) * s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_gptq_qmat_bit_identical_to_pre_refactor() {
+        use crate::util::propcheck::{gen, Runner};
+        Runner::new().cases(12).run("gptq QMat bit-identity", |rng| {
+            let r = gen::size(rng, 1, 6);
+            let n = gen::size(rng, 4, 32);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let w = Mat::from_vec(r, n, gen::vec_f32(rng, r * n));
+            let x = Mat::from_vec(3 * n, n, gen::vec_f32(rng, 3 * n * n));
+            let h = crate::tensor::matmul(&x.t(), &x);
+            let cfg = GptqConfig { bits, damp: 0.01 };
+            let q = gptq_quantize_layer_qmat(&w, &h, cfg);
+            if q.nbytes() >= q.dense_nbytes() {
+                return Err("no packing win".into());
+            }
+            if q.dequantize().data == pre_refactor_gptq(&w, &h, cfg).data {
+                Ok(())
+            } else {
+                Err(format!("gptq mismatch at {bits} bits, shape {r}x{n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn gptq_packed_model_matches_dense() {
+        let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = crate::data::Corpus::new(crate::data::Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let calib = corpus.calib_sequences(2, 32);
+        let dense = gptq_quantize_model(&w, &calib, GptqConfig::default());
+        let packed = gptq_quantize_model_packed(&w, &calib, GptqConfig::default());
+        assert!(packed.has_packed());
+        assert!(packed.nbytes() < dense.nbytes());
+        assert_eq!(packed.tensor("l0.wq").to_mat().data, dense.get("l0.wq").data);
     }
 
     #[test]

@@ -1,32 +1,77 @@
 //! Weight quantization: RTN, GPTQ, and the mixed-precision baselines
 //! (QUIK-like, Atom-like) of Appendix E. Activation/KV quantization is
 //! fake-quant inside the forward graphs (`model::forward`, `fwdq_*`
-//! artifacts); this module quantizes *weights* host-side and returns
-//! dequantized f32 weights ready for the artifacts.
+//! artifacts); this module quantizes *weights* host-side.
+//!
+//! Every quantizer funnels through the one shared scale/round/clamp
+//! kernel (`tensor::QuantSpec` + `tensor::quantize_into`) and can emit a
+//! packed [`QMat`] (`*_quantize_qmat`, `*_quantize_model_packed`) holding
+//! integer codes + scales — the representation whose `nbytes()` is the
+//! real memory story. The historical `*_quantize_mat` functions survive
+//! as dequantizing wrappers whose output is **bit-identical** to the
+//! pre-refactor fake-quant loops (property-tested below); bit widths
+//! outside the packed range (9..=15) take a small f32 fallback with the
+//! same math.
 
 mod gptq;
 mod omniquant;
 
-pub use gptq::{gptq_quantize_layer, gptq_quantize_model, GptqConfig};
-pub use omniquant::{omniquant_quantize_mat, omniquant_quantize_model};
+pub use gptq::{
+    gptq_quantize_layer, gptq_quantize_layer_qmat, gptq_quantize_model,
+    gptq_quantize_model_packed, GptqConfig,
+};
+pub use omniquant::{
+    omniquant_quantize_mat, omniquant_quantize_model, omniquant_quantize_model_packed,
+    omniquant_quantize_qmat,
+};
 
 use crate::model::Weights;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QMat, QuantSpec};
+
+/// Group size of the Atom-like grouped scheme (top group kept at 8 bits).
+pub const ATOM_GROUP: usize = 32;
+
+/// Round/clamp one value onto the symmetric grid `scale` at `qmax` — the
+/// f32 form of the shared kernel, used by the wide-bit fallbacks and
+/// GPTQ's in-loop error propagation.
+pub(crate) fn snap(v: f32, scale: f32, qmax: f32) -> f32 {
+    (v / scale).round().clamp(-qmax - 1.0, qmax) * scale
+}
+
+/// qmax for bit widths outside the packed range (replicates the
+/// historical `(1 << (bits - 1)) - 1` expression exactly).
+pub(crate) fn wide_qmax(bits: u8) -> f32 {
+    ((1i32 << (bits - 1)) - 1) as f32
+}
+
+// ---------------------------------------------------------------------------
+// RTN
+// ---------------------------------------------------------------------------
+
+/// Per-output-channel symmetric RTN into packed codes (bits ∈ [2, 8]).
+pub fn rtn_quantize_qmat(w: &Mat, bits: u8) -> QMat {
+    QMat::quantize_rtn(w, QuantSpec::new(bits))
+}
 
 /// Per-output-channel symmetric RTN fake quantization of a weight matrix
 /// ([out, in]; one scale per output row) — the paper's weight quantizer.
+/// Dequantizing wrapper over [`rtn_quantize_qmat`].
 pub fn rtn_quantize_mat(w: &Mat, bits: u8) -> Mat {
     if bits >= 16 {
         return w.clone();
     }
-    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    if QuantSpec::supports(bits) {
+        return rtn_quantize_qmat(w, bits).dequantize();
+    }
+    // Wide grids (9..=15 bits) don't pack; same math on f32.
+    let qmax = wide_qmax(bits);
     let mut out = w.clone();
     for i in 0..out.rows {
         let row = out.row_mut(i);
         let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
         let scale = (amax / qmax).max(1e-10);
         for v in row.iter_mut() {
-            *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+            *v = snap(*v, scale, qmax);
         }
     }
     out
@@ -38,6 +83,18 @@ pub fn rtn_quantize_model(weights: &Weights, bits: u8) -> Weights {
     out.map_linear_weights(|_, m| {
         *m = rtn_quantize_mat(m, bits);
     });
+    out
+}
+
+/// [`rtn_quantize_model`] with packed storage: every transformer linear
+/// becomes a [`QMat`]. Falls back to the dense fake-quant model when
+/// `bits` doesn't pack.
+pub fn rtn_quantize_model_packed(weights: &Weights, bits: u8) -> Weights {
+    if !QuantSpec::supports(bits) {
+        return rtn_quantize_model(weights, bits);
+    }
+    let mut out = weights.clone();
+    out.pack_linear_weights(|_, m| rtn_quantize_qmat(m, bits));
     out
 }
 
@@ -53,54 +110,101 @@ pub fn rtn_mse(w: &Mat, bits: u8) -> f64 {
         / n
 }
 
+// ---------------------------------------------------------------------------
+// QUIK-like mixed precision
+// ---------------------------------------------------------------------------
+
+/// Protected-column mask: the `keep` highest-|activation| channels.
+/// A `Vec<bool>` so the scale scan and quantize loops test membership in
+/// O(1) instead of the historical per-element `HashSet::contains`.
+fn quik_mask(act_absmax: &[f32], keep: usize) -> Vec<bool> {
+    let mut idx: Vec<usize> = (0..act_absmax.len()).collect();
+    idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    let mut mask = vec![false; act_absmax.len()];
+    for &c in idx.iter().take(keep) {
+        mask[c] = true;
+    }
+    mask
+}
+
+/// QUIK-like mixed precision into packed codes: the protected channels
+/// keep full precision in the QMat metadata, the rest quantize to `bits`.
+pub fn quik_quantize_qmat(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> QMat {
+    assert_eq!(act_absmax.len(), w.cols);
+    QMat::quantize_protected(w, QuantSpec::new(bits), &quik_mask(act_absmax, keep))
+}
+
 /// QUIK-like mixed precision: protect the `keep` highest-magnitude input
 /// channels (by calibration abs-max) in fp16, quantize the rest to `bits`.
 /// The paper's comparison protects 256 channels on 4096-dim models; we
-/// scale that ratio (1/16 of channels).
+/// scale that ratio (1/16 of channels). Dequantizing wrapper over
+/// [`quik_quantize_qmat`].
 pub fn quik_quantize_mat(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> Mat {
     assert_eq!(act_absmax.len(), w.cols);
-    let mut idx: Vec<usize> = (0..w.cols).collect();
-    idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
-    let protected: std::collections::HashSet<usize> = idx.into_iter().take(keep).collect();
-    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    if QuantSpec::supports(bits) {
+        return quik_quantize_qmat(w, act_absmax, keep, bits).dequantize();
+    }
+    let mask = quik_mask(act_absmax, keep);
+    let qmax = wide_qmax(bits);
     let mut out = w.clone();
     for i in 0..out.rows {
         // Scale from the unprotected columns only.
-        let amax = (0..w.cols)
-            .filter(|c| !protected.contains(c))
-            .map(|c| w.at(i, c).abs())
-            .fold(0.0f32, f32::max);
+        let mut amax = 0.0f32;
+        for c in 0..w.cols {
+            if !mask[c] {
+                amax = amax.max(w.at(i, c).abs());
+            }
+        }
         let scale = (amax / qmax).max(1e-10);
         for c in 0..w.cols {
-            if !protected.contains(&c) {
+            if !mask[c] {
                 let v = out.at(i, c);
-                *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+                *out.at_mut(i, c) = snap(v, scale, qmax);
             }
         }
     }
     out
 }
 
+// ---------------------------------------------------------------------------
+// Atom-like mixed precision
+// ---------------------------------------------------------------------------
+
+/// Channel order by descending activation magnitude.
+fn atom_order(act_absmax: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..act_absmax.len()).collect();
+    order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    order
+}
+
+/// Atom-like mixed precision into packed codes: reordered per-group
+/// scales (group size [`ATOM_GROUP`]), top group at 8 bits.
+pub fn atom_quantize_qmat(w: &Mat, act_absmax: &[f32], bits: u8) -> QMat {
+    assert_eq!(act_absmax.len(), w.cols);
+    QMat::quantize_grouped(w, QuantSpec::new(bits), &atom_order(act_absmax), ATOM_GROUP)
+}
+
 /// Atom-like mixed precision: reorder channels by activation magnitude and
 /// quantize in groups with per-group scales (group size 32), keeping the
 /// top group in 8 bits. Captures Atom's grouped + reordered scheme at our
-/// scale.
+/// scale. Dequantizing wrapper over [`atom_quantize_qmat`].
 pub fn atom_quantize_mat(w: &Mat, act_absmax: &[f32], bits: u8) -> Mat {
     assert_eq!(act_absmax.len(), w.cols);
-    let mut order: Vec<usize> = (0..w.cols).collect();
-    order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
-    const GROUP: usize = 32;
-    let qmax_lo = ((1i32 << (bits - 1)) - 1) as f32;
-    let qmax_hi = ((1i32 << 7) - 1) as f32; // top group in 8-bit
+    if QuantSpec::supports(bits) {
+        return atom_quantize_qmat(w, act_absmax, bits).dequantize();
+    }
+    let order = atom_order(act_absmax);
+    let qmax_lo = wide_qmax(bits);
+    let qmax_hi = wide_qmax(8); // top group in 8-bit
     let mut out = w.clone();
     for i in 0..out.rows {
-        for (g, chunk) in order.chunks(GROUP).enumerate() {
+        for (g, chunk) in order.chunks(ATOM_GROUP).enumerate() {
             let qmax = if g == 0 { qmax_hi } else { qmax_lo };
             let amax = chunk.iter().map(|&c| w.at(i, c).abs()).fold(0.0f32, f32::max);
             let scale = (amax / qmax).max(1e-10);
             for &c in chunk {
                 let v = out.at(i, c);
-                *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+                *out.at_mut(i, c) = snap(v, scale, qmax);
             }
         }
     }
@@ -116,6 +220,69 @@ mod tests {
     fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
         let mut rng = Pcg64::new(seed);
         Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Verbatim copies of the fake-quant loops this module replaced — the
+    /// oracles for the bit-identity property tests below.
+    mod pre_refactor {
+        use crate::tensor::Mat;
+
+        pub fn rtn(w: &Mat, bits: u8) -> Mat {
+            let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+            let mut out = w.clone();
+            for i in 0..out.rows {
+                let row = out.row_mut(i);
+                let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+                let scale = (amax / qmax).max(1e-10);
+                for v in row.iter_mut() {
+                    *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+                }
+            }
+            out
+        }
+
+        pub fn quik(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> Mat {
+            let mut idx: Vec<usize> = (0..w.cols).collect();
+            idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+            let protected: std::collections::HashSet<usize> = idx.into_iter().take(keep).collect();
+            let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+            let mut out = w.clone();
+            for i in 0..out.rows {
+                let amax = (0..w.cols)
+                    .filter(|c| !protected.contains(c))
+                    .map(|c| w.at(i, c).abs())
+                    .fold(0.0f32, f32::max);
+                let scale = (amax / qmax).max(1e-10);
+                for c in 0..w.cols {
+                    if !protected.contains(&c) {
+                        let v = out.at(i, c);
+                        *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+                    }
+                }
+            }
+            out
+        }
+
+        pub fn atom(w: &Mat, act_absmax: &[f32], bits: u8) -> Mat {
+            let mut order: Vec<usize> = (0..w.cols).collect();
+            order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+            const GROUP: usize = 32;
+            let qmax_lo = ((1i32 << (bits - 1)) - 1) as f32;
+            let qmax_hi = ((1i32 << 7) - 1) as f32;
+            let mut out = w.clone();
+            for i in 0..out.rows {
+                for (g, chunk) in order.chunks(GROUP).enumerate() {
+                    let qmax = if g == 0 { qmax_hi } else { qmax_lo };
+                    let amax = chunk.iter().map(|&c| w.at(i, c).abs()).fold(0.0f32, f32::max);
+                    let scale = (amax / qmax).max(1e-10);
+                    for &c in chunk {
+                        let v = out.at(i, c);
+                        *out.at_mut(i, c) = (v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+                    }
+                }
+            }
+            out
+        }
     }
 
     #[test]
@@ -160,6 +327,22 @@ mod tests {
         assert_eq!(q.get("embed").data, w.get("embed").data);
         assert_eq!(q.get("head").data, w.get("head").data);
         assert_ne!(q.get("l0.wq").data, w.get("l0.wq").data);
+    }
+
+    #[test]
+    fn packed_model_matches_dense_model_bit_for_bit() {
+        let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 1);
+        let dense = rtn_quantize_model(&w, 4);
+        let packed = rtn_quantize_model_packed(&w, 4);
+        assert!(packed.has_packed());
+        assert!(packed.nbytes() < dense.nbytes());
+        for n in w.names() {
+            assert_eq!(packed.tensor(n).to_mat().data, dense.tensor(n).to_mat().data, "{n}");
+        }
+        // embed/head stay dense even in the packed model
+        assert!(packed.tensor("embed").as_f32().is_some());
+        assert!(packed.tensor("head").as_f32().is_some());
     }
 
     #[test]
@@ -220,6 +403,60 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("not idempotent: {d}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rtn_qmat_bit_identical_to_pre_refactor() {
+        Runner::new().cases(32).run("rtn QMat bit-identity", |rng| {
+            let r = gen::size(rng, 1, 8);
+            let c = gen::size(rng, 4, 80);
+            let bits = [2u8, 3, 4, 5, 8][rng.below(5)];
+            let w = Mat::from_vec(r, c, gen::vec_f32(rng, r * c));
+            let q = rtn_quantize_qmat(&w, bits);
+            if q.nbytes() >= q.dense_nbytes() {
+                return Err(format!("no packing win at {bits} bits"));
+            }
+            if q.dequantize().data == pre_refactor::rtn(&w, bits).data {
+                Ok(())
+            } else {
+                Err(format!("rtn mismatch at {bits} bits, shape {r}x{c}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quik_qmat_bit_identical_to_pre_refactor() {
+        Runner::new().cases(24).run("quik QMat bit-identity", |rng| {
+            let r = gen::size(rng, 1, 6);
+            let c = gen::size(rng, 8, 80);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let w = Mat::from_vec(r, c, gen::vec_f32(rng, r * c));
+            let absmax = gen::activations(rng, c);
+            let keep = gen::size(rng, 1, c / 2);
+            let q = quik_quantize_qmat(&w, &absmax, keep, bits);
+            if q.dequantize().data == pre_refactor::quik(&w, &absmax, keep, bits).data {
+                Ok(())
+            } else {
+                Err(format!("quik mismatch at {bits} bits, keep {keep}, shape {r}x{c}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_atom_qmat_bit_identical_to_pre_refactor() {
+        Runner::new().cases(24).run("atom QMat bit-identity", |rng| {
+            let r = gen::size(rng, 1, 6);
+            let c = gen::size(rng, 8, 96);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let w = Mat::from_vec(r, c, gen::vec_f32(rng, r * c));
+            let absmax = gen::activations(rng, c);
+            let q = atom_quantize_qmat(&w, &absmax, bits);
+            if q.dequantize().data == pre_refactor::atom(&w, &absmax, bits).data {
+                Ok(())
+            } else {
+                Err(format!("atom mismatch at {bits} bits, shape {r}x{c}"))
             }
         });
     }

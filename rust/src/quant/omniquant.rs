@@ -4,10 +4,13 @@
 //! per-output-channel clip ratio γ ∈ (0, 1] chosen to minimize the
 //! layer's weight-quantization MSE — is reproduced here with a direct
 //! grid search (exact for the per-channel separable objective, no
-//! gradients needed at our scale).
+//! gradients needed at our scale). The chosen clipped scales feed the
+//! shared QMat encode, so the packed output is bit-identical to the
+//! historical fake-quant result.
 
+use super::{snap, wide_qmax};
 use crate::model::Weights;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QMat, QuantSpec};
 
 /// Candidate clip ratios searched per output channel.
 const GRID: [f32; 12] =
@@ -18,34 +21,58 @@ const GRID: [f32; 12] =
 fn quant_row(row: &[f32], gamma: f32, qmax: f32) -> Vec<f32> {
     let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
     let scale = (gamma * amax / qmax).max(1e-10);
-    row.iter()
-        .map(|&v| (v / scale).round().clamp(-qmax - 1.0, qmax) * scale)
+    row.iter().map(|&v| snap(v, scale, qmax)).collect()
+}
+
+/// MSE-optimal per-row clipped scales (the grid search itself).
+fn clipped_scales(w: &Mat, qmax: f32) -> Vec<f32> {
+    (0..w.rows)
+        .map(|i| {
+            let row = w.row(i);
+            let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+            let mut best = (f64::MAX, GRID[GRID.len() - 1]);
+            for &g in &GRID {
+                let q = quant_row(row, g, qmax);
+                let mse: f64 = row
+                    .iter()
+                    .zip(&q)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                if mse < best.0 {
+                    best = (mse, g);
+                }
+            }
+            (best.1 * amax / qmax).max(1e-10)
+        })
         .collect()
 }
 
+/// Clipped RTN into packed codes (bits ∈ [2, 8]): the MSE-optimal
+/// per-row scales feed the shared QMat encode.
+pub fn omniquant_quantize_qmat(w: &Mat, bits: u8) -> QMat {
+    let spec = QuantSpec::new(bits);
+    let scales = clipped_scales(w, spec.qmax());
+    QMat::quantize_with_scales(w, spec, scales)
+}
+
 /// Per-output-channel clipped RTN with MSE-optimal clip ratio.
+/// Dequantizing wrapper over [`omniquant_quantize_qmat`].
 pub fn omniquant_quantize_mat(w: &Mat, bits: u8) -> Mat {
     if bits >= 16 {
         return w.clone();
     }
-    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    if QuantSpec::supports(bits) {
+        return omniquant_quantize_qmat(w, bits).dequantize();
+    }
+    // Wide grids: snap onto the clipped f32 grid directly.
+    let qmax = wide_qmax(bits);
+    let scales = clipped_scales(w, qmax);
     let mut out = w.clone();
     for i in 0..w.rows {
-        let row = w.row(i);
-        let mut best = (f64::MAX, GRID[GRID.len() - 1]);
-        for &g in &GRID {
-            let q = quant_row(row, g, qmax);
-            let mse: f64 = row
-                .iter()
-                .zip(&q)
-                .map(|(a, b)| ((a - b) as f64).powi(2))
-                .sum();
-            if mse < best.0 {
-                best = (mse, g);
-            }
+        let s = scales[i];
+        for v in out.row_mut(i) {
+            *v = snap(*v, s, qmax);
         }
-        let q = quant_row(row, best.1, qmax);
-        out.row_mut(i).copy_from_slice(&q);
     }
     out
 }
@@ -56,6 +83,17 @@ pub fn omniquant_quantize_model(weights: &Weights, bits: u8) -> Weights {
     out.map_linear_weights(|_, m| {
         *m = omniquant_quantize_mat(m, bits);
     });
+    out
+}
+
+/// [`omniquant_quantize_model`] with packed storage. Falls back to the
+/// dense fake-quant model when `bits` doesn't pack.
+pub fn omniquant_quantize_model_packed(weights: &Weights, bits: u8) -> Weights {
+    if !QuantSpec::supports(bits) {
+        return omniquant_quantize_model(weights, bits);
+    }
+    let mut out = weights.clone();
+    out.pack_linear_weights(|_, m| omniquant_quantize_qmat(m, bits));
     out
 }
 
@@ -72,6 +110,33 @@ mod tests {
             .map(|(x, y)| ((x - y) as f64).powi(2))
             .sum::<f64>()
             / a.data.len() as f64
+    }
+
+    /// Verbatim pre-refactor clipped RTN — the oracle for the QMat
+    /// bit-identity property test.
+    fn pre_refactor_omniquant(w: &Mat, bits: u8) -> Mat {
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let quant_row = |row: &[f32], gamma: f32| -> Vec<f32> {
+            let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+            let scale = (gamma * amax / qmax).max(1e-10);
+            row.iter()
+                .map(|&v| (v / scale).round().clamp(-qmax - 1.0, qmax) * scale)
+                .collect()
+        };
+        let mut out = w.clone();
+        for i in 0..w.rows {
+            let row = w.row(i);
+            let mut best = (f64::MAX, GRID[GRID.len() - 1]);
+            for &g in &GRID {
+                let q = quant_row(row, g);
+                let e: f64 = row.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                if e < best.0 {
+                    best = (e, g);
+                }
+            }
+            out.row_mut(i).copy_from_slice(&quant_row(row, best.1));
+        }
+        out
     }
 
     #[test]
@@ -124,5 +189,33 @@ mod tests {
             vals.dedup();
             assert!(vals.len() <= 16);
         }
+    }
+
+    #[test]
+    fn prop_omniquant_qmat_bit_identical_to_pre_refactor() {
+        use crate::util::propcheck::{gen, Runner};
+        Runner::new().cases(20).run("omniquant QMat bit-identity", |rng| {
+            let r = gen::size(rng, 1, 6);
+            let c = gen::size(rng, 4, 64);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let w = Mat::from_vec(r, c, gen::vec_f32(rng, r * c));
+            let q = omniquant_quantize_qmat(&w, bits);
+            if q.dequantize().data == pre_refactor_omniquant(&w, bits).data {
+                Ok(())
+            } else {
+                Err(format!("omniquant mismatch at {bits} bits, shape {r}x{c}"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_model_matches_dense() {
+        let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 4);
+        let dense = omniquant_quantize_model(&w, 4);
+        let packed = omniquant_quantize_model_packed(&w, 4);
+        assert!(packed.has_packed());
+        assert!(packed.nbytes() < dense.nbytes());
+        assert_eq!(packed.tensor("l0.wd").to_mat().data, dense.get("l0.wd").data);
     }
 }

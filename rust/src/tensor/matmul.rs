@@ -10,6 +10,44 @@ use crate::util::threadpool::par_ranges;
 /// Threshold below which threading overhead dominates.
 const PAR_FLOPS_THRESHOLD: usize = 1 << 22;
 
+/// Resolve an explicit thread count (0 = the flops-based default shared
+/// by every dense and packed matmul kernel).
+pub(crate) fn resolve_threads(threads: usize, flops: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else if flops < PAR_FLOPS_THRESHOLD {
+        1
+    } else {
+        crate::util::threadpool::ThreadPool::default_parallelism()
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation for ILP — the one inner
+/// kernel `matmul_transb` and the packed `matmul_transb_deq` share, which
+/// is what makes the packed path bit-identical to the dense oracle.
+#[inline]
+pub(crate) fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    debug_assert_eq!(k, b.len());
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = k / 4;
+    for c4 in 0..chunks {
+        let p = c4 * 4;
+        s0 += a[p] * b[p];
+        s1 += a[p + 1] * b[p + 1];
+        s2 += a[p + 2] * b[p + 2];
+        s3 += a[p + 3] * b[p + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for p in chunks * 4..k {
+        s += a[p] * b[p];
+    }
+    s
+}
+
 /// C = A · B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let mut c = Mat::zeros(a.rows, b.cols);
@@ -58,15 +96,16 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 /// C = A · Bᵀ (B given row-major as (n, k)): the natural layout for
 /// `X · Wᵀ` linear layers, avoiding a materialized transpose of W.
 pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
+    matmul_transb_with(a, b, 0)
+}
+
+/// [`matmul_transb`] with an explicit thread count (0 = the flops-based
+/// default; benches pass `DQ_WORKERS` for apples-to-apples rows).
+pub fn matmul_transb_with(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_transb inner-dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
-    let flops = 2 * m * k * n;
-    let threads = if flops < PAR_FLOPS_THRESHOLD {
-        1
-    } else {
-        crate::util::threadpool::ThreadPool::default_parallelism()
-    };
+    let threads = resolve_threads(threads, 2 * m * k * n);
     let a_data = &a.data;
     let b_data = &b.data;
     let c_ptr = SendPtr(c.data.as_mut_ptr());
@@ -76,33 +115,16 @@ pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
             let c_row = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
             let a_row = &a_data[i * k..(i + 1) * k];
             for (j, cij) in c_row.iter_mut().enumerate() {
-                let b_row = &b_data[j * k..(j + 1) * k];
-                // Dot product with 4-way unrolled accumulation for ILP.
-                let mut s0 = 0.0f32;
-                let mut s1 = 0.0f32;
-                let mut s2 = 0.0f32;
-                let mut s3 = 0.0f32;
-                let chunks = k / 4;
-                for c4 in 0..chunks {
-                    let p = c4 * 4;
-                    s0 += a_row[p] * b_row[p];
-                    s1 += a_row[p + 1] * b_row[p + 1];
-                    s2 += a_row[p + 2] * b_row[p + 2];
-                    s3 += a_row[p + 3] * b_row[p + 3];
-                }
-                let mut s = s0 + s1 + s2 + s3;
-                for p in chunks * 4..k {
-                    s += a_row[p] * b_row[p];
-                }
-                *cij = s;
+                *cij = dot_unrolled(a_row, &b_data[j * k..(j + 1) * k]);
             }
         }
     });
     c
 }
 
-/// Shareable raw pointer for the disjoint-rows parallel write pattern.
-struct SendPtr(*mut f32);
+/// Shareable raw pointer for the disjoint-element parallel write pattern
+/// (each thread writes a disjoint row or column range).
+pub(crate) struct SendPtr(pub(crate) *mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 

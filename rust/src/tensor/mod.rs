@@ -1,11 +1,18 @@
 //! Minimal dense f32 tensor substrate (no `ndarray` offline): row-major
 //! matrices with blocked, multi-threaded matmul — enough to run the tiny
 //! Llama-style models natively, compute GPTQ Hessians, and verify the
-//! PJRT-executed artifacts against a pure-rust oracle.
+//! PJRT-executed artifacts against a pure-rust oracle. `qmat` adds the
+//! packed quantized-weight representation (integer codes + scales) and
+//! its streaming/integer matmul kernels.
 
 mod matmul;
+pub mod qmat;
 
-pub use matmul::{matmul, matmul_into, matmul_transb};
+pub use matmul::{matmul, matmul_into, matmul_transb, matmul_transb_with};
+pub use qmat::{
+    matmul_transb_deq, matmul_transb_deq_with, matmul_transb_q, matmul_transb_q_with,
+    quantize_into, QMat, QuantSpec,
+};
 
 /// Row-major 2-D f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

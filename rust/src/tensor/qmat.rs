@@ -1,0 +1,719 @@
+//! Packed quantized-weight storage: integer codes + scales instead of
+//! dequantized f32 — the representation that actually realizes the
+//! paper's memory story (a 4-bit model holds ~1/8 of the f32 bytes
+//! instead of pretending).
+//!
+//! [`QMat`] stores row-major i8 codes (nibble-packed at ≤ 4 bits) with one
+//! of three scale schemes covering every weight quantizer in `quant`:
+//!
+//! * **per-row** symmetric scales (RTN, GPTQ, OmniQuant),
+//! * **protected** — per-row scales over the unprotected columns plus
+//!   full-precision values for the protected ones (QUIK mixed precision),
+//! * **grouped** — reordered per-group scales with the top group kept at
+//!   8 bits (Atom mixed precision).
+//!
+//! The equivalence contract (see `docs/QUANTIZED_STORAGE.md`):
+//! [`QMat::dequantize`] is **bit-identical** to the historical fake-quant
+//! output (`code as f32 * scale` reproduces
+//! `(v / scale).round().clamp(..) * scale` exactly), and
+//! [`matmul_transb_deq`] is bit-identical to `matmul_transb` against the
+//! dequantized matrix (same dot kernel, same operands). The integer path
+//! [`matmul_transb_q`] trades that bit-exactness for i8×i8 → i32
+//! accumulation with scales applied once per output; it agrees with the
+//! dequantized oracle to f32 reassociation error (~1e-6 relative).
+
+use super::matmul::{dot_unrolled, resolve_threads, SendPtr};
+use super::Mat;
+use crate::util::threadpool::par_ranges;
+
+/// Symmetric quantization grid: bit width + derived constants. The one
+/// scale/round/clamp definition every weight quantizer shares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSpec {
+    bits: u8,
+}
+
+impl QuantSpec {
+    /// A packed grid at `bits` ∈ [2, 8]. Widths outside that range don't
+    /// pack (use [`QuantSpec::supports`] to gate callers).
+    pub fn new(bits: u8) -> QuantSpec {
+        assert!(
+            QuantSpec::supports(bits),
+            "QMat packs 2..=8 bit codes, got {bits}"
+        );
+        QuantSpec { bits }
+    }
+
+    /// Whether `bits` fits the packed representation.
+    pub fn supports(bits: u8) -> bool {
+        (2..=8).contains(&bits)
+    }
+
+    /// The code bit width.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Largest positive code on the symmetric grid (2^{b-1} − 1).
+    pub fn qmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Most negative code (−2^{b-1}).
+    pub fn qmin(&self) -> f32 {
+        -self.qmax() - 1.0
+    }
+
+    /// Scale of a symmetric grid spanning |v| ≤ `amax` (floored away from
+    /// zero exactly like the historical quantizers).
+    pub fn scale_for(&self, amax: f32) -> f32 {
+        (amax / self.qmax()).max(1e-10)
+    }
+
+    /// Whether codes nibble-pack two per byte.
+    pub fn packs_nibbles(&self) -> bool {
+        self.bits <= 4
+    }
+
+    /// Encode one value on the grid `scale`: round-to-nearest, clamped to
+    /// [qmin, qmax] — `code as f32 * scale` reproduces the historical
+    /// fake-quant value bit-for-bit.
+    #[inline]
+    pub fn encode(&self, v: f32, scale: f32) -> i8 {
+        (v / scale).round().clamp(self.qmin(), self.qmax()) as i8
+    }
+}
+
+/// The shared scale/round/clamp kernel: encode `row` on the symmetric
+/// grid `scale` into integer codes. Every quantizer in `quant` funnels
+/// through here (directly or via the [`QMat`] constructors).
+pub fn quantize_into(spec: QuantSpec, row: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(row.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = spec.encode(v, scale);
+    }
+}
+
+/// Code storage: plain i8, or two's-complement nibbles (two per byte,
+/// even column in the low nibble; rows are byte-aligned).
+#[derive(Clone, Debug, PartialEq)]
+enum Codes {
+    I8(Vec<i8>),
+    I4(Vec<u8>),
+}
+
+#[inline]
+fn sign_extend_nibble(n: u8) -> i8 {
+    (((n & 0x0F) << 4) as i8) >> 4
+}
+
+impl Codes {
+    fn pack(flat: Vec<i8>, rows: usize, cols: usize, spec: QuantSpec) -> Codes {
+        debug_assert_eq!(flat.len(), rows * cols);
+        if !spec.packs_nibbles() {
+            return Codes::I8(flat);
+        }
+        let bpr = cols.div_ceil(2);
+        let mut v = vec![0u8; rows * bpr];
+        for i in 0..rows {
+            for c in 0..cols {
+                let code = flat[i * cols + c];
+                debug_assert!((-8..=7).contains(&code), "i4 code {code} out of range");
+                let nib = (code as u8) & 0x0F;
+                v[i * bpr + c / 2] |= if c % 2 == 0 { nib } else { nib << 4 };
+            }
+        }
+        Codes::I4(v)
+    }
+
+    fn nbytes(&self) -> u64 {
+        match self {
+            Codes::I8(v) => v.len() as u64,
+            Codes::I4(v) => v.len() as u64,
+        }
+    }
+
+    fn row_into(&self, i: usize, cols: usize, out: &mut [i8]) {
+        debug_assert_eq!(out.len(), cols);
+        match self {
+            Codes::I8(v) => out.copy_from_slice(&v[i * cols..(i + 1) * cols]),
+            Codes::I4(v) => {
+                let bpr = cols.div_ceil(2);
+                let row = &v[i * bpr..(i + 1) * bpr];
+                for (c, o) in out.iter_mut().enumerate() {
+                    let b = row[c / 2];
+                    *o = sign_extend_nibble(if c % 2 == 0 { b } else { b >> 4 });
+                }
+            }
+        }
+    }
+}
+
+/// How codes map back to f32 — the per-quantizer scale metadata.
+#[derive(Clone, Debug, PartialEq)]
+enum Scheme {
+    /// One symmetric scale per output row (RTN / GPTQ / OmniQuant).
+    PerRow {
+        /// len = rows.
+        scales: Vec<f32>,
+    },
+    /// QUIK mixed precision: per-row scales scanned over the unprotected
+    /// columns; protected columns keep their full-precision values (their
+    /// codes are stored as 0).
+    Protected {
+        /// len = rows.
+        scales: Vec<f32>,
+        /// len = cols; true = protected.
+        mask: Vec<bool>,
+        /// Ascending protected column indices.
+        cols_idx: Vec<u32>,
+        /// rows × cols_idx.len(), row-major full-precision values.
+        values: Vec<f32>,
+    },
+    /// Atom mixed precision: columns reordered by activation magnitude,
+    /// quantized in groups with per-group scales; the top group's codes
+    /// are 8-bit (stored separately so the bulk can still nibble-pack).
+    Grouped {
+        /// Inverse permutation: rank[c] = position of column c in the
+        /// activation-magnitude order.
+        rank: Vec<u32>,
+        /// Columns per group.
+        group: usize,
+        /// Groups per row (= ceil(cols / group)).
+        n_groups: usize,
+        /// rows × n_groups, row-major.
+        scales: Vec<f32>,
+        /// rows × hi_len 8-bit codes of group 0 (bulk codes there are 0).
+        hi_codes: Vec<i8>,
+        /// Top-group length (= min(group, cols)).
+        hi_len: usize,
+    },
+}
+
+impl Scheme {
+    fn nbytes(&self) -> u64 {
+        match self {
+            Scheme::PerRow { scales } => 4 * scales.len() as u64,
+            Scheme::Protected { scales, mask, cols_idx, values } => {
+                4 * (scales.len() + cols_idx.len() + values.len()) as u64 + mask.len() as u64
+            }
+            Scheme::Grouped { rank, scales, hi_codes, .. } => {
+                4 * (rank.len() + scales.len()) as u64 + hi_codes.len() as u64
+            }
+        }
+    }
+}
+
+/// A packed quantized matrix: integer codes + scale metadata standing in
+/// for a dense `[rows, cols]` f32 weight (applied as `x · Wᵀ`, exactly
+/// like [`Mat`] weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QMat {
+    rows: usize,
+    cols: usize,
+    spec: QuantSpec,
+    codes: Codes,
+    scheme: Scheme,
+}
+
+impl QMat {
+    /// RTN: per-row abs-max symmetric scales.
+    pub fn quantize_rtn(w: &Mat, spec: QuantSpec) -> QMat {
+        let scales = (0..w.rows)
+            .map(|i| {
+                let amax = w.row(i).iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+                spec.scale_for(amax)
+            })
+            .collect();
+        QMat::quantize_with_scales(w, spec, scales)
+    }
+
+    /// Encode on caller-provided per-row grids (GPTQ's final snap,
+    /// OmniQuant's clipped scales).
+    pub fn quantize_with_scales(w: &Mat, spec: QuantSpec, scales: Vec<f32>) -> QMat {
+        assert_eq!(scales.len(), w.rows, "one scale per output row");
+        let mut flat = vec![0i8; w.rows * w.cols];
+        for i in 0..w.rows {
+            quantize_into(spec, w.row(i), scales[i], &mut flat[i * w.cols..(i + 1) * w.cols]);
+        }
+        QMat {
+            rows: w.rows,
+            cols: w.cols,
+            spec,
+            codes: Codes::pack(flat, w.rows, w.cols, spec),
+            scheme: Scheme::PerRow { scales },
+        }
+    }
+
+    /// QUIK-style mixed precision: `mask[c]` columns keep full precision,
+    /// the rest land on a per-row grid whose scale scans unprotected
+    /// columns only.
+    pub fn quantize_protected(w: &Mat, spec: QuantSpec, mask: &[bool]) -> QMat {
+        assert_eq!(mask.len(), w.cols, "one mask entry per input column");
+        let cols_idx: Vec<u32> = mask
+            .iter()
+            .enumerate()
+            .filter_map(|(c, &m)| m.then_some(c as u32))
+            .collect();
+        let mut scales = Vec::with_capacity(w.rows);
+        let mut values = Vec::with_capacity(w.rows * cols_idx.len());
+        let mut flat = vec![0i8; w.rows * w.cols];
+        for i in 0..w.rows {
+            let row = w.row(i);
+            let mut amax = 0.0f32;
+            for (c, &v) in row.iter().enumerate() {
+                if !mask[c] {
+                    amax = amax.max(v.abs());
+                }
+            }
+            let scale = spec.scale_for(amax);
+            scales.push(scale);
+            let crow = &mut flat[i * w.cols..(i + 1) * w.cols];
+            for (c, &v) in row.iter().enumerate() {
+                if mask[c] {
+                    values.push(v);
+                } else {
+                    crow[c] = spec.encode(v, scale);
+                }
+            }
+        }
+        QMat {
+            rows: w.rows,
+            cols: w.cols,
+            spec,
+            codes: Codes::pack(flat, w.rows, w.cols, spec),
+            scheme: Scheme::Protected { scales, mask: mask.to_vec(), cols_idx, values },
+        }
+    }
+
+    /// Atom-style mixed precision: `order` permutes columns by activation
+    /// magnitude; each `group`-column chunk gets its own per-row scale,
+    /// and the first chunk is kept at 8 bits.
+    pub fn quantize_grouped(w: &Mat, spec: QuantSpec, order: &[usize], group: usize) -> QMat {
+        assert_eq!(order.len(), w.cols, "order must permute the input columns");
+        assert!(group > 0);
+        let hi = QuantSpec::new(8);
+        let n_groups = w.cols.div_ceil(group);
+        let hi_len = group.min(w.cols);
+        let mut rank = vec![0u32; w.cols];
+        for (r, &c) in order.iter().enumerate() {
+            rank[c] = r as u32;
+        }
+        let mut scales = vec![0f32; w.rows * n_groups];
+        let mut hi_codes = vec![0i8; w.rows * hi_len];
+        let mut flat = vec![0i8; w.rows * w.cols];
+        for i in 0..w.rows {
+            for (g, chunk) in order.chunks(group).enumerate() {
+                let gspec = if g == 0 { hi } else { spec };
+                let amax = chunk.iter().map(|&c| w.at(i, c).abs()).fold(0.0f32, f32::max);
+                let scale = gspec.scale_for(amax);
+                scales[i * n_groups + g] = scale;
+                for (r, &c) in chunk.iter().enumerate() {
+                    let code = gspec.encode(w.at(i, c), scale);
+                    if g == 0 {
+                        hi_codes[i * hi_len + r] = code;
+                    } else {
+                        flat[i * w.cols + c] = code;
+                    }
+                }
+            }
+        }
+        QMat {
+            rows: w.rows,
+            cols: w.cols,
+            spec,
+            codes: Codes::pack(flat, w.rows, w.cols, spec),
+            scheme: Scheme::Grouped { rank, group, n_groups, scales, hi_codes, hi_len },
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// The bulk-code grid.
+    pub fn spec(&self) -> QuantSpec {
+        self.spec
+    }
+
+    /// Scheme label for reports ("per-row" / "protected" / "grouped").
+    pub fn scheme_label(&self) -> &'static str {
+        match self.scheme {
+            Scheme::PerRow { .. } => "per-row",
+            Scheme::Protected { .. } => "protected",
+            Scheme::Grouped { .. } => "grouped",
+        }
+    }
+
+    /// True packed footprint: codes + scales + mixed-precision metadata.
+    pub fn nbytes(&self) -> u64 {
+        self.codes.nbytes() + self.scheme.nbytes()
+    }
+
+    /// Bytes of the dense f32 equivalent.
+    pub fn dense_nbytes(&self) -> u64 {
+        (self.rows * self.cols * 4) as u64
+    }
+
+    /// Packed-size estimate for a per-row-scaled `[rows, cols]` matrix —
+    /// budget accounting before the matrix exists.
+    pub fn packed_estimate(rows: usize, cols: usize, spec: QuantSpec) -> u64 {
+        let codes = if spec.packs_nibbles() { rows * cols.div_ceil(2) } else { rows * cols };
+        (codes + 4 * rows) as u64
+    }
+
+    /// Unpack row `i`'s bulk codes (protected columns read 0; grouped
+    /// top-group columns read 0 — their codes live in the scheme).
+    fn codes_row_into(&self, i: usize, out: &mut [i8]) {
+        self.codes.row_into(i, self.cols, out);
+    }
+
+    /// Decode row `i` into `out` — bit-identical to the historical
+    /// fake-quant output for every scheme.
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        let mut buf = vec![0i8; self.cols];
+        self.decode_row_scratch(i, &mut buf, out);
+    }
+
+    /// [`QMat::decode_row_into`] with a caller-held code scratch — the
+    /// streaming matmul and `dequantize` reuse one buffer across rows
+    /// instead of allocating per weight row.
+    fn decode_row_scratch(&self, i: usize, buf: &mut [i8], out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols);
+        self.codes_row_into(i, buf);
+        match &self.scheme {
+            Scheme::PerRow { scales } => {
+                let s = scales[i];
+                for (o, &c) in out.iter_mut().zip(buf.iter()) {
+                    *o = c as f32 * s;
+                }
+            }
+            Scheme::Protected { scales, mask, cols_idx, values } => {
+                let s = scales[i];
+                for (o, &c) in out.iter_mut().zip(buf.iter()) {
+                    *o = c as f32 * s;
+                }
+                let vrow = &values[i * cols_idx.len()..(i + 1) * cols_idx.len()];
+                debug_assert_eq!(mask.len(), self.cols);
+                for (&c, &v) in cols_idx.iter().zip(vrow) {
+                    out[c as usize] = v;
+                }
+            }
+            Scheme::Grouped { rank, group, n_groups, scales, hi_codes, hi_len } => {
+                let srow = &scales[i * n_groups..(i + 1) * n_groups];
+                let hrow = &hi_codes[i * hi_len..(i + 1) * hi_len];
+                for (c, o) in out.iter_mut().enumerate() {
+                    let r = rank[c] as usize;
+                    let g = r / group;
+                    let code = if g == 0 { hrow[r] } else { buf[c] };
+                    *o = code as f32 * srow[g];
+                }
+            }
+        }
+    }
+
+    /// Materialize the dense f32 matrix this QMat stands in for.
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let mut buf = vec![0i8; self.cols];
+        for i in 0..self.rows {
+            let row = &mut out.data[i * self.cols..(i + 1) * self.cols];
+            self.decode_row_scratch(i, &mut buf, row);
+        }
+        out
+    }
+}
+
+/// `y = x · dequantize(Q)ᵀ` streaming codes instead of a materialized
+/// dense weight — **bit-identical** to
+/// `matmul_transb(x, &q.dequantize())` (same dot kernel, same decoded
+/// operands), with ~4–8× less weight memory traffic.
+pub fn matmul_transb_deq(x: &Mat, q: &QMat) -> Mat {
+    matmul_transb_deq_with(x, q, 0)
+}
+
+/// [`matmul_transb_deq`] with an explicit thread count (0 = the same
+/// flops-based default the f32 kernels use; benches pass `DQ_WORKERS`).
+pub fn matmul_transb_deq_with(x: &Mat, q: &QMat, threads: usize) -> Mat {
+    assert_eq!(x.cols, q.cols, "matmul_transb_deq inner-dim mismatch");
+    let (m, k, n) = (x.rows, x.cols, q.rows);
+    let mut y = Mat::zeros(m, n);
+    let threads = resolve_threads(threads, 2 * m * k * n);
+    let x_data = &x.data;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    par_ranges(n, threads, |jlo, jhi| {
+        let y_ptr = &y_ptr;
+        let mut cbuf = vec![0i8; k];
+        let mut wrow = vec![0f32; k];
+        for j in jlo..jhi {
+            q.decode_row_scratch(j, &mut cbuf, &mut wrow);
+            for i in 0..m {
+                let v = dot_unrolled(&x_data[i * k..(i + 1) * k], &wrow);
+                // SAFETY: each thread writes the disjoint column range
+                // [jlo, jhi) — no two threads touch the same element.
+                unsafe { *y_ptr.0.add(i * n + j) = v };
+            }
+        }
+    });
+    y
+}
+
+/// The integer forward path: activations on the per-row asymmetric
+/// fake-quant grid at `a_levels` (≤ 256 levels), i8 weight codes,
+/// **i8×i8 → i32 accumulation**, scales applied once per output:
+///
+/// ```text
+/// y[i][j] = s_w[j] · (s_x[i] · Σ_k qx[i][k]·qw[j][k]  +  mn[i] · Σ_k qw[j][k])
+/// ```
+///
+/// (plus the f32 protected-column contribution for QUIK-packed weights).
+/// `x` must already be on the `a_levels` fake-quant grid — the rows'
+/// codes are recovered exactly. Falls back to [`matmul_transb_deq`] when
+/// the activations aren't integer-gridded (`a_levels` > 256, i.e. fp or
+/// wide settings) or the weights use grouped scales.
+pub fn matmul_transb_q(x: &Mat, q: &QMat, a_levels: f32) -> Mat {
+    matmul_transb_q_with(x, q, a_levels, 0)
+}
+
+/// [`matmul_transb_q`] with an explicit thread count (0 = default).
+pub fn matmul_transb_q_with(x: &Mat, q: &QMat, a_levels: f32, threads: usize) -> Mat {
+    assert_eq!(x.cols, q.cols, "matmul_transb_q inner-dim mismatch");
+    if a_levels > 256.0 || matches!(q.scheme, Scheme::Grouped { .. }) {
+        return matmul_transb_deq_with(x, q, threads);
+    }
+    let (m, k, n) = (x.rows, x.cols, q.rows);
+    // Recover the activation codes: x rows sit on the fake-quant grid, so
+    // round-to-nearest against the recomputed (mn, scale) is exact.
+    let mut qx = vec![0u8; m * k];
+    let mut sx = vec![0f32; m];
+    let mut mns = vec![0f32; m];
+    let hi = a_levels - 1.0;
+    for i in 0..m {
+        let row = x.row(i);
+        let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+        for &v in row {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let scale = (mx - mn) / (a_levels - 1.0).max(1.0);
+        mns[i] = mn;
+        if scale <= 0.0 {
+            continue; // constant row: codes 0, offset carries the value
+        }
+        sx[i] = scale;
+        for (o, &v) in qx[i * k..(i + 1) * k].iter_mut().zip(row) {
+            *o = ((v - mn) / scale).round().clamp(0.0, hi) as u8;
+        }
+    }
+    let mut y = Mat::zeros(m, n);
+    let threads = resolve_threads(threads, 2 * m * k * n);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    par_ranges(n, threads, |jlo, jhi| {
+        let y_ptr = &y_ptr;
+        let mut wbuf = vec![0i8; k];
+        for j in jlo..jhi {
+            q.codes_row_into(j, &mut wbuf);
+            let colsum: i32 = wbuf.iter().map(|&c| c as i32).sum();
+            let (sw, prot) = match &q.scheme {
+                Scheme::PerRow { scales } => (scales[j], None),
+                Scheme::Protected { scales, cols_idx, values, .. } => {
+                    let np = cols_idx.len();
+                    (scales[j], Some((cols_idx, &values[j * np..(j + 1) * np])))
+                }
+                Scheme::Grouped { .. } => unreachable!("grouped delegates to the deq path"),
+            };
+            for i in 0..m {
+                let qrow = &qx[i * k..(i + 1) * k];
+                let mut acc: i32 = 0;
+                for (&a, &w) in qrow.iter().zip(wbuf.iter()) {
+                    acc += a as i32 * w as i32;
+                }
+                let mut v = sw * (sx[i] * acc as f32 + mns[i] * colsum as f32);
+                if let Some((idx, vals)) = prot {
+                    let xrow = x.row(i);
+                    for (&c, &pv) in idx.iter().zip(vals) {
+                        v += xrow[c as usize] * pv;
+                    }
+                }
+                // SAFETY: disjoint column range per thread (see above).
+                unsafe { *y_ptr.0.add(i * n + j) = v };
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_transb;
+    use crate::util::prng::Pcg64;
+    use crate::util::propcheck::{gen, Runner};
+
+    fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn i4_pack_unpack_roundtrips_all_code_values() {
+        // Every i4 code value, at even and odd column positions, plus an
+        // odd column count exercising the padded trailing nibble.
+        let all: Vec<i8> = (-8..=7).collect();
+        for cols in [16usize, 15, 1, 7] {
+            let rows = 3;
+            let flat: Vec<i8> =
+                (0..rows * cols).map(|i| all[(i * 5 + i / cols) % all.len()]).collect();
+            let codes = Codes::pack(flat.clone(), rows, cols, QuantSpec::new(4));
+            assert!(matches!(codes, Codes::I4(_)));
+            let mut out = vec![0i8; cols];
+            for i in 0..rows {
+                codes.row_into(i, cols, &mut out);
+                assert_eq!(out, flat[i * cols..(i + 1) * cols], "row {i}, cols {cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_i4_roundtrip_random_codes() {
+        Runner::new().cases(32).run("i4 pack/unpack roundtrip", |rng| {
+            let rows = gen::size(rng, 1, 6);
+            let cols = gen::size(rng, 1, 40);
+            let flat: Vec<i8> =
+                (0..rows * cols).map(|_| (rng.below(16) as i8) - 8).collect();
+            let codes = Codes::pack(flat.clone(), rows, cols, QuantSpec::new(3));
+            let mut out = vec![0i8; cols];
+            for i in 0..rows {
+                codes.row_into(i, cols, &mut out);
+                if out != flat[i * cols..(i + 1) * cols] {
+                    return Err(format!("row {i} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spec_grid_constants() {
+        let s = QuantSpec::new(4);
+        assert_eq!(s.qmax(), 7.0);
+        assert_eq!(s.qmin(), -8.0);
+        assert!(s.packs_nibbles());
+        assert!(!QuantSpec::new(8).packs_nibbles());
+        assert!(!QuantSpec::supports(16));
+        assert!(!QuantSpec::supports(1));
+        // encode saturates instead of wrapping
+        assert_eq!(s.encode(1e30, 1e-10), 7);
+        assert_eq!(s.encode(-1e30, 1e-10), -8);
+    }
+
+    #[test]
+    fn nbytes_reports_true_packed_footprint() {
+        let w = rand_mat(1, 16, 64);
+        let q4 = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        let q8 = QMat::quantize_rtn(&w, QuantSpec::new(8));
+        assert_eq!(q4.nbytes(), (16 * 32 + 16 * 4) as u64); // nibbles + scales
+        assert_eq!(q8.nbytes(), (16 * 64 + 16 * 4) as u64);
+        assert_eq!(q4.dense_nbytes(), 16 * 64 * 4);
+        assert!(q4.dense_nbytes() / q4.nbytes() >= 6, "4-bit must be ≥ 6× smaller");
+        assert_eq!(QMat::packed_estimate(16, 64, QuantSpec::new(4)), q4.nbytes());
+        assert_eq!(QMat::packed_estimate(16, 64, QuantSpec::new(8)), q8.nbytes());
+    }
+
+    #[test]
+    fn deq_matmul_is_bit_identical_to_dense_oracle() {
+        let x = rand_mat(2, 9, 48);
+        let w = rand_mat(3, 21, 48);
+        for bits in [4u8, 8] {
+            let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+            let oracle = matmul_transb(&x, &q.dequantize());
+            let fast = matmul_transb_deq(&x, &q);
+            assert_eq!(fast.data, oracle.data, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn integer_matmul_matches_oracle_closely() {
+        let mut x = rand_mat(4, 7, 64);
+        crate::model::fake_quant_rows(&mut x, 16.0); // the W4A4 grid
+        let w = rand_mat(5, 19, 64);
+        for bits in [4u8, 8] {
+            let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+            let oracle = matmul_transb(&x, &q.dequantize());
+            let fast = matmul_transb_q(&x, &q, 16.0);
+            let d = fast.max_abs_diff(&oracle);
+            let tol = 1e-4 * oracle.max_abs().max(1.0);
+            assert!(d <= tol, "bits {bits}: diff {d} > {tol}");
+        }
+    }
+
+    #[test]
+    fn integer_matmul_handles_constant_rows_and_protected_cols() {
+        let k = 32;
+        let mut x = Mat::from_fn(3, k, |i, j| if i == 0 { 2.5 } else { (i * k + j) as f32 * 0.01 });
+        crate::model::fake_quant_rows(&mut x, 16.0); // row 0 is constant → untouched
+        let w = rand_mat(6, 11, k);
+        let mut mask = vec![false; k];
+        mask[3] = true;
+        mask[17] = true;
+        let q = QMat::quantize_protected(&w, QuantSpec::new(4), &mask);
+        let oracle = matmul_transb(&x, &q.dequantize());
+        let fast = matmul_transb_q(&x, &q, 16.0);
+        let d = fast.max_abs_diff(&oracle);
+        assert!(d <= 1e-4 * oracle.max_abs().max(1.0), "diff {d}");
+    }
+
+    #[test]
+    fn fp_activations_and_grouped_weights_fall_back_to_deq() {
+        let x = rand_mat(7, 5, 64);
+        let w = rand_mat(8, 13, 64);
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        // fp sentinel → deq path → bit-identical to the oracle
+        assert_eq!(
+            matmul_transb_q(&x, &q, 65536.0).data,
+            matmul_transb(&x, &q.dequantize()).data
+        );
+        let order: Vec<usize> = (0..64).rev().collect();
+        let g = QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 32);
+        assert_eq!(
+            matmul_transb_q(&x, &g, 16.0).data,
+            matmul_transb(&x, &g.dequantize()).data
+        );
+    }
+
+    #[test]
+    fn explicit_thread_count_is_deterministic() {
+        let x = rand_mat(9, 33, 48);
+        let w = rand_mat(10, 29, 48);
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        let serial = matmul_transb_deq_with(&x, &q, 1);
+        let parallel = matmul_transb_deq_with(&x, &q, 4);
+        assert_eq!(serial.data, parallel.data);
+        let mut xq = x.clone();
+        crate::model::fake_quant_rows(&mut xq, 16.0);
+        assert_eq!(
+            matmul_transb_q_with(&xq, &q, 16.0, 1).data,
+            matmul_transb_q_with(&xq, &q, 16.0, 4).data
+        );
+    }
+
+    #[test]
+    fn grouped_scheme_reports_metadata_bytes() {
+        let w = rand_mat(11, 8, 64);
+        let order: Vec<usize> = (0..64).collect();
+        let g = QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 32);
+        assert_eq!(g.scheme_label(), "grouped");
+        // codes (nibbles) + rank + scales + hi codes
+        let expect = (8 * 32) + (64 * 4) + (8 * 2 * 4) + (8 * 32);
+        assert_eq!(g.nbytes(), expect as u64);
+        assert!(g.nbytes() < g.dense_nbytes());
+    }
+}

@@ -1,0 +1,144 @@
+//! Packed-storage pipeline integration: `--packed` runs must (a) shrink
+//! 4-bit weight residency to ≤ 1/6 of f32 bytes, (b) dequantize
+//! bit-identically to the dense fake-quant pipeline, and (c) evaluate
+//! through the native integer forward to the same perplexity as the
+//! dense fake-quant forward (within 1e-4 relative — the integer path's
+//! only divergence from the oracle is f32 reassociation).
+//!
+//! Runs natively (no artifacts needed).
+
+use dartquant::coordinator::Pipeline;
+use dartquant::data::{Corpus, Dialect};
+use dartquant::eval::{ppl_native, EvalSpec};
+use dartquant::model::{BitSetting, FwdOptions, ModelConfig, Weights};
+
+fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let w = Weights::default_grammar(cfg, 1, corpus.successor());
+    (w, corpus)
+}
+
+/// The table2 configs exercised by the quick bench grid.
+const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+
+#[test]
+fn packed_pipeline_shrinks_weights_and_matches_dense_ppl() {
+    for name in TABLE2_CONFIGS {
+        let cfg = ModelConfig::builtin(name).unwrap();
+        let (w, corpus) = grammar(&cfg);
+        let dense = Pipeline::builder(&w)
+            .method("rtn")
+            .unwrap()
+            .bits(BitSetting::W4A4)
+            .run_native()
+            .unwrap();
+        let packed = Pipeline::builder(&w)
+            .method("rtn")
+            .unwrap()
+            .bits(BitSetting::W4A4)
+            .packed(true)
+            .run_native()
+            .unwrap();
+        assert!(!dense.weights.has_packed());
+        assert!(packed.weights.has_packed());
+
+        // (a) true weight residency: 4-bit codes + scales ≤ 1/6 of f32.
+        assert!(
+            packed.compression_ratio() >= 6.0,
+            "{name}: linear compression {:.2}x < 6x",
+            packed.compression_ratio()
+        );
+        assert!(packed.model_bytes < dense.model_bytes, "{name}");
+        assert_eq!(dense.compression_ratio(), 1.0, "{name}: dense output is f32");
+
+        // (b) the packed representation dequantizes bit-identically to
+        // the dense fake-quant output.
+        for n in w.names() {
+            assert_eq!(
+                packed.weights.tensor(n).to_mat().data,
+                dense.weights.tensor(n).to_mat().data,
+                "{name}: {n}"
+            );
+        }
+
+        // (c) quantized-forward perplexity through the integer path
+        // matches the dense fake-quant forward within 1e-4.
+        let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
+        let opt = FwdOptions::quant(4, 16, false);
+        let ppl_dense = ppl_native(&dense.weights, &corpus, spec, opt);
+        let ppl_packed = ppl_native(&packed.weights, &corpus, spec, opt);
+        assert!(
+            (ppl_dense - ppl_packed).abs() <= 1e-4 * ppl_dense,
+            "{name}: dense ppl {ppl_dense} vs packed ppl {ppl_packed}"
+        );
+        // And with fp activations both forwards are bit-exact (the deq
+        // kernel is the dense oracle), so the PPLs are equal.
+        let fp_dense = ppl_native(&dense.weights, &corpus, spec, FwdOptions::FP);
+        let fp_packed = ppl_native(&packed.weights, &corpus, spec, FwdOptions::FP);
+        assert_eq!(fp_dense, fp_packed, "{name}");
+    }
+}
+
+#[test]
+fn packed_gptq_pipeline_matches_dense_and_shrinks() {
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let (w, _corpus) = grammar(&cfg);
+    let mk = |packed: bool| {
+        Pipeline::builder(&w)
+            .method("gptq")
+            .unwrap()
+            .bits(BitSetting::W4A4)
+            .packed(packed)
+            .configure(|c| c.calib_sequences = 2)
+            .run_native()
+            .unwrap()
+    };
+    let dense = mk(false);
+    let packed = mk(true);
+    assert!(packed.weights.has_packed());
+    assert!(packed.compression_ratio() >= 6.0);
+    for n in w.names() {
+        assert_eq!(
+            packed.weights.tensor(n).to_mat().data,
+            dense.weights.tensor(n).to_mat().data,
+            "{n}"
+        );
+    }
+}
+
+#[test]
+fn packed_report_row_serializes_byte_accounting() {
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let (w, _corpus) = grammar(&cfg);
+    let report = Pipeline::builder(&w)
+        .method("rtn")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .packed(true)
+        .run_native()
+        .unwrap();
+    let json = report.to_json().to_string();
+    let parsed = dartquant::util::json::Json::parse(&json).unwrap();
+    assert_eq!(parsed.get_f64("model_bytes").unwrap() as u64, report.model_bytes);
+    let ratio = parsed.get_f64("compression_ratio").unwrap();
+    assert!(ratio >= 6.0, "serialized ratio {ratio}");
+    // The canonical row keeps the (deterministic) byte accounting.
+    let canon = report.record().canonical();
+    assert_eq!(canon.model_bytes, report.model_bytes);
+}
+
+#[test]
+fn packed_is_a_no_op_at_fp_widths() {
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let (w, _corpus) = grammar(&cfg);
+    let report = Pipeline::builder(&w)
+        .method("rtn")
+        .unwrap()
+        .bits(BitSetting::FP)
+        .packed(true)
+        .run_native()
+        .unwrap();
+    // W16 skips quantization entirely; nothing to pack.
+    assert!(!report.weights.has_packed());
+    assert_eq!(report.compression_ratio(), 1.0);
+}
