@@ -2,13 +2,15 @@
 #
 #   make artifacts   AOT-lower the JAX/Pallas graphs to artifacts/ (the one
 #                    python step; everything after runs from rust)
-#   make check       tier-1 verify: release build + tests + clippy + doc +
-#                    fmt check
+#   make check       tier-1 verify: release build + bench compile + tests
+#                    (incl. the rust/tests/serving.rs decode-parity suite)
+#                    + clippy + doc + fmt check
 #   make clippy      cargo clippy over every target (warnings are errors)
 #   make doc         rustdoc the public API (warnings are errors)
 #   make bench       run the paper-table bench binaries (needs artifacts)
+#   make bench-decode  run the serving-path bench (native; no artifacts)
 
-.PHONY: artifacts check test fmt clippy doc bench
+.PHONY: artifacts check test fmt clippy doc bench bench-decode
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -30,3 +32,6 @@ doc:
 
 bench:
 	cargo bench
+
+bench-decode:
+	cargo bench --bench perf_decode

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (also `make check`):
-#   release build, quiet tests, clippy (warnings as errors), rustdoc
+#   release build, bench compile (perf_decode & friends build but do not
+#   run), quiet tests (includes the decode-parity suite
+#   rust/tests/serving.rs), clippy (warnings as errors), rustdoc
 #   (warnings as errors), formatting.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
+cargo build --release --benches
 cargo test -q
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

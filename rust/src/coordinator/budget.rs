@@ -13,7 +13,7 @@
 //! in-flight activation state; see `docs/CONCURRENCY.md`.
 
 use crate::util::mem::PeakTracker;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Byte-denominated admission gate with peak tracking.
 pub struct MemoryGate {
@@ -80,6 +80,32 @@ impl MemoryGate {
         Ok(MemoryLease { gate: self, bytes, charge: Some(charge) })
     }
 
+    /// Non-blocking admission for continuous batching (the serving
+    /// engine admits sessions *between* decode steps): `Ok(Some)` when
+    /// `bytes` fit right now, `Ok(None)` when they would fit but the
+    /// capacity is currently leased, `Err(OverBudget)` when they can
+    /// never fit. Unlimited gates always admit. An associated function
+    /// because the returned lease keeps the gate alive via `Arc`, so
+    /// long-lived holders can store it without borrowing.
+    pub fn try_admit_owned(
+        gate: &Arc<MemoryGate>,
+        bytes: u64,
+    ) -> Result<Option<OwnedLease>, OverBudget> {
+        let mut used = gate.state.lock().unwrap();
+        if let Some(b) = gate.budget {
+            if bytes > b {
+                return Err(OverBudget { need: bytes, budget: b });
+            }
+            if *used + bytes > b {
+                return Ok(None);
+            }
+        }
+        *used += bytes;
+        let charge = gate.tracker.charge(bytes);
+        drop(used);
+        Ok(Some(OwnedLease { gate: Arc::clone(gate), bytes, charge: Some(charge) }))
+    }
+
     /// Peak bytes admitted simultaneously over the gate's lifetime.
     pub fn peak_bytes(&self) -> u64 {
         self.tracker.peak_bytes()
@@ -94,6 +120,32 @@ pub struct MemoryLease<'a> {
 }
 
 impl Drop for MemoryLease<'_> {
+    fn drop(&mut self) {
+        let mut used = self.gate.state.lock().unwrap();
+        self.charge.take(); // discharge the tracker before freeing capacity
+        *used -= self.bytes;
+        drop(used);
+        self.gate.cv.notify_all();
+    }
+}
+
+/// Owned admission lease ([`MemoryGate::try_admit_owned`]): identical
+/// release semantics to [`MemoryLease`], but keeps the gate alive via
+/// `Arc` so serving sessions can carry their lease across engine steps.
+pub struct OwnedLease {
+    gate: Arc<MemoryGate>,
+    bytes: u64,
+    charge: Option<crate::util::mem::ChargeGuard>,
+}
+
+impl OwnedLease {
+    /// Bytes this lease holds against the gate.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for OwnedLease {
     fn drop(&mut self) {
         let mut used = self.gate.state.lock().unwrap();
         self.charge.take(); // discharge the tracker before freeing capacity
@@ -154,5 +206,27 @@ mod tests {
     #[test]
     fn scaled_3090_has_24_mib() {
         assert_eq!(MemoryGate::scaled_3090().budget(), Some(24 << 20));
+    }
+
+    #[test]
+    fn try_admit_owned_is_non_blocking_and_releases_on_drop() {
+        let g = Arc::new(MemoryGate::new(Some(100)));
+        assert!(MemoryGate::try_admit_owned(&g, 101).is_err(), "can never fit");
+        let a = MemoryGate::try_admit_owned(&g, 60).unwrap().expect("fits");
+        assert_eq!(a.bytes(), 60);
+        // Would fit an empty gate, but capacity is leased right now.
+        assert!(MemoryGate::try_admit_owned(&g, 60).unwrap().is_none());
+        drop(a);
+        let b = MemoryGate::try_admit_owned(&g, 60).unwrap();
+        assert!(b.is_some(), "capacity freed by drop");
+        assert_eq!(g.peak_bytes(), 60);
+    }
+
+    #[test]
+    fn try_admit_owned_unlimited_always_admits() {
+        let g = Arc::new(MemoryGate::new(None));
+        let a = MemoryGate::try_admit_owned(&g, u64::MAX / 4).unwrap();
+        assert!(a.is_some());
+        assert!(g.peak_bytes() >= u64::MAX / 4);
     }
 }

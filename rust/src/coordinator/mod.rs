@@ -32,7 +32,7 @@ pub mod report;
 pub mod scheduler;
 pub mod stages;
 
-pub use budget::{MemoryGate, OverBudget};
+pub use budget::{MemoryGate, OverBudget, OwnedLease};
 pub use capture::{capture_pools, capture_pools_native, CalibrationPools};
 pub use registry::{
     act_absmax, AtomQuantizer, DartCalibrated, GptqQuantizer, MethodRegistry, MethodSpec,

@@ -41,7 +41,10 @@ pub fn ppl_artifact(
     let mut count = 0usize;
     for i in 0..spec.n_batches {
         let toks = TokenBatch::new(&corpus.valid_batch(spec.batch, spec.seq, i as u64));
-        let nll = if a_levels >= 32767.0 && kv_levels >= 32767.0 && !use_had {
+        // Same disable threshold as `model::forward::fq_row_grid`
+        // (levels >= 32768 means no fake-quant), so the artifact routing
+        // agrees with the native forward for any FwdOptions.
+        let nll = if a_levels >= 32768.0 && kv_levels >= 32768.0 && !use_had {
             model::artifact_io::run_fwd(rt, w, &toks)?
         } else {
             model::artifact_io::run_fwdq(rt, w, &toks, a_levels, kv_levels, use_had)?

@@ -68,5 +68,6 @@ pub mod model;
 pub mod quant;
 pub mod rotation;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

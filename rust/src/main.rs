@@ -7,6 +7,9 @@
 //!   eval       PPL + zero-shot evaluation of a checkpoint (or fresh model)
 //!   pipeline   quantize + eval in one go, printing a paper-style row
 //!              (`--json` emits the machine-readable PipelineReport row)
+//!   generate   autoregressive generation via the KV-cached decode path
+//!              (single session, or continuous batching at --sessions N)
+//!   serve-bench  continuous-batching throughput benchmark
 //!   train      train the tiny config on a synthetic dialect (AOT Adam step)
 //!   info       artifacts, models, registered methods, runtime platform
 //!
@@ -61,6 +64,8 @@ fn run(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "eval" => cmd_eval(rest),
         "pipeline" => cmd_pipeline(rest),
+        "generate" => cmd_generate(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "train" => cmd_train(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -82,6 +87,9 @@ fn help_text() -> String {
            eval        PPL + zero-shot of a model/checkpoint\n\
            pipeline    quantize + eval, print a paper-style row (--json for a\n\
                        machine-readable PipelineReport row)\n\
+           generate    KV-cached autoregressive generation (continuous\n\
+                       batching at --sessions N)\n\
+           serve-bench continuous-batching throughput benchmark\n\
            train       train the tiny config (AOT Adam step)\n\
            info        artifacts + models + registered methods + platform\n\
          \n\
@@ -343,6 +351,199 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         fmt_duration(report.stats.calibrate_time),
     ]);
     t.print(&format!("{} pipeline", weights.cfg.name));
+    Ok(())
+}
+
+/// RTN-quantize weights for serving when the bit setting asks for it
+/// (`--packed` stores the linears as integer codes + scales).
+fn serving_weights(weights: Weights, bits: BitSetting, packed: bool) -> Weights {
+    if bits.w >= 16 {
+        weights
+    } else if packed {
+        dartquant::quant::rtn_quantize_model_packed(&weights, bits.w)
+    } else {
+        dartquant::quant::rtn_quantize_model(&weights, bits.w)
+    }
+}
+
+fn serving_flags(cmd: Command) -> Command {
+    cmd.flag_default("bits", "16-16-16", "W-A-KV bit setting (W<16 ⇒ RTN weight quant)")
+        .flag_default("max-new", "48", "tokens to generate per session")
+        .flag_default("temperature", "0", "sampling temperature (0 = greedy)")
+        .flag_default("seed", "0", "base sampling seed (per-session streams derive from it)")
+        .flag_default("workers", "0", "engine step worker threads (0 = all cores)")
+        .flag("checkpoint", "load weights from a checkpoint file")
+        .flag("budget-bytes", "KV-cache admission budget in bytes")
+        .switch("budget-3090", "scaled single-3090 KV budget (24 MiB)")
+        .switch("packed", "packed low-bit weight storage (integer decode path)")
+        .switch("online-had", "enable online R3/R4 hadamard (rotated ckpts)")
+}
+
+fn serving_setup(
+    a: &dartquant::util::cli::Args,
+) -> Result<(Weights, Corpus, BitSetting, dartquant::serve::EngineConfig)> {
+    let (_cfg, weights, corpus) = load_model(a)?;
+    let bits = BitSetting::parse(a.get_or("bits", "16-16-16"))?;
+    if a.get_bool("packed") && bits.w >= 16 {
+        eprintln!(
+            "note: --packed has no effect at W=16 weights — pass e.g. --bits 4-4-16 \
+             to quantize and pack the linears"
+        );
+    }
+    let weights = serving_weights(weights, bits, a.get_bool("packed"));
+    let mut budget = None;
+    if a.get_bool("budget-3090") {
+        budget = Some(24 << 20);
+    }
+    if let Some(b) = a.get("budget-bytes") {
+        budget = Some(b.parse()?);
+    }
+    let ecfg = dartquant::serve::EngineConfig {
+        opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, a.get_bool("online-had")),
+        seed: a.get_usize("seed", 0)? as u64,
+        temperature: a.get_f64("temperature", 0.0)? as f32,
+        workers: a.get_usize("workers", 0)?,
+        budget,
+        max_sessions: 0,
+    };
+    Ok((weights, corpus, bits, ecfg))
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let cmd = serving_flags(
+        Command::new("generate", "autoregressive generation (KV-cached decode)")
+            .flag_default("model", "llama2-tiny", "model config")
+            .flag_default("dialect", "wiki", "model grammar dialect")
+            .flag_default("prompt-len", "16", "prompt tokens (sampled from the dialect corpus)")
+            .flag_default("sessions", "1", "concurrent sessions (continuous batching when > 1)"),
+    );
+    let a = cmd.parse(argv)?;
+    let (weights, corpus, bits, ecfg) = serving_setup(&a)?;
+    let prompt_len = a.get_usize("prompt-len", 16)?.max(1);
+    let max_new = a.get_usize("max-new", 48)?.max(1);
+    let sessions = a.get_usize("sessions", 1)?.max(1);
+    println!(
+        "generate: {} @ {} | prompt {} | max-new {} | sessions {}{}",
+        weights.cfg.name,
+        bits.label(),
+        prompt_len,
+        max_new,
+        sessions,
+        if weights.has_packed() { " | packed weights" } else { "" }
+    );
+    let weights = Arc::new(weights);
+    if sessions == 1 {
+        // Single session: drive DecodeSession directly so prefill and
+        // decode throughput are separately visible. The budget flags
+        // still apply — enforce the same full-lifetime cache check the
+        // engine's admission gate performs.
+        let prompt = corpus.sequence(prompt_len, 2, 0);
+        if let Some(budget) = ecfg.budget {
+            let need = dartquant::serve::request_cache_bytes(
+                &weights.cfg,
+                ecfg.opt.kv_levels,
+                prompt_len,
+                max_new,
+            );
+            if need > budget {
+                bail!("session needs {need} KV-cache bytes but the budget is {budget}");
+            }
+        }
+        let mut sess = dartquant::serve::DecodeSession::new(Arc::clone(&weights), ecfg.opt);
+        let mut rng = dartquant::util::prng::Pcg64::new(ecfg.seed);
+        let t0 = std::time::Instant::now();
+        let last = sess.prefill_last(&prompt);
+        let prefill_wall = t0.elapsed();
+        let mut tok = dartquant::serve::sample_logits(&last, ecfg.temperature, &mut rng) as i32;
+        let mut generated = vec![tok];
+        let t1 = std::time::Instant::now();
+        for _ in 1..max_new {
+            let row = sess.step(tok);
+            tok = dartquant::serve::sample_logits(&row, ecfg.temperature, &mut rng) as i32;
+            generated.push(tok);
+        }
+        let decode_wall = t1.elapsed();
+        println!("prompt     {:?}", prompt);
+        println!("generated  {:?}", generated);
+        println!(
+            "prefill {} tok in {} ({:.0} tok/s) | decode {} tok in {} ({:.0} tok/s) | kv cache {} bytes",
+            prompt.len(),
+            fmt_duration(prefill_wall),
+            prompt.len() as f64 / prefill_wall.as_secs_f64().max(1e-9),
+            generated.len().saturating_sub(1),
+            fmt_duration(decode_wall),
+            generated.len().saturating_sub(1) as f64 / decode_wall.as_secs_f64().max(1e-9),
+            sess.cache_nbytes()
+        );
+        return Ok(());
+    }
+    let mut engine = dartquant::serve::BatchEngine::new(weights, ecfg);
+    for i in 0..sessions {
+        let prompt = corpus.sequence(prompt_len, 2, i as u64);
+        engine.submit(dartquant::serve::GenRequest { prompt, max_new });
+    }
+    let t0 = std::time::Instant::now();
+    let results = engine.run()?.to_vec();
+    let wall = t0.elapsed();
+    for r in &results {
+        match &r.error {
+            Some(e) => println!("session {:3}  FAILED: {e}", r.id),
+            None => println!("session {:3}  {:?}", r.id, r.tokens),
+        }
+    }
+    let total: usize = results.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "{} sessions | {} tokens in {} ({:.0} tok/s) | {} engine steps | peak kv cache {} bytes",
+        results.len(),
+        total,
+        fmt_duration(wall),
+        total as f64 / wall.as_secs_f64().max(1e-9),
+        engine.steps(),
+        engine.peak_cache_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_serve_bench(argv: &[String]) -> Result<()> {
+    let cmd = serving_flags(
+        Command::new("serve-bench", "continuous-batching throughput benchmark")
+            .flag_default("model", "llama2-tiny", "model config")
+            .flag_default("dialect", "wiki", "model grammar dialect")
+            .flag_default("prompt-len", "32", "base prompt length")
+            .flag_default("sessions", "8", "requests to submit")
+            .flag_default("stagger", "8", "extra prompt tokens per successive request"),
+    );
+    let a = cmd.parse(argv)?;
+    let (weights, corpus, bits, ecfg) = serving_setup(&a)?;
+    let prompt_len = a.get_usize("prompt-len", 32)?.max(1);
+    let sessions = a.get_usize("sessions", 8)?.max(1);
+    let stagger = a.get_usize("stagger", 8)?;
+    let max_new = a.get_usize("max-new", 48)?;
+    let model_name = weights.cfg.name.clone();
+    let mut engine = dartquant::serve::BatchEngine::new(Arc::new(weights), ecfg);
+    for i in 0..sessions {
+        let prompt = corpus.sequence(prompt_len + i * stagger, 2, i as u64);
+        engine.submit(dartquant::serve::GenRequest { prompt, max_new });
+    }
+    let t0 = std::time::Instant::now();
+    let results = engine.run()?.to_vec();
+    let wall = t0.elapsed();
+    let ok = results.iter().filter(|r| r.error.is_none()).count();
+    let total: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let mut t = Table::new(&[
+        "sessions", "ok", "steps", "tokens", "wall", "tok/s", "peak kv bytes", "budget",
+    ]);
+    t.row(&[
+        sessions.to_string(),
+        ok.to_string(),
+        engine.steps().to_string(),
+        total.to_string(),
+        fmt_duration(wall),
+        fnum(total as f64 / wall.as_secs_f64().max(1e-9), 0),
+        engine.peak_cache_bytes().to_string(),
+        ecfg.budget.map(|b| b.to_string()).unwrap_or_else(|| "unlimited".to_string()),
+    ]);
+    t.print(&format!("{model_name} serve-bench @ {} (workers {})", bits.label(), ecfg.workers));
     Ok(())
 }
 

@@ -5,31 +5,57 @@
 //! used for (a) cross-checking the artifacts in integration tests,
 //! (b) GPTQ activation capture with arbitrary hooks, and (c) running
 //! configurations for which no artifact was emitted.
+//!
+//! The attention/FFN block body is the **shared incremental function**
+//! [`block_step`]: it processes "the next `tn` positions" against a
+//! [`LayerKv`] cache holding everything before them. [`forward_one`]
+//! calls it with a fresh per-layer cache over the whole sequence (the
+//! historical full-sequence semantics, bit-for-bit); the serving path
+//! (`serve::DecodeSession`) calls the same function per prefill chunk /
+//! per decoded token with a persistent cache — which is why KV-cached
+//! decode is bit-identical to this oracle in fp32 (`rust/tests/serving.rs`).
 
+use super::kv::LayerKv;
 use super::weights::{Tensor, Weights};
 use crate::tensor::{matmul_transb, matmul_transb_q, Mat};
+
+/// Per-row asymmetric fake-quant grid `(mn, scale)` at `levels`, or
+/// `None` when quantization is disabled (`levels >= 32768`, the fp16
+/// settings) or the row is constant (zero range, left untouched).
+/// Shared by the activation quantizer below and the KV-cache code
+/// storage (`model::kv`), which must land on exactly this grid.
+pub(crate) fn fq_row_grid(row: &[f32], levels: f32) -> Option<(f32, f32)> {
+    if levels >= 32768.0 {
+        return None;
+    }
+    let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+    for &v in row {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let scale = (mx - mn) / (levels - 1.0).max(1.0);
+    if scale <= 0.0 {
+        None
+    } else {
+        Some((mn, scale))
+    }
+}
+
+/// Fake-quantize one row in place on its `fq_row_grid` grid.
+pub fn fake_quant_row(row: &mut [f32], levels: f32) {
+    if let Some((mn, scale)) = fq_row_grid(row, levels) {
+        for v in row.iter_mut() {
+            *v = ((*v - mn) / scale).round() * scale + mn;
+        }
+    }
+}
 
 /// Per-token asymmetric fake quantization over rows (the activation
 /// quantizer). `levels >= 32768` disables (the fp16 settings) — mirrors
 /// `model._fq_act`.
 pub fn fake_quant_rows(x: &mut Mat, levels: f32) {
-    if levels >= 32767.0 {
-        return;
-    }
     for i in 0..x.rows {
-        let row = x.row_mut(i);
-        let (mut mn, mut mx) = (f32::MAX, f32::MIN);
-        for &v in row.iter() {
-            mn = mn.min(v);
-            mx = mx.max(v);
-        }
-        let scale = (mx - mn) / (levels - 1.0).max(1.0);
-        if scale <= 0.0 {
-            continue;
-        }
-        for v in row.iter_mut() {
-            *v = ((*v - mn) / scale).round() * scale + mn;
-        }
+        fake_quant_row(x.row_mut(i), levels);
     }
 }
 
@@ -70,22 +96,26 @@ fn rmsnorm(x: &Mat, eps: f32) -> Mat {
     out
 }
 
-/// RoPE over one head's (T, hd) block — half-split convention, matching
-/// `model.rope`.
-fn rope_inplace(x: &mut Mat, theta: f32) {
-    let (t, hd) = x.shape();
-    let half = hd / 2;
-    for pos in 0..t {
-        let row = x.row_mut(pos);
-        for i in 0..half {
-            let freq = theta.powf(-(i as f32) / half as f32);
-            let ang = pos as f32 * freq;
-            let (sin, cos) = ang.sin_cos();
-            let a = row[i];
-            let b = row[half + i];
-            row[i] = a * cos - b * sin;
-            row[half + i] = a * sin + b * cos;
-        }
+/// RoPE for one head row at absolute position `pos` — half-split
+/// convention, matching `model.rope`.
+fn rope_row(row: &mut [f32], pos: usize, theta: f32) {
+    let half = row.len() / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let a = row[i];
+        let b = row[half + i];
+        row[i] = a * cos - b * sin;
+        row[half + i] = a * sin + b * cos;
+    }
+}
+
+/// RoPE over one head's (T, hd) block whose first row sits at absolute
+/// position `start`.
+fn rope_block(x: &mut Mat, start: usize, theta: f32) {
+    for i in 0..x.rows {
+        rope_row(x.row_mut(i), start + i, theta);
     }
 }
 
@@ -114,6 +144,27 @@ fn linear(w: &Weights, name: &str, x: &Mat, a_levels: f32) -> Mat {
     }
 }
 
+/// Token embedding rows for a slice of token ids.
+pub fn embed_tokens(w: &Weights, tokens: &[i32]) -> Mat {
+    let embed = w.get("embed");
+    Mat::from_fn(tokens.len(), w.cfg.dim, |i, j| embed.at(tokens[i] as usize, j))
+}
+
+/// Final RMSNorm + LM head over residual rows: logits `(rows, vocab)` —
+/// the one head evaluation `forward_one` and the serving path share.
+pub fn head_logits(w: &Weights, x: &Mat) -> Mat {
+    let h = rmsnorm(x, w.cfg.norm_eps);
+    matmul_transb(&h, w.get("head"))
+}
+
+/// NLL of token `next` under one logits row (log-sum-exp minus the
+/// target logit) — shared by `forward_one` and the decode-parity tests.
+pub fn nll_from_logits(row: &[f32], next: usize) -> f32 {
+    let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+    lse - row[next]
+}
+
 /// Capture hook sites during a forward pass.
 pub trait CaptureHook {
     /// Post-RMSNorm hidden state feeding attention (site `2l`) or the FFN
@@ -129,55 +180,78 @@ pub trait CaptureHook {
 pub struct NoCapture;
 impl CaptureHook for NoCapture {}
 
-/// Run the forward pass for one sequence, returning per-position NLL
-/// (length T-1). `hook` observes activations on the way.
-pub fn forward_one(
+/// One transformer block over the `x.rows` **new** positions starting at
+/// `kv.positions()`: extends the layer's KV cache with the new K/V rows
+/// (RoPE → optional online R3 → KV fake-quant, in the full-sequence
+/// order), attends causally over the whole cache, then applies the FFN.
+///
+/// `x` is the residual stream of the new positions and is updated in
+/// place. With a fresh cache this **is** the historical full-sequence
+/// block; with a persistent cache it is one prefill chunk or one decoded
+/// token — every per-row operation is position-local, so both schedules
+/// produce bit-identical residuals.
+pub fn block_step(
     w: &Weights,
-    tokens: &[i32],
+    l: usize,
+    x: &mut Mat,
+    kv: &mut LayerKv,
     opt: FwdOptions,
     hook: &mut dyn CaptureHook,
-) -> Vec<f32> {
+) {
     let cfg = &w.cfg;
-    let t = tokens.len();
-    let (d, hd, nh, nkv) = (cfg.dim, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads);
-    let eps = cfg.norm_eps;
-    let embed = w.get("embed");
-    let mut x = Mat::from_fn(t, d, |i, j| embed.at(tokens[i] as usize, j));
+    let (hd, nh, nkv) = (cfg.head_dim, cfg.n_heads, cfg.n_kv_heads);
+    let start = kv.positions();
+    let tn = x.rows;
+    let name = |leaf: &str| format!("l{l}.{leaf}");
 
-    let fq = |m: &mut Mat| fake_quant_rows(m, opt.a_levels);
+    // ---- attention ----
+    let h = rmsnorm(x, cfg.norm_eps);
+    hook.on_x_site(2 * l, &h);
+    let mut hq = h;
+    fake_quant_rows(&mut hq, opt.a_levels);
+    hook.on_linear_input(&name("wq"), &hq);
+    let q_all = linear(w, &name("wq"), &hq, opt.a_levels);
+    let k_all = linear(w, &name("wk"), &hq, opt.a_levels);
+    let v_all = linear(w, &name("wv"), &hq, opt.a_levels);
+    hook.on_v_site(l, &v_all);
 
-    for l in 0..cfg.n_layers {
-        let name = |leaf: &str| format!("l{l}.{leaf}");
-        // ---- attention ----
-        let h = rmsnorm(&x, eps);
-        hook.on_x_site(2 * l, &h);
-        let mut hq = h;
-        fq(&mut hq);
-        hook.on_linear_input(&name("wq"), &hq);
-        let q_all = linear(w, &name("wq"), &hq, opt.a_levels);
-        let k_all = linear(w, &name("wk"), &hq, opt.a_levels);
-        let v_all = linear(w, &name("wv"), &hq, opt.a_levels);
-        hook.on_v_site(l, &v_all);
+    // New positions' K/V rows into the cache; KV quantization happens at
+    // the cache boundary, on exactly the rows attention reads back.
+    kv.extend(tn);
+    for head in 0..nkv {
+        let mut kh = head_block(&k_all, head, hd);
+        rope_block(&mut kh, start, cfg.rope_theta);
+        if opt.use_had {
+            hadamard_rows(&mut kh); // R3 — cancels in q·kᵀ
+        }
+        let vh = head_block(&v_all, head, hd);
+        for i in 0..tn {
+            kv.set_k(start + i, head, kh.row(i));
+            kv.set_v(start + i, head, vh.row(i));
+        }
+    }
 
-        let mut attn_out = Mat::zeros(t, nh * hd);
-        let rep = nh / nkv;
-        for head in 0..nh {
-            let kv_head = head / rep;
+    let mut attn_out = Mat::zeros(tn, nh * hd);
+    let rep = nh / nkv;
+    let scale = 1.0 / (hd as f32).sqrt();
+    // One K and one V scratch per block call, refilled per kv head and
+    // shared by its q heads — no per-head allocation on the decode path.
+    let t_total = kv.positions();
+    let mut kh = Mat::zeros(t_total, hd);
+    let mut vh = Mat::zeros(t_total, hd);
+    for kv_head in 0..nkv {
+        kv.k_head_into(kv_head, &mut kh);
+        kv.v_head_into(kv_head, &mut vh);
+        for head in kv_head * rep..(kv_head + 1) * rep {
             let mut qh = head_block(&q_all, head, hd);
-            let mut kh = head_block(&k_all, kv_head, hd);
-            let mut vh = head_block(&v_all, kv_head, hd);
-            rope_inplace(&mut qh, cfg.rope_theta);
-            rope_inplace(&mut kh, cfg.rope_theta);
+            rope_block(&mut qh, start, cfg.rope_theta);
             if opt.use_had {
-                hadamard_rows(&mut qh); // R3 — cancels in q·kᵀ
-                hadamard_rows(&mut kh);
+                hadamard_rows(&mut qh);
             }
-            fake_quant_rows(&mut kh, opt.kv_levels);
-            fake_quant_rows(&mut vh, opt.kv_levels);
-            // causal attention
-            let scale = 1.0 / (hd as f32).sqrt();
-            for i in 0..t {
-                let mut scores = vec![0f32; i + 1];
+            // causal attention: new position start+i sees [0, start+i]
+            for i in 0..tn {
+                let p = start + i;
+                let mut scores = vec![0f32; p + 1];
                 let qrow = qh.row(i);
                 let mut mx = f32::MIN;
                 for (j, s) in scores.iter_mut().enumerate() {
@@ -191,81 +265,109 @@ pub fn forward_one(
                 }
                 let out_row = attn_out.row_mut(i);
                 for (j, s) in scores.iter().enumerate() {
-                    let p = s / denom;
+                    let prob = s / denom;
                     for (c, vv) in vh.row(j).iter().enumerate() {
-                        out_row[head * hd + c] += p * vv;
+                        out_row[head * hd + c] += prob * vv;
                     }
                 }
             }
-        }
-        fq(&mut attn_out);
-        hook.on_linear_input(&name("wo"), &attn_out);
-        let proj = linear(w, &name("wo"), &attn_out, opt.a_levels);
-        x.add_assign(&proj);
-
-        // ---- ffn ----
-        let h2 = rmsnorm(&x, eps);
-        hook.on_x_site(2 * l + 1, &h2);
-        let mut h2q = h2;
-        fq(&mut h2q);
-        if cfg.is_moe() {
-            let gate_logits = linear(w, &name("router"), &h2q, opt.a_levels); // (T, E)
-            let mut ffn = Mat::zeros(t, d);
-            for i in 0..t {
-                // top-k experts by logit (jax lax.top_k tie-break: lower index)
-                let logits = gate_logits.row(i);
-                let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
-                idx.sort_by(|&a, &b| {
-                    logits[b].partial_cmp(&logits[a]).unwrap().then(a.cmp(&b))
-                });
-                let top = &idx[..cfg.top_k];
-                let mx = logits[top[0]];
-                let exps: Vec<f32> = top.iter().map(|&e| (logits[e] - mx).exp()).collect();
-                let denom: f32 = exps.iter().sum();
-                for (rank, &e) in top.iter().enumerate() {
-                    let gate = exps[rank] / denom;
-                    let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
-                    let row = h2q.rows_slice(i, i + 1);
-                    let g = linear(w, &ename("wg"), &row, opt.a_levels);
-                    let u = linear(w, &ename("wu"), &row, opt.a_levels);
-                    let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
-                    if opt.use_had {
-                        hadamard_rows(&mut a);
-                    }
-                    fake_quant_rows(&mut a, opt.a_levels);
-                    let y = linear(w, &ename("wd"), &a, opt.a_levels);
-                    for j in 0..d {
-                        *ffn.at_mut(i, j) += gate * y.at(0, j);
-                    }
-                }
-            }
-            x.add_assign(&ffn);
-        } else {
-            hook.on_linear_input(&name("wg"), &h2q);
-            let g = linear(w, &name("wg"), &h2q, opt.a_levels);
-            let u = linear(w, &name("wu"), &h2q, opt.a_levels);
-            let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
-            if opt.use_had {
-                hadamard_rows(&mut a); // R4 (wd pre-fused with H)
-            }
-            fq(&mut a);
-            hook.on_linear_input(&name("wd"), &a);
-            let y = linear(w, &name("wd"), &a, opt.a_levels);
-            x.add_assign(&y);
         }
     }
+    fake_quant_rows(&mut attn_out, opt.a_levels);
+    hook.on_linear_input(&name("wo"), &attn_out);
+    let proj = linear(w, &name("wo"), &attn_out, opt.a_levels);
+    x.add_assign(&proj);
 
+    // ---- ffn ----
+    ffn_step(w, l, x, opt, hook);
+}
+
+/// The FFN half of a block over `x.rows` positions (position-local, so it
+/// needs no cache).
+fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn CaptureHook) {
+    let cfg = &w.cfg;
+    let (d, t) = (cfg.dim, x.rows);
+    let name = |leaf: &str| format!("l{l}.{leaf}");
+    let h2 = rmsnorm(x, cfg.norm_eps);
+    hook.on_x_site(2 * l + 1, &h2);
+    let mut h2q = h2;
+    fake_quant_rows(&mut h2q, opt.a_levels);
+    if cfg.is_moe() {
+        let gate_logits = linear(w, &name("router"), &h2q, opt.a_levels); // (T, E)
+        let mut ffn = Mat::zeros(t, d);
+        for i in 0..t {
+            // top-k experts by logit (jax lax.top_k tie-break: lower
+            // index, including for -0.0 == +0.0; a NaN logit falls back
+            // to total_cmp so the sort is deterministic instead of
+            // panicking)
+            let logits = gate_logits.row(i);
+            let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
+            idx.sort_by(|&a, &b| {
+                logits[b]
+                    .partial_cmp(&logits[a])
+                    .unwrap_or_else(|| logits[b].total_cmp(&logits[a]))
+                    .then(a.cmp(&b))
+            });
+            let top = &idx[..cfg.top_k];
+            let mx = logits[top[0]];
+            let exps: Vec<f32> = top.iter().map(|&e| (logits[e] - mx).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            for (rank, &e) in top.iter().enumerate() {
+                let gate = exps[rank] / denom;
+                let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
+                let row = h2q.rows_slice(i, i + 1);
+                let g = linear(w, &ename("wg"), &row, opt.a_levels);
+                let u = linear(w, &ename("wu"), &row, opt.a_levels);
+                let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
+                if opt.use_had {
+                    hadamard_rows(&mut a);
+                }
+                fake_quant_rows(&mut a, opt.a_levels);
+                let y = linear(w, &ename("wd"), &a, opt.a_levels);
+                for j in 0..d {
+                    *ffn.at_mut(i, j) += gate * y.at(0, j);
+                }
+            }
+        }
+        x.add_assign(&ffn);
+    } else {
+        hook.on_linear_input(&name("wg"), &h2q);
+        let g = linear(w, &name("wg"), &h2q, opt.a_levels);
+        let u = linear(w, &name("wu"), &h2q, opt.a_levels);
+        let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
+        if opt.use_had {
+            hadamard_rows(&mut a); // R4 (wd pre-fused with H)
+        }
+        fake_quant_rows(&mut a, opt.a_levels);
+        hook.on_linear_input(&name("wd"), &a);
+        let y = linear(w, &name("wd"), &a, opt.a_levels);
+        x.add_assign(&y);
+    }
+}
+
+/// Run the forward pass for one sequence, returning per-position NLL
+/// (length T-1). `hook` observes activations on the way.
+pub fn forward_one(
+    w: &Weights,
+    tokens: &[i32],
+    opt: FwdOptions,
+    hook: &mut dyn CaptureHook,
+) -> Vec<f32> {
+    let cfg = &w.cfg;
+    let t = tokens.len();
+    let mut x = embed_tokens(w, tokens);
+    for l in 0..cfg.n_layers {
+        // Fresh per-layer cache: the whole sequence is "new positions",
+        // dropped after the block so peak memory matches the historical
+        // full-sequence path.
+        let mut kv = LayerKv::for_model(cfg, opt.kv_levels, false);
+        block_step(w, l, &mut x, &mut kv, opt, hook);
+    }
     // ---- head + NLL ----
-    let h = rmsnorm(&x, eps);
-    let logits = matmul_transb(&h, w.get("head")); // (T, V)
-    let mut nll = Vec::with_capacity(t - 1);
-    for i in 0..t - 1 {
-        let row = logits.row(i);
-        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
-        let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
-        nll.push(lse - row[tokens[i + 1] as usize]);
-    }
-    nll
+    let logits = head_logits(w, &x);
+    (0..t - 1)
+        .map(|i| nll_from_logits(logits.row(i), tokens[i + 1] as usize))
+        .collect()
 }
 
 /// Batch forward: thread-parallel over sequences; returns (B, T-1) NLLs.
@@ -320,6 +422,26 @@ mod tests {
         let before = z.clone();
         fake_quant_rows(&mut z, 65536.0);
         assert_eq!(z.data, before.data);
+    }
+
+    #[test]
+    fn fake_quant_disable_threshold_is_32768() {
+        // The documented contract: `levels >= 32768` disables. 32768 is a
+        // no-op; 32767 and 32766 still quantize.
+        let src = vec![0.0f32, 0.137_731, 1.0];
+        let mut off = Mat::from_vec(1, 3, src.clone());
+        fake_quant_rows(&mut off, 32768.0);
+        assert_eq!(off.data, src, "32768 levels must disable");
+        for levels in [32767.0f32, 32766.0] {
+            let mut on = Mat::from_vec(1, 3, src.clone());
+            fake_quant_rows(&mut on, levels);
+            assert_ne!(on.data, src, "{levels} levels must quantize");
+            // and the quantized values still sit within half a step
+            let step = 1.0 / (levels - 1.0);
+            for (a, b) in src.iter().zip(&on.data) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-7);
+            }
+        }
     }
 
     #[test]

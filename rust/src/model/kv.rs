@@ -1,0 +1,403 @@
+//! Per-layer K/V row storage — the cache type the shared block body
+//! (`forward::block_step`) reads and extends.
+//!
+//! [`LayerKv`] holds the K and V rows of every cached position, indexed
+//! `(position, kv head)` with `head_dim` values per row. Rows enter
+//! through [`LayerKv::set_k`] / [`LayerKv::set_v`] **raw** (post-RoPE,
+//! post-online-R3 for K) and are KV-fake-quantized at the cache boundary
+//! — the same per-row asymmetric grid (`forward::fq_row_grid`) the
+//! full-sequence oracle applies, so a cached row reads back bit-identical
+//! to what `forward_one` attends over.
+//!
+//! Two storage modes:
+//!
+//! * **f32** — rows stored as (fake-quantized) f32 values; the oracle
+//!   layout, and the only representable one for fp / wide KV grids.
+//! * **code** (`compact` + `kv_levels` ≤ 256) — u8 codes plus one
+//!   `(mn, scale)` grid per row. Decoding evaluates
+//!   `code as f32 * scale + mn`, the very expression the fake-quant
+//!   kernel produces, so the dequantized row is **bit-identical** to the
+//!   f32 mode at ≤ 8-bit KV settings while holding ~4× fewer bytes.
+//!   Constant rows (which the fake-quant kernel leaves untouched) store
+//!   `scale = 0` and decode every code to `mn` exactly. The one carve-out
+//!   from bit-identity: a row containing NaN/∞ has no finite code grid
+//!   and decodes **all-NaN** (the f32 store keeps only the poisoned
+//!   elements non-finite) — blow-ups surface either way instead of being
+//!   silently clamped.
+//!
+//! The serving layer aggregates one `LayerKv` per layer into
+//! `serve::KvCache` (which also owns the engine's byte accounting); see
+//! `docs/SERVING.md`.
+
+use super::config::ModelConfig;
+use super::forward::{fake_quant_row, fq_row_grid};
+use crate::tensor::Mat;
+
+/// Largest level count representable by the u8 code storage.
+const CODE_LEVELS_MAX: f32 = 256.0;
+
+/// u8-coded rows: one `(mn, scale)` grid per row; `scale == 0` marks a
+/// constant row whose every code decodes to `mn`.
+#[derive(Clone, Debug)]
+struct CodeRows {
+    codes: Vec<u8>,
+    grids: Vec<(f32, f32)>,
+}
+
+impl CodeRows {
+    fn new() -> CodeRows {
+        CodeRows { codes: Vec::new(), grids: Vec::new() }
+    }
+
+    fn extend(&mut self, rows: usize, width: usize) {
+        self.codes.resize(self.codes.len() + rows * width, 0);
+        self.grids.resize(self.grids.len() + rows, (0.0, 0.0));
+    }
+
+    fn set(&mut self, idx: usize, width: usize, row: &[f32], levels: f32) {
+        let out = &mut self.codes[idx * width..(idx + 1) * width];
+        if row.iter().any(|v| !v.is_finite()) {
+            // A poisoned (NaN/∞) row has no finite code grid; decode it
+            // as all-NaN so numeric blow-ups surface loudly instead of
+            // being clamped to the grid offset (the one place the code
+            // store is not bit-identical to the f32 store — see the
+            // module docs).
+            self.grids[idx] = (f32::NAN, 0.0);
+            out.fill(0);
+            return;
+        }
+        match fq_row_grid(row, levels) {
+            Some((mn, scale)) => {
+                self.grids[idx] = (mn, scale);
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = ((v - mn) / scale).round() as u8;
+                }
+            }
+            None => {
+                // Constant row: the fake-quant kernel leaves it untouched,
+                // so store its value as the offset and decode codes of 0.
+                self.grids[idx] = (row.first().copied().unwrap_or(0.0), 0.0);
+                out.fill(0);
+            }
+        }
+    }
+
+    fn decode(&self, idx: usize, width: usize, out: &mut [f32]) {
+        let (mn, scale) = self.grids[idx];
+        for (o, &c) in out.iter_mut().zip(&self.codes[idx * width..(idx + 1) * width]) {
+            *o = c as f32 * scale + mn;
+        }
+    }
+
+    fn nbytes(&self) -> u64 {
+        self.codes.len() as u64 + 8 * self.grids.len() as u64
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Store {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Codes { k: CodeRows, v: CodeRows },
+}
+
+/// One layer's cached K/V rows (see the module docs for the layout and
+/// the bit-identity contract).
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    nkv: usize,
+    hd: usize,
+    levels: f32,
+    positions: usize,
+    store: Store,
+}
+
+impl LayerKv {
+    /// A cache for `nkv` KV heads of `hd` values, fake-quantizing rows at
+    /// `levels` (≥ 32768 = off). `compact` opts into u8 code storage,
+    /// taken when the grid fits (`levels` ≤ 256); the full-sequence
+    /// oracle passes `false` and always stores f32.
+    pub fn new(nkv: usize, hd: usize, levels: f32, compact: bool) -> LayerKv {
+        let store = if compact && levels <= CODE_LEVELS_MAX {
+            Store::Codes { k: CodeRows::new(), v: CodeRows::new() }
+        } else {
+            Store::F32 { k: Vec::new(), v: Vec::new() }
+        };
+        LayerKv { nkv, hd, levels, positions: 0, store }
+    }
+
+    /// A cache for one layer of `cfg`.
+    pub fn for_model(cfg: &ModelConfig, kv_levels: f32, compact: bool) -> LayerKv {
+        LayerKv::new(cfg.n_kv_heads, cfg.head_dim, kv_levels, compact)
+    }
+
+    /// Cached positions.
+    pub fn positions(&self) -> usize {
+        self.positions
+    }
+
+    /// Reserve row slots for `tn` more positions (all KV heads).
+    pub fn extend(&mut self, tn: usize) {
+        let rows = tn * self.nkv;
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                k.resize(k.len() + rows * self.hd, 0.0);
+                v.resize(v.len() + rows * self.hd, 0.0);
+            }
+            Store::Codes { k, v } => {
+                k.extend(rows, self.hd);
+                v.extend(rows, self.hd);
+            }
+        }
+        self.positions += tn;
+    }
+
+    fn slot(&self, pos: usize, head: usize) -> usize {
+        debug_assert!(pos < self.positions && head < self.nkv, "kv slot out of range");
+        pos * self.nkv + head
+    }
+
+    fn set_row(&mut self, is_k: bool, pos: usize, head: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.hd, "kv row width");
+        let idx = self.slot(pos, head);
+        let (hd, levels) = (self.hd, self.levels);
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                let out = &mut (if is_k { k } else { v })[idx * hd..(idx + 1) * hd];
+                out.copy_from_slice(row);
+                fake_quant_row(out, levels);
+            }
+            Store::Codes { k, v } => (if is_k { k } else { v }).set(idx, hd, row, levels),
+        }
+    }
+
+    /// Store position `pos`'s K row for `head` (raw post-RoPE/R3 values;
+    /// the KV fake-quant happens here, at the cache boundary).
+    pub fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
+        self.set_row(true, pos, head, row);
+    }
+
+    /// Store position `pos`'s V row for `head`.
+    pub fn set_v(&mut self, pos: usize, head: usize, row: &[f32]) {
+        self.set_row(false, pos, head, row);
+    }
+
+    fn head_mat_into(&self, is_k: bool, head: usize, out: &mut Mat) {
+        assert_eq!(out.shape(), (self.positions, self.hd), "kv scratch shape");
+        for pos in 0..self.positions {
+            let idx = self.slot(pos, head);
+            let row = out.row_mut(pos);
+            match &self.store {
+                Store::F32 { k, v } => row.copy_from_slice(
+                    &(if is_k { k } else { v })[idx * self.hd..(idx + 1) * self.hd],
+                ),
+                Store::Codes { k, v } => (if is_k { k } else { v }).decode(idx, self.hd, row),
+            }
+        }
+    }
+
+    /// Decode `head`'s K rows over all cached positions into the
+    /// caller's `(positions × hd)` buffer — the hot-path variant
+    /// `block_step` uses so a decode step reuses one scratch per layer
+    /// instead of allocating per kv head.
+    pub fn k_head_into(&self, head: usize, out: &mut Mat) {
+        self.head_mat_into(true, head, out);
+    }
+
+    /// Decode `head`'s V rows into the caller's buffer.
+    pub fn v_head_into(&self, head: usize, out: &mut Mat) {
+        self.head_mat_into(false, head, out);
+    }
+
+    /// Dequantized K rows of `head` over all cached positions
+    /// (`positions × hd`) — what attention scores against.
+    pub fn k_head(&self, head: usize) -> Mat {
+        let mut out = Mat::zeros(self.positions, self.hd);
+        self.head_mat_into(true, head, &mut out);
+        out
+    }
+
+    /// Dequantized V rows of `head` over all cached positions.
+    pub fn v_head(&self, head: usize) -> Mat {
+        let mut out = Mat::zeros(self.positions, self.hd);
+        self.head_mat_into(false, head, &mut out);
+        out
+    }
+
+    /// Resident cache bytes (codes + grids, or f32 rows).
+    pub fn nbytes(&self) -> u64 {
+        match &self.store {
+            Store::F32 { k, v } => 4 * (k.len() + v.len()) as u64,
+            Store::Codes { k, v } => k.nbytes() + v.nbytes(),
+        }
+    }
+
+    /// [`LayerKv::nbytes`] of a cache holding `positions` positions —
+    /// admission-time accounting before the rows exist. Exact: equals
+    /// `nbytes()` after that many positions were appended.
+    pub fn estimate_nbytes(
+        nkv: usize,
+        hd: usize,
+        levels: f32,
+        positions: usize,
+        compact: bool,
+    ) -> u64 {
+        let rows = (positions * nkv) as u64;
+        if compact && levels <= CODE_LEVELS_MAX {
+            2 * (rows * hd as u64 + 8 * rows)
+        } else {
+            2 * rows * hd as u64 * 4
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::util::propcheck::{gen, Runner};
+
+    fn rand_row(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn code_store_is_bit_identical_to_f32_store() {
+        let mut rng = Pcg64::new(1);
+        for levels in [4.0f32, 16.0, 256.0] {
+            let mut f = LayerKv::new(2, 8, levels, false);
+            let mut c = LayerKv::new(2, 8, levels, true);
+            f.extend(3);
+            c.extend(3);
+            for pos in 0..3 {
+                for head in 0..2 {
+                    let row = rand_row(&mut rng, 8);
+                    f.set_k(pos, head, &row);
+                    c.set_k(pos, head, &row);
+                    f.set_v(pos, head, &row);
+                    c.set_v(pos, head, &row);
+                }
+            }
+            for head in 0..2 {
+                assert_eq!(f.k_head(head).data, c.k_head(head).data, "levels {levels}");
+                assert_eq!(f.v_head(head).data, c.v_head(head).data, "levels {levels}");
+            }
+            assert!(c.nbytes() < f.nbytes(), "codes must be smaller at {levels} levels");
+        }
+    }
+
+    #[test]
+    fn fp_mode_stores_rows_verbatim() {
+        let mut rng = Pcg64::new(2);
+        let mut kv = LayerKv::new(1, 16, 65536.0, true); // fp grid ⇒ f32 store
+        kv.extend(2);
+        let r0 = rand_row(&mut rng, 16);
+        let r1 = rand_row(&mut rng, 16);
+        kv.set_k(0, 0, &r0);
+        kv.set_k(1, 0, &r1);
+        let kh = kv.k_head(0);
+        assert_eq!(kh.row(0), &r0[..]);
+        assert_eq!(kh.row(1), &r1[..]);
+    }
+
+    #[test]
+    fn poisoned_rows_decode_as_nan_not_clamped() {
+        let mut kv = LayerKv::new(1, 4, 16.0, true); // code store
+        kv.extend(2);
+        kv.set_k(0, 0, &[1.0, f32::NAN, 2.0, 3.0]);
+        kv.set_k(1, 0, &[1.0, f32::INFINITY, 2.0, 3.0]);
+        let kh = kv.k_head(0);
+        assert!(kh.row(0).iter().all(|v| v.is_nan()), "NaN row must stay non-finite");
+        assert!(kh.row(1).iter().all(|v| v.is_nan()), "∞ row must stay non-finite");
+    }
+
+    #[test]
+    fn head_into_matches_allocating_head() {
+        let mut rng = Pcg64::new(3);
+        let mut kv = LayerKv::new(2, 8, 16.0, true);
+        kv.extend(4);
+        for pos in 0..4 {
+            for head in 0..2 {
+                kv.set_k(pos, head, &rand_row(&mut rng, 8));
+                kv.set_v(pos, head, &rand_row(&mut rng, 8));
+            }
+        }
+        let mut scratch = Mat::zeros(4, 8);
+        for head in 0..2 {
+            kv.k_head_into(head, &mut scratch);
+            assert_eq!(scratch.data, kv.k_head(head).data);
+            kv.v_head_into(head, &mut scratch);
+            assert_eq!(scratch.data, kv.v_head(head).data);
+        }
+    }
+
+    #[test]
+    fn constant_rows_roundtrip_exactly() {
+        let mut kv = LayerKv::new(1, 4, 16.0, true);
+        kv.extend(1);
+        kv.set_k(0, 0, &[2.5, 2.5, 2.5, 2.5]);
+        kv.set_v(0, 0, &[-1.0, -1.0, -1.0, -1.0]);
+        assert_eq!(kv.k_head(0).data, vec![2.5; 4]);
+        assert_eq!(kv.v_head(0).data, vec![-1.0; 4]);
+    }
+
+    #[test]
+    fn nbytes_matches_estimate_in_both_modes() {
+        for (levels, compact) in [(16.0f32, true), (16.0, false), (65536.0, true)] {
+            let mut kv = LayerKv::new(3, 8, levels, compact);
+            kv.extend(5);
+            assert_eq!(
+                kv.nbytes(),
+                LayerKv::estimate_nbytes(3, 8, levels, 5, compact),
+                "levels {levels} compact {compact}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_code_roundtrip_bounded_by_half_step() {
+        Runner::new().cases(48).run("kv code roundtrip bound", |rng| {
+            let hd = 1 << gen::size(rng, 2, 6);
+            let levels = [4.0f32, 16.0, 64.0, 256.0][rng.below(4)];
+            let row = gen::vec_f32(rng, hd);
+            let mut kv = LayerKv::new(1, hd, levels, true);
+            kv.extend(1);
+            kv.set_k(0, 0, &row);
+            let back = kv.k_head(0);
+            let (mn, mx) =
+                row.iter().fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+            let step = (mx - mn) / (levels - 1.0);
+            for (a, b) in row.iter().zip(back.row(0)) {
+                let tol = step / 2.0 + 1e-6 * (mx - mn).abs().max(1.0);
+                if (a - b).abs() > tol {
+                    return Err(format!("roundtrip error {} > {tol}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cache_bytes_accounting_matches_estimate() {
+        Runner::new().cases(24).run("kv nbytes accounting", |rng| {
+            let nkv = gen::size(rng, 1, 4);
+            let hd = 1 << gen::size(rng, 2, 6);
+            let compact = rng.below(2) == 0;
+            let levels = [16.0f32, 256.0, 65536.0][rng.below(3)];
+            let mut kv = LayerKv::new(nkv, hd, levels, compact);
+            let mut total = 0usize;
+            for _ in 0..gen::size(rng, 1, 4) {
+                let tn = gen::size(rng, 1, 6);
+                kv.extend(tn);
+                total += tn;
+            }
+            if kv.positions() != total {
+                return Err("position count drifted".into());
+            }
+            let want = LayerKv::estimate_nbytes(nkv, hd, levels, total, compact);
+            if kv.nbytes() != want {
+                return Err(format!("nbytes {} != estimate {want}", kv.nbytes()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -5,9 +5,13 @@
 pub mod artifact_io;
 pub mod config;
 pub mod forward;
+pub mod kv;
 pub mod weights;
 
 pub use artifact_io::{ppl_from_nll, CapturedSites, TokenBatch, TrainState};
 pub use config::{BitSetting, ModelConfig};
-pub use forward::{fake_quant_rows, forward_batch, forward_one, CaptureHook, FwdOptions, NoCapture};
+pub use forward::{
+    fake_quant_row, fake_quant_rows, forward_batch, forward_one, nll_from_logits, CaptureHook,
+    FwdOptions, NoCapture,
+};
 pub use weights::{Tensor, Weights};

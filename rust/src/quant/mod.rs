@@ -117,9 +117,12 @@ pub fn rtn_mse(w: &Mat, bits: u8) -> f64 {
 /// Protected-column mask: the `keep` highest-|activation| channels.
 /// A `Vec<bool>` so the scale scan and quantize loops test membership in
 /// O(1) instead of the historical per-element `HashSet::contains`.
+/// `total_cmp` keeps the sort NaN-safe: a NaN/∞ calibration column (a
+/// blown-up activation scan) sorts to the top and gets protected instead
+/// of panicking the whole pipeline.
 fn quik_mask(act_absmax: &[f32], keep: usize) -> Vec<bool> {
     let mut idx: Vec<usize> = (0..act_absmax.len()).collect();
-    idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    idx.sort_by(|&a, &b| act_absmax[b].total_cmp(&act_absmax[a]));
     let mut mask = vec![false; act_absmax.len()];
     for &c in idx.iter().take(keep) {
         mask[c] = true;
@@ -170,10 +173,11 @@ pub fn quik_quantize_mat(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> 
 // Atom-like mixed precision
 // ---------------------------------------------------------------------------
 
-/// Channel order by descending activation magnitude.
+/// Channel order by descending activation magnitude (`total_cmp`:
+/// NaN/∞ columns deterministically lead the order instead of panicking).
 fn atom_order(act_absmax: &[f32]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..act_absmax.len()).collect();
-    order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+    order.sort_by(|&a, &b| act_absmax[b].total_cmp(&act_absmax[a]));
     order
 }
 
@@ -388,6 +392,31 @@ mod tests {
             .sum::<f64>()
             / w.data.len() as f64;
         assert!(mse_atom < rtn_mse(&w, 4));
+    }
+
+    #[test]
+    fn nan_or_inf_activation_columns_do_not_panic_the_sorts() {
+        // Regression: the quik/atom channel sorts used
+        // `partial_cmp(..).unwrap()`, which panicked on a NaN activation
+        // scan. `total_cmp` sorts NaN/∞ to the top deterministically.
+        let w = rand_mat(9, 6, 64);
+        let mut absmax = vec![1.0f32; 64];
+        absmax[3] = f32::NAN;
+        absmax[5] = f32::INFINITY;
+        let qk = quik_quantize_mat(&w, &absmax, 2, 4);
+        // The NaN and ∞ columns rank highest → both protected verbatim.
+        for i in 0..w.rows {
+            assert_eq!(qk.at(i, 3), w.at(i, 3));
+            assert_eq!(qk.at(i, 5), w.at(i, 5));
+        }
+        assert!(qk.data.iter().all(|v| v.is_finite()), "weights stay finite");
+        let qa = atom_quantize_mat(&w, &absmax, 4);
+        assert!(qa.data.iter().all(|v| v.is_finite()));
+        // Deterministic: the same poisoned scan yields the same output.
+        assert_eq!(qa.data, atom_quantize_mat(&w, &absmax, 4).data);
+        // Packed constructors run the same sorts — no panic there either.
+        let _ = quik_quantize_qmat(&w, &absmax, 2, 4);
+        let _ = atom_quantize_qmat(&w, &absmax, 4);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Continuous-batching decode engine.
+//!
+//! [`BatchEngine`] runs many [`DecodeSession`]s in lock step: each
+//! [`BatchEngine::step`] first admits pending requests (FIFO) while
+//! their full KV-cache footprint fits the `coordinator::budget` gate,
+//! then advances every active session by one token on scoped worker
+//! threads (`util::threadpool::scoped_try_map`), then retires finished
+//! sessions — releasing their cache lease so the next pending request
+//! can slide in *between* steps, not at batch boundaries.
+//!
+//! Determinism follows the `docs/CONCURRENCY.md` contract: every session
+//! samples from its own `Pcg64` seeded `seed ⊕ f(id)`, sessions never
+//! share mutable state, and [`EngineEvent`]s are recorded only on the
+//! engine thread at deterministic points (admission order, then retire
+//! scan in admission order after each join). Two runs of the same
+//! submissions produce identical token streams and event logs at any
+//! worker count — enforced by `rust/tests/serving.rs`.
+
+use super::kv_cache::KvCache;
+use super::session::{sample_logits, DecodeSession};
+use crate::coordinator::budget::{MemoryGate, OwnedLease};
+use crate::model::{FwdOptions, Weights};
+use crate::util::prng::Pcg64;
+use crate::util::threadpool::{scoped_try_map, ThreadPool};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// The KV bytes one request holds for its whole active lifetime: the
+/// prompt plus every generated token except the last (sampled but never
+/// fed back through the model). The single formula behind the engine's
+/// admission charge and the CLI's single-session budget check.
+pub fn request_cache_bytes(
+    cfg: &crate::model::ModelConfig,
+    kv_levels: f32,
+    prompt: usize,
+    max_new: usize,
+) -> u64 {
+    KvCache::estimate_nbytes(cfg, kv_levels, prompt + max_new.saturating_sub(1), true)
+}
+
+/// One generation request: a prompt and a continuation length.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Prompt token ids (must be non-empty).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate after the prompt.
+    pub max_new: usize,
+}
+
+/// Outcome of one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenResult {
+    /// Submission id (also the determinism seed offset).
+    pub id: usize,
+    /// Prompt length the session was fed.
+    pub prompt_len: usize,
+    /// Generated continuation (empty on error).
+    pub tokens: Vec<i32>,
+    /// Why the request failed, if it did.
+    pub error: Option<String>,
+}
+
+/// Engine lifecycle events, recorded in a deterministic order (see the
+/// module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineEvent {
+    /// A request was admitted: its cache lease is now charged.
+    Admitted { id: usize, prompt: usize, cache_bytes: u64 },
+    /// A request can never fit the budget and was failed outright.
+    Rejected { id: usize, need: u64, budget: u64 },
+    /// One lock-step advance of all active sessions.
+    StepBatch { step: usize, active: usize },
+    /// A session finished and released its cache lease.
+    Retired { id: usize, generated: usize },
+}
+
+/// Engine knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Forward options every session decodes with.
+    pub opt: FwdOptions,
+    /// Base sampling seed; session `id` draws from `seed ⊕ f(id)`.
+    pub seed: u64,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Worker threads per step (0 = available parallelism).
+    pub workers: usize,
+    /// KV-cache byte budget across concurrent sessions (None = unlimited).
+    pub budget: Option<u64>,
+    /// Cap on concurrent sessions (0 = bounded by the budget only).
+    pub max_sessions: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            opt: FwdOptions::FP,
+            seed: 0,
+            temperature: 0.0,
+            workers: 0,
+            budget: None,
+            max_sessions: 0,
+        }
+    }
+}
+
+/// An admitted, in-flight session.
+struct Active {
+    id: usize,
+    session: DecodeSession,
+    rng: Pcg64,
+    prompt: Vec<i32>,
+    generated: Vec<i32>,
+    max_new: usize,
+    last: i32,
+    _lease: Option<OwnedLease>,
+}
+
+impl Active {
+    fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+
+    /// Advance by one token: prefill on first touch (continuous batching
+    /// admits mid-flight, so fresh sessions prefill while others step).
+    fn advance(&mut self, temperature: f32) {
+        if self.done() {
+            return;
+        }
+        let row: Vec<f32> = if self.session.positions() == 0 {
+            self.session.prefill_last(&self.prompt)
+        } else {
+            self.session.step(self.last)
+        };
+        let next = sample_logits(&row, temperature, &mut self.rng) as i32;
+        self.generated.push(next);
+        self.last = next;
+    }
+}
+
+/// The continuous-batching engine (see the module docs).
+pub struct BatchEngine {
+    weights: Arc<Weights>,
+    cfg: EngineConfig,
+    gate: Arc<MemoryGate>,
+    pending: VecDeque<(usize, GenRequest)>,
+    active: Vec<Active>,
+    finished: Vec<GenResult>,
+    events: Vec<EngineEvent>,
+    next_id: usize,
+    steps: usize,
+}
+
+impl BatchEngine {
+    /// An engine over shared weights; the admission gate is sized by
+    /// `cfg.budget`.
+    pub fn new(weights: Arc<Weights>, cfg: EngineConfig) -> BatchEngine {
+        BatchEngine {
+            gate: Arc::new(MemoryGate::new(cfg.budget)),
+            weights,
+            cfg,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            events: Vec::new(),
+            next_id: 0,
+            steps: 0,
+        }
+    }
+
+    /// Queue a request; returns its id. Empty prompts fail immediately;
+    /// `max_new == 0` succeeds trivially without ever holding a cache
+    /// lease or occupying a step slot.
+    pub fn submit(&mut self, req: GenRequest) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        if req.prompt.is_empty() {
+            self.finished.push(GenResult {
+                id,
+                prompt_len: 0,
+                tokens: Vec::new(),
+                error: Some("empty prompt".to_string()),
+            });
+        } else if req.max_new == 0 {
+            self.finished.push(GenResult {
+                id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                error: None,
+            });
+        } else {
+            self.pending.push_back((id, req));
+        }
+        id
+    }
+
+    /// The KV bytes request `req` will hold while active.
+    fn cache_bytes(&self, req: &GenRequest) -> u64 {
+        request_cache_bytes(
+            &self.weights.cfg,
+            self.cfg.opt.kv_levels,
+            req.prompt.len(),
+            req.max_new,
+        )
+    }
+
+    /// Admit pending requests (FIFO) while their cache bytes fit the gate
+    /// and the session cap allows.
+    fn admit_pending(&mut self) {
+        while let Some((_, req)) = self.pending.front() {
+            if self.cfg.max_sessions > 0 && self.active.len() >= self.cfg.max_sessions {
+                break;
+            }
+            let bytes = self.cache_bytes(req);
+            match MemoryGate::try_admit_owned(&self.gate, bytes) {
+                Err(e) => {
+                    let (id, req) = self.pending.pop_front().expect("front exists");
+                    self.events.push(EngineEvent::Rejected {
+                        id,
+                        need: e.need,
+                        budget: e.budget,
+                    });
+                    self.finished.push(GenResult {
+                        id,
+                        prompt_len: req.prompt.len(),
+                        tokens: Vec::new(),
+                        error: Some(e.to_string()),
+                    });
+                }
+                Ok(None) => break, // FIFO: wait for a retirement to free bytes
+                Ok(Some(lease)) => {
+                    let (id, req) = self.pending.pop_front().expect("front exists");
+                    self.events.push(EngineEvent::Admitted {
+                        id,
+                        prompt: req.prompt.len(),
+                        cache_bytes: bytes,
+                    });
+                    self.active.push(Active {
+                        id,
+                        session: DecodeSession::new(Arc::clone(&self.weights), self.cfg.opt),
+                        rng: Pcg64::new(
+                            self.cfg.seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                        ),
+                        prompt: req.prompt,
+                        generated: Vec::new(),
+                        max_new: req.max_new,
+                        last: 0,
+                        _lease: lease,
+                    });
+                }
+            }
+        }
+    }
+
+    /// One engine tick: admit → advance every active session one token in
+    /// parallel → retire finished sessions. Returns whether work remains.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        self.admit_pending();
+        if self.active.is_empty() {
+            // Nothing runnable: admission either drained or rejected
+            // every pending request (an empty gate admits anything that
+            // can ever fit), so the queue is empty too.
+            return Ok(false);
+        }
+        let workers = if self.cfg.workers == 0 {
+            ThreadPool::default_parallelism()
+        } else {
+            self.cfg.workers
+        };
+        let temperature = self.cfg.temperature;
+        let cells: Vec<Mutex<&mut Active>> = self.active.iter_mut().map(Mutex::new).collect();
+        scoped_try_map(workers, &cells, |_, cell| {
+            cell.lock().expect("uncontended session cell").advance(temperature);
+        })
+        .map_err(|p| {
+            anyhow::anyhow!("decode step panicked in session slot {}: {}", p.index, p.message)
+        })?;
+        drop(cells);
+        self.steps += 1;
+        self.events.push(EngineEvent::StepBatch { step: self.steps, active: self.active.len() });
+        // Retire in admission order; dropping an Active releases its lease.
+        let mut still = Vec::with_capacity(self.active.len());
+        for a in self.active.drain(..) {
+            if a.done() {
+                self.events.push(EngineEvent::Retired { id: a.id, generated: a.generated.len() });
+                self.finished.push(GenResult {
+                    id: a.id,
+                    prompt_len: a.prompt.len(),
+                    tokens: a.generated,
+                    error: None,
+                });
+            } else {
+                still.push(a);
+            }
+        }
+        self.active = still;
+        Ok(!(self.active.is_empty() && self.pending.is_empty()))
+    }
+
+    /// Drive [`BatchEngine::step`] until every request finished; results
+    /// are ordered by request id.
+    pub fn run(&mut self) -> anyhow::Result<&[GenResult]> {
+        while self.step()? {}
+        self.finished.sort_by_key(|r| r.id);
+        Ok(&self.finished)
+    }
+
+    /// Event log so far (deterministic across worker counts).
+    pub fn events(&self) -> &[EngineEvent] {
+        &self.events
+    }
+
+    /// Results so far (complete and id-ordered after [`BatchEngine::run`]).
+    pub fn results(&self) -> &[GenResult] {
+        &self.finished
+    }
+
+    /// Lock-step ticks executed.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Currently-resident KV bytes across active sessions.
+    pub fn active_cache_bytes(&self) -> u64 {
+        self.active.iter().map(|a| a.session.cache_nbytes()).sum()
+    }
+
+    /// High-water mark of admitted cache bytes (≤ the budget by the gate
+    /// invariant).
+    pub fn peak_cache_bytes(&self) -> u64 {
+        self.gate.peak_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn engine(budget: Option<u64>, workers: usize) -> BatchEngine {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 1));
+        BatchEngine::new(w, EngineConfig { workers, budget, ..EngineConfig::default() })
+    }
+
+    #[test]
+    fn empty_prompt_fails_cleanly() {
+        let mut e = engine(None, 1);
+        e.submit(GenRequest { prompt: vec![], max_new: 4 });
+        let r = e.run().unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].error.as_deref().unwrap().contains("empty prompt"));
+    }
+
+    #[test]
+    fn zero_max_new_succeeds_without_a_lease() {
+        // Budget far below one prompt's cache: a 0-token request must
+        // not be charged (or rejected) for cache it will never hold.
+        let mut e = engine(Some(16), 1);
+        e.submit(GenRequest { prompt: vec![1, 2, 3, 4], max_new: 0 });
+        let r = e.run().unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].error.is_none());
+        assert!(r[0].tokens.is_empty());
+        assert_eq!(e.peak_cache_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_wedged() {
+        let mut e = engine(Some(64), 1); // budget far below any session cache
+        e.submit(GenRequest { prompt: vec![1, 2, 3], max_new: 8 });
+        let r = e.run().unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].error.as_deref().unwrap().contains("memory budget"));
+        assert!(matches!(e.events()[0], EngineEvent::Rejected { id: 0, .. }));
+    }
+
+    #[test]
+    fn generates_max_new_tokens_per_request() {
+        let mut e = engine(None, 2);
+        e.submit(GenRequest { prompt: vec![3, 1, 4], max_new: 5 });
+        e.submit(GenRequest { prompt: vec![1, 5], max_new: 2 });
+        let r = e.run().unwrap().to_vec();
+        assert_eq!(r[0].tokens.len(), 5);
+        assert_eq!(r[1].tokens.len(), 2);
+        assert!(r.iter().all(|x| x.error.is_none()));
+        // peak stayed charged and is visible
+        assert!(e.peak_cache_bytes() > 0);
+        assert_eq!(e.active_cache_bytes(), 0, "all sessions retired");
+    }
+}

@@ -1,0 +1,87 @@
+//! Session-level KV-cache aggregation and byte accounting.
+//!
+//! The per-layer storage primitive is [`model::kv::LayerKv`] (it is part
+//! of the forward contract — `model::forward::block_step` takes one);
+//! this module aggregates one per layer into a session's [`KvCache`] and
+//! owns the byte accounting the serving engine charges against the
+//! `coordinator::budget` gate: [`KvCache::nbytes`] reports resident
+//! bytes and [`KvCache::estimate_nbytes`] predicts them **exactly** for
+//! a given position count (property-tested in `model::kv` and
+//! `rust/tests/serving.rs`). Layout and the bit-identity contract are
+//! documented on [`LayerKv`] and in `docs/SERVING.md`.
+//!
+//! [`model::kv::LayerKv`]: crate::model::kv::LayerKv
+
+use crate::model::ModelConfig;
+
+pub use crate::model::kv::LayerKv;
+
+/// All layers' KV state for one decode session.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    /// Fresh empty cache for `cfg` at `kv_levels` (see [`LayerKv::new`]
+    /// for `compact`).
+    pub fn new(cfg: &ModelConfig, kv_levels: f32, compact: bool) -> KvCache {
+        KvCache {
+            layers: (0..cfg.n_layers)
+                .map(|_| LayerKv::for_model(cfg, kv_levels, compact))
+                .collect(),
+        }
+    }
+
+    /// Layer `l`'s cache.
+    pub fn layer_mut(&mut self, l: usize) -> &mut LayerKv {
+        &mut self.layers[l]
+    }
+
+    /// Cached positions (identical across layers by construction).
+    pub fn positions(&self) -> usize {
+        self.layers.first().map(|l| l.positions()).unwrap_or(0)
+    }
+
+    /// Total resident cache bytes across layers.
+    pub fn nbytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.nbytes()).sum()
+    }
+
+    /// Exact byte cost of caching `positions` positions for `cfg` — what
+    /// the serving engine charges the memory gate per session.
+    pub fn estimate_nbytes(
+        cfg: &ModelConfig,
+        kv_levels: f32,
+        positions: usize,
+        compact: bool,
+    ) -> u64 {
+        cfg.n_layers as u64
+            * LayerKv::estimate_nbytes(cfg.n_kv_heads, cfg.head_dim, kv_levels, positions, compact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_aggregates_layers_and_matches_estimate() {
+        let cfg = ModelConfig::builtin("llama3-small").unwrap();
+        let mut cache = KvCache::new(&cfg, 16.0, true);
+        assert_eq!(cache.positions(), 0);
+        assert_eq!(cache.nbytes(), 0);
+        for l in 0..cfg.n_layers {
+            cache.layer_mut(l).extend(7);
+        }
+        assert_eq!(cache.positions(), 7);
+        assert_eq!(cache.nbytes(), KvCache::estimate_nbytes(&cfg, 16.0, 7, true));
+        // fp KV grids fall back to f32 rows — still exact accounting.
+        let mut fp = KvCache::new(&cfg, 65536.0, true);
+        for l in 0..cfg.n_layers {
+            fp.layer_mut(l).extend(3);
+        }
+        assert_eq!(fp.nbytes(), KvCache::estimate_nbytes(&cfg, 65536.0, 3, true));
+        assert!(fp.nbytes() > cache.nbytes() / 7 * 3, "f32 rows outweigh codes");
+    }
+}

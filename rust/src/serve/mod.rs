@@ -1,0 +1,29 @@
+//! Autoregressive serving: KV-cached incremental decode and continuous
+//! batching on top of the shared `model::forward::block_step` block body.
+//!
+//! Three pieces (see `docs/SERVING.md` for the contracts):
+//!
+//! * [`kv_cache`] — [`KvCache`]: one `model::kv::LayerKv` per layer
+//!   (fp32 or u8 codes at ≤ 8-bit KV settings, bit-identical to the
+//!   full-sequence oracle's fake-quant values either way) plus the
+//!   exact byte accounting the engine charges the budget gate.
+//! * [`session`] — [`DecodeSession`]: prefill once, then O(1)-per-token
+//!   steps (attention stays O(prefix); every full-sequence recompute the
+//!   pre-serving code did was O(prefix²)).
+//! * [`engine`] — [`BatchEngine`]: continuous batching with admission
+//!   charged against the `coordinator::budget` gate and per-session
+//!   seeded sampling, deterministic at any worker count.
+//!
+//! CLI entry points: `dartquant generate`, `dartquant serve-bench`;
+//! throughput numbers come from the `perf_decode` bench. Parity with the
+//! full-sequence forward is enforced by `rust/tests/serving.rs`.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod session;
+
+pub use engine::{
+    request_cache_bytes, BatchEngine, EngineConfig, EngineEvent, GenRequest, GenResult,
+};
+pub use kv_cache::{KvCache, LayerKv};
+pub use session::{sample_logits, DecodeSession};

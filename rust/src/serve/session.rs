@@ -1,0 +1,163 @@
+//! One autoregressive decode session: prefill once, then O(1)-per-token
+//! steps against a persistent [`KvCache`].
+//!
+//! A session drives the same block body as the full-sequence oracle
+//! (`model::forward::block_step`), so its logits are bit-identical to
+//! `forward_one` in fp32 and land on the same fake-quant grids under
+//! activation/KV quantization — the decode-parity contract enforced by
+//! `rust/tests/serving.rs`. The cache uses compact code storage whenever
+//! the KV grid fits (≤ 8-bit), which is where the serving memory story
+//! comes from.
+
+use super::kv_cache::KvCache;
+use crate::model::forward::{self, FwdOptions, NoCapture};
+use crate::model::Weights;
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+use std::sync::Arc;
+
+/// Incremental decode state over shared read-only weights.
+pub struct DecodeSession {
+    weights: Arc<Weights>,
+    opt: FwdOptions,
+    cache: KvCache,
+}
+
+impl DecodeSession {
+    /// A fresh session (no cached positions) on `weights`.
+    pub fn new(weights: Arc<Weights>, opt: FwdOptions) -> DecodeSession {
+        let cache = KvCache::new(&weights.cfg, opt.kv_levels, true);
+        DecodeSession { weights, opt, cache }
+    }
+
+    /// Positions processed so far.
+    pub fn positions(&self) -> usize {
+        self.cache.positions()
+    }
+
+    /// Resident KV-cache bytes across all layers.
+    pub fn cache_nbytes(&self) -> u64 {
+        self.cache.nbytes()
+    }
+
+    /// The forward options this session decodes with.
+    pub fn options(&self) -> FwdOptions {
+        self.opt
+    }
+
+    /// Run the transformer blocks over `tokens` as the next positions,
+    /// extending the cache; returns the new positions' residual rows.
+    fn advance_blocks(&mut self, tokens: &[i32]) -> Mat {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let w = Arc::clone(&self.weights);
+        let mut x = forward::embed_tokens(&w, tokens);
+        for l in 0..w.cfg.n_layers {
+            forward::block_step(&w, l, &mut x, self.cache.layer_mut(l), self.opt, &mut NoCapture);
+        }
+        x
+    }
+
+    /// Process `tokens` as the next positions (a prompt, a prompt chunk,
+    /// or a single decoded token), extending the cache. Returns the
+    /// logits of every processed position (`tokens.len() × vocab`) —
+    /// what the decode-parity tests compare position-by-position.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Mat {
+        let x = self.advance_blocks(tokens);
+        forward::head_logits(&self.weights, &x)
+    }
+
+    /// [`DecodeSession::prefill`] evaluating the LM head only for the
+    /// final position — all generation ever reads. Skips the other
+    /// `tokens.len() - 1` vocab-wide head rows on the serving hot path;
+    /// the returned row is bit-identical to `prefill`'s last row (the
+    /// head is per-row).
+    pub fn prefill_last(&mut self, tokens: &[i32]) -> Vec<f32> {
+        let x = self.advance_blocks(tokens);
+        let last = x.rows_slice(x.rows - 1, x.rows);
+        forward::head_logits(&self.weights, &last).data
+    }
+
+    /// Decode one token at the next position; returns its logits row.
+    /// Per-step cost is O(prefix) attention + O(1) linears — independent
+    /// of how the prefix was fed in.
+    pub fn step(&mut self, token: i32) -> Vec<f32> {
+        self.prefill_last(&[token])
+    }
+}
+
+/// Sample a token id from a logits row: greedy argmax at
+/// `temperature <= 0` (ties break to the lowest index), softmax sampling
+/// at `temperature > 0`. All randomness comes from the caller's
+/// generator — the serving engine hands every session its own seeded
+/// `Pcg64`, which is what keeps batched decode deterministic at any
+/// worker count (the `docs/CONCURRENCY.md` contract).
+pub fn sample_logits(row: &[f32], temperature: f32, rng: &mut Pcg64) -> usize {
+    if temperature <= 0.0 {
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let exps: Vec<f64> = row.iter().map(|&v| (((v - mx) / temperature) as f64).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    row.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn step_returns_last_row_of_prefill() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 3));
+        let mut a = DecodeSession::new(Arc::clone(&w), FwdOptions::FP);
+        let mut b = DecodeSession::new(w, FwdOptions::FP);
+        let toks = [5i32, 9, 2];
+        let la = a.prefill(&toks);
+        b.prefill(&toks[..2]);
+        let row = b.step(toks[2]);
+        assert_eq!(la.row(2), &row[..]);
+        assert_eq!(a.positions(), 3);
+        assert_eq!(b.positions(), 3);
+        assert!(a.cache_nbytes() > 0);
+    }
+
+    #[test]
+    fn prefill_last_matches_full_prefill_tail() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 4));
+        let toks = [7i32, 3, 11, 2];
+        let mut full = DecodeSession::new(Arc::clone(&w), FwdOptions::FP);
+        let all = full.prefill(&toks);
+        let mut fast = DecodeSession::new(w, FwdOptions::FP);
+        let last = fast.prefill_last(&toks);
+        assert_eq!(all.row(all.rows - 1), &last[..]);
+        assert_eq!(fast.positions(), toks.len());
+    }
+
+    #[test]
+    fn greedy_sampling_breaks_ties_low_and_temperature_is_seeded() {
+        let mut rng = Pcg64::new(1);
+        assert_eq!(sample_logits(&[1.0, 3.0, 3.0, 0.0], 0.0, &mut rng), 1);
+        // Seeded softmax sampling is deterministic per generator stream.
+        let row = [0.1f32, 2.0, 1.5, -1.0];
+        let a: Vec<usize> = (0..8).map(|_| sample_logits(&row, 0.8, &mut Pcg64::new(7))).collect();
+        let b: Vec<usize> = (0..8).map(|_| sample_logits(&row, 0.8, &mut Pcg64::new(7))).collect();
+        assert_eq!(a, b);
+        // and always lands on a valid index
+        assert!(a.iter().all(|&i| i < row.len()));
+    }
+}

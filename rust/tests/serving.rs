@@ -1,0 +1,278 @@
+//! Decode-parity suite: the KV-cached incremental path (prefill + step)
+//! must reproduce the full-sequence oracle —
+//!
+//! * **bit-identical** in fp32 (same block body, same per-row ops),
+//! * within 1e-4 relative NLL under activation/KV quantization and
+//!   packed weights (in practice also bit-identical; the tolerance is
+//!   the acceptance bar),
+//! * token-for-token across batched sessions with staggered
+//!   admit/retire, at any worker count, under a KV budget.
+//!
+//! Plus `util::propcheck` properties for the KV-cache quantizer. Runs
+//! natively (no artifacts needed).
+
+use dartquant::model::{
+    fake_quant_rows, forward_batch, forward_one, nll_from_logits, FwdOptions, ModelConfig,
+    NoCapture, Weights,
+};
+use dartquant::serve::{BatchEngine, DecodeSession, EngineConfig, GenRequest, KvCache};
+use dartquant::tensor::Mat;
+use dartquant::util::propcheck::{gen, Runner};
+use std::sync::Arc;
+
+/// The table2 configs exercised by the quick bench grid (llama3-small
+/// adds grouped-query attention: 6 q heads over 2 kv heads).
+const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+
+fn model(name: &str, seed: u64) -> (Arc<Weights>, Vec<i32>) {
+    let cfg = ModelConfig::builtin(name).unwrap();
+    let w = Weights::default_synthetic(&cfg, seed);
+    let mut rng = dartquant::util::prng::Pcg64::new(seed ^ 0x5e55);
+    let toks: Vec<i32> = (0..48).map(|_| rng.below(cfg.vocab) as i32).collect();
+    (Arc::new(w), toks)
+}
+
+/// Per-position NLLs from a session fed `prefill_len` prompt tokens and
+/// then stepped one token at a time — the incremental counterpart of
+/// `forward_one`'s (T-1)-length NLL vector.
+fn decode_nlls(w: &Arc<Weights>, toks: &[i32], prefill_len: usize, opt: FwdOptions) -> Vec<f32> {
+    let mut sess = DecodeSession::new(Arc::clone(w), opt);
+    let mut nll = Vec::with_capacity(toks.len() - 1);
+    let logits = sess.prefill(&toks[..prefill_len]);
+    for i in 0..prefill_len.min(toks.len() - 1) {
+        nll.push(nll_from_logits(logits.row(i), toks[i + 1] as usize));
+    }
+    for p in prefill_len..toks.len() {
+        let row = sess.step(toks[p]);
+        if p + 1 < toks.len() {
+            nll.push(nll_from_logits(&row, toks[p + 1] as usize));
+        }
+    }
+    assert_eq!(sess.positions(), toks.len());
+    nll
+}
+
+#[test]
+fn fp32_decode_is_bit_identical_to_full_forward() {
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 1);
+        let oracle = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+        // Crossing the prefill/decode boundary at several points must not
+        // change a single bit.
+        for prefill_len in [1usize, 24, toks.len()] {
+            let got = decode_nlls(&w, &toks, prefill_len, FwdOptions::FP);
+            assert_eq!(got, oracle, "{name}: prefill {prefill_len}");
+        }
+        // And the batch entry point agrees with itself through decode.
+        let batch = forward_batch(&w, &[toks.clone()], FwdOptions::FP);
+        assert_eq!(batch[0], oracle, "{name}");
+    }
+}
+
+#[test]
+fn quantized_decode_matches_full_forward_within_tolerance() {
+    // a_bits / kv_bits / online hadamard across the table2 configs. The
+    // 4-bit KV settings exercise the cache's u8 code storage; use_had
+    // exercises the online R3 on the cached K rows.
+    let opts = [
+        FwdOptions::quant(4, 4, false),
+        FwdOptions::quant(4, 4, true),
+        FwdOptions::quant(8, 8, false),
+        FwdOptions::quant(16, 4, false),
+    ];
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 2);
+        for (oi, &opt) in opts.iter().enumerate() {
+            let oracle = forward_one(&w, &toks, opt, &mut NoCapture);
+            let got = decode_nlls(&w, &toks, 16, opt);
+            assert_eq!(got.len(), oracle.len());
+            for (a, b) in oracle.iter().zip(&got) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                    "{name} opt[{oi}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_decode_matches_packed_full_forward() {
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 3);
+        let packed = Arc::new(dartquant::quant::rtn_quantize_model_packed(&w, 4));
+        assert!(packed.has_packed());
+        for opt in [FwdOptions::quant(4, 16, false), FwdOptions::quant(4, 4, false)] {
+            let oracle = forward_one(&packed, &toks, opt, &mut NoCapture);
+            let got = decode_nlls(&packed, &toks, 16, opt);
+            for (a, b) in oracle.iter().zip(&got) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                    "{name}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_parity_holds_on_moe_models() {
+    let cfg = ModelConfig::builtin("mixtral-tiny").unwrap();
+    let w = Arc::new(Weights::default_synthetic(&cfg, 5));
+    let mut rng = dartquant::util::prng::Pcg64::new(6);
+    let toks: Vec<i32> = (0..32).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let oracle = forward_one(&w, &toks, FwdOptions::FP, &mut NoCapture);
+    assert_eq!(decode_nlls(&w, &toks, 8, FwdOptions::FP), oracle);
+}
+
+#[test]
+fn chunked_prefill_is_equivalent_to_one_shot() {
+    let (w, toks) = model("llama2-tiny", 4);
+    let opt = FwdOptions::quant(8, 8, false);
+    let mut one = DecodeSession::new(Arc::clone(&w), opt);
+    let full = one.prefill(&toks[..32]);
+    let mut chunked = DecodeSession::new(Arc::clone(&w), opt);
+    chunked.prefill(&toks[..10]);
+    chunked.prefill(&toks[10..25]);
+    let tail = chunked.prefill(&toks[25..32]);
+    // Chunk boundaries must not change the logits of the final chunk.
+    for (i, row) in (25..32).zip(0..tail.rows) {
+        assert_eq!(full.row(i), tail.row(row), "position {i}");
+    }
+    assert_eq!(one.cache_nbytes(), chunked.cache_nbytes());
+}
+
+/// Greedy-decode a single request in its own engine — the reference for
+/// the batched/staggered runs.
+fn solo_tokens(
+    w: &Arc<Weights>,
+    ecfg: EngineConfig,
+    prompt: Vec<i32>,
+    max_new: usize,
+) -> Vec<i32> {
+    let mut engine =
+        BatchEngine::new(Arc::clone(w), EngineConfig { budget: None, workers: 1, ..ecfg });
+    engine.submit(GenRequest { prompt, max_new });
+    let r = engine.run().unwrap();
+    assert!(r[0].error.is_none());
+    r[0].tokens.clone()
+}
+
+#[test]
+fn staggered_batched_sessions_match_single_sessions_token_for_token() {
+    let (w, toks) = model("llama2-tiny", 7);
+    let base =
+        EngineConfig { opt: FwdOptions::quant(8, 8, false), seed: 11, ..Default::default() };
+    // Session i holds estimate(11 + 4i) cache bytes (prompt 8+i plus
+    // max_new 4+3i minus the never-cached final token); a 40-position
+    // budget fits about two at a time, so admissions and retirements
+    // stagger — late sessions prefill while earlier ones are mid-decode
+    // — but never all four at once (Σ = 68 positions).
+    let budget = KvCache::estimate_nbytes(&w.cfg, base.opt.kv_levels, 40, true) + 64;
+    let requests: Vec<(Vec<i32>, usize)> = (0..4)
+        .map(|i| (toks[i * 6..i * 6 + 8 + i].to_vec(), 4 + 3 * i))
+        .collect();
+    let mut engines = Vec::new();
+    for workers in [1usize, 4] {
+        let mut engine = BatchEngine::new(
+            Arc::clone(&w),
+            EngineConfig { budget: Some(budget), workers, ..base },
+        );
+        for (prompt, max_new) in &requests {
+            engine.submit(GenRequest { prompt: prompt.clone(), max_new: *max_new });
+        }
+        let results = engine.run().unwrap().to_vec();
+        assert_eq!(results.len(), requests.len());
+        for (r, (prompt, max_new)) in results.iter().zip(&requests) {
+            assert!(r.error.is_none(), "session {} failed: {:?}", r.id, r.error);
+            assert_eq!(r.tokens.len(), *max_new);
+            let solo = solo_tokens(&w, base, prompt.clone(), *max_new);
+            assert_eq!(r.tokens, solo, "session {} diverged from solo decode", r.id);
+        }
+        // The budget actually staggered the batch, and was never exceeded.
+        assert!(engine.peak_cache_bytes() <= budget);
+        engines.push(engine);
+    }
+    // Determinism contract: identical event streams at 1 and 4 workers.
+    assert_eq!(engines[0].events(), engines[1].events());
+    assert_eq!(engines[0].results(), engines[1].results());
+}
+
+#[test]
+fn over_budget_request_fails_while_others_complete() {
+    let (w, toks) = model("llama2-tiny", 8);
+    let opt = FwdOptions::FP;
+    let small = KvCache::estimate_nbytes(&w.cfg, opt.kv_levels, 8 + 2, true);
+    let mut engine = BatchEngine::new(
+        Arc::clone(&w),
+        EngineConfig { opt, budget: Some(small), workers: 2, ..Default::default() },
+    );
+    engine.submit(GenRequest { prompt: toks[..8].to_vec(), max_new: 2 });
+    engine.submit(GenRequest { prompt: toks.clone(), max_new: 64 }); // can never fit
+    let results = engine.run().unwrap().to_vec();
+    assert!(results[0].error.is_none());
+    assert_eq!(results[0].tokens.len(), 2);
+    assert!(results[1].error.as_deref().unwrap().contains("memory budget"));
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_kv_quantizer_roundtrip_error_is_bounded() {
+    Runner::new().cases(32).run("kv fake-quant roundtrip bound", |rng| {
+        let n = gen::size(rng, 2, 96);
+        let levels = [4.0f32, 16.0, 256.0][rng.below(3)];
+        let row = gen::vec_f32(rng, n);
+        let mut q = Mat::from_vec(1, n, row.clone());
+        fake_quant_rows(&mut q, levels);
+        let (mn, mx) = row.iter().fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        let half_step = (mx - mn) / (levels - 1.0) / 2.0;
+        let tol = half_step + 1e-6 * (mx - mn).abs().max(1.0);
+        for (a, b) in row.iter().zip(&q.data) {
+            if (a - b).abs() > tol {
+                return Err(format!("roundtrip error {} > {tol}", (a - b).abs()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fake_quant_is_idempotent() {
+    // Quantizing an already-quantized row is a no-op up to one float
+    // rounding of the re-derived grid (≤ ~1e-6 of the row range).
+    Runner::new().cases(32).run("fake-quant idempotence", |rng| {
+        let n = gen::size(rng, 2, 64);
+        let levels = [4.0f32, 16.0, 256.0][rng.below(3)];
+        let mut once = Mat::from_vec(1, n, gen::vec_f32(rng, n));
+        fake_quant_rows(&mut once, levels);
+        let mut twice = once.clone();
+        fake_quant_rows(&mut twice, levels);
+        let range = once.max_abs().max(1e-12);
+        let d = once.max_abs_diff(&twice);
+        if d <= 1e-5 * range {
+            Ok(())
+        } else {
+            Err(format!("second pass moved values by {d} (range {range})"))
+        }
+    });
+}
+
+#[test]
+fn prop_session_cache_bytes_match_engine_accounting() {
+    // The bytes a session actually holds equal the estimate the engine
+    // charges the budget gate for, at every prefix length and bit mix.
+    let (w, toks) = model("llama2-tiny", 9);
+    Runner::new().cases(16).run("session cache accounting", |rng| {
+        let len = gen::size(rng, 1, toks.len());
+        let kv_bits = [4u8, 8, 16][rng.below(3)];
+        let opt = FwdOptions::quant(16, kv_bits, false);
+        let mut sess = DecodeSession::new(Arc::clone(&w), opt);
+        sess.prefill(&toks[..len]);
+        let want = KvCache::estimate_nbytes(&w.cfg, opt.kv_levels, len, true);
+        if sess.cache_nbytes() != want {
+            return Err(format!("cache {} != estimate {want}", sess.cache_nbytes()));
+        }
+        Ok(())
+    });
+}
