@@ -2,15 +2,18 @@
 #
 #   make artifacts   AOT-lower the JAX/Pallas graphs to artifacts/ (the one
 #                    python step; everything after runs from rust)
-#   make check       tier-1 verify: release build + bench compile + tests
-#                    (incl. the rust/tests/serving.rs decode-parity suite)
-#                    + clippy + doc + fmt check
+#   make check       tier-1 verify: release build + bench/example compile
+#                    + tests (incl. rust/tests/serving.rs decode parity
+#                    and rust/tests/streaming.rs out-of-core) + clippy
+#                    + doc + docs link check + fmt check
 #   make clippy      cargo clippy over every target (warnings are errors)
 #   make doc         rustdoc the public API (warnings are errors)
+#   make check-links docs link checker (scripts/check_links.sh)
 #   make bench       run the paper-table bench binaries (needs artifacts)
-#   make bench-decode  run the serving-path bench (native; no artifacts)
+#   make bench-decode     run the serving-path bench (native; no artifacts)
+#   make bench-streaming  run the out-of-core vs in-memory bench (native)
 
-.PHONY: artifacts check test fmt clippy doc bench bench-decode
+.PHONY: artifacts check test fmt clippy doc check-links bench bench-decode bench-streaming
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -30,8 +33,14 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+check-links:
+	./scripts/check_links.sh
+
 bench:
 	cargo bench
 
 bench-decode:
 	cargo bench --bench perf_decode
+
+bench-streaming:
+	cargo bench --bench perf_streaming

@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (also `make check`):
-#   release build, bench compile (perf_decode & friends build but do not
-#   run), quiet tests (includes the decode-parity suite
-#   rust/tests/serving.rs), clippy (warnings as errors), rustdoc
-#   (warnings as errors), formatting.
+#   release build, bench compile (perf_decode/perf_streaming & friends
+#   build but do not run), example compile (quickstart & friends), quiet
+#   tests (includes the decode-parity suite rust/tests/serving.rs and
+#   the out-of-core suite rust/tests/streaming.rs), clippy (warnings as
+#   errors), rustdoc (warnings as errors), docs link check, formatting.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
 cargo build --release --benches
+cargo build --release --examples
 cargo test -q
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+./scripts/check_links.sh
 cargo fmt --check

@@ -10,7 +10,12 @@
 //!
 //! The parallel scheduler ([`super::Scheduler`]) admits every job here
 //! before it runs, so the budget — not the worker count — bounds
-//! in-flight activation state; see `docs/CONCURRENCY.md`.
+//! in-flight activation state; see `docs/CONCURRENCY.md`. The same gate
+//! type backs the out-of-core weight store (`model::WeightStore`): every
+//! checkout lease charges its decoded weight bytes, so a streamed run's
+//! store never holds more than `--resident-budget` checked out at once
+//! (what the budget does and does not bound is spelled out in
+//! `docs/STREAMING.md`).
 
 use crate::util::mem::PeakTracker;
 use std::sync::{Arc, Condvar, Mutex};
@@ -110,6 +115,13 @@ impl MemoryGate {
     pub fn peak_bytes(&self) -> u64 {
         self.tracker.peak_bytes()
     }
+
+    /// Bytes currently admitted (live leases). The out-of-core
+    /// `model::WeightStore` exposes this as its exact resident-weight
+    /// accounting — see `docs/STREAMING.md`.
+    pub fn current_bytes(&self) -> u64 {
+        self.tracker.current_bytes()
+    }
 }
 
 /// RAII admission lease.
@@ -201,6 +213,20 @@ mod tests {
         });
         assert!(max_seen.load(Ordering::SeqCst) <= 90, "gate leaked");
         assert!(g.peak_bytes() <= 90);
+    }
+
+    #[test]
+    fn current_bytes_tracks_live_leases() {
+        let g = MemoryGate::new(Some(100));
+        assert_eq!(g.current_bytes(), 0);
+        let a = g.admit(40).unwrap();
+        let b = g.admit(30).unwrap();
+        assert_eq!(g.current_bytes(), 70);
+        drop(a);
+        assert_eq!(g.current_bytes(), 30);
+        drop(b);
+        assert_eq!(g.current_bytes(), 0);
+        assert_eq!(g.peak_bytes(), 70, "peak survives release");
     }
 
     #[test]

@@ -30,6 +30,19 @@ impl CalibrationPools {
     }
 }
 
+/// Row-concatenate captured parts into one pool matrix.
+fn concat(parts: &[Mat]) -> Mat {
+    let cols = parts[0].cols;
+    let rows = parts.iter().map(|p| p.rows).sum();
+    let mut out = Mat::zeros(rows, cols);
+    let mut at = 0;
+    for p in parts {
+        out.data[at * cols..(at + p.rows) * cols].copy_from_slice(&p.data);
+        at += p.rows;
+    }
+    out
+}
+
 /// Capture pools via the PJRT `capture_{cfg}` artifact.
 ///
 /// `sequences` are split into artifact-sized (batch=8) chunks; `frac` is
@@ -80,18 +93,6 @@ pub fn capture_pools(
             r2_parts[l].push(rows);
         }
     }
-
-    let concat = |parts: &[Mat]| -> Mat {
-        let cols = parts[0].cols;
-        let rows = parts.iter().map(|p| p.rows).sum();
-        let mut out = Mat::zeros(rows, cols);
-        let mut at = 0;
-        for p in parts {
-            out.data[at * cols..(at + p.rows) * cols].copy_from_slice(&p.data);
-            at += p.rows;
-        }
-        out
-    };
 
     Ok(CalibrationPools {
         r1_pool: concat(&r1_parts),
@@ -151,22 +152,88 @@ pub fn capture_pools_native(
         forward_one(weights, seq, FwdOptions::FP, &mut hook);
         captured += seq.len();
     }
-    let concat = |parts: &[Mat]| -> Mat {
-        let cols = parts[0].cols;
-        let rows = parts.iter().map(|p| p.rows).sum();
-        let mut out = Mat::zeros(rows, cols);
-        let mut at = 0;
-        for p in parts {
-            out.data[at * cols..(at + p.rows) * cols].copy_from_slice(&p.data);
-            at += p.rows;
-        }
-        out
-    };
     CalibrationPools {
         r1_pool: concat(&hook.r1),
         r2_pools: hook.r2.iter().map(|p| concat(p)).collect(),
         captured_tokens: captured,
     }
+}
+
+/// Streamed native capture over a `model::WeightStore` (no artifacts,
+/// weight residency bounded to one layer): the layer-at-a-time forward
+/// `model::stream_blocks` feeds the same site hooks as
+/// [`capture_pools_native`]. The traversal is layer-major while the
+/// in-memory captures are sequence-major and draw sampling indices from
+/// one sequential PRNG, so the streamed sampler derives an independent
+/// seed per (site, sequence) instead — pools are deterministic for a
+/// given seed at any budget, with the same geometry as the in-memory
+/// captures; the sampled row *subsets* differ (`docs/STREAMING.md`
+/// documents the capture-backend caveat).
+pub fn capture_pools_streamed(
+    store: &crate::model::WeightStore,
+    sequences: &[Vec<i32>],
+    frac: f64,
+    seed: u64,
+) -> Result<CalibrationPools> {
+    use crate::model::{stream_blocks, CaptureHook, FwdOptions};
+    fn site_rng(seed: u64, kind: u64, site: u64, seq: u64) -> Pcg64 {
+        Pcg64::new(seed ^ 0xca9 ^ (kind << 56) ^ (site << 32) ^ seq)
+    }
+    struct Hook {
+        seed: u64,
+        frac: f64,
+        hd: usize,
+        heads: usize,
+        /// Per-site call counts: the n-th call for a site is sequence n
+        /// (within a layer, `stream_blocks` visits sequences in order).
+        seen_x: Vec<usize>,
+        seen_v: Vec<usize>,
+        r1: Vec<Mat>,
+        r2: Vec<Vec<Mat>>,
+    }
+    impl CaptureHook for Hook {
+        fn on_x_site(&mut self, site: usize, h: &Mat) {
+            let seq = self.seen_x[site];
+            self.seen_x[site] += 1;
+            let mut rng = site_rng(self.seed, 1, site as u64, seq as u64);
+            let keep = ((h.rows as f64 * self.frac).ceil() as usize).max(4).min(h.rows);
+            let idx = rng.sample_indices(h.rows, keep);
+            self.r1.push(h.gather_rows(&idx));
+        }
+        fn on_v_site(&mut self, layer: usize, v: &Mat) {
+            let seq = self.seen_v[layer];
+            self.seen_v[layer] += 1;
+            let mut rng = site_rng(self.seed, 2, layer as u64, seq as u64);
+            let keep = ((v.rows as f64 * self.frac).ceil() as usize).max(4).min(v.rows);
+            let idx = rng.sample_indices(v.rows, keep);
+            let sub = v.gather_rows(&idx);
+            let mut rows = Mat::zeros(sub.rows * self.heads, self.hd);
+            for i in 0..sub.rows {
+                for h in 0..self.heads {
+                    rows.row_mut(i * self.heads + h)
+                        .copy_from_slice(&sub.row(i)[h * self.hd..(h + 1) * self.hd]);
+                }
+            }
+            self.r2[layer].push(rows);
+        }
+    }
+    let cfg = store.cfg().clone();
+    let mut hook = Hook {
+        seed,
+        frac,
+        hd: cfg.head_dim,
+        heads: cfg.n_kv_heads,
+        seen_x: vec![0; 2 * cfg.n_layers],
+        seen_v: vec![0; cfg.n_layers],
+        r1: Vec::new(),
+        r2: vec![Vec::new(); cfg.n_layers],
+    };
+    stream_blocks(store, sequences, FwdOptions::FP, &mut hook, |_, _, _| Ok(()))?;
+    Ok(CalibrationPools {
+        r1_pool: concat(&hook.r1),
+        r2_pools: hook.r2.iter().map(|p| concat(p)).collect(),
+        captured_tokens: sequences.iter().map(|s| s.len()).sum(),
+    })
 }
 
 #[cfg(test)]
@@ -200,5 +267,32 @@ mod tests {
         let a = capture_pools_native(&w, &seqs, 0.2, 5);
         let b = capture_pools_native(&w, &seqs, 0.2, 5);
         assert_eq!(a.r1_pool.data, b.r1_pool.data);
+    }
+
+    #[test]
+    fn streamed_capture_matches_native_geometry_and_is_deterministic() {
+        use crate::model::{suggested_resident_budget, WeightStore};
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let seqs = corpus.calib_sequences(2, 40);
+        let path =
+            std::env::temp_dir().join(format!("dq-capture-{}.dartq", std::process::id()));
+        let store =
+            WeightStore::create(&path, &w, Some(suggested_resident_budget(&cfg))).unwrap();
+        let a = capture_pools_streamed(&store, &seqs, 0.1, 3).unwrap();
+        let b = capture_pools_streamed(&store, &seqs, 0.1, 3).unwrap();
+        assert_eq!(a.r1_pool.data, b.r1_pool.data, "streamed capture must be deterministic");
+        assert_eq!(a.captured_tokens, 80);
+        assert_eq!(a.r1_pool.cols, cfg.dim);
+        assert_eq!(a.r2_pools.len(), cfg.n_layers);
+        assert_eq!(a.r2_pools[0].cols, cfg.head_dim);
+        // Same keep-count formula per site event ⇒ same pool geometry as
+        // the in-memory native capture (the sampled subsets differ).
+        let native = capture_pools_native(&w, &seqs, 0.1, 3);
+        assert_eq!(a.r1_pool.rows, native.r1_pool.rows);
+        assert_eq!(a.r2_pools[1].rows, native.r2_pools[1].rows);
+        assert!(store.peak_resident_bytes() <= suggested_resident_budget(&cfg));
+        std::fs::remove_file(path).ok();
     }
 }

@@ -33,7 +33,9 @@ pub mod scheduler;
 pub mod stages;
 
 pub use budget::{MemoryGate, OverBudget, OwnedLease};
-pub use capture::{capture_pools, capture_pools_native, CalibrationPools};
+pub use capture::{
+    capture_pools, capture_pools_native, capture_pools_streamed, CalibrationPools,
+};
 pub use registry::{
     act_absmax, AtomQuantizer, DartCalibrated, GptqQuantizer, MethodRegistry, MethodSpec,
     NoRotation, OmniQuantQuantizer, QuikQuantizer, RandomHadamard, RandomOrthogonal,
@@ -188,6 +190,25 @@ pub struct PipelineConfig {
     /// against it (None = unlimited; `Some(24 << 20)` = the scaled
     /// single-3090 mode).
     pub memory_budget: Option<u64>,
+    /// Out-of-core execution (CLI `--streaming`): spill the weights to an
+    /// indexed on-disk artifact and run every stage through
+    /// checkout/checkin leases on a `model::WeightStore`, so the store's
+    /// peak resident weight bytes are bounded by `resident_budget`
+    /// instead of model size. Canonical reports stay byte-identical to
+    /// in-memory runs for the native-capable method grid; DartQuant's
+    /// streamed runs capture natively rather than through the PJRT
+    /// artifact — the determinism contract and its capture-backend
+    /// carve-out are in `docs/STREAMING.md`.
+    pub streaming: bool,
+    /// Resident weight-byte budget for streamed runs (CLI
+    /// `--resident-budget`; None = unlimited but still peak-tracked).
+    /// Checkouts block while over budget; a checkout that can never fit
+    /// fails the run. `model::suggested_resident_budget` gives the
+    /// smallest budget every built-in streamed stage fits.
+    pub resident_budget: Option<u64>,
+    /// Directory for the streamed run's spill artifact (None = the OS
+    /// temp dir). The spill file is removed when the run finishes.
+    pub stream_dir: Option<PathBuf>,
     /// Where the AOT artifacts live (worker runtimes open this dir).
     pub artifacts_dir: PathBuf,
 }
@@ -210,6 +231,9 @@ impl PipelineConfig {
             packed: false,
             seed: 0,
             memory_budget: None,
+            streaming: false,
+            resident_budget: None,
+            stream_dir: None,
             artifacts_dir: Runtime::default_dir(),
         }
     }

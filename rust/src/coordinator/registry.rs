@@ -14,7 +14,7 @@ use super::scheduler::{CalibJob, Scheduler};
 use super::{job_bytes, spin_job_bytes, PipelineConfig};
 use crate::calib::{self, CalibConfig};
 use crate::data::Corpus;
-use crate::model::{Tensor, TokenBatch, Weights};
+use crate::model::{Tensor, TokenBatch, WeightStore, Weights};
 use crate::quant::{self, GptqConfig};
 use crate::tensor::{QMat, QuantSpec};
 use crate::rotation::RotationSet;
@@ -109,6 +109,26 @@ pub trait RotationStrategy: Send + Sync {
         ctx: &StageContext,
         pools: Option<&CalibrationPools>,
     ) -> Result<RotationOutcome>;
+
+    /// Capture-stage work for **streamed** (out-of-core) runs: pools must
+    /// come from the [`WeightStore`], never from `ctx.weights` (the
+    /// streamed driver routes all tensor access through checkout leases —
+    /// see `docs/STREAMING.md`). The default declines streaming with a
+    /// contextful error; strategies whose [`RotationStrategy::capture`]
+    /// is a no-op override this to return `Ok(None)`, and capturing
+    /// strategies run a layer-streamed capture. `calibrate` is reused
+    /// unchanged — it operates on pools, not weights.
+    fn capture_streamed(
+        &self,
+        _ctx: &StageContext,
+        _store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        anyhow::bail!(
+            "rotation strategy {:?} does not support streamed (out-of-core) execution — \
+             run without --streaming",
+            self.name()
+        )
+    }
 }
 
 /// How weights are quantized after rotation fusion.
@@ -121,6 +141,23 @@ pub trait WeightQuantizer: Send + Sync {
     /// transformer linears come back as packed `QMat` storage; otherwise
     /// the historical dequantized-f32 model.
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights>;
+
+    /// Quantize for **streamed** (out-of-core) runs: check weights out of
+    /// the store, quantize with the same kernels as
+    /// [`WeightQuantizer::quantize`], write back — the output model must
+    /// be bit-identical to the in-memory pass (the determinism contract
+    /// of `docs/STREAMING.md`). The default declines streaming with a
+    /// contextful error. Built-ins: RTN and GPTQ stream a layer at a
+    /// time; OmniQuant fans out per-layer scheduler jobs whose
+    /// checkout/checkin leases bound residency; the mixed-precision
+    /// quantizers (QUIK/Atom) do not stream yet.
+    fn quantize_streamed(&self, _ctx: &StageContext, _store: &WeightStore) -> Result<()> {
+        anyhow::bail!(
+            "weight quantizer {:?} does not support streamed (out-of-core) execution — \
+             run without --streaming",
+            self.name()
+        )
+    }
 }
 
 /// Whether this run emits packed storage: the `--packed` switch and a
@@ -148,6 +185,14 @@ impl RotationStrategy for NoRotation {
     ) -> Result<RotationOutcome> {
         Ok(RotationOutcome::none())
     }
+
+    fn capture_streamed(
+        &self,
+        _ctx: &StageContext,
+        _store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        Ok(None) // nothing to capture — streams trivially
+    }
 }
 
 /// Random-Hadamard R1/R2 (+ online R3/R4) — QuaRot.
@@ -171,6 +216,14 @@ impl RotationStrategy for RandomHadamard {
             cfg.n_layers,
             &mut rng,
         )))
+    }
+
+    fn capture_streamed(
+        &self,
+        _ctx: &StageContext,
+        _store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        Ok(None) // rotations are data-free — streams trivially
     }
 }
 
@@ -196,6 +249,14 @@ impl RotationStrategy for RandomOrthogonal {
             cfg.n_layers,
             &mut rng,
         )))
+    }
+
+    fn capture_streamed(
+        &self,
+        _ctx: &StageContext,
+        _store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        Ok(None) // rotations are data-free — streams trivially
     }
 }
 
@@ -256,6 +317,20 @@ impl RotationStrategy for SpinCayley {
             online_had: true,
         };
         Ok(RotationOutcome { rotation: Some(rotation), loss_curves: vec![res.losses] })
+    }
+
+    fn capture_streamed(
+        &self,
+        _ctx: &StageContext,
+        _store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        anyhow::bail!(
+            "end-to-end Cayley fine-tuning ({}) holds the whole model + optimizer + backprop \
+             state at once — exactly the workload a resident budget exists to reject (the \
+             paper's Table 3 wall); run without --streaming, or use a per-layer method like \
+             dartquant",
+            self.name()
+        )
     }
 }
 
@@ -358,6 +433,25 @@ impl RotationStrategy for DartCalibrated {
         let rotation = RotationSet { r1: r1.rotation, r2, online_had: true };
         Ok(RotationOutcome { rotation: Some(rotation), loss_curves })
     }
+
+    fn capture_streamed(
+        &self,
+        ctx: &StageContext,
+        store: &WeightStore,
+    ) -> Result<Option<CalibrationPools>> {
+        // Calibration still executes AOT artifacts on per-worker runtimes,
+        // so fail native runs here — before the capture forward passes —
+        // with the contextful runtime error.
+        ctx.runtime()?;
+        let calib_seqs =
+            ctx.corpus.calib_sequences(ctx.cfg.calib_sequences, ctx.cfg.calib_seq_len);
+        Ok(Some(capture::capture_pools_streamed(
+            store,
+            &calib_seqs,
+            ctx.cfg.token_frac,
+            ctx.cfg.seed,
+        )?))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -378,6 +472,10 @@ impl WeightQuantizer for RtnQuantizer {
         } else {
             quant::rtn_quantize_model(weights, ctx.cfg.bits.w)
         })
+    }
+
+    fn quantize_streamed(&self, ctx: &StageContext, store: &WeightStore) -> Result<()> {
+        quant::rtn_quantize_store(store, ctx.cfg.bits.w, packed_run(ctx.cfg))
     }
 }
 
@@ -408,6 +506,14 @@ impl WeightQuantizer for GptqQuantizer {
         } else {
             quant::gptq_quantize_model(weights, &gseqs, cfg)
         })
+    }
+
+    fn quantize_streamed(&self, ctx: &StageContext, store: &WeightStore) -> Result<()> {
+        let gseqs = ctx
+            .corpus
+            .calib_sequences(8.min(ctx.cfg.calib_sequences), ctx.cfg.calib_seq_len);
+        let cfg = GptqConfig { bits: ctx.cfg.bits.w, damp: self.damp };
+        quant::gptq_quantize_store(store, &gseqs, cfg, packed_run(ctx.cfg))
     }
 }
 
@@ -484,6 +590,68 @@ impl WeightQuantizer for OmniQuantQuantizer {
             }
         }
         Ok(out)
+    }
+
+    /// The streamed form of the same fan-out: identical job
+    /// decomposition, labels and gate charges, but each scheduler job
+    /// checks its layer's weights out of the store, quantizes them with
+    /// the same per-matrix search, and writes them back — so the store's
+    /// resident budget (not the worker count) bounds how many layers'
+    /// weights are in flight.
+    fn quantize_streamed(&self, ctx: &StageContext, store: &WeightStore) -> Result<()> {
+        let bits = ctx.cfg.bits.w;
+        let packed = packed_run(ctx.cfg);
+        let model_cfg = store.cfg();
+        let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for n in model_cfg.param_names() {
+            if n == "embed" || n == "head" {
+                continue;
+            }
+            let key = n.split('.').next().unwrap_or(&n).to_string();
+            groups.entry(key).or_default().push(n);
+        }
+        let jobs: Vec<CalibJob<Vec<String>>> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(i, (key, names))| {
+                // Same charge as the in-memory jobs: dense input bytes,
+                // plus the packed output a --packed job materializes.
+                let bytes: u64 = names
+                    .iter()
+                    .map(|n| {
+                        let (r, c) = model_cfg.param_shape(n);
+                        let out = if packed {
+                            QMat::packed_estimate(r, c, QuantSpec::new(bits))
+                        } else {
+                            0
+                        };
+                        (r * c * 4) as u64 + out
+                    })
+                    .sum();
+                CalibJob::new(i, format!("omniquant[{key}]"), bytes, names)
+            })
+            .collect();
+        Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, _sink| {
+                let mut lease = store.checkout(&job.payload)?;
+                let w = lease.weights_mut();
+                for n in &job.payload {
+                    if packed {
+                        let q = quant::omniquant_quantize_qmat(w.get(n), bits);
+                        w.set_packed(n, q);
+                    } else {
+                        let q = quant::omniquant_quantize_mat(w.get(n), bits);
+                        w.set(n, q);
+                    }
+                }
+                lease.commit()?;
+                Ok(())
+            },
+        )?;
+        Ok(())
     }
 }
 

@@ -191,6 +191,10 @@ pub struct PipelineStats {
     pub total_time: Duration,
     /// Peak job-resident bytes admitted by the memory gate.
     pub peak_job_bytes: u64,
+    /// Peak resident weight bytes checked out of the `WeightStore` —
+    /// nonzero only for streamed (out-of-core) runs, where it is bounded
+    /// by the configured resident budget (see `docs/STREAMING.md`).
+    pub peak_weight_bytes: u64,
     /// Calibration loss curves (R1 first, then R2 per layer).
     pub loss_curves: Vec<Vec<f32>>,
 }
@@ -207,11 +211,13 @@ fn json_dur(j: &Json, key: &str) -> Result<Duration> {
 
 impl PipelineStats {
     /// The run-invariant subset of the stats: wall-clock timings and the
-    /// scheduling-dependent `peak_job_bytes` zeroed; the deterministic
-    /// fields (loss curves) kept. Under the scheduler's determinism
-    /// contract two runs of the same configuration serialize identically
-    /// here at **any** worker count — the byte-identity the scheduler
-    /// tests and `pipeline --json --canonical` rely on.
+    /// scheduling-dependent `peak_job_bytes` / `peak_weight_bytes`
+    /// zeroed; the deterministic fields (loss curves) kept. Under the
+    /// scheduler's determinism contract two runs of the same
+    /// configuration serialize identically here at **any** worker count
+    /// — and, per `docs/STREAMING.md`, at any `--streaming` /
+    /// `--resident-budget` setting — the byte-identity the scheduler and
+    /// streaming tests and `pipeline --json --canonical` rely on.
     pub fn canonical(&self) -> PipelineStats {
         PipelineStats {
             capture_time: Duration::ZERO,
@@ -220,6 +226,7 @@ impl PipelineStats {
             quantize_time: Duration::ZERO,
             total_time: Duration::ZERO,
             peak_job_bytes: 0,
+            peak_weight_bytes: 0,
             loss_curves: self.loss_curves.clone(),
         }
     }
@@ -233,6 +240,7 @@ impl PipelineStats {
             ("quantize_ns", dur_json(self.quantize_time)),
             ("total_ns", dur_json(self.total_time)),
             ("peak_job_bytes", Json::Num(self.peak_job_bytes as f64)),
+            ("peak_weight_bytes", Json::Num(self.peak_weight_bytes as f64)),
             (
                 "loss_curves",
                 Json::Arr(
@@ -265,6 +273,9 @@ impl PipelineStats {
             quantize_time: json_dur(j, "quantize_ns")?,
             total_time: json_dur(j, "total_ns")?,
             peak_job_bytes: j.get_f64("peak_job_bytes").context("peak_job_bytes missing")? as u64,
+            // Absent in pre-streaming reports — default to 0 so old rows
+            // still parse.
+            peak_weight_bytes: j.get_f64("peak_weight_bytes").unwrap_or(0.0) as u64,
             loss_curves: curves,
         })
     }
@@ -420,6 +431,7 @@ mod tests {
             quantize_time: Duration::from_secs(1),
             total_time: Duration::from_millis(1100),
             peak_job_bytes: 24 << 20,
+            peak_weight_bytes: 3 << 20,
             loss_curves: vec![vec![1.5, 0.75, 0.5], vec![2.0]],
         };
         let j = stats.to_json().to_string();
@@ -464,12 +476,14 @@ mod tests {
                 quantize_time: Duration::from_millis(5),
                 total_time: Duration::from_millis(23),
                 peak_job_bytes: 999,
+                peak_weight_bytes: 555,
                 loss_curves: vec![vec![2.0, 1.0]],
             },
         };
         let canon = rec.canonical();
         assert_eq!(canon.stats.total_time, Duration::ZERO);
         assert_eq!(canon.stats.peak_job_bytes, 0);
+        assert_eq!(canon.stats.peak_weight_bytes, 0, "streamed peak is run-varying");
         assert_eq!(canon.stats.loss_curves, rec.stats.loss_curves);
         assert_eq!(canon.method, rec.method);
         // The deterministic byte accounting survives canonicalization.

@@ -27,6 +27,19 @@
 //! Failures keep their locus: a job that returns an error (or panics on
 //! a worker) fails the run with the job's id and label in the error
 //! chain, after the surviving jobs have drained.
+//!
+//! **Streamed (out-of-core) runs** compose a second gate with this one:
+//! a job body may check weights out of a `model::WeightStore`, whose own
+//! `MemoryGate` charges decoded weight bytes against the resident
+//! budget. Every job acquires in the same order — job gate first (before
+//! the runner), then weight leases inside the runner — and releases in
+//! reverse, so the two semaphore-style gates cannot deadlock; a tight
+//! resident budget simply serializes the weight checkouts while the job
+//! gate still bounds activation state. Job ids, labels and declared
+//! bytes are identical between streamed and in-memory runs, so the
+//! ordered event stream does not change (`docs/STREAMING.md` spells out
+//! the full canonical-report contract and its capture-backend
+//! carve-out).
 
 use super::budget::MemoryGate;
 use super::report::{PipelineEvent, PipelineObserver};

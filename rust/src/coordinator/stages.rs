@@ -22,10 +22,11 @@ use super::report::{PipelineEvent, PipelineObserver, PipelineReport, PipelineSta
 use super::report::NullObserver;
 use super::{Method, PipelineConfig, WeightQuant};
 use crate::data::Corpus;
-use crate::model::{BitSetting, Weights};
+use crate::model::{BitSetting, WeightStore, Weights};
 use crate::rotation::{self, SmoothStats};
 use crate::runtime::Runtime;
 use anyhow::Result;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -173,6 +174,30 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// Out-of-core streamed execution (CLI `--streaming`): spill the
+    /// weights to an indexed on-disk artifact and run capture →
+    /// calibrate → fuse → quantize through `model::WeightStore`
+    /// checkout/checkin leases, so the store's peak resident weight
+    /// bytes are bounded by [`PipelineBuilder::resident_budget`] rather
+    /// than model size. For the native-capable method grid the canonical
+    /// report is byte-identical to the in-memory run's; the determinism
+    /// contract — including DartQuant's capture-backend carve-out — is
+    /// in `docs/STREAMING.md`.
+    pub fn streaming(mut self, on: bool) -> PipelineBuilder<'w> {
+        self.cfg.streaming = on;
+        self
+    }
+
+    /// Resident weight-byte budget for streamed runs (None = unlimited,
+    /// still peak-tracked; CLI `--resident-budget`). Checkouts block
+    /// while over budget; one that can never fit fails the run.
+    /// `model::suggested_resident_budget` gives the smallest budget
+    /// every built-in streamed stage fits.
+    pub fn resident_budget(mut self, bytes: Option<u64>) -> PipelineBuilder<'w> {
+        self.cfg.resident_budget = bytes;
+        self
+    }
+
     /// Emit packed low-bit weight storage (`tensor::QMat`) from the
     /// quantize stage instead of dequantized f32 — the true-footprint
     /// serving representation (CLI `--packed`). The report's
@@ -252,6 +277,18 @@ impl<'w> PipelineBuilder<'w> {
         });
         let method_label = method_label.unwrap_or_else(|| spec.name.clone());
 
+        // Packed checkpoints (now persisted natively) enter the pipeline
+        // as their dense dequantization — bit-identical to what loading
+        // a pre-streaming checkpoint produced, and what the dense-only
+        // stages (fuse, capture, re-quantization) require.
+        let dense_input;
+        let weights = if weights.has_packed() {
+            dense_input = weights.to_dense();
+            &dense_input
+        } else {
+            weights
+        };
+
         let t_total = Instant::now();
         let model_cfg = weights.cfg.clone();
         let corpus = Corpus::new(cfg.calib_dialect, model_cfg.vocab, 7);
@@ -272,13 +309,31 @@ impl<'w> PipelineBuilder<'w> {
             elapsed
         };
 
+        // Out-of-core mode: spill the model to an indexed artifact and
+        // route every stage's tensor access through WeightStore leases,
+        // so peak resident weight bytes stay under the resident budget.
+        // The guard removes the spill file when the run ends (Ok or Err).
+        let (_spill, store) = if cfg.streaming {
+            let path = spill_path(&cfg, &model_cfg.name);
+            let guard = SpillGuard(path.clone());
+            let store = WeightStore::create(&path, weights, cfg.resident_budget)?;
+            (Some(guard), Some(store))
+        } else {
+            (None, None)
+        };
+
         // ---- capture ------------------------------------------------------
         stage(Stage::Capture);
         let t0 = Instant::now();
-        let pools = rotation.capture(&ctx)?;
+        let pools = match &store {
+            Some(s) => rotation.capture_streamed(&ctx, s)?,
+            None => rotation.capture(&ctx)?,
+        };
         stats.capture_time = stage_done(Stage::Capture, t0);
 
         // ---- calibrate ----------------------------------------------------
+        // Identical in both modes: calibration operates on the captured
+        // pools (DartQuant's locality), never on the weights.
         stage(Stage::Calibrate);
         let t0 = Instant::now();
         let outcome = rotation.calibrate(&ctx, pools.as_ref())?;
@@ -289,25 +344,62 @@ impl<'w> PipelineBuilder<'w> {
         // ---- fuse + smooth ------------------------------------------------
         stage(Stage::Fuse);
         let t0 = Instant::now();
-        let mut working = match &rotation_set {
-            Some(rot) => rotation::fuse(weights, rot),
-            None => weights.clone(),
-        };
-        if smooth && !model_cfg.is_moe() {
-            let stats_seqs =
-                corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
-            let sstats = SmoothStats::capture(&working, &stats_seqs);
-            working = rotation::smooth_scales(&working, &sstats, 0.5);
+        let mut working: Option<Weights> = None; // in-memory mode only
+        match &store {
+            Some(s) => {
+                if let Some(rot) = &rotation_set {
+                    rotation::fuse_streamed(s, rot)?;
+                }
+                if smooth && !model_cfg.is_moe() {
+                    let stats_seqs =
+                        corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
+                    let sstats = SmoothStats::capture_streamed(s, &stats_seqs)?;
+                    rotation::smooth_streamed(s, &sstats, 0.5)?;
+                }
+            }
+            None => {
+                let mut w = match &rotation_set {
+                    Some(rot) => rotation::fuse(weights, rot),
+                    None => weights.clone(),
+                };
+                if smooth && !model_cfg.is_moe() {
+                    let stats_seqs =
+                        corpus.calib_sequences(4.min(cfg.calib_sequences), cfg.calib_seq_len);
+                    let sstats = SmoothStats::capture(&w, &stats_seqs);
+                    w = rotation::smooth_scales(&w, &sstats, 0.5);
+                }
+                working = Some(w);
+            }
         }
         stats.fuse_time = stage_done(Stage::Fuse, t0);
 
         // ---- weight quantization -----------------------------------------
         stage(Stage::Quantize);
         let t0 = Instant::now();
-        let (quantized, quantizer_label) = if cfg.bits.w >= 16 {
-            (working, "none".to_string())
+        let quantizer_label = if cfg.bits.w >= 16 {
+            "none".to_string()
         } else {
-            (quantizer.quantize(&ctx, &working)?, quantizer.name().to_string())
+            quantizer.name().to_string()
+        };
+        let quantized = match (&store, working) {
+            (Some(s), _) => {
+                if cfg.bits.w < 16 {
+                    quantizer.quantize_streamed(&ctx, s)?;
+                }
+                stats.peak_weight_bytes = s.peak_resident_bytes();
+                // The in-memory hand-off: every stage ran under the
+                // budget; the report's `Weights` is the caller's explicit
+                // decision to hold the full result.
+                s.materialize()?
+            }
+            (None, Some(w)) => {
+                if cfg.bits.w >= 16 {
+                    w
+                } else {
+                    quantizer.quantize(&ctx, &w)?
+                }
+            }
+            (None, None) => unreachable!("in-memory runs always build a working model"),
         };
         stats.quantize_time = stage_done(Stage::Quantize, t0);
 
@@ -326,5 +418,27 @@ impl<'w> PipelineBuilder<'w> {
             linear_dense_bytes,
             linear_actual_bytes,
         })
+    }
+}
+
+/// Unique scratch location for a streamed run's spill artifact:
+/// `stream_dir` (or the OS temp dir) / a name keyed by model, pid and a
+/// process-wide counter, so concurrent runs never collide.
+fn spill_path(cfg: &PipelineConfig, model: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SPILL_SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = cfg.stream_dir.clone().unwrap_or_else(std::env::temp_dir);
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("dartquant-stream-{model}-{}-{seq}.dartq", std::process::id()))
+}
+
+/// Removes a streamed run's spill artifact when the run ends — on
+/// success *and* on every error path (the store is a scratch file, not a
+/// checkpoint; persist results with `Weights::save`).
+struct SpillGuard(PathBuf);
+
+impl Drop for SpillGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
     }
 }

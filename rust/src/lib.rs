@@ -54,10 +54,18 @@
 //! event delivery make parallel runs bit-identical to serial ones (the
 //! determinism contract — `docs/CONCURRENCY.md`).
 //!
+//! `.streaming(true).resident_budget(Some(bytes))` switches to
+//! **out-of-core** execution: weights spill to an indexed on-disk
+//! artifact and every stage works through [`model::WeightStore`]
+//! checkout/checkin leases, bounding peak resident weight bytes by the
+//! budget instead of model size — with a byte-identical canonical
+//! report (`docs/STREAMING.md`).
+//!
 //! The legacy `Method` enum and `run_pipeline` survive as thin shims over
 //! the registry and builder.
 //!
-//! See `README.md` for the architecture map and verify entry points.
+//! See `docs/ARCHITECTURE.md` for the end-to-end module map and data
+//! flow, and `README.md` for the quickstart and verify entry points.
 
 pub mod linalg;
 pub mod calib;

@@ -170,6 +170,10 @@ fn pipeline_config(a: &dartquant::util::cli::Args) -> Result<PipelineConfig> {
     if let Some(b) = a.get("budget-bytes") {
         cfg.memory_budget = Some(b.parse()?);
     }
+    cfg.streaming = a.get_bool("streaming");
+    if let Some(b) = a.get("resident-budget") {
+        cfg.resident_budget = Some(b.parse()?);
+    }
     Ok(cfg)
 }
 
@@ -186,7 +190,9 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         .flag("out", "write the quantized checkpoint here")
         .flag("checkpoint", "load base weights from a checkpoint")
         .flag("budget-bytes", "memory budget for calibration jobs")
+        .flag("resident-budget", "resident weight-byte budget for --streaming runs")
         .switch("budget-3090", "scaled single-3090 memory budget (24 MiB)")
+        .switch("streaming", "out-of-core run: stage weights through an on-disk store")
         .switch("packed", "store quantized linears as packed low-bit codes (true footprint)");
     let a = cmd.parse(argv)?;
     let (_cfg, weights, _corpus) = load_model(&a)?;
@@ -218,10 +224,19 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         report.model_bytes,
         report.compression_ratio()
     );
+    if report.stats.peak_weight_bytes > 0 {
+        println!(
+            "streamed: peak resident weight bytes {} (budget {})",
+            report.stats.peak_weight_bytes,
+            a.get("resident-budget").unwrap_or("unlimited")
+        );
+    }
     if let Some(out) = a.get("out") {
         report.weights.save(std::path::Path::new(out))?;
         if report.weights.has_packed() {
-            println!("saved quantized checkpoint to {out} (dense dequantization; the checkpoint format is f32)");
+            println!(
+                "saved quantized checkpoint to {out} (packed codes + scales, true low-bit footprint)"
+            );
         } else {
             println!("saved quantized checkpoint to {out}");
         }
@@ -310,7 +325,9 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("checkpoint", "base weights checkpoint")
         .flag("budget-bytes", "memory budget")
+        .flag("resident-budget", "resident weight-byte budget for --streaming runs")
         .switch("budget-3090", "scaled 3090 budget")
+        .switch("streaming", "out-of-core run: stage weights through an on-disk store")
         .switch("packed", "packed low-bit weight storage + native integer-forward eval")
         .switch("json", "print a machine-readable PipelineReport row")
         .switch("canonical", "print the run-invariant report row (implies --json): timings and peak bytes stripped, byte-identical at any --workers");

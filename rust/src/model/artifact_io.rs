@@ -1,13 +1,30 @@
-//! Glue between `Weights`/token batches and the PJRT artifact signatures:
-//! builds the ordered `Value` input lists for `fwd_*`, `fwdq_*`,
-//! `capture_*`, `spin_*` and `train_*` entry points, and unpacks their
-//! outputs.
+//! Artifact I/O, in both senses:
+//!
+//! * **PJRT glue** — builds the ordered `Value` input lists for `fwd_*`,
+//!   `fwdq_*`, `capture_*`, `spin_*` and `train_*` entry points and
+//!   unpacks their outputs (the original role of this module);
+//! * **the chunked on-disk weight artifact** — [`save_indexed`] /
+//!   [`load_indexed`] write/read a per-tensor offset index followed by
+//!   independently-readable blobs (dense f32 *or* packed `QMat`
+//!   codes + scales, roundtripped natively), and [`WeightStore`] opens
+//!   the same file lazily: tensors are checked out as [`WeightLease`]s,
+//!   charged against a `MemoryGate`, optionally mutated and written
+//!   back, then released. This is the substrate of the out-of-core
+//!   streaming pipeline (`Pipeline::builder(..).streaming(true)`) — see
+//!   `docs/STREAMING.md` for the index format, the lease lifecycle and
+//!   the resident-budget accounting rules.
 
 use super::config::ModelConfig;
-use super::weights::Weights;
+use super::weights::{read_str, read_u32, write_str, Tensor, Weights};
+use crate::coordinator::budget::{MemoryGate, MemoryLease};
 use crate::runtime::{Executable, Runtime, Value};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QMat};
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 /// Token batch with the fixed artifact geometry (B, T).
 #[derive(Clone, Debug)]
@@ -207,6 +224,527 @@ pub fn manifest_models(rt: &Runtime, manifest_path: &std::path::Path) -> Result<
         .collect()
 }
 
+// ===========================================================================
+// The chunked indexed weight artifact + the out-of-core WeightStore.
+// ===========================================================================
+
+/// Magic of the indexed artifact format (`Weights::save` v2).
+pub(crate) const INDEX_MAGIC: &[u8; 8] = b"DARTQWT2";
+
+const KIND_DENSE: u8 = 0;
+const KIND_PACKED: u8 = 1;
+
+/// Fixed-width tail of an index entry (everything after the name):
+/// kind u8 + rows u32 + cols u32 + offset u64 + len u64 + nbytes u64.
+/// Write-back patches exactly these bytes in place.
+const ENTRY_PATCH_LEN: usize = 1 + 4 + 4 + 8 + 8 + 8;
+
+#[derive(Clone, Debug)]
+struct IndexEntry {
+    kind: u8,
+    rows: u32,
+    cols: u32,
+    /// Absolute file offset of the tensor blob.
+    offset: u64,
+    /// Blob byte length.
+    len: u64,
+    /// Resident bytes of the decoded tensor (`Tensor::nbytes`).
+    nbytes: u64,
+    /// Absolute file position of this entry's `kind` byte — the start of
+    /// the fixed-width patch region rewritten on write-back.
+    patch_pos: u64,
+}
+
+fn tensor_kind(t: &Tensor) -> u8 {
+    match t {
+        Tensor::F32(_) => KIND_DENSE,
+        Tensor::Packed(_) => KIND_PACKED,
+    }
+}
+
+fn tensor_to_blob(t: &Tensor) -> Vec<u8> {
+    match t {
+        Tensor::F32(m) => {
+            let mut b = Vec::with_capacity(m.data.len() * 4);
+            for v in &m.data {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            b
+        }
+        Tensor::Packed(q) => q.to_bytes(),
+    }
+}
+
+fn tensor_from_blob(kind: u8, rows: usize, cols: usize, blob: &[u8]) -> Result<Tensor> {
+    match kind {
+        KIND_DENSE => {
+            anyhow::ensure!(
+                blob.len() == rows * cols * 4,
+                "dense blob is {} bytes, expected {rows}×{cols}×4",
+                blob.len()
+            );
+            let data =
+                blob.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+            Ok(Tensor::F32(Mat::from_vec(rows, cols, data)))
+        }
+        KIND_PACKED => {
+            let q = QMat::from_bytes(blob)?;
+            anyhow::ensure!(
+                q.shape() == (rows, cols),
+                "packed blob shape {:?} != index shape ({rows}, {cols})",
+                q.shape()
+            );
+            Ok(Tensor::Packed(q))
+        }
+        other => bail!("unknown tensor kind tag {other}"),
+    }
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Write `weights` as a chunked indexed artifact: magic, config name,
+/// the per-tensor offset index, then one blob per tensor (raw f32 for
+/// dense tensors, native codes + scales for packed ones — bit-identical
+/// roundtrip, no dequantize/requantize detour). Blobs are streamed one
+/// tensor at a time, so saving never holds more than one tensor's
+/// serialization in memory on top of the model itself.
+pub fn save_indexed(weights: &Weights, path: &Path) -> Result<()> {
+    let mut header: Vec<u8> = Vec::new();
+    header.extend_from_slice(INDEX_MAGIC);
+    write_str(&mut header, &weights.cfg.name)?;
+    let count = weights.names().len();
+    header.extend_from_slice(&(count as u32).to_le_bytes());
+    let mut patch_pos = Vec::with_capacity(count);
+    for (name, t) in weights.ordered_tensors() {
+        write_str(&mut header, name)?;
+        patch_pos.push(header.len() as u64);
+        let (r, c) = t.shape();
+        header.push(tensor_kind(t));
+        header.extend_from_slice(&(r as u32).to_le_bytes());
+        header.extend_from_slice(&(c as u32).to_le_bytes());
+        header.extend_from_slice(&0u64.to_le_bytes()); // offset — patched below
+        header.extend_from_slice(&0u64.to_le_bytes()); // len — patched below
+        header.extend_from_slice(&t.nbytes().to_le_bytes());
+    }
+    let mut f =
+        File::create(path).with_context(|| format!("creating indexed artifact {path:?}"))?;
+    f.write_all(&header)?;
+    let mut spans = Vec::with_capacity(count);
+    let mut cur = header.len() as u64;
+    for (_, t) in weights.ordered_tensors() {
+        let blob = tensor_to_blob(t);
+        f.write_all(&blob)?;
+        spans.push((cur, blob.len() as u64));
+        cur += blob.len() as u64;
+    }
+    for (pos, (off, len)) in patch_pos.iter().zip(&spans) {
+        f.seek(SeekFrom::Start(pos + 9))?; // skip kind + rows + cols
+        f.write_all(&off.to_le_bytes())?;
+        f.write_all(&len.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+struct ParsedIndex {
+    cfg: ModelConfig,
+    order: Vec<String>,
+    entries: BTreeMap<String, IndexEntry>,
+}
+
+fn read_index(f: &mut File, path: &Path) -> Result<ParsedIndex> {
+    f.seek(SeekFrom::Start(0))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != INDEX_MAGIC {
+        bail!("{path:?} is not an indexed dartquant artifact");
+    }
+    let cfg_name = read_str(f)?;
+    let cfg = ModelConfig::builtin(&cfg_name)?;
+    let count = read_u32(f)? as usize;
+    anyhow::ensure!(count <= 1 << 20, "corrupt artifact: {count} tensors");
+    // Validate names/shapes against the config here, contextfully — a
+    // truncated or stale index must not panic downstream (the in-memory
+    // assembly asserts these as internal invariants).
+    let valid: std::collections::BTreeSet<String> = cfg.param_names().into_iter().collect();
+    let mut order = Vec::with_capacity(count);
+    let mut entries = BTreeMap::new();
+    for _ in 0..count {
+        let name = read_str(f)?;
+        anyhow::ensure!(
+            valid.contains(&name),
+            "{path:?} indexes unknown weight {name:?} for config {cfg_name}"
+        );
+        let patch_pos = f.stream_position()?;
+        let mut kind = [0u8; 1];
+        f.read_exact(&mut kind)?;
+        let rows = read_u32(f)?;
+        let cols = read_u32(f)?;
+        let offset = read_u64(f)?;
+        let len = read_u64(f)?;
+        let nbytes = read_u64(f)?;
+        let expect = cfg.param_shape(&name);
+        anyhow::ensure!(
+            (rows as usize, cols as usize) == expect,
+            "{path:?} entry {name:?} has shape ({rows}, {cols}), config expects {expect:?}"
+        );
+        entries.insert(
+            name.clone(),
+            IndexEntry { kind: kind[0], rows, cols, offset, len, nbytes, patch_pos },
+        );
+        order.push(name);
+    }
+    Ok(ParsedIndex { cfg, order, entries })
+}
+
+fn read_blob(f: &mut File, e: &IndexEntry) -> Result<Tensor> {
+    f.seek(SeekFrom::Start(e.offset))?;
+    let mut buf = vec![0u8; e.len as usize];
+    f.read_exact(&mut buf)?;
+    tensor_from_blob(e.kind, e.rows as usize, e.cols as usize, &buf)
+}
+
+/// Load a whole indexed artifact into memory (the eager counterpart of
+/// [`WeightStore::open`]; `Weights::load` dispatches here on the v2
+/// magic). Fails if any config parameter is missing.
+pub fn load_indexed(path: &Path) -> Result<Weights> {
+    let mut f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let idx = read_index(&mut f, path)?;
+    let mut tensors = Vec::with_capacity(idx.order.len());
+    for name in &idx.order {
+        let e = &idx.entries[name];
+        tensors.push((name.clone(), read_blob(&mut f, e)?));
+    }
+    for n in idx.cfg.param_names() {
+        if !idx.entries.contains_key(&n) {
+            bail!("artifact {path:?} is missing weight {n:?}");
+        }
+    }
+    Ok(Weights::from_parts(idx.cfg, tensors))
+}
+
+/// The smallest resident budget at which every built-in streamed stage
+/// fits: the largest single checkout any stage performs — one layer's
+/// tensors, or embed + head together (all dense f32; quantization only
+/// shrinks tensors). On every built-in config this is a small fraction
+/// of the full model (≤ ~1/4), which is what makes out-of-core runs
+/// worthwhile — see `docs/STREAMING.md` and the `perf_streaming` bench.
+pub fn suggested_resident_budget(cfg: &ModelConfig) -> u64 {
+    let bytes = |name: &str| {
+        let (r, c) = cfg.param_shape(name);
+        (r * c * 4) as u64
+    };
+    let mut mx = bytes("embed") + bytes("head");
+    for l in 0..cfg.n_layers {
+        let prefix = format!("l{l}.");
+        let mut layer = 0u64;
+        for n in cfg.param_names() {
+            if n.starts_with(&prefix) {
+                layer += bytes(&n);
+            }
+        }
+        mx = mx.max(layer);
+    }
+    mx
+}
+
+struct StoreState {
+    file: File,
+    entries: BTreeMap<String, IndexEntry>,
+}
+
+/// Lazily-loading, evicting view over an indexed weight artifact — the
+/// out-of-core weight-ownership primitive behind
+/// `Pipeline::builder(..).streaming(true)`.
+///
+/// Tensors are **checked out** by name ([`WeightStore::checkout`] /
+/// [`WeightStore::checkout_layer`]) as a [`WeightLease`]: the store
+/// admits the lease's decoded bytes against its `MemoryGate` (blocking
+/// while over budget, erroring if the checkout can never fit), reads the
+/// blobs, and hands back a partial `Weights`. Dropping the lease
+/// releases the bytes; [`WeightLease::commit`] first writes mutated
+/// tensors back (appending new blobs and patching the index in place —
+/// dense tensors may come back packed). Peak resident weight bytes over
+/// the store's lifetime are therefore bounded by the budget, not by
+/// model size.
+///
+/// ```no_run
+/// use dartquant::model::{ModelConfig, Weights, WeightStore};
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ModelConfig::builtin("llama2-tiny")?;
+/// let weights = Weights::default_synthetic(&cfg, 1);
+/// let path = std::env::temp_dir().join("model.dartq");
+/// let store = WeightStore::create(&path, &weights, Some(4 << 20))?;
+/// // Check one layer out, quantize it, write it back packed:
+/// let mut lease = store.checkout_layer(0)?;
+/// let names = lease.weights().names().to_vec();
+/// for name in names {
+///     let q = dartquant::quant::rtn_quantize_qmat(lease.weights().get(&name), 4);
+///     lease.weights_mut().set_packed(&name, q);
+/// }
+/// lease.commit()?; // append packed blobs, patch the index, release bytes
+/// assert_eq!(store.resident_bytes(), 0);
+/// # Ok(()) }
+/// ```
+pub struct WeightStore {
+    cfg: ModelConfig,
+    order: Vec<String>,
+    state: Mutex<StoreState>,
+    gate: Arc<MemoryGate>,
+}
+
+impl WeightStore {
+    /// Spill `weights` to `path` as an indexed artifact and open it with
+    /// `budget` bytes of resident capacity (`None` = unlimited, still
+    /// peak-tracked).
+    pub fn create(path: &Path, weights: &Weights, budget: Option<u64>) -> Result<WeightStore> {
+        save_indexed(weights, path)?;
+        WeightStore::open_with_budget(path, budget)
+    }
+
+    /// Open an existing indexed artifact with unlimited resident budget.
+    pub fn open(path: &Path) -> Result<WeightStore> {
+        WeightStore::open_with_budget(path, None)
+    }
+
+    /// Open an existing indexed artifact with a resident-byte budget.
+    pub fn open_with_budget(path: &Path, budget: Option<u64>) -> Result<WeightStore> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening weight store {path:?}"))?;
+        let idx = read_index(&mut file, path)?;
+        Ok(WeightStore {
+            cfg: idx.cfg,
+            order: idx.order,
+            state: Mutex::new(StoreState { file, entries: idx.entries }),
+            gate: Arc::new(MemoryGate::new(budget)),
+        })
+    }
+
+    /// The stored model's configuration.
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Stored tensor names, in parameter order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// The configured resident budget (`None` = unlimited).
+    pub fn budget(&self) -> Option<u64> {
+        self.gate.budget()
+    }
+
+    /// Decoded bytes currently checked out across all live leases.
+    pub fn resident_bytes(&self) -> u64 {
+        self.gate.current_bytes()
+    }
+
+    /// Peak simultaneously-resident decoded bytes over the store's
+    /// lifetime — the number `perf_streaming` compares to the budget.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.gate.peak_bytes()
+    }
+
+    /// Total decoded bytes of the stored model (sum of per-tensor
+    /// `nbytes` in the index — shrinks as write-backs pack tensors).
+    pub fn total_nbytes(&self) -> u64 {
+        self.state.lock().unwrap().entries.values().map(|e| e.nbytes).sum()
+    }
+
+    /// Check `names` out of the store: blocks until their decoded bytes
+    /// fit under the budget (erroring if they never can), then loads the
+    /// blobs into a partial `Weights` behind a [`WeightLease`].
+    pub fn checkout<S: AsRef<str>>(&self, names: &[S]) -> Result<WeightLease<'_>> {
+        let mut bytes = 0u64;
+        {
+            let st = self.state.lock().unwrap();
+            for n in names {
+                let e = st
+                    .entries
+                    .get(n.as_ref())
+                    .with_context(|| format!("no weight {:?} in the store", n.as_ref()))?;
+                bytes += e.nbytes;
+            }
+        }
+        // Admit before touching the file: blocking on the gate must not
+        // hold the store lock, or committing leases could never release
+        // capacity.
+        let lease = self.gate.admit(bytes).with_context(|| {
+            format!("streamed checkout of {} tensors ({bytes} bytes)", names.len())
+        })?;
+        let mut tensors = Vec::with_capacity(names.len());
+        {
+            let mut st = self.state.lock().unwrap();
+            let StoreState { file, entries } = &mut *st;
+            for n in names {
+                let e = entries[n.as_ref()].clone();
+                let t = read_blob(file, &e)
+                    .with_context(|| format!("reading stored weight {:?}", n.as_ref()))?;
+                tensors.push((n.as_ref().to_string(), t));
+            }
+        }
+        Ok(WeightLease {
+            store: self,
+            weights: Weights::from_parts(self.cfg.clone(), tensors),
+            bytes,
+            dirty: false,
+            _lease: lease,
+        })
+    }
+
+    /// Check out every tensor of layer `l` (attention + FFN, including
+    /// MoE router/experts) — the per-layer unit the streamed stages and
+    /// scheduler jobs work in.
+    pub fn checkout_layer(&self, l: usize) -> Result<WeightLease<'_>> {
+        let prefix = format!("l{l}.");
+        let names: Vec<&String> = self.order.iter().filter(|n| n.starts_with(&prefix)).collect();
+        anyhow::ensure!(!names.is_empty(), "model {} has no layer {l}", self.cfg.name);
+        self.checkout(&names)
+    }
+
+    /// Append fresh blobs for every tensor in `weights` and patch their
+    /// index entries in place (old blobs become dead file space — the
+    /// file is a scratch artifact, not an archival format).
+    fn write_back(&self, weights: &Weights) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let StoreState { file, entries } = &mut *st;
+        for (name, t) in weights.ordered_tensors() {
+            let e = entries
+                .get_mut(name)
+                .with_context(|| format!("write-back of unknown weight {name:?}"))?;
+            anyhow::ensure!(
+                (e.rows as usize, e.cols as usize) == t.shape(),
+                "write-back shape mismatch for {name}"
+            );
+            let blob = tensor_to_blob(t);
+            let offset = file.seek(SeekFrom::End(0))?;
+            file.write_all(&blob)?;
+            e.kind = tensor_kind(t);
+            e.offset = offset;
+            e.len = blob.len() as u64;
+            e.nbytes = t.nbytes();
+            let mut patch = Vec::with_capacity(ENTRY_PATCH_LEN);
+            patch.push(e.kind);
+            patch.extend_from_slice(&e.rows.to_le_bytes());
+            patch.extend_from_slice(&e.cols.to_le_bytes());
+            patch.extend_from_slice(&e.offset.to_le_bytes());
+            patch.extend_from_slice(&e.len.to_le_bytes());
+            patch.extend_from_slice(&e.nbytes.to_le_bytes());
+            file.seek(SeekFrom::Start(e.patch_pos))?;
+            file.write_all(&patch)?;
+        }
+        Ok(())
+    }
+
+    /// Load the whole stored model into memory — the in-memory hand-off
+    /// at the end of a streamed run (the report wants a `Weights`).
+    /// Deliberately bypasses the admission gate: the streamed stages ran
+    /// under the budget; materializing the result is the caller's
+    /// explicit decision to hold the full model.
+    pub fn materialize(&self) -> Result<Weights> {
+        let mut st = self.state.lock().unwrap();
+        let StoreState { file, entries } = &mut *st;
+        let mut tensors = Vec::with_capacity(self.order.len());
+        for name in &self.order {
+            let e = entries[name].clone();
+            tensors.push((name.clone(), read_blob(file, &e)?));
+        }
+        Ok(Weights::from_parts(self.cfg.clone(), tensors))
+    }
+}
+
+/// RAII checkout of a subset of a [`WeightStore`]'s tensors: a partial
+/// `Weights` plus the gate lease charging its decoded bytes. Drop = plain
+/// release (check-in without write-back); [`WeightLease::commit`] writes
+/// the checked-out tensors back first when the lease was mutated.
+pub struct WeightLease<'s> {
+    store: &'s WeightStore,
+    weights: Weights,
+    bytes: u64,
+    dirty: bool,
+    _lease: MemoryLease<'s>,
+}
+
+impl WeightLease<'_> {
+    /// The checked-out tensors as a partial `Weights` (resident names
+    /// only — `get`/`tensor` panic for names outside the lease, exactly
+    /// like unknown names on a full model).
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+
+    /// Mutable view; marks the lease dirty, so [`WeightLease::commit`]
+    /// writes every checked-out tensor back.
+    pub fn weights_mut(&mut self) -> &mut Weights {
+        self.dirty = true;
+        &mut self.weights
+    }
+
+    /// The decoded bytes this lease holds against the store's gate
+    /// (fixed at checkout time — the accounting contract in
+    /// `docs/STREAMING.md`).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Whether [`WeightLease::weights_mut`] was taken.
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Check the tensors back in: write them back to the store if the
+    /// lease is dirty, then release the resident bytes.
+    pub fn commit(self) -> Result<()> {
+        if self.dirty {
+            self.store.write_back(&self.weights)?;
+        }
+        Ok(())
+    }
+}
+
+/// Layer-at-a-time forward over a [`WeightStore`]: embed all sequences
+/// (embed checked out alone, then released), then per layer check the
+/// layer's tensors out, advance every sequence's residual through
+/// `forward::block_step` (with a fresh per-layer KV cache — the
+/// full-sequence semantics), invoke `after_layer` (quantize-in-place
+/// passes mutate the lease here), and commit the lease.
+///
+/// Because every per-sequence operation is exactly the one `forward_one`
+/// runs, the residual streams — and everything `hook` observes — are
+/// **bit-identical** to the in-memory forward; only the event order
+/// changes (layer-major instead of sequence-major). Peak weight
+/// residency is one layer (or the embedding), never the model.
+pub fn stream_blocks<H: crate::model::CaptureHook>(
+    store: &WeightStore,
+    seqs: &[Vec<i32>],
+    opt: crate::model::FwdOptions,
+    hook: &mut H,
+    mut after_layer: impl FnMut(usize, &mut H, &mut WeightLease) -> Result<()>,
+) -> Result<()> {
+    let cfg = store.cfg().clone();
+    let mut xs: Vec<Mat> = {
+        let lease = store.checkout(&["embed"])?;
+        seqs.iter().map(|s| crate::model::forward::embed_tokens(lease.weights(), s)).collect()
+    };
+    for l in 0..cfg.n_layers {
+        let mut lease = store.checkout_layer(l)?;
+        for x in xs.iter_mut() {
+            let mut kv = super::kv::LayerKv::for_model(&cfg, opt.kv_levels, false);
+            crate::model::forward::block_step(lease.weights(), l, x, &mut kv, opt, hook);
+        }
+        after_layer(l, hook, &mut lease)?;
+        lease.commit()?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,5 +777,153 @@ mod tests {
         let vals = weight_values(&w);
         assert_eq!(vals.len(), cfg.param_names().len());
         assert_eq!(vals[0].shape(), vec![cfg.vocab, cfg.dim]); // embed first
+    }
+
+    // ------------------------------------------------ indexed artifact
+
+    fn store_path(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dartquant-test-store");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}-{}.dartq", std::process::id()))
+    }
+
+    #[test]
+    fn indexed_roundtrip_dense_and_packed() {
+        use crate::tensor::{QMat, QuantSpec};
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let mut w = Weights::default_synthetic(&cfg, 3);
+        let q = QMat::quantize_rtn(w.get("l1.wd"), QuantSpec::new(4));
+        w.set_packed("l1.wd", q.clone());
+        let path = store_path("roundtrip");
+        save_indexed(&w, &path).unwrap();
+        let l = load_indexed(&path).unwrap();
+        assert_eq!(l.names(), w.names());
+        assert_eq!(l.tensor("l1.wd").as_packed().unwrap(), &q);
+        for name in w.names() {
+            assert_eq!(l.tensor(name), w.tensor(name), "{name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn store_checkout_charges_and_releases_exact_bytes() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 5);
+        let path = store_path("charge");
+        let store = WeightStore::create(&path, &w, None).unwrap();
+        assert_eq!(store.total_nbytes(), w.nbytes());
+        assert_eq!(store.resident_bytes(), 0);
+        let a = store.checkout(&["embed"]).unwrap();
+        assert_eq!(a.bytes(), w.tensor("embed").nbytes());
+        assert_eq!(store.resident_bytes(), a.bytes());
+        let b = store.checkout_layer(0).unwrap();
+        assert_eq!(store.resident_bytes(), a.bytes() + b.bytes());
+        assert_eq!(a.weights().get("embed").data, w.get("embed").data);
+        assert_eq!(b.weights().get("l0.wq").data, w.get("l0.wq").data);
+        drop(b);
+        assert_eq!(store.resident_bytes(), a.bytes());
+        drop(a);
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(store.peak_resident_bytes() < w.nbytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn store_write_back_repacks_and_shrinks_the_index() {
+        use crate::tensor::QuantSpec;
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 7);
+        let path = store_path("writeback");
+        let store = WeightStore::create(&path, &w, None).unwrap();
+        let before = store.total_nbytes();
+        let mut lease = store.checkout_layer(2).unwrap();
+        let names = lease.weights().names().to_vec();
+        assert!(!lease.is_dirty());
+        for name in &names {
+            let q = crate::tensor::QMat::quantize_rtn(
+                lease.weights().get(name),
+                QuantSpec::new(4),
+            );
+            lease.weights_mut().set_packed(name, q);
+        }
+        assert!(lease.is_dirty());
+        lease.commit().unwrap();
+        assert_eq!(store.resident_bytes(), 0, "commit releases the lease");
+        assert!(store.total_nbytes() < before, "packed write-back shrinks the index");
+        // A fresh checkout and a full materialization both see the packed
+        // tensors; dense tensors are untouched.
+        let again = store.checkout_layer(2).unwrap();
+        assert!(again.weights().tensor(&names[0]).as_packed().is_some());
+        drop(again);
+        let full = store.materialize().unwrap();
+        assert!(full.has_packed());
+        assert_eq!(full.get("l0.wq").data, w.get("l0.wq").data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn store_budget_blocks_oversized_checkouts() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 9);
+        let path = store_path("budget");
+        let store = WeightStore::create(&path, &w, Some(64)).unwrap();
+        let err = store.checkout(&["embed"]).unwrap_err();
+        assert!(format!("{err:#}").contains("memory budget"), "got: {err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn suggested_budget_is_a_small_model_fraction_that_fits_every_stage() {
+        for cfg in ModelConfig::all_builtin() {
+            let budget = suggested_resident_budget(&cfg);
+            let model = cfg.n_params() as u64 * 4;
+            assert!(budget < model / 2, "{}: {budget} vs {model}", cfg.name);
+            let w = Weights::default_synthetic(&cfg, 1);
+            let path = store_path(&format!("fits-{}", cfg.name));
+            let store = WeightStore::create(&path, &w, Some(budget)).unwrap();
+            for l in 0..cfg.n_layers {
+                drop(store.checkout_layer(l).unwrap());
+            }
+            drop(store.checkout(&["embed", "head"]).unwrap());
+            assert!(store.peak_resident_bytes() <= budget);
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn stream_blocks_sees_the_same_sites_as_forward_one() {
+        use crate::model::forward::{forward_one, CaptureHook, FwdOptions};
+        #[derive(Default)]
+        struct Counter {
+            x: usize,
+            v: usize,
+            lin: usize,
+        }
+        impl CaptureHook for Counter {
+            fn on_x_site(&mut self, _s: usize, _h: &Mat) {
+                self.x += 1;
+            }
+            fn on_v_site(&mut self, _l: usize, _v: &Mat) {
+                self.v += 1;
+            }
+            fn on_linear_input(&mut self, _n: &str, _x: &Mat) {
+                self.lin += 1;
+            }
+        }
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Weights::default_synthetic(&cfg, 13);
+        let path = store_path("stream");
+        let store =
+            WeightStore::create(&path, &w, Some(suggested_resident_budget(&cfg))).unwrap();
+        let seqs: Vec<Vec<i32>> = vec![(0..24).collect(), (5..29).collect()];
+        let mut streamed = Counter::default();
+        stream_blocks(&store, &seqs, FwdOptions::FP, &mut streamed, |_, _, _| Ok(())).unwrap();
+        let mut inmem = Counter::default();
+        for s in &seqs {
+            forward_one(&w, s, FwdOptions::FP, &mut inmem);
+        }
+        assert_eq!((streamed.x, streamed.v, streamed.lin), (inmem.x, inmem.v, inmem.lin));
+        assert_eq!(store.resident_bytes(), 0);
+        std::fs::remove_file(path).ok();
     }
 }

@@ -1,6 +1,9 @@
 //! Model substrate: tiny Llama-architecture configs, synthetic weights
-//! with planted outlier channels, the native forward oracle, and the glue
-//! that feeds weights/tokens to the PJRT artifacts.
+//! with planted outlier channels, the native forward oracle, the glue
+//! that feeds weights/tokens to the PJRT artifacts, and the indexed
+//! on-disk weight artifact behind the out-of-core [`WeightStore`]
+//! (checkout/checkin leases with budgeted resident bytes — see
+//! `docs/STREAMING.md`).
 
 pub mod artifact_io;
 pub mod config;
@@ -8,7 +11,10 @@ pub mod forward;
 pub mod kv;
 pub mod weights;
 
-pub use artifact_io::{ppl_from_nll, CapturedSites, TokenBatch, TrainState};
+pub use artifact_io::{
+    load_indexed, ppl_from_nll, save_indexed, stream_blocks, suggested_resident_budget,
+    CapturedSites, TokenBatch, TrainState, WeightLease, WeightStore,
+};
 pub use config::{BitSetting, ModelConfig};
 pub use forward::{
     fake_quant_row, fake_quant_rows, forward_batch, forward_one, nll_from_logits, CaptureHook,

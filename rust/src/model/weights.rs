@@ -1,8 +1,9 @@
 //! Model weights: ordered named matrices (the AOT artifact passing
 //! convention), synthetic initialization with **planted outlier channels**
-//! (the activation regime DartQuant targets — see DESIGN.md §3), and a
-//! simple binary save/load format so the end-to-end example can persist
-//! trained checkpoints.
+//! (the activation regime DartQuant targets — see DESIGN.md §3), and
+//! checkpoint persistence through the indexed artifact format
+//! (`artifact_io::save_indexed` — packed tensors roundtrip natively, and
+//! the same file backs the out-of-core `WeightStore`).
 
 use super::config::ModelConfig;
 use crate::tensor::{Mat, QMat};
@@ -332,6 +333,19 @@ impl Weights {
         self.map.values().any(|t| matches!(t, Tensor::Packed(_)))
     }
 
+    /// A fully dense copy: packed tensors dequantized (bit-identical to
+    /// their fake-quant values, per the `QMat` contract), dense tensors
+    /// cloned. The pipeline uses this to accept packed checkpoints —
+    /// exactly what loading a pre-streaming checkpoint produced, when
+    /// `save()` still wrote the dense dequantization.
+    pub fn to_dense(&self) -> Weights {
+        let mut map = BTreeMap::new();
+        for (name, t) in &self.map {
+            map.insert(name.clone(), Tensor::F32(t.to_mat()));
+        }
+        Weights { cfg: self.cfg.clone(), order: self.order.clone(), map }
+    }
+
     /// Ordered iteration over dense matrices (the artifact input
     /// convention). Panics on packed tensors — artifact callers check
     /// [`Weights::has_packed`] first.
@@ -394,44 +408,34 @@ impl Weights {
 
     // -------------------------------------------------------- persistence
 
-    const MAGIC: &'static [u8; 8] = b"DARTQWT1";
+    /// Legacy (pre-streaming) checkpoint magic: flat dense f32 tensors,
+    /// no index. Still readable by [`Weights::load`].
+    pub(crate) const LEGACY_MAGIC: &'static [u8; 8] = b"DARTQWT1";
 
-    /// Save to a simple binary format: magic, config name, then per weight
-    /// (name, rows, cols, f32 LE data). Packed tensors are written as
-    /// their dense dequantization (bit-identical by the QMat contract),
-    /// so checkpoints stay format-compatible; re-pack after loading if
-    /// the packed footprint matters.
+    /// Save as a chunked indexed artifact (`artifact_io::save_indexed`):
+    /// magic, config name, a per-tensor offset index, then one
+    /// independently-readable blob per tensor. Packed tensors persist
+    /// their codes + scales **natively** (bit-identical roundtrip, true
+    /// low-bit footprint on disk); dense tensors stay raw f32. The same
+    /// file opens lazily through `artifact_io::WeightStore` for
+    /// out-of-core runs — see `docs/STREAMING.md`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(Self::MAGIC)?;
-        write_str(&mut f, &self.cfg.name)?;
-        f.write_all(&(self.order.len() as u32).to_le_bytes())?;
-        for (name, t) in self.ordered_tensors() {
-            let dequant;
-            let m: &Mat = match t {
-                Tensor::F32(m) => m,
-                Tensor::Packed(q) => {
-                    dequant = q.dequantize();
-                    &dequant
-                }
-            };
-            write_str(&mut f, name)?;
-            f.write_all(&(m.rows as u32).to_le_bytes())?;
-            f.write_all(&(m.cols as u32).to_le_bytes())?;
-            for v in &m.data {
-                f.write_all(&v.to_le_bytes())?;
-            }
-        }
-        Ok(())
+        super::artifact_io::save_indexed(self, path)
     }
 
+    /// Load a checkpoint: the indexed format written by [`Weights::save`],
+    /// or the legacy flat-dense format of earlier revisions.
     pub fn load(path: &Path) -> Result<Weights> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
         );
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != Self::MAGIC {
+        if &magic == super::artifact_io::INDEX_MAGIC {
+            drop(f);
+            return super::artifact_io::load_indexed(path);
+        }
+        if &magic != Self::LEGACY_MAGIC {
             bail!("{path:?} is not a dartquant checkpoint");
         }
         let cfg_name = read_str(&mut f)?;
@@ -458,6 +462,23 @@ impl Weights {
         }
         Ok(Weights { cfg, order, map: dense_map(map) })
     }
+
+    /// Assemble a (possibly partial) weight collection from named tensors
+    /// — the `artifact_io::WeightStore` checkout path. Iteration order
+    /// follows the given tensor order; shapes are validated against the
+    /// config. A partial set supports `get`/`tensor`/`set*` for its
+    /// resident names only, which is exactly what the out-of-core stages
+    /// need: they touch the names they checked out, nothing else.
+    pub(crate) fn from_parts(cfg: ModelConfig, tensors: Vec<(String, Tensor)>) -> Weights {
+        let mut map = BTreeMap::new();
+        let mut order = Vec::with_capacity(tensors.len());
+        for (name, t) in tensors {
+            assert_eq!(t.shape(), cfg.param_shape(&name), "shape mismatch for {name}");
+            order.push(name.clone());
+            map.insert(name, t);
+        }
+        Weights { cfg, order, map }
+    }
 }
 
 /// Wrap a dense construction map into the per-tensor representation.
@@ -465,13 +486,13 @@ fn dense_map(map: BTreeMap<String, Mat>) -> BTreeMap<String, Tensor> {
     map.into_iter().map(|(k, v)| (k, Tensor::F32(v))).collect()
 }
 
-fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+pub(crate) fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
     f.write_all(&(s.len() as u32).to_le_bytes())?;
     f.write_all(s.as_bytes())?;
     Ok(())
 }
 
-fn read_str(f: &mut impl Read) -> Result<String> {
+pub(crate) fn read_str(f: &mut impl Read) -> Result<String> {
     let n = read_u32(f)? as usize;
     if n > 1 << 20 {
         bail!("corrupt checkpoint: string length {n}");
@@ -481,7 +502,7 @@ fn read_str(f: &mut impl Read) -> Result<String> {
     Ok(String::from_utf8(buf)?)
 }
 
-fn read_u32(f: &mut impl Read) -> Result<u32> {
+pub(crate) fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
@@ -557,27 +578,58 @@ mod tests {
     }
 
     #[test]
-    fn packed_tensors_report_true_bytes_and_save_dense() {
+    fn packed_tensors_report_true_bytes_and_roundtrip_natively() {
         use crate::tensor::{QMat, QuantSpec};
         let mut w = Weights::default_synthetic(&tiny(), 9);
         assert!(!w.has_packed());
         let dense_bytes = w.nbytes();
         let q = QMat::quantize_rtn(w.get("l0.wq"), QuantSpec::new(4));
         let deq = q.dequantize();
-        w.set_packed("l0.wq", q);
+        w.set_packed("l0.wq", q.clone());
         assert!(w.has_packed());
         assert!(w.nbytes() < dense_bytes);
         assert_eq!(w.tensor("l0.wq").to_mat().data, deq.data);
         let (d, a) = w.linear_bytes();
         assert!(a < d, "packed linears must shrink: {a} vs {d}");
-        // save writes the dense dequantization; load round-trips it
+        // save keeps packed codes + scales natively; load round-trips
+        // them bit-identically (no dequantize/requantize detour).
         let dir = std::env::temp_dir().join("dartquant-test-wts");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("packed.bin");
         w.save(&path).unwrap();
         let l = Weights::load(&path).unwrap();
-        assert!(!l.has_packed());
-        assert_eq!(l.get("l0.wq").data, deq.data);
+        assert!(l.has_packed());
+        assert_eq!(l.tensor("l0.wq").as_packed().unwrap(), &q);
+        assert_eq!(l.nbytes(), w.nbytes());
+        assert_eq!(l.get("l1.wq").data, w.get("l1.wq").data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn legacy_flat_checkpoints_still_load() {
+        // Hand-write a v1 (DARTQWT1) checkpoint: magic, config name,
+        // count, then (name, rows, cols, f32 LE data) per tensor.
+        let w = Weights::default_synthetic(&tiny(), 11);
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(Weights::LEGACY_MAGIC);
+        write_str(&mut buf, &w.cfg.name).unwrap();
+        buf.extend_from_slice(&(w.names().len() as u32).to_le_bytes());
+        for (name, m) in w.ordered() {
+            write_str(&mut buf, name).unwrap();
+            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            for v in &m.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let dir = std::env::temp_dir().join("dartquant-test-wts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.bin");
+        std::fs::write(&path, &buf).unwrap();
+        let l = Weights::load(&path).unwrap();
+        for name in w.names() {
+            assert_eq!(l.get(name).data, w.get(name).data, "{name}");
+        }
         std::fs::remove_file(path).ok();
     }
 

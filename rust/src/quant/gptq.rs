@@ -153,6 +153,57 @@ pub fn gptq_quantize_model_packed(
     gptq_quantize_model_with(weights, calib_seqs, cfg, QuantSpec::supports(cfg.bits))
 }
 
+/// [`gptq_quantize_model`] over a `model::WeightStore` — the streamed
+/// pipeline's GPTQ. The layer-at-a-time forward (`model::stream_blocks`)
+/// accumulates each layer's input Hessians and quantizes that layer in
+/// place before moving on, so at most one layer's weights + Hessians are
+/// resident. Two facts make the output **bit-identical** to the
+/// in-memory pass: per-linear Hessian contributions arrive in the same
+/// sequence order (f32 accumulation order preserved), and every
+/// captured input comes from the *original* weights — `stream_blocks`
+/// advances the residuals through a layer before `after_layer`
+/// quantizes it, exactly mirroring the in-memory capture-then-quantize
+/// split. See `docs/STREAMING.md`.
+pub fn gptq_quantize_store(
+    store: &crate::model::WeightStore,
+    calib_seqs: &[Vec<i32>],
+    cfg: GptqConfig,
+    packed: bool,
+) -> anyhow::Result<()> {
+    let packed = packed && QuantSpec::supports(cfg.bits);
+    let mut names = Vec::new();
+    for l in 0..store.cfg().n_layers {
+        for leaf in ["wq", "wo", "wg", "wd"] {
+            names.push(format!("l{l}.{leaf}"));
+        }
+    }
+    let mut hook = HessianHook { names, hessians: Default::default() };
+    crate::model::stream_blocks(store, calib_seqs, FwdOptions::FP, &mut hook, |l, hook, lease| {
+        let sites = [
+            (format!("l{l}.wq"), vec![format!("l{l}.wq"), format!("l{l}.wk"), format!("l{l}.wv")]),
+            (format!("l{l}.wo"), vec![format!("l{l}.wo")]),
+            (format!("l{l}.wg"), vec![format!("l{l}.wg"), format!("l{l}.wu")]),
+            (format!("l{l}.wd"), vec![format!("l{l}.wd")]),
+        ];
+        let w = lease.weights_mut();
+        for (site, targets) in sites {
+            // Drop the layer's Hessians as we consume them: only the
+            // current layer's capture state is ever resident.
+            let Some(h) = hook.hessians.remove(&site) else { continue };
+            for t in targets {
+                if packed {
+                    let q = gptq_quantize_layer_qmat(w.get(&t), &h, cfg);
+                    w.set_packed(&t, q);
+                } else {
+                    let q = gptq_quantize_layer(w.get(&t), &h, cfg);
+                    w.set(&t, q);
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
 fn gptq_quantize_model_with(
     weights: &Weights,
     calib_seqs: &[Vec<i32>],

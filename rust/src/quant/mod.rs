@@ -18,7 +18,7 @@ mod omniquant;
 
 pub use gptq::{
     gptq_quantize_layer, gptq_quantize_layer_qmat, gptq_quantize_model,
-    gptq_quantize_model_packed, GptqConfig,
+    gptq_quantize_model_packed, gptq_quantize_store, GptqConfig,
 };
 pub use omniquant::{
     omniquant_quantize_mat, omniquant_quantize_model, omniquant_quantize_model_packed,
@@ -96,6 +96,36 @@ pub fn rtn_quantize_model_packed(weights: &Weights, bits: u8) -> Weights {
     let mut out = weights.clone();
     out.pack_linear_weights(|_, m| rtn_quantize_qmat(m, bits));
     out
+}
+
+/// [`rtn_quantize_model`] over a `model::WeightStore` (the streamed
+/// pipeline's quantize stage): one layer checked out at a time,
+/// quantized with the same per-matrix kernels, written back — packed
+/// codes + scales when `packed` and the width packs, the dense
+/// fake-quant otherwise. Output is **bit-identical** to the in-memory
+/// pass; peak weight residency is one layer. See `docs/STREAMING.md`.
+pub fn rtn_quantize_store(
+    store: &crate::model::WeightStore,
+    bits: u8,
+    packed: bool,
+) -> anyhow::Result<()> {
+    let packed = packed && QuantSpec::supports(bits);
+    for l in 0..store.cfg().n_layers {
+        let mut lease = store.checkout_layer(l)?;
+        let names = lease.weights().names().to_vec();
+        let w = lease.weights_mut();
+        for name in &names {
+            if packed {
+                let q = rtn_quantize_qmat(w.get(name), bits);
+                w.set_packed(name, q);
+            } else {
+                let q = rtn_quantize_mat(w.get(name), bits);
+                w.set(name, q);
+            }
+        }
+        lease.commit()?;
+    }
+    Ok(())
 }
 
 /// Mean squared error of RTN at a given width (weight-quant metric).

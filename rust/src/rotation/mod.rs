@@ -1,11 +1,19 @@
 //! Rotation machinery: fusing the learned R1/R2 into weights (Appendix A's
 //! computational invariance), the online R3/R4 Hadamard sites, and rotation
 //! initializers (random Hadamard — QuaRot; random orthogonal; identity).
+//!
+//! Fusion and smoothing are **layer-local**: the whole-model passes
+//! ([`fuse`], [`smooth_scales`]) and the out-of-core passes
+//! ([`fuse_streamed`], [`smooth_streamed`]) share the same per-tensor
+//! helpers, so a streamed run (one layer checked out at a time from a
+//! `model::WeightStore`) produces bit-identical weights — the
+//! determinism contract of `docs/STREAMING.md`.
 
 use crate::linalg::{self, hadamard_matrix, randomized_hadamard};
-use crate::model::Weights;
+use crate::model::{forward_one, CaptureHook, FwdOptions, WeightStore, Weights};
 use crate::tensor::{matmul, Mat};
 use crate::util::prng::Pcg64;
+use anyhow::Result;
 
 /// Which rotations a calibration/quantization run applies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,51 +111,102 @@ fn block_diag(r: &Mat, heads: usize) -> Mat {
 pub fn fuse(weights: &Weights, rot: &RotationSet) -> Weights {
     let cfg = weights.cfg.clone();
     let mut out = weights.clone();
-    let r1 = &rot.r1;
-    let r1t = r1.t();
-    assert_eq!(r1.rows, cfg.dim);
+    let r1t = rot.r1.t();
+    let had = rot.online_had.then(|| hadamard_matrix(cfg.ffn_dim));
+    assert_eq!(rot.r1.rows, cfg.dim);
     assert_eq!(rot.r2.len(), cfg.n_layers);
-
-    for name in weights.names().to_vec() {
-        let w = weights.get(&name);
-        let leaf = name.rsplit('.').next().unwrap();
-        let fused = match leaf {
-            "embed" | "head" => matmul(w, r1),
-            "wq" | "wk" | "wv" | "wg" | "wu" | "router" => matmul(w, r1),
-            "wo" | "wd" => matmul(&r1t, w),
-            other => panic!("unknown leaf {other}"),
-        };
-        out.set(&name, fused);
+    for name in ["embed", "head"] {
+        let fused = fuse_r1(name, out.get(name), &rot.r1, &r1t);
+        out.set(name, fused);
     }
-    // R2 per layer.
     for l in 0..cfg.n_layers {
-        let r2 = &rot.r2[l];
-        assert_eq!(r2.rows, cfg.head_dim);
-        let bd_kv = block_diag(r2, cfg.n_kv_heads);
-        let bd_q = block_diag(r2, cfg.n_heads);
-        let wv_name = format!("l{l}.wv");
-        let wo_name = format!("l{l}.wo");
-        // v' = v·B  ⇒ wv' = Bᵀ·wv ; attention output per q-head carries the
-        // (repeated) rotated v ⇒ wo' = wo·B_q.
-        out.set(&wv_name, matmul(&bd_kv.t(), out.get(&wv_name)));
-        out.set(&wo_name, matmul(out.get(&wo_name), &bd_q));
-    }
-    // R4: fold H_f into wd so the online activation Hadamard cancels.
-    if rot.online_had {
-        let h = hadamard_matrix(cfg.ffn_dim);
-        for l in 0..cfg.n_layers {
-            if cfg.is_moe() {
-                for e in 0..cfg.n_experts {
-                    let name = format!("l{l}.e{e}.wd");
-                    out.set(&name, matmul(out.get(&name), &h));
-                }
-            } else {
-                let name = format!("l{l}.wd");
-                out.set(&name, matmul(out.get(&name), &h));
-            }
-        }
+        fuse_layer(&mut out, l, rot, &r1t, had.as_ref());
     }
     out
+}
+
+/// R1 fusion of one tensor: input-side weights ← W·R1, output-side
+/// weights ← R1ᵀ·W, embed/head rotate rows. Shared by [`fuse`] and
+/// [`fuse_streamed`].
+fn fuse_r1(leaf: &str, w: &Mat, r1: &Mat, r1t: &Mat) -> Mat {
+    match leaf {
+        "embed" | "head" => matmul(w, r1),
+        "wq" | "wk" | "wv" | "wg" | "wu" | "router" => matmul(w, r1),
+        "wo" | "wd" => matmul(r1t, w),
+        other => panic!("unknown leaf {other}"),
+    }
+}
+
+/// Fuse everything that touches layer `l`'s tensors: R1 on every weight,
+/// then R2 on wv/wo, then (when `had` carries H_f, i.e. `online_had`)
+/// H_f into wd. The per-tensor composition order matches the historical
+/// whole-model pass exactly, so per-layer (streamed) fusion is
+/// bit-identical to in-memory fusion. `w` may be the full model or a
+/// checked-out partial holding layer `l`; `had` is built once per run by
+/// the callers.
+fn fuse_layer(w: &mut Weights, l: usize, rot: &RotationSet, r1t: &Mat, had: Option<&Mat>) {
+    let cfg = w.cfg.clone();
+    let prefix = format!("l{l}.");
+    let names: Vec<String> =
+        w.names().iter().filter(|n| n.starts_with(&prefix)).cloned().collect();
+    for name in names {
+        let leaf = name.rsplit('.').next().unwrap().to_string();
+        let fused = fuse_r1(&leaf, w.get(&name), &rot.r1, r1t);
+        w.set(&name, fused);
+    }
+    // R2: v' = v·B ⇒ wv' = Bᵀ·wv ; attention output per q-head carries
+    // the (repeated) rotated v ⇒ wo' = wo·B_q.
+    let r2 = &rot.r2[l];
+    assert_eq!(r2.rows, cfg.head_dim);
+    let bd_kv = block_diag(r2, cfg.n_kv_heads);
+    let bd_q = block_diag(r2, cfg.n_heads);
+    let wv_name = format!("l{l}.wv");
+    let wo_name = format!("l{l}.wo");
+    let wv = matmul(&bd_kv.t(), w.get(&wv_name));
+    w.set(&wv_name, wv);
+    let wo = matmul(w.get(&wo_name), &bd_q);
+    w.set(&wo_name, wo);
+    // R4: fold H_f into wd so the online activation Hadamard cancels.
+    if let Some(h) = had {
+        if cfg.is_moe() {
+            for e in 0..cfg.n_experts {
+                let name = format!("l{l}.e{e}.wd");
+                let fused = matmul(w.get(&name), h);
+                w.set(&name, fused);
+            }
+        } else {
+            let name = format!("l{l}.wd");
+            let fused = matmul(w.get(&name), h);
+            w.set(&name, fused);
+        }
+    }
+}
+
+/// [`fuse`] over a `WeightStore` instead of an in-memory model: embed and
+/// head are checked out together, then one layer at a time — peak weight
+/// residency is one checkout, and the written-back weights are
+/// **bit-identical** to what [`fuse`] produces (same per-tensor matmuls
+/// on the same operands; see `docs/STREAMING.md`).
+pub fn fuse_streamed(store: &WeightStore, rot: &RotationSet) -> Result<()> {
+    let cfg = store.cfg().clone();
+    let r1t = rot.r1.t();
+    let had = rot.online_had.then(|| hadamard_matrix(cfg.ffn_dim));
+    assert_eq!(rot.r1.rows, cfg.dim);
+    assert_eq!(rot.r2.len(), cfg.n_layers);
+    {
+        let mut lease = store.checkout(&["embed", "head"])?;
+        for name in ["embed", "head"] {
+            let fused = fuse_r1(name, lease.weights().get(name), &rot.r1, &r1t);
+            lease.weights_mut().set(name, fused);
+        }
+        lease.commit()?;
+    }
+    for l in 0..cfg.n_layers {
+        let mut lease = store.checkout_layer(l)?;
+        fuse_layer(lease.weights_mut(), l, rot, &r1t, had.as_ref());
+        lease.commit()?;
+    }
+    Ok(())
 }
 
 /// SmoothQuant-style per-channel scaling (the scaling baseline, and the
@@ -167,39 +226,55 @@ pub struct SmoothStats {
     pub wd_absmax: Vec<Vec<f32>>,
 }
 
+/// Per-site abs-max accumulator shared by [`SmoothStats::capture`] and
+/// [`SmoothStats::capture_streamed`]. Maxima commute, so capture order
+/// (sequence-major vs layer-major) cannot change the result.
+struct SmoothHook {
+    wo: Vec<Vec<f32>>,
+    wd: Vec<Vec<f32>>,
+}
+
+impl CaptureHook for SmoothHook {
+    fn on_linear_input(&mut self, name: &str, x: &Mat) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let l: usize = name[1..name.find('.').unwrap()].parse().unwrap();
+        let target = match leaf {
+            "wo" => &mut self.wo[l],
+            "wd" => &mut self.wd[l],
+            _ => return,
+        };
+        if target.is_empty() {
+            target.resize(x.cols, 0.0);
+        }
+        for i in 0..x.rows {
+            for (c, m) in target.iter_mut().enumerate() {
+                *m = m.max(x.at(i, c).abs());
+            }
+        }
+    }
+}
+
 impl SmoothStats {
     /// Capture from a native forward pass over calibration sequences.
     pub fn capture(weights: &Weights, seqs: &[Vec<i32>]) -> SmoothStats {
-        use crate::model::{forward_one, CaptureHook, FwdOptions};
-        struct Hook {
-            wo: Vec<Vec<f32>>,
-            wd: Vec<Vec<f32>>,
-        }
-        impl CaptureHook for Hook {
-            fn on_linear_input(&mut self, name: &str, x: &Mat) {
-                let leaf = name.rsplit('.').next().unwrap();
-                let l: usize = name[1..name.find('.').unwrap()].parse().unwrap();
-                let target = match leaf {
-                    "wo" => &mut self.wo[l],
-                    "wd" => &mut self.wd[l],
-                    _ => return,
-                };
-                if target.is_empty() {
-                    target.resize(x.cols, 0.0);
-                }
-                for i in 0..x.rows {
-                    for (c, m) in target.iter_mut().enumerate() {
-                        *m = m.max(x.at(i, c).abs());
-                    }
-                }
-            }
-        }
         let l = weights.cfg.n_layers;
-        let mut hook = Hook { wo: vec![vec![]; l], wd: vec![vec![]; l] };
+        let mut hook = SmoothHook { wo: vec![vec![]; l], wd: vec![vec![]; l] };
         for seq in seqs {
             forward_one(weights, seq, FwdOptions::FP, &mut hook);
         }
         SmoothStats { wo_absmax: hook.wo, wd_absmax: hook.wd }
+    }
+
+    /// [`SmoothStats::capture`] over a `WeightStore`: a layer-at-a-time
+    /// forward (`model::stream_blocks`) feeds the same abs-max hook.
+    /// Per-site maxima are order-independent and the streamed residuals
+    /// are bit-identical to `forward_one`'s, so the stats are
+    /// **identical** to the in-memory capture.
+    pub fn capture_streamed(store: &WeightStore, seqs: &[Vec<i32>]) -> Result<SmoothStats> {
+        let l = store.cfg().n_layers;
+        let mut hook = SmoothHook { wo: vec![vec![]; l], wd: vec![vec![]; l] };
+        crate::model::stream_blocks(store, seqs, FwdOptions::FP, &mut hook, |_, _, _| Ok(()))?;
+        Ok(SmoothStats { wo_absmax: hook.wo, wd_absmax: hook.wd })
     }
 }
 
@@ -209,16 +284,46 @@ pub fn smooth_scales(weights: &Weights, stats: &SmoothStats, alpha: f32) -> Weig
     assert!(!cfg.is_moe(), "SmoothQuant baseline implemented for dense configs");
     let mut out = weights.clone();
     for l in 0..cfg.n_layers {
-        // --- wo site: attn_out ← attn_out·S⁻¹ via wv rows; wo cols ← ·S.
-        // GQA note: attn_out channel j carries v channel (j/hd/rep)*hd+j%hd,
-        // so scales must be shared within each kv-head group; we take the
-        // max over the group.
-        let (hd, rep) = (cfg.head_dim, cfg.n_heads / cfg.n_kv_heads);
-        let act = &stats.wo_absmax[l];
-        if !act.is_empty() {
-            let wo = weights.get(&format!("l{l}.wo"));
-            let mut w_absmax = vec![1e-6f32; cfg.kv_dim()];
-            let mut a_absmax = vec![1e-6f32; cfg.kv_dim()];
+        smooth_layer(&mut out, l, stats, alpha);
+    }
+    out
+}
+
+/// [`smooth_scales`] over a `WeightStore`: each layer's wv/wo/wu/wd are
+/// checked out, scaled by the same layer-local helper, and written back —
+/// bit-identical to the in-memory pass (see `docs/STREAMING.md`).
+pub fn smooth_streamed(store: &WeightStore, stats: &SmoothStats, alpha: f32) -> Result<()> {
+    let cfg = store.cfg().clone();
+    assert!(!cfg.is_moe(), "SmoothQuant baseline implemented for dense configs");
+    for l in 0..cfg.n_layers {
+        let names =
+            [format!("l{l}.wv"), format!("l{l}.wo"), format!("l{l}.wu"), format!("l{l}.wd")];
+        let mut lease = store.checkout(&names)?;
+        smooth_layer(lease.weights_mut(), l, stats, alpha);
+        lease.commit()?;
+    }
+    Ok(())
+}
+
+/// One layer's SmoothQuant scaling, shared by [`smooth_scales`] and
+/// [`smooth_streamed`]. Reads each site's pre-scale weights before
+/// mutating them (the two sites touch disjoint tensors), so operating on
+/// one `&mut Weights` reproduces the historical read-from-source /
+/// write-to-copy pass bit-for-bit. `w` may be the full model or a
+/// checkout holding the layer's wv/wo/wu/wd.
+fn smooth_layer(w: &mut Weights, l: usize, stats: &SmoothStats, alpha: f32) {
+    let cfg = w.cfg.clone();
+    // --- wo site: attn_out ← attn_out·S⁻¹ via wv rows; wo cols ← ·S.
+    // GQA note: attn_out channel j carries v channel (j/hd/rep)*hd+j%hd,
+    // so scales must be shared within each kv-head group; we take the
+    // max over the group.
+    let (hd, rep) = (cfg.head_dim, cfg.n_heads / cfg.n_kv_heads);
+    let act = &stats.wo_absmax[l];
+    if !act.is_empty() {
+        let mut w_absmax = vec![1e-6f32; cfg.kv_dim()];
+        let mut a_absmax = vec![1e-6f32; cfg.kv_dim()];
+        {
+            let wo = w.get(&format!("l{l}.wo"));
             for j in 0..cfg.q_dim() {
                 let kv_c = (j / hd / rep) * hd + j % hd;
                 a_absmax[kv_c] = a_absmax[kv_c].max(act[j]);
@@ -226,56 +331,61 @@ pub fn smooth_scales(weights: &Weights, stats: &SmoothStats, alpha: f32) -> Weig
                     w_absmax[kv_c] = w_absmax[kv_c].max(wo.at(i, j).abs());
                 }
             }
-            let s: Vec<f32> = a_absmax
-                .iter()
-                .zip(&w_absmax)
-                .map(|(&a, &w)| (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0))
-                .collect();
-            let wv = out.get_mut(&format!("l{l}.wv"));
-            for (r, sv) in s.iter().enumerate() {
-                for c in 0..wv.cols {
-                    *wv.at_mut(r, c) /= sv;
-                }
-            }
-            let wo = out.get_mut(&format!("l{l}.wo"));
-            for i in 0..wo.rows {
-                for j in 0..wo.cols {
-                    let kv_c = (j / hd / rep) * hd + j % hd;
-                    *wo.at_mut(i, j) *= s[kv_c];
-                }
+        }
+        let s: Vec<f32> = a_absmax
+            .iter()
+            .zip(&w_absmax)
+            .map(|(&a, &w)| {
+                (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0)
+            })
+            .collect();
+        let wv = w.get_mut(&format!("l{l}.wv"));
+        for (r, sv) in s.iter().enumerate() {
+            for c in 0..wv.cols {
+                *wv.at_mut(r, c) /= sv;
             }
         }
-        // --- wd site: a ← a·S⁻¹ via wu rows; wd cols ← ·S. (Gate wg is
-        // untouched: a = silu(g)·u, scaling u alone scales a.)
-        let act = &stats.wd_absmax[l];
-        if !act.is_empty() {
-            let wd = weights.get(&format!("l{l}.wd"));
-            let mut w_absmax = vec![1e-6f32; cfg.ffn_dim];
+        let wo = w.get_mut(&format!("l{l}.wo"));
+        for i in 0..wo.rows {
+            for j in 0..wo.cols {
+                let kv_c = (j / hd / rep) * hd + j % hd;
+                *wo.at_mut(i, j) *= s[kv_c];
+            }
+        }
+    }
+    // --- wd site: a ← a·S⁻¹ via wu rows; wd cols ← ·S. (Gate wg is
+    // untouched: a = silu(g)·u, scaling u alone scales a.)
+    let act = &stats.wd_absmax[l];
+    if !act.is_empty() {
+        let mut w_absmax = vec![1e-6f32; cfg.ffn_dim];
+        {
+            let wd = w.get(&format!("l{l}.wd"));
             for i in 0..wd.rows {
                 for (c, m) in w_absmax.iter_mut().enumerate() {
                     *m = m.max(wd.at(i, c).abs());
                 }
             }
-            let s: Vec<f32> = act
-                .iter()
-                .zip(&w_absmax)
-                .map(|(&a, &w)| (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0))
-                .collect();
-            let wu = out.get_mut(&format!("l{l}.wu"));
-            for (r, sv) in s.iter().enumerate() {
-                for c in 0..wu.cols {
-                    *wu.at_mut(r, c) /= sv;
-                }
+        }
+        let s: Vec<f32> = act
+            .iter()
+            .zip(&w_absmax)
+            .map(|(&a, &w)| {
+                (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(0.05, 50.0)
+            })
+            .collect();
+        let wu = w.get_mut(&format!("l{l}.wu"));
+        for (r, sv) in s.iter().enumerate() {
+            for c in 0..wu.cols {
+                *wu.at_mut(r, c) /= sv;
             }
-            let wd = out.get_mut(&format!("l{l}.wd"));
-            for i in 0..wd.rows {
-                for (c, sv) in s.iter().enumerate() {
-                    *wd.at_mut(i, c) *= sv;
-                }
+        }
+        let wd = w.get_mut(&format!("l{l}.wd"));
+        for i in 0..wd.rows {
+            for (c, sv) in s.iter().enumerate() {
+                *wd.at_mut(i, c) *= sv;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -379,6 +489,48 @@ mod tests {
         let got = forward_one(&smoothed, &toks, FwdOptions::FP, &mut NoCapture);
         let d = (mean(&base) - mean(&got)).abs();
         assert!(d < 2e-2, "smoothing must be fp-invariant: {d}");
+    }
+
+    #[test]
+    fn streamed_fuse_is_bit_identical_to_in_memory_fuse() {
+        let (w, _, _) = setup();
+        let mut rng = Pcg64::new(9);
+        let rot = RotationSet::random_hadamard(w.cfg.dim, w.cfg.head_dim, w.cfg.n_layers, &mut rng);
+        let inmem = fuse(&w, &rot);
+        let path = std::env::temp_dir().join(format!("dq-fuse-{}.dartq", std::process::id()));
+        let store = WeightStore::create(
+            &path,
+            &w,
+            Some(crate::model::suggested_resident_budget(&w.cfg)),
+        )
+        .unwrap();
+        fuse_streamed(&store, &rot).unwrap();
+        let streamed = store.materialize().unwrap();
+        for name in inmem.names() {
+            assert_eq!(streamed.get(name).data, inmem.get(name).data, "{name}");
+        }
+        assert!(store.peak_resident_bytes() < w.nbytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn streamed_smooth_is_bit_identical_to_in_memory_smooth() {
+        let (w, _, corpus) = setup();
+        let calib = corpus.calib_sequences(2, 48);
+        let stats = SmoothStats::capture(&w, &calib);
+        let inmem = smooth_scales(&w, &stats, 0.5);
+        let path = std::env::temp_dir().join(format!("dq-smooth-{}.dartq", std::process::id()));
+        let store = WeightStore::create(&path, &w, None).unwrap();
+        // Streamed stats capture must agree exactly (abs-max commutes).
+        let sstats = SmoothStats::capture_streamed(&store, &calib).unwrap();
+        assert_eq!(sstats.wo_absmax, stats.wo_absmax);
+        assert_eq!(sstats.wd_absmax, stats.wd_absmax);
+        smooth_streamed(&store, &sstats, 0.5).unwrap();
+        let streamed = store.materialize().unwrap();
+        for name in inmem.names() {
+            assert_eq!(streamed.get(name).data, inmem.get(name).data, "{name}");
+        }
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -139,6 +139,31 @@ impl Active {
 }
 
 /// The continuous-batching engine (see the module docs).
+///
+/// Submit requests, then either drive [`BatchEngine::step`] yourself or
+/// let [`BatchEngine::run`] loop to completion:
+///
+/// ```no_run
+/// use dartquant::model::{ModelConfig, Weights};
+/// use dartquant::serve::{BatchEngine, EngineConfig, GenRequest};
+/// use std::sync::Arc;
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ModelConfig::builtin("llama2-tiny")?;
+/// let weights = Arc::new(Weights::default_synthetic(&cfg, 1));
+/// let mut engine = BatchEngine::new(
+///     weights,
+///     EngineConfig {
+///         budget: Some(24 << 20), // scaled single-3090 KV budget
+///         ..EngineConfig::default()
+///     },
+/// );
+/// for i in 0..4 {
+///     engine.submit(GenRequest { prompt: vec![1, 2, 3 + i], max_new: 16 });
+/// }
+/// let results = engine.run()?; // admit → lock-step advance → retire
+/// assert_eq!(results.len(), 4);
+/// # Ok(()) }
+/// ```
 pub struct BatchEngine {
     weights: Arc<Weights>,
     cfg: EngineConfig,

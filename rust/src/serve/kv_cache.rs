@@ -17,6 +17,24 @@ use crate::model::ModelConfig;
 pub use crate::model::kv::LayerKv;
 
 /// All layers' KV state for one decode session.
+///
+/// Byte accounting is exact by contract — what a session *will* cost is
+/// known before it is admitted:
+///
+/// ```
+/// use dartquant::model::ModelConfig;
+/// use dartquant::serve::KvCache;
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ModelConfig::builtin("llama2-tiny")?;
+/// let mut cache = KvCache::new(&cfg, 16.0, true); // 4-bit KV codes
+/// for l in 0..cfg.n_layers {
+///     cache.layer_mut(l).extend(5); // room for 5 new positions
+/// }
+/// assert_eq!(cache.positions(), 5);
+/// // …the same number the engine charges the budget gate up front:
+/// assert_eq!(cache.nbytes(), KvCache::estimate_nbytes(&cfg, 16.0, 5, true));
+/// # Ok(()) }
+/// ```
 #[derive(Clone, Debug)]
 pub struct KvCache {
     layers: Vec<LayerKv>,

@@ -17,6 +17,30 @@ use crate::util::prng::Pcg64;
 use std::sync::Arc;
 
 /// Incremental decode state over shared read-only weights.
+///
+/// Prefill the prompt once, then decode one token per
+/// [`DecodeSession::step`] — attention stays O(prefix), never
+/// O(prefix²):
+///
+/// ```no_run
+/// use dartquant::model::{FwdOptions, ModelConfig, Weights};
+/// use dartquant::serve::{sample_logits, DecodeSession};
+/// use dartquant::util::prng::Pcg64;
+/// use std::sync::Arc;
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ModelConfig::builtin("llama2-tiny")?;
+/// let weights = Arc::new(Weights::default_synthetic(&cfg, 1));
+/// let mut sess = DecodeSession::new(weights, FwdOptions::quant(4, 4, false));
+/// let mut rng = Pcg64::new(0);
+/// let last = sess.prefill_last(&[1, 2, 3, 4]); // the prompt, once
+/// let mut tok = sample_logits(&last, 0.0, &mut rng) as i32;
+/// for _ in 0..8 {
+///     let row = sess.step(tok); // O(1) linears + O(prefix) attention
+///     tok = sample_logits(&row, 0.0, &mut rng) as i32;
+/// }
+/// assert_eq!(sess.positions(), 4 + 8);
+/// # Ok(()) }
+/// ```
 pub struct DecodeSession {
     weights: Arc<Weights>,
     opt: FwdOptions,

@@ -420,6 +420,129 @@ impl QMat {
         }
     }
 
+    /// Serialize codes + scale metadata to the little-endian binary blob
+    /// format of the indexed artifact (`docs/STREAMING.md` documents the
+    /// layout). [`QMat::from_bytes`] is the exact inverse: the decoded
+    /// matrix compares equal (`PartialEq`) to the original, so packed
+    /// checkpoints roundtrip **bit-identically** — no dequantize/requantize
+    /// detour, and `nbytes()` is preserved.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(self.nbytes() as usize + 64);
+        b.push(self.spec.bits());
+        push_u32(&mut b, self.rows as u32);
+        push_u32(&mut b, self.cols as u32);
+        match &self.codes {
+            Codes::I8(v) => {
+                b.push(0);
+                push_u64(&mut b, v.len() as u64);
+                b.extend(v.iter().map(|&c| c as u8));
+            }
+            Codes::I4(v) => {
+                b.push(1);
+                push_u64(&mut b, v.len() as u64);
+                b.extend_from_slice(v);
+            }
+        }
+        match &self.scheme {
+            Scheme::PerRow { scales } => {
+                b.push(0);
+                push_f32s(&mut b, scales);
+            }
+            Scheme::Protected { scales, mask, cols_idx, values } => {
+                b.push(1);
+                push_f32s(&mut b, scales);
+                push_u64(&mut b, mask.len() as u64);
+                b.extend(mask.iter().map(|&m| m as u8));
+                push_u32s(&mut b, cols_idx);
+                push_f32s(&mut b, values);
+            }
+            Scheme::Grouped { rank, group, n_groups, scales, hi_codes, hi_len } => {
+                b.push(2);
+                push_u32s(&mut b, rank);
+                push_u64(&mut b, *group as u64);
+                push_u64(&mut b, *n_groups as u64);
+                push_f32s(&mut b, scales);
+                push_u64(&mut b, hi_codes.len() as u64);
+                b.extend(hi_codes.iter().map(|&c| c as u8));
+                push_u64(&mut b, *hi_len as u64);
+            }
+        }
+        b
+    }
+
+    /// Parse a [`QMat::to_bytes`] blob back. Validates the grid width,
+    /// code-buffer geometry and scheme metadata lengths, so a truncated
+    /// or corrupt artifact entry fails contextfully instead of panicking
+    /// later in a matmul.
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<QMat> {
+        let mut c = Cursor { buf, at: 0 };
+        let bits = c.u8()?;
+        anyhow::ensure!(QuantSpec::supports(bits), "packed blob has unsupported bit width {bits}");
+        let spec = QuantSpec::new(bits);
+        let rows = c.u32()? as usize;
+        let cols = c.u32()? as usize;
+        let codes = match c.u8()? {
+            0 => {
+                anyhow::ensure!(!spec.packs_nibbles(), "i8 codes with a nibble-packing width");
+                let n = c.u64()? as usize;
+                anyhow::ensure!(n == rows * cols, "i8 code count {n} != {rows}×{cols}");
+                Codes::I8(c.bytes(n)?.iter().map(|&v| v as i8).collect())
+            }
+            1 => {
+                anyhow::ensure!(spec.packs_nibbles(), "nibble codes with an i8-storage width");
+                let n = c.u64()? as usize;
+                anyhow::ensure!(
+                    n == rows * cols.div_ceil(2),
+                    "i4 code bytes {n} != {rows}×ceil({cols}/2)"
+                );
+                Codes::I4(c.bytes(n)?.to_vec())
+            }
+            t => anyhow::bail!("unknown code storage tag {t}"),
+        };
+        let scheme = match c.u8()? {
+            0 => {
+                let scales = c.f32s()?;
+                anyhow::ensure!(scales.len() == rows, "per-row scale count mismatch");
+                Scheme::PerRow { scales }
+            }
+            1 => {
+                let scales = c.f32s()?;
+                let n_mask = c.u64()? as usize;
+                anyhow::ensure!(n_mask == cols, "protected mask length mismatch");
+                let mask: Vec<bool> = c.bytes(n_mask)?.iter().map(|&m| m != 0).collect();
+                let cols_idx = c.u32s()?;
+                let values = c.f32s()?;
+                anyhow::ensure!(
+                    scales.len() == rows && values.len() == rows * cols_idx.len(),
+                    "protected scheme metadata mismatch"
+                );
+                Scheme::Protected { scales, mask, cols_idx, values }
+            }
+            2 => {
+                let rank = c.u32s()?;
+                let group = c.u64()? as usize;
+                let n_groups = c.u64()? as usize;
+                let scales = c.f32s()?;
+                let n_hi = c.u64()? as usize;
+                let hi_codes: Vec<i8> = c.bytes(n_hi)?.iter().map(|&v| v as i8).collect();
+                let hi_len = c.u64()? as usize;
+                anyhow::ensure!(
+                    rank.len() == cols
+                        && group > 0
+                        && n_groups == cols.div_ceil(group)
+                        && scales.len() == rows * n_groups
+                        && hi_len == group.min(cols)
+                        && hi_codes.len() == rows * hi_len,
+                    "grouped scheme metadata mismatch"
+                );
+                Scheme::Grouped { rank, group, n_groups, scales, hi_codes, hi_len }
+            }
+            t => anyhow::bail!("unknown scale scheme tag {t}"),
+        };
+        anyhow::ensure!(c.at == buf.len(), "trailing bytes in packed blob");
+        Ok(QMat { rows, cols, spec, codes, scheme })
+    }
+
     /// Materialize the dense f32 matrix this QMat stands in for.
     pub fn dequantize(&self) -> Mat {
         let mut out = Mat::zeros(self.rows, self.cols);
@@ -429,6 +552,73 @@ impl QMat {
             self.decode_row_scratch(i, &mut buf, row);
         }
         out
+    }
+}
+
+// --------------------------------------------------------------- blob I/O
+
+fn push_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    push_u64(b, v.len() as u64);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u32s(b: &mut Vec<u8>, v: &[u32]) {
+    push_u64(b, v.len() as u64);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a packed blob.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn bytes(&mut self, n: usize) -> anyhow::Result<&[u8]> {
+        anyhow::ensure!(self.at + n <= self.buf.len(), "packed blob truncated");
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= self.buf.len(), "f32 array length {n} exceeds blob");
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= self.buf.len(), "u32 array length {n} exceeds blob");
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 }
 
@@ -703,6 +893,49 @@ mod tests {
             matmul_transb_q_with(&xq, &q, 16.0, 1).data,
             matmul_transb_q_with(&xq, &q, 16.0, 4).data
         );
+    }
+
+    #[test]
+    fn blob_roundtrip_is_bit_identical_for_every_scheme() {
+        let w = rand_mat(20, 12, 48);
+        let mut mask = vec![false; 48];
+        mask[5] = true;
+        mask[40] = true;
+        let order: Vec<usize> = (0..48).rev().collect();
+        let mats = [
+            QMat::quantize_rtn(&w, QuantSpec::new(4)),
+            QMat::quantize_rtn(&w, QuantSpec::new(8)),
+            QMat::quantize_with_scales(&w, QuantSpec::new(3), vec![0.01; 12]),
+            QMat::quantize_protected(&w, QuantSpec::new(4), &mask),
+            QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 16),
+        ];
+        for q in mats {
+            let blob = q.to_bytes();
+            let back = QMat::from_bytes(&blob).unwrap();
+            assert_eq!(back, q, "{} roundtrip", q.scheme_label());
+            assert_eq!(back.nbytes(), q.nbytes());
+            assert_eq!(back.dequantize().data, q.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_corrupt_blobs() {
+        let q = QMat::quantize_rtn(&rand_mat(21, 6, 10), QuantSpec::new(4));
+        let blob = q.to_bytes();
+        // truncation
+        assert!(QMat::from_bytes(&blob[..blob.len() - 3]).is_err());
+        // trailing garbage
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(QMat::from_bytes(&long).is_err());
+        // unsupported bit width
+        let mut bad = blob.clone();
+        bad[0] = 16;
+        assert!(QMat::from_bytes(&bad).is_err());
+        // wrong code-count geometry
+        let mut short = blob;
+        short[9] = 0xff; // code storage tag byte offset: 1 + 4 + 4 = 9
+        assert!(QMat::from_bytes(&short).is_err());
     }
 
     #[test]

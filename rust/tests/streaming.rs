@@ -1,0 +1,236 @@
+//! Out-of-core streaming integration tests — the `docs/STREAMING.md`
+//! contract end-to-end, without artifacts:
+//!
+//! * a streamed run (`--streaming`) produces a **byte-identical
+//!   canonical report** — and bit-identical weights — to the in-memory
+//!   run, for every native-capable method, dense and `--packed`, at any
+//!   worker count;
+//! * peak resident weight bytes are bounded by the configured
+//!   `--resident-budget`, which is a small fraction of model size;
+//! * an over-tight budget (or an inherently monolithic method like
+//!   SpinQuant's end-to-end fine-tuning) fails contextfully;
+//! * `WeightStore` resident-byte accounting is **exact** under random
+//!   checkout/checkin interleavings (propcheck);
+//! * packed artifacts (`Weights::save`/`load`) roundtrip codes + scales
+//!   bit-identically for every QMat scheme.
+
+use dartquant::coordinator::{Pipeline, PipelineReport};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::model::{
+    suggested_resident_budget, BitSetting, ModelConfig, WeightStore, Weights,
+};
+use dartquant::util::propcheck::{gen, Runner};
+use std::path::PathBuf;
+
+fn model(name: &str) -> Weights {
+    let cfg = ModelConfig::builtin(name).unwrap();
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    Weights::default_grammar(&cfg, 1, corpus.successor())
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dartquant-test-streaming");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}-{}.dartq", std::process::id()))
+}
+
+fn run(w: &Weights, method: &str, packed: bool, streamed: bool, workers: usize) -> PipelineReport {
+    let mut b = Pipeline::builder(w)
+        .method(method)
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .packed(packed)
+        .workers(workers);
+    if streamed {
+        b = b
+            .streaming(true)
+            .resident_budget(Some(suggested_resident_budget(&w.cfg)));
+    }
+    b.run_native().unwrap_or_else(|e| panic!("{method} streamed={streamed}: {e:#}"))
+}
+
+fn assert_same_model(a: &Weights, b: &Weights) {
+    assert_eq!(a.names(), b.names());
+    for name in a.names() {
+        assert_eq!(a.tensor(name), b.tensor(name), "weight {name} differs");
+    }
+}
+
+#[test]
+fn streamed_canonical_reports_are_byte_identical_to_in_memory() {
+    let w = model("llama2-tiny");
+    for method in ["rtn", "smoothquant", "gptq", "omniquant", "quarot"] {
+        let inmem = run(&w, method, false, false, 2);
+        let streamed = run(&w, method, false, true, 2);
+        assert_eq!(
+            streamed.record().canonical().to_json().to_string(),
+            inmem.record().canonical().to_json().to_string(),
+            "canonical report differs for {method}"
+        );
+        assert_same_model(&streamed.weights, &inmem.weights);
+        assert!(streamed.stats.peak_weight_bytes > 0, "{method}: streamed peak not recorded");
+        assert_eq!(inmem.stats.peak_weight_bytes, 0, "{method}: in-memory runs hold no leases");
+    }
+}
+
+#[test]
+fn streamed_packed_run_matches_in_memory_bit_for_bit() {
+    let w = model("llama2-tiny");
+    let inmem = run(&w, "rtn", true, false, 1);
+    let streamed = run(&w, "rtn", true, true, 1);
+    assert!(streamed.weights.has_packed(), "packed run must emit QMat linears");
+    assert_same_model(&streamed.weights, &inmem.weights);
+    assert_eq!(
+        streamed.record().canonical().to_json().to_string(),
+        inmem.record().canonical().to_json().to_string()
+    );
+    assert_eq!(streamed.model_bytes, inmem.model_bytes);
+    assert!(streamed.compression_ratio() > 6.0, "4-bit packing must shrink the linears");
+}
+
+#[test]
+fn streamed_runs_are_worker_count_invariant() {
+    // The scheduler fan-out (OmniQuant's per-layer jobs) composed with
+    // store leases: workers=1 and workers=4 must not change anything.
+    let w = model("llama2-tiny");
+    let one = run(&w, "omniquant", true, true, 1);
+    let four = run(&w, "omniquant", true, true, 4);
+    assert_eq!(
+        one.record().canonical().to_json().to_string(),
+        four.record().canonical().to_json().to_string()
+    );
+    assert_same_model(&one.weights, &four.weights);
+}
+
+#[test]
+fn resident_budget_bounds_peak_weight_bytes_to_a_model_fraction() {
+    let w = model("llama2-tiny");
+    let budget = suggested_resident_budget(&w.cfg);
+    let model_bytes = w.nbytes();
+    assert!(budget * 4 <= model_bytes, "budget {budget} not ≤ 1/4 of {model_bytes}");
+    let report = run(&w, "gptq", false, true, 2);
+    assert!(report.stats.peak_weight_bytes <= budget);
+    assert!(report.stats.peak_weight_bytes > 0);
+}
+
+#[test]
+fn overtight_budget_fails_with_the_gate_error() {
+    let w = model("llama2-tiny");
+    let err = Pipeline::builder(&w)
+        .method("rtn")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .streaming(true)
+        .resident_budget(Some(1024)) // smaller than any single tensor
+        .run_native()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("memory budget"), "got: {msg}");
+    assert!(msg.contains("checkout"), "got: {msg}");
+}
+
+#[test]
+fn end_to_end_fine_tuning_declines_streaming() {
+    let w = model("llama2-tiny");
+    let err = Pipeline::builder(&w)
+        .method("spinquant")
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .streaming(true)
+        .run_native()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--streaming"), "got: {msg}");
+    assert!(msg.contains("whole model"), "got: {msg}");
+}
+
+#[test]
+fn prop_resident_accounting_is_exact_under_random_interleavings() {
+    let w = model("llama2-tiny");
+    let path = scratch("propcheck");
+    let store = WeightStore::create(&path, &w, None).unwrap();
+    let names: Vec<String> = store.names().to_vec();
+    Runner::new().cases(24).run("resident bytes == Σ live lease bytes", |rng| {
+        let mut live = Vec::new();
+        for _ in 0..gen::size(rng, 4, 24) {
+            if !live.is_empty() && rng.below(2) == 0 {
+                // Check a random lease back in (drop = release).
+                let at = rng.below(live.len());
+                live.swap_remove(at);
+            } else {
+                // Check a random tensor subset out.
+                let k = gen::size(rng, 1, 4);
+                let mut subset = Vec::new();
+                for _ in 0..k {
+                    subset.push(names[rng.below(names.len())].clone());
+                }
+                subset.sort();
+                subset.dedup();
+                live.push(store.checkout(&subset).unwrap());
+            }
+            let expect: u64 = live.iter().map(|l| l.bytes()).sum();
+            if store.resident_bytes() != expect {
+                return Err(format!(
+                    "resident {} != expected {expect} with {} live leases",
+                    store.resident_bytes(),
+                    live.len()
+                ));
+            }
+        }
+        drop(live);
+        if store.resident_bytes() != 0 {
+            return Err("leases leaked resident bytes".into());
+        }
+        Ok(())
+    });
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn packed_checkpoints_feed_the_pipeline_like_their_dense_dequantization() {
+    // save() now persists packed tensors natively; a reloaded --packed
+    // checkpoint must still enter the (dense-only) pipeline stages —
+    // exactly as the dense dequantization that pre-streaming save()
+    // wrote, rather than panicking in fuse/map_linear_weights.
+    use dartquant::quant;
+    let w = model("llama2-tiny");
+    let packed = quant::rtn_quantize_model_packed(&w, 4);
+    let path = scratch("packed-into-pipeline");
+    packed.save(&path).unwrap();
+    let reloaded = Weights::load(&path).unwrap();
+    assert!(reloaded.has_packed());
+    let from_packed = run(&reloaded, "quarot", false, false, 1);
+    let from_dense = run(&packed.to_dense(), "quarot", false, false, 1);
+    assert_same_model(&from_packed.weights, &from_dense.weights);
+    // Streamed runs take the same dense entry path.
+    let streamed = run(&reloaded, "quarot", false, true, 1);
+    assert_same_model(&streamed.weights, &from_dense.weights);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn packed_artifact_save_load_is_bit_identical_for_every_scheme() {
+    use dartquant::coordinator::act_absmax;
+    use dartquant::quant;
+    let w = model("llama2-tiny");
+    // Cover all three QMat schemes in one checkpoint: per-row (RTN),
+    // protected (QUIK) and grouped (Atom), alongside dense embed/head.
+    let mut q = quant::rtn_quantize_model_packed(&w, 4);
+    let corpus = Corpus::new(Dialect::Wiki, w.cfg.vocab, 7);
+    let absmax = act_absmax(&w, &corpus.calib_sequences(1, 64));
+    let a = &absmax["l0.wq"];
+    q.set_packed("l0.wq", quant::quik_quantize_qmat(w.get("l0.wq"), a, 16, 4));
+    q.set_packed("l0.wk", quant::atom_quantize_qmat(w.get("l0.wk"), a, 4));
+    let path = scratch("packed-roundtrip");
+    q.save(&path).unwrap();
+    let back = Weights::load(&path).unwrap();
+    assert!(back.has_packed());
+    assert_same_model(&back, &q);
+    assert_eq!(back.nbytes(), q.nbytes(), "true packed footprint survives the roundtrip");
+    assert_eq!(
+        back.tensor("l0.wq").as_packed().unwrap().scheme_label(),
+        "protected"
+    );
+    assert_eq!(back.tensor("l0.wk").as_packed().unwrap().scheme_label(), "grouped");
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Docs link checker (part of ci.sh / `make check` / `make check-links`):
+# every relative path referenced from README.md and docs/*.md — markdown
+# link targets plus `inline code` paths under docs/ or rust/src/ — must
+# exist in the repo. Anchors (#...) are stripped; absolute URLs skipped.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+
+check() {
+  local src="$1" target="$2"
+  local base
+  base="$(dirname "$src")"
+  target="${target%%#*}" # strip in-page anchors
+  [ -z "$target" ] && return 0
+  case "$target" in
+    http://*|https://*|mailto:*) return 0 ;;
+  esac
+  if [ ! -e "$base/$target" ] && [ ! -e "$target" ]; then
+    echo "BROKEN: $src -> $target"
+    fail=1
+  fi
+}
+
+for f in README.md docs/*.md; do
+  # Markdown link targets: [text](target)
+  while IFS= read -r t; do
+    check "$f" "$t"
+  done < <(grep -o '](\([^)]*\))' "$f" | sed 's/^](//; s/)$//')
+  # Path-like inline-code references to docs/ and rust/src/
+  while IFS= read -r t; do
+    check "$f" "$t"
+  done < <(grep -o '`\(docs\|rust/src\)/[A-Za-z0-9_./-]*`' "$f" | tr -d '`' || true)
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "docs link check failed"
+  exit 1
+fi
+echo "docs link check: OK"
