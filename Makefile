@@ -4,8 +4,10 @@
 #                    python step; everything after runs from rust)
 #   make check       tier-1 verify: release build + bench/example compile
 #                    + tests (incl. rust/tests/serving.rs decode parity
-#                    and rust/tests/streaming.rs out-of-core) + clippy
-#                    + doc + docs link check + fmt check
+#                    and rust/tests/streaming.rs out-of-core) + dqlint
+#                    + clippy + doc + docs link check + fmt check
+#   make lint        dqlint static-analysis pass over rust/src + rust/benches
+#                    (docs/LINTS.md; exit code gates CI)
 #   make clippy      cargo clippy over every target (warnings are errors)
 #   make doc         rustdoc the public API (warnings are errors)
 #   make check-links docs link checker (scripts/check_links.sh)
@@ -13,7 +15,7 @@
 #   make bench-decode     run the serving-path bench (native; no artifacts)
 #   make bench-streaming  run the out-of-core vs in-memory bench (native)
 
-.PHONY: artifacts check test fmt clippy doc check-links bench bench-decode bench-streaming
+.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-streaming
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -23,6 +25,9 @@ check:
 
 test:
 	cargo test -q
+
+lint:
+	cargo run --release --bin dqlint
 
 fmt:
 	cargo fmt --check

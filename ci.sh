@@ -3,8 +3,10 @@
 #   release build, bench compile (perf_decode/perf_streaming & friends
 #   build but do not run), example compile (quickstart & friends), quiet
 #   tests (includes the decode-parity suite rust/tests/serving.rs and
-#   the out-of-core suite rust/tests/streaming.rs), clippy (warnings as
-#   errors), rustdoc (warnings as errors), docs link check, formatting.
+#   the out-of-core suite rust/tests/streaming.rs), the dqlint
+#   static-analysis pass (docs/LINTS.md; lint_report.json is the
+#   machine-readable archive), clippy (warnings as errors), rustdoc
+#   (warnings as errors), docs link check, formatting.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -12,6 +14,8 @@ cargo build --release
 cargo build --release --benches
 cargo build --release --examples
 cargo test -q
+# dqlint exits nonzero on any error-severity diagnostic, failing the run.
+cargo run --release --quiet --bin dqlint -- --json > lint_report.json
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 ./scripts/check_links.sh

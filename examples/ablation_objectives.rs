@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::open(Runtime::default_dir())?;
     let cfg = ModelConfig::builtin("llama2-tiny")?;
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let weights = Weights::default_grammar(&cfg, 1, corpus.successor());
+    let weights = Weights::default_grammar(&cfg, 1, corpus.successor())?;
 
     println!("capturing calibration activations (native forward, 10% token sampling)...");
     let pools = capture_pools_native(&weights, &corpus.calib_sequences(8, 256), 0.1, 0);

@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::open(Runtime::default_dir())?;
     let cfg = ModelConfig::builtin("llama2-large")?; // the 70B stand-in
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let weights = Weights::default_grammar(&cfg, 1, corpus.successor());
+    let weights = Weights::default_grammar(&cfg, 1, corpus.successor())?;
     let budget: u64 = 24 << 20; // 24 GiB scaled 1000× to our model scale
 
     println!(

@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     // ---------------- 1. train -------------------------------------------
     println!("== stage 1: training {} ({:.1}M params) for {steps} steps ==",
         cfg.name, cfg.n_params() as f64 / 1e6);
-    let init = Weights::default_grammar(&cfg, 1, corpus.successor());
+    let init = Weights::default_grammar(&cfg, 1, corpus.successor())?;
     let mut state = TrainState::new(init);
     let t0 = std::time::Instant::now();
     let mut first = None;

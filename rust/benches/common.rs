@@ -72,7 +72,7 @@ pub fn bench_models() -> Vec<ModelConfig> {
 /// default outlier channels.
 pub fn grammar_model(cfg: &ModelConfig) -> (Weights, Corpus) {
     let corpus = Corpus::new(dialect(), cfg.vocab, 7);
-    let w = Weights::default_grammar(cfg, 1, corpus.successor());
+    let w = Weights::default_grammar(cfg, 1, corpus.successor()).expect("grammar weights");
     (w, corpus)
 }
 

@@ -1,0 +1,91 @@
+//! `dqlint` — walk the tree and enforce the determinism / panic-safety
+//! lints (see `docs/LINTS.md` and [`dartquant::lint`]).
+//!
+//! ```text
+//! dqlint [--json] [--root <dir>] [path ...]
+//! ```
+//!
+//! With no paths, scans `rust/src` and `rust/benches` under `--root`
+//! (default: the current directory). Paths may be files or directories.
+//! Exits 0 when clean, 1 on any error-severity diagnostic, 2 on usage
+//! or I/O errors — so `set -e` in `ci.sh` fails the build on a hit.
+
+use dartquant::lint::{self, Severity};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    json: bool,
+    root: PathBuf,
+    paths: Vec<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut json = false;
+    let mut root = PathBuf::from(".");
+    let mut paths = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => {
+                root = PathBuf::from(
+                    argv.next().ok_or_else(|| "--root requires a directory".to_string())?,
+                );
+            }
+            "--help" | "-h" => {
+                return Err("usage: dqlint [--json] [--root <dir>] [path ...]".to_string())
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag {other:?} (try --help)"))
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    Ok(Args { json, root, paths })
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let roots: Vec<PathBuf> = if args.paths.is_empty() {
+        lint::DEFAULT_ROOTS.iter().map(|r| args.root.join(r)).collect()
+    } else {
+        args.paths.clone()
+    };
+    let (diags, files) = match lint::scan_paths(&roots) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dqlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    if args.json {
+        println!("{}", lint::report_json(&diags, files));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if diags.is_empty() {
+            println!("dqlint: clean ({files} files scanned)");
+        } else {
+            println!(
+                "dqlint: {} diagnostic{} ({errors} error{}) across {files} files",
+                diags.len(),
+                if diags.len() == 1 { "" } else { "s" },
+                if errors == 1 { "" } else { "s" },
+            );
+        }
+    }
+    if errors > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

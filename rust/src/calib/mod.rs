@@ -147,6 +147,8 @@ pub fn calibrate_rotation(rt: &Runtime, x_pool: &Mat, cfg: &CalibConfig) -> Resu
     let mut t = 0f32;
 
     let mut losses = Vec::with_capacity(cfg.steps);
+    // dqlint::allow(wallclock-hygiene): Table 3 wall-cost readout only;
+    // canonical() strips every timing field.
     let t0 = Instant::now();
     let mut steps_run = 0;
     for _ in 0..cfg.steps {

@@ -48,6 +48,8 @@ pub fn spin_calibrate(
     let mut r1 = linalg::randomized_hadamard(d, &mut rng);
     let mut m = Mat::zeros(d, d);
     let mut losses = Vec::with_capacity(cfg.steps);
+    // dqlint::allow(wallclock-hygiene): Table 3 wall-cost readout only;
+    // canonical() strips every timing field.
     let t0 = Instant::now();
     for step in 0..cfg.steps {
         let toks = next_batch(step);

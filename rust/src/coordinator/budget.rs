@@ -18,6 +18,7 @@
 //! `docs/STREAMING.md`).
 
 use crate::util::mem::PeakTracker;
+use crate::util::sync::{lock_or_poisoned, wait_or_poisoned};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Byte-denominated admission gate with peak tracking.
@@ -71,14 +72,14 @@ impl MemoryGate {
             if bytes > b {
                 return Err(OverBudget { need: bytes, budget: b });
             }
-            let mut used = self.state.lock().unwrap();
+            let mut used = lock_or_poisoned(&self.state);
             while *used + bytes > b {
-                used = self.cv.wait(used).unwrap();
+                used = wait_or_poisoned(&self.cv, used);
             }
             *used += bytes;
             charge = self.tracker.charge(bytes);
         } else {
-            let mut used = self.state.lock().unwrap();
+            let mut used = lock_or_poisoned(&self.state);
             *used += bytes;
             charge = self.tracker.charge(bytes);
         }
@@ -96,7 +97,7 @@ impl MemoryGate {
         gate: &Arc<MemoryGate>,
         bytes: u64,
     ) -> Result<Option<OwnedLease>, OverBudget> {
-        let mut used = gate.state.lock().unwrap();
+        let mut used = lock_or_poisoned(&gate.state);
         if let Some(b) = gate.budget {
             if bytes > b {
                 return Err(OverBudget { need: bytes, budget: b });
@@ -133,7 +134,7 @@ pub struct MemoryLease<'a> {
 
 impl Drop for MemoryLease<'_> {
     fn drop(&mut self) {
-        let mut used = self.gate.state.lock().unwrap();
+        let mut used = lock_or_poisoned(&self.gate.state);
         self.charge.take(); // discharge the tracker before freeing capacity
         *used -= self.bytes;
         drop(used);
@@ -159,7 +160,7 @@ impl OwnedLease {
 
 impl Drop for OwnedLease {
     fn drop(&mut self) {
-        let mut used = self.gate.state.lock().unwrap();
+        let mut used = lock_or_poisoned(&self.gate.state);
         self.charge.take(); // discharge the tracker before freeing capacity
         *used -= self.bytes;
         drop(used);

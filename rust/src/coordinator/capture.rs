@@ -246,7 +246,7 @@ mod tests {
     fn native_capture_geometry_and_sampling() {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let seqs = corpus.calib_sequences(2, 40);
         let pools = capture_pools_native(&w, &seqs, 0.1, 3);
         assert_eq!(pools.r1_pool.cols, cfg.dim);
@@ -262,7 +262,7 @@ mod tests {
     fn deterministic_by_seed() {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let seqs = corpus.calib_sequences(1, 32);
         let a = capture_pools_native(&w, &seqs, 0.2, 5);
         let b = capture_pools_native(&w, &seqs, 0.2, 5);
@@ -274,7 +274,7 @@ mod tests {
         use crate::model::{suggested_resident_budget, WeightStore};
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let seqs = corpus.calib_sequences(2, 40);
         let path =
             std::env::temp_dir().join(format!("dq-capture-{}.dartq", std::process::id()));

@@ -6,6 +6,7 @@ use crate::data::Dialect;
 use crate::model::Weights;
 use crate::rotation::RotationSet;
 use crate::util::json::Json;
+use crate::util::sync::lock_or_poisoned;
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -126,7 +127,7 @@ impl CollectingObserver {
 
     /// Snapshot of every event received so far, in arrival order.
     pub fn events(&self) -> Vec<PipelineEvent> {
-        self.events.lock().unwrap().clone()
+        lock_or_poisoned(&self.events).clone()
     }
 
     /// The stage event sequence as `(stage, finished)` pairs, in arrival
@@ -161,7 +162,7 @@ impl CollectingObserver {
 
 impl PipelineObserver for CollectingObserver {
     fn on_event(&self, event: &PipelineEvent) {
-        self.events.lock().unwrap().push(event.clone());
+        lock_or_poisoned(&self.events).push(event.clone());
     }
 }
 

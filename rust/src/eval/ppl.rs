@@ -79,7 +79,7 @@ mod tests {
     fn native_ppl_beats_uniform_on_matching_dialect() {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
         let ppl = ppl_native(&w, &corpus, spec, FwdOptions::FP);
         // Short-sequence eval on the grammar model: clearly below the
@@ -92,7 +92,7 @@ mod tests {
     fn quantization_hurts_ppl_monotonically() {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
         let fp = ppl_native(&w, &corpus, spec, FwdOptions::FP);
         let a8 = ppl_native(&w, &corpus, spec, FwdOptions::quant(8, 16, false));

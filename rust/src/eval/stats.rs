@@ -12,7 +12,7 @@ pub fn count_outliers(x: &Mat, tau: f32) -> usize {
 /// so τ tracks each model's scale (Fig 3 protocol).
 pub fn outlier_threshold(x: &Mat, quantile: f64) -> f32 {
     let mut mags: Vec<f32> = x.data.iter().map(|v| v.abs()).collect();
-    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.sort_by(|a, b| a.total_cmp(b));
     let idx = ((mags.len() - 1) as f64 * quantile) as usize;
     mags[idx]
 }
@@ -156,6 +156,23 @@ mod tests {
         assert!(s.kurtosis > 5.0, "kurtosis {}", s.kurtosis);
         assert!(s.mean.abs() < 0.2);
         assert!((s.variance - 1.0).abs() < 0.3, "var {}", s.variance);
+    }
+
+    #[test]
+    fn outlier_threshold_survives_nan_and_inf() {
+        // An overflowed activation column must not panic the quantile
+        // scan (DFRot-style massive activations are expected inputs).
+        // total_cmp sorts NaN above +inf, so a high-but-not-1.0 quantile
+        // still lands on a finite magnitude.
+        let mut m = spiky(16, 16);
+        *m.at_mut(0, 0) = f32::NAN;
+        *m.at_mut(1, 1) = f32::INFINITY;
+        *m.at_mut(2, 2) = f32::NEG_INFINITY;
+        let tau = outlier_threshold(&m, 0.9);
+        assert!(tau.is_finite(), "tau={tau}");
+        // The extreme slots sort to the top of the magnitude order.
+        let top = outlier_threshold(&m, 1.0);
+        assert!(top.is_nan(), "NaN is the total_cmp maximum, got {top}");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 /// One multiple-choice item: full candidate sequences (context + option)
 /// and which option is correct. All candidates share the context prefix.
+#[derive(Clone)]
 pub struct Item {
     pub candidates: Vec<Vec<i32>>,
     pub option_start: usize,
@@ -187,7 +188,7 @@ fn fraction_correct(items: &[Item], scores: &[Vec<f64>]) -> f64 {
             let best = s[..item.candidates.len()]
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap();
             best == item.correct
@@ -285,13 +286,30 @@ mod tests {
     fn grammar_model_beats_chance_on_resample_tasks() {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         // LAMBADA-like: 4 options, 2-token continuation — the boundary
         // token carries the grammar signal (resampled distractors are
         // internally grammar-consistent, so long spans dilute the margin).
         let items = generate_items(&SUITE[4], &corpus, 24, 48, 11);
         let acc = task_accuracy_native(&w, &items, FwdOptions::FP);
         assert!(acc >= 0.45, "accuracy {acc} not above chance (0.25)");
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_the_argmin() {
+        // A NaN candidate score (overflowed logits) must neither panic
+        // nor win the argmin: total_cmp puts NaN above every finite
+        // score, so the finite best still decides the item.
+        let item = Item {
+            candidates: vec![vec![0; 4]; 3],
+            option_start: 1,
+            correct: 1,
+        };
+        let scores = vec![vec![f64::NAN, 2.0, 3.0]];
+        assert_eq!(fraction_correct(&[item.clone()], &scores), 1.0);
+        // All-NaN degrades deterministically to option 0.
+        let scores = vec![vec![f64::NAN; 3]];
+        assert_eq!(fraction_correct(&[item], &scores), 0.0);
     }
 
     #[test]

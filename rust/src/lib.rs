@@ -66,12 +66,16 @@
 //!
 //! See `docs/ARCHITECTURE.md` for the end-to-end module map and data
 //! flow, and `README.md` for the quickstart and verify entry points.
+//! The determinism / panic-safety contracts are mechanically enforced
+//! by the in-tree [`lint`] pass (`dqlint`, `make lint` —
+//! `docs/LINTS.md`).
 
 pub mod linalg;
 pub mod calib;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod lint;
 pub mod model;
 pub mod quant;
 pub mod rotation;

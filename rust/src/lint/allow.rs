@@ -1,0 +1,214 @@
+//! The `dqlint::allow` suppression engine.
+//!
+//! A lint hit is suppressed per-site with a comment directive:
+//!
+//! ```text
+//! // dqlint::allow(<lint-name>): <reason>
+//! ```
+//!
+//! The directive suppresses matching diagnostics on its own line
+//! (trailing form) and, when it sits on a line with no code of its own,
+//! on the next code line below (stacked directives and blank lines in
+//! between are fine). The reason is mandatory: a bare
+//! `dqlint::allow(<lint>)` — or one naming an unknown lint — is itself
+//! a [`Lint::BadAllow`] error, so every suppression in the tree carries
+//! its justification. See `docs/LINTS.md` for the catalog.
+
+use super::diag::{Diagnostic, Lint, Severity};
+use super::lexer::Scrubbed;
+
+/// A parsed `dqlint::allow` directive (well-formed or not).
+#[derive(Clone, Debug)]
+pub struct Directive {
+    /// 0-indexed line the directive appears on.
+    pub line: usize,
+    /// The named lint, if it parsed and is a known suppressible lint.
+    pub lint: Option<Lint>,
+    /// The raw name as written (for error messages).
+    pub name: String,
+    /// The justification after the `:` (None or empty = bad allow).
+    pub reason: Option<String>,
+}
+
+impl Directive {
+    /// A directive only suppresses if it names a known lint and carries
+    /// a non-empty reason.
+    pub fn is_effective(&self) -> bool {
+        self.lint.is_some() && self.reason.as_deref().is_some_and(|r| !r.trim().is_empty())
+    }
+}
+
+const MARKER: &str = "dqlint::allow";
+
+/// Extract every `dqlint::allow` directive from a scrubbed file's
+/// comments (multiple directives per comment are honored).
+///
+/// Two comment shapes are deliberately *not* directives, so docs can
+/// talk about the mechanism: a marker with no `(` after it (prose like
+/// "suppress with a dqlint::allow comment") and a `<placeholder>` lint
+/// name (syntax examples). Ignoring a would-be suppression is the safe
+/// direction — the underlying lint still fires.
+pub fn parse_directives(scrub: &Scrubbed) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (line, meta) in scrub.lines.iter().enumerate() {
+        for comment in &meta.comments {
+            let mut rest: &str = comment;
+            while let Some(pos) = rest.find(MARKER) {
+                let after = &rest[pos + MARKER.len()..];
+                out.extend(parse_one(line, after));
+                rest = after;
+            }
+        }
+    }
+    out
+}
+
+/// Parse the `(<name>): <reason>` tail of one directive occurrence.
+/// `None` = prose/doc mention, not a directive.
+fn parse_one(line: usize, after: &str) -> Option<Directive> {
+    let open = after.trim_start().strip_prefix('(')?;
+    let Some(close) = open.find(')') else {
+        return Some(Directive { line, lint: None, name: String::new(), reason: None });
+    };
+    let name = open[..close].trim().to_string();
+    if name.starts_with('<') {
+        return None;
+    }
+    let tail = &open[close + 1..];
+    let reason = tail
+        .trim_start()
+        .strip_prefix(':')
+        .map(|r| {
+            // A later directive in the same comment ends this reason.
+            let r = r.split(MARKER).next().unwrap_or(r);
+            r.trim().trim_end_matches("//").trim().to_string()
+        })
+        .filter(|r| !r.is_empty());
+    Some(Directive { line, lint: Lint::from_name(&name), name, reason })
+}
+
+/// Diagnostics for malformed directives (unknown lint name or missing
+/// reason). These are [`Lint::BadAllow`] errors and are never
+/// suppressible — "every suppression carries a reason" is itself part
+/// of the contract.
+pub fn bad_allow_diagnostics(path: &str, directives: &[Directive]) -> Vec<Diagnostic> {
+    directives
+        .iter()
+        .filter(|d| !d.is_effective())
+        .map(|d| {
+            let message = if d.name.is_empty() {
+                format!("malformed directive — expected `dqlint::allow(<lint>): <reason>` with one of: {}", known_names())
+            } else if d.lint.is_none() {
+                format!("unknown lint {:?} in dqlint::allow — known lints: {}", d.name, known_names())
+            } else {
+                format!(
+                    "dqlint::allow({}) without a reason — write `dqlint::allow({}): <why this site is exempt>`",
+                    d.name, d.name
+                )
+            };
+            Diagnostic {
+                path: path.to_string(),
+                line: d.line + 1,
+                lint: Lint::BadAllow,
+                severity: Severity::Error,
+                message,
+            }
+        })
+        .collect()
+}
+
+fn known_names() -> String {
+    Lint::ALL.map(|l| l.name()).join(", ")
+}
+
+/// True if a diagnostic of `lint` on 0-indexed `line` is suppressed by
+/// an effective directive on the same line, or on a contiguous run of
+/// code-free lines directly above it. `line_has_code[l]` says whether
+/// line `l` has any tokens.
+pub fn is_suppressed(
+    lint: Lint,
+    line: usize,
+    directives: &[Directive],
+    line_has_code: &[bool],
+) -> bool {
+    let effective = |l: usize| {
+        directives.iter().any(|d| d.line == l && d.lint == Some(lint) && d.is_effective())
+    };
+    if effective(line) {
+        return true;
+    }
+    let mut l = line;
+    while l > 0 {
+        l -= 1;
+        if line_has_code.get(l).copied().unwrap_or(false) {
+            return false;
+        }
+        if effective(l) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::scrub;
+
+    fn directives(src: &str) -> Vec<Directive> {
+        parse_directives(&scrub(src))
+    }
+
+    #[test]
+    fn parses_well_formed_directive() {
+        let d = directives("// dqlint::allow(no-map-iteration): lookup-only cache\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].lint, Some(Lint::NoMapIteration));
+        assert_eq!(d[0].reason.as_deref(), Some("lookup-only cache"));
+        assert!(d[0].is_effective());
+    }
+
+    #[test]
+    fn bare_and_unknown_allows_are_bad() {
+        let d = directives("// dqlint::allow(unseeded-rng)\n// dqlint::allow(nope): x\n");
+        assert_eq!(d.len(), 2);
+        assert!(!d[0].is_effective(), "missing reason");
+        assert!(!d[1].is_effective(), "unknown lint");
+        let bad = bad_allow_diagnostics("f.rs", &d);
+        assert_eq!(bad.len(), 2);
+        assert!(bad[0].message.contains("without a reason"));
+        assert!(bad[1].message.contains("unknown lint"));
+        assert_eq!(bad[0].line, 1);
+        assert_eq!(bad[1].line, 2);
+    }
+
+    #[test]
+    fn prose_and_placeholders_are_not_directives() {
+        let src = "// suppress with a dqlint::allow comment\n\
+                   // dqlint::allow(<lint>): <reason>\n";
+        assert!(directives(src).is_empty());
+        // An unclosed paren is still a malformed directive attempt.
+        let d = directives("// dqlint::allow(no-map-iteration missing close\n");
+        assert_eq!(d.len(), 1);
+        assert!(!d[0].is_effective());
+        assert!(d[0].name.is_empty());
+    }
+
+    #[test]
+    fn suppression_covers_same_line_and_next_code_line() {
+        // Directive on its own line 0, blank line 1, code line 2.
+        let d = directives("// dqlint::allow(wallclock-hygiene): bench-only path\n\nx();\n");
+        let has_code = [false, false, true];
+        assert!(is_suppressed(Lint::WallclockHygiene, 0, &d, &has_code));
+        assert!(is_suppressed(Lint::WallclockHygiene, 2, &d, &has_code));
+        assert!(!is_suppressed(Lint::UnseededRng, 2, &d, &has_code));
+    }
+
+    #[test]
+    fn code_line_breaks_the_suppression_run() {
+        let d = directives("// dqlint::allow(unseeded-rng): fixture\ny();\nx();\n");
+        let has_code = [false, true, true];
+        assert!(is_suppressed(Lint::UnseededRng, 1, &d, &has_code));
+        assert!(!is_suppressed(Lint::UnseededRng, 2, &d, &has_code), "line 1 has code");
+    }
+}

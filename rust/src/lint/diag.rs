@@ -1,0 +1,191 @@
+//! Diagnostics model for `dqlint`: the lint catalog, severities, and the
+//! human/JSON rendering of findings.
+//!
+//! Every diagnostic names the contract it enforces (see `docs/LINTS.md`
+//! for the full rationale per lint) so a hit is actionable without
+//! opening the docs.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// The repo-specific lints `dqlint` enforces. Each corresponds to a
+/// clause of the determinism / panic-safety contracts in
+/// `docs/CONCURRENCY.md`; `docs/LINTS.md` documents rationale and the
+/// `// dqlint::allow(<lint>): <reason>` suppression syntax.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lint {
+    /// Float comparators must use `total_cmp`, not
+    /// `partial_cmp(..).unwrap()` — NaN panics or nondeterministic order.
+    FloatSortDeterminism,
+    /// `HashMap`/`HashSet` in non-test code: iteration order is
+    /// nondeterministic and feeds event logs and reports. Use
+    /// `BTreeMap`/`BTreeSet`, or allow with a reason proving the
+    /// container is never iterated.
+    NoMapIteration,
+    /// Wall-clock reads (`Instant::now`, `SystemTime`) only in the
+    /// allowlisted timing modules whose outputs `canonical()` strips.
+    WallclockHygiene,
+    /// No entropy-seeded randomness (`thread_rng`, `from_entropy`,
+    /// `OsRng`, `getrandom`) outside tests — all randomness derives from
+    /// the run's seed through `util::prng`.
+    UnseededRng,
+    /// All thread fan-out goes through `util::threadpool` so panics are
+    /// contained and join order is deterministic.
+    RawThreadSpawn,
+    /// No bare `.lock().unwrap()` / `.lock().expect(..)` outside
+    /// `util::sync` — poisoned locks recover through
+    /// `util::sync::lock_or_poisoned` instead of cascading panics.
+    LockPoisonDiscipline,
+    /// Every `unsafe` needs an adjacent `// SAFETY:` comment stating the
+    /// invariant that makes it sound.
+    UnsafeNeedsSafetyComment,
+    /// A malformed `dqlint::allow` directive: unknown lint name, or a
+    /// suppression without a reason. Not itself suppressible.
+    BadAllow,
+}
+
+impl Lint {
+    /// The seven suppressible lints, in catalog order ([`Lint::BadAllow`]
+    /// is the directive-syntax meta-lint and is excluded: it cannot be
+    /// allowed away).
+    pub const ALL: [Lint; 7] = [
+        Lint::FloatSortDeterminism,
+        Lint::NoMapIteration,
+        Lint::WallclockHygiene,
+        Lint::UnseededRng,
+        Lint::RawThreadSpawn,
+        Lint::LockPoisonDiscipline,
+        Lint::UnsafeNeedsSafetyComment,
+    ];
+
+    /// The kebab-case name used in output and in allow directives.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::FloatSortDeterminism => "float-sort-determinism",
+            Lint::NoMapIteration => "no-map-iteration",
+            Lint::WallclockHygiene => "wallclock-hygiene",
+            Lint::UnseededRng => "unseeded-rng",
+            Lint::RawThreadSpawn => "raw-thread-spawn",
+            Lint::LockPoisonDiscipline => "lock-poison-discipline",
+            Lint::UnsafeNeedsSafetyComment => "unsafe-needs-safety-comment",
+            Lint::BadAllow => "bad-allow",
+        }
+    }
+
+    /// Parse a directive name back to a lint (suppressible lints only —
+    /// `bad-allow` deliberately has no name here).
+    pub fn from_name(name: &str) -> Option<Lint> {
+        Lint::ALL.iter().copied().find(|l| l.name() == name)
+    }
+}
+
+/// Diagnostic severity. Every lint in the current catalog is an error
+/// (the exit code gates CI); `Warning` exists so future advisory lints
+/// can ride the same reporting surface without gating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Advisory: reported but does not affect the exit code.
+    Warning,
+    /// Gating: any error fails `dqlint` (and therefore `ci.sh`).
+    Error,
+}
+
+impl Severity {
+    /// Lowercase label used in human and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a lint fired at `path:line`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Normalized (forward-slash) path of the offending file.
+    pub path: String,
+    /// 1-based line number of the offending token.
+    pub line: usize,
+    /// Which lint fired.
+    pub lint: Lint,
+    /// Gating or advisory.
+    pub severity: Severity,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}[{}] {}",
+            self.path,
+            self.line,
+            self.severity.label(),
+            self.lint.name(),
+            self.message
+        )
+    }
+}
+
+/// Machine-readable report: `{"count", "errors", "diagnostics": [...]}`.
+/// Round-trips through [`crate::util::json`]; `ci.sh` archives it as
+/// `lint_report.json`.
+pub fn report_json(diags: &[Diagnostic], files_scanned: usize) -> Json {
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    Json::obj(vec![
+        ("count", Json::Num(diags.len() as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("files_scanned", Json::Num(files_scanned as f64)),
+        (
+            "diagnostics",
+            Json::Arr(
+                diags
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("path", Json::Str(d.path.clone())),
+                            ("line", Json::Num(d.line as f64)),
+                            ("lint", Json::Str(d.lint.name().to_string())),
+                            ("severity", Json::Str(d.severity.label().to_string())),
+                            ("message", Json::Str(d.message.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for l in Lint::ALL {
+            assert_eq!(Lint::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Lint::from_name("bad-allow"), None);
+        assert_eq!(Lint::from_name("no-such-lint"), None);
+    }
+
+    #[test]
+    fn report_json_counts_errors() {
+        let d = Diagnostic {
+            path: "x.rs".into(),
+            line: 3,
+            lint: Lint::FloatSortDeterminism,
+            severity: Severity::Error,
+            message: "m".into(),
+        };
+        let j = report_json(&[d.clone()], 7);
+        assert_eq!(j.get_usize("count"), Some(1));
+        assert_eq!(j.get_usize("errors"), Some(1));
+        assert_eq!(j.get_usize("files_scanned"), Some(7));
+        let arr = j.get("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get_str("lint"), Some("float-sort-determinism"));
+        assert_eq!(d.to_string(), "x.rs:3: error[float-sort-determinism] m");
+    }
+}

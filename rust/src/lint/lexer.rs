@@ -1,0 +1,392 @@
+//! Comment/string-stripping lexer and line-indexed token scanner.
+//!
+//! [`scrub`] turns Rust source into a same-line-structure "code skeleton":
+//! comments and string/char-literal *contents* are blanked to spaces
+//! (newlines preserved, so line numbers survive), while the comment text
+//! itself is captured per line for the allow-directive engine
+//! ([`super::allow`]) and the `SAFETY:` check. [`tokenize`] then splits
+//! the skeleton into line-tagged identifier/punctuation tokens — the
+//! representation the lint passes in [`super::scan`] pattern-match over.
+//!
+//! The lexer understands the Rust surface forms that matter for not
+//! mis-classifying code as text: nested `/* */` block comments, `//`
+//! line comments, `"…"` strings with escapes, raw strings `r"…"` /
+//! `r#"…"#` (any hash depth, plus `b`/`br` byte variants), char
+//! literals (including escaped ones), and lifetimes (`'a` is *not* an
+//! unterminated char literal).
+
+/// Per-line metadata captured while scrubbing.
+#[derive(Clone, Debug, Default)]
+pub struct LineMeta {
+    /// Text of every comment (or block-comment fragment) on this line,
+    /// without the `//` / `/*` markers.
+    pub comments: Vec<String>,
+}
+
+impl LineMeta {
+    /// True if any comment on this line contains a `SAFETY` marker —
+    /// the evidence [`super::diag::Lint::UnsafeNeedsSafetyComment`]
+    /// looks for near an `unsafe` token.
+    pub fn has_safety(&self) -> bool {
+        self.comments.iter().any(|c| c.contains("SAFETY"))
+    }
+}
+
+/// Output of [`scrub`]: the blanked code skeleton plus per-line comment
+/// metadata. `lines` always covers every line of the input (0-indexed;
+/// display line numbers are `index + 1`).
+#[derive(Clone, Debug)]
+pub struct Scrubbed {
+    /// Source with comments and string/char contents replaced by spaces;
+    /// identical line structure to the input.
+    pub code: String,
+    /// One entry per input line.
+    pub lines: Vec<LineMeta>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+/// Strip comments and string/char-literal contents from `src`,
+/// preserving line structure and capturing comment text per line.
+pub fn scrub(src: &str) -> Scrubbed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut lines: Vec<LineMeta> = vec![LineMeta::default()];
+    let mut line = 0usize;
+    let mut i = 0usize;
+
+    // Record one comment fragment on `line`.
+    let push_comment = |lines: &mut Vec<LineMeta>, line: usize, text: &[u8]| {
+        while lines.len() <= line {
+            lines.push(LineMeta::default());
+        }
+        lines[line].comments.push(String::from_utf8_lossy(text).into_owned());
+    };
+
+    macro_rules! newline {
+        () => {{
+            out.push(b'\n');
+            line += 1;
+            while lines.len() <= line {
+                lines.push(LineMeta::default());
+            }
+            i += 1;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => newline!(),
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                // Line comment (also `///` and `//!`).
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                push_comment(&mut lines, line, &b[start..j]);
+                for _ in i..j {
+                    out.push(b' ');
+                }
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1usize;
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                let mut frag: Vec<u8> = Vec::new();
+                let mut frag_line = line;
+                while i < n && depth > 0 {
+                    if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'\n' {
+                        push_comment(&mut lines, frag_line, &frag);
+                        frag.clear();
+                        newline!();
+                        frag_line = line;
+                    } else {
+                        frag.push(b[i]);
+                        out.push(b' ');
+                        i += 1;
+                    }
+                }
+                push_comment(&mut lines, frag_line, &frag);
+            }
+            b'"' => {
+                // Normal string (escapes honored, may span lines).
+                out.push(b' ');
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        b'\\' => {
+                            out.push(b' ');
+                            i += 1;
+                            if i < n {
+                                if b[i] == b'\n' {
+                                    newline!();
+                                } else {
+                                    out.push(b' ');
+                                    i += 1;
+                                }
+                            }
+                        }
+                        b'"' => {
+                            out.push(b' ');
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => newline!(),
+                        _ => {
+                            out.push(b' ');
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            b'r' | b'b' if i == 0 || !is_ident_byte(b[i - 1]) => {
+                // Possible raw/byte string or byte char: r"…", r#"…"#,
+                // b"…", br#"…"#, b'…'. Anything else falls through as an
+                // ordinary identifier character.
+                let mut j = i;
+                let mut is_raw = false;
+                if c == b'b' {
+                    j += 1;
+                    if j < n && b[j] == b'r' {
+                        is_raw = true;
+                        j += 1;
+                    }
+                } else {
+                    // c == b'r'
+                    is_raw = true;
+                    j += 1;
+                }
+                let hash_start = j;
+                while j < n && b[j] == b'#' {
+                    j += 1;
+                }
+                let hashes = j - hash_start;
+                if is_raw && j < n && b[j] == b'"' {
+                    // Raw string: blank through `"` + `hashes` hashes.
+                    for _ in i..=j {
+                        out.push(b' ');
+                    }
+                    i = j + 1;
+                    while i < n {
+                        if b[i] == b'\n' {
+                            newline!();
+                            continue;
+                        }
+                        if b[i] == b'"' && i + hashes < n && b[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#') {
+                            for _ in 0..=hashes {
+                                out.push(b' ');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                        out.push(b' ');
+                        i += 1;
+                    }
+                } else if c == b'b' && hashes == 0 && !is_raw && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+                    // b"…" / b'…': blank the prefix and re-handle the
+                    // quote on the next iteration.
+                    out.push(b' ');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // Lifetime or char literal.
+                let next = if i + 1 < n { Some(b[i + 1]) } else { None };
+                let after = if i + 2 < n { Some(b[i + 2]) } else { None };
+                let is_lifetime = matches!(next, Some(nb) if is_ident_start(nb)) && after != Some(b'\'');
+                if is_lifetime {
+                    out.push(b' ');
+                    i += 1; // the label tokenizes as a harmless ident
+                } else {
+                    // Char literal: blank until the closing quote (same
+                    // line; bail at newline on malformed input).
+                    out.push(b' ');
+                    i += 1;
+                    if i < n && b[i] == b'\\' {
+                        out.push(b' ');
+                        i += 1;
+                        if i < n && b[i] != b'\n' {
+                            out.push(b' ');
+                            i += 1;
+                        }
+                    } else if i < n && b[i] != b'\n' {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                    while i < n && b[i] != b'\'' && b[i] != b'\n' {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                    if i < n && b[i] == b'\'' {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+
+    Scrubbed {
+        // The skeleton is ASCII + the original non-string/non-comment
+        // bytes, which came from valid UTF-8 at unchanged offsets.
+        code: String::from_utf8_lossy(&out).into_owned(),
+        lines,
+    }
+}
+
+/// One token of the scrubbed skeleton.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    /// 0-indexed source line the token starts on.
+    pub line: usize,
+    /// Identifier text or single punctuation byte.
+    pub kind: TokKind,
+}
+
+/// Token payload: identifiers (and keywords) carry their text;
+/// everything that is not an identifier, number, or whitespace is a
+/// single punctuation character. Numeric literals are consumed and
+/// dropped — no lint patterns involve them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// An identifier or keyword.
+    Ident(String),
+    /// A single punctuation byte (`::` appears as two `:` tokens).
+    Punct(u8),
+}
+
+/// Split a scrubbed skeleton into line-tagged tokens.
+pub fn tokenize(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: TokKind::Ident(String::from_utf8_lossy(&b[start..i]).into_owned()),
+            });
+        } else if c.is_ascii_digit() {
+            // Numeric literal (incl. suffixes like 0u64): consumed, not
+            // emitted.
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+        } else {
+            if c.is_ascii() {
+                toks.push(Tok { line, kind: TokKind::Punct(c) });
+            }
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(&scrub(src).code)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                TokKind::Punct(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let s = scrub("let a = 1; // partial_cmp here\n/* HashMap */ let b = 2;\n");
+        assert!(!s.code.contains("partial_cmp"));
+        assert!(!s.code.contains("HashMap"));
+        assert_eq!(s.lines[0].comments, vec!["partial_cmp here".to_string()]);
+        assert_eq!(s.lines[1].comments, vec![" HashMap ".to_string()]);
+        assert_eq!(idents("let a = 1; // partial_cmp\n"), vec!["let", "a"]);
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_fragments() {
+        let s = scrub("a /* x /* y */ z\nstill comment */ b\n");
+        let id = idents("a /* x /* y */ z\nstill comment */ b\n");
+        assert_eq!(id, vec!["a", "b"]);
+        assert!(s.lines[0].comments[0].contains('x'));
+        assert!(s.lines[1].comments[0].contains("still comment"));
+    }
+
+    #[test]
+    fn strips_strings_and_raw_strings() {
+        assert_eq!(idents("f(\"Instant::now\");\n"), vec!["f"]);
+        assert_eq!(idents("f(r\"thread_rng\");\n"), vec!["f"]);
+        assert_eq!(idents("f(r#\"a \" HashSet \" b\"#);\n"), vec!["f"]);
+        assert_eq!(idents("f(b\"SystemTime\");\n"), vec!["f"]);
+        assert_eq!(idents("f(\"esc \\\" partial_cmp\");\n"), vec!["f"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // A mis-lexed lifetime would swallow `T` and derail everything.
+        assert_eq!(
+            idents("fn f<'a, T>(x: &'a T) -> &'a T { x }\n"),
+            vec!["fn", "f", "a", "T", "x", "a", "T", "a", "T", "x"]
+        );
+        assert_eq!(idents("let c = 'x'; let q = '\\''; g();\n"), vec!["let", "c", "let", "q", "g"]);
+        assert_eq!(idents("let s: &'static str = \"y\"; h();\n"), vec!["let", "s", "static", "str", "h"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_scrubbing() {
+        let toks = tokenize(&scrub("a\n\"two\nlines\"\nb\n").code);
+        assert_eq!(toks[0], Tok { line: 0, kind: TokKind::Ident("a".into()) });
+        assert_eq!(toks[1], Tok { line: 3, kind: TokKind::Ident("b".into()) });
+    }
+
+    #[test]
+    fn safety_marker_detection() {
+        let s = scrub("// SAFETY: disjoint ranges\nx();\n");
+        assert!(s.lines[0].has_safety());
+        assert!(!s.lines[1].has_safety());
+    }
+}

@@ -1,0 +1,135 @@
+//! `dqlint` — the repo's in-tree static-analysis pass.
+//!
+//! The determinism and panic-safety guarantees documented in
+//! `docs/CONCURRENCY.md` (bit-identical replay across the parallel,
+//! streamed, packed, and served paths) are contracts on *source
+//! patterns*: float comparators must be total, randomness must derive
+//! from the run seed, wall clocks stay out of canonical reports, locks
+//! recover from poisoning instead of cascading panics. This module
+//! family enforces those contracts mechanically so they survive PRs:
+//!
+//! - [`lexer`] — a comment/string-stripping pass ([`lexer::scrub`]) that
+//!   preserves line structure, plus a line-indexed tokenizer
+//!   ([`lexer::tokenize`]); lints never fire inside strings or comments.
+//! - [`scan`] — the lint passes themselves and the `#[cfg(test)]`
+//!   exemption mask (the contracts govern shipping code, not tests).
+//! - [`diag`] — the lint catalog, severities, and human/JSON rendering.
+//! - [`allow`] — the `// dqlint::allow(<lint>): <reason>` suppression
+//!   engine; a suppression without a reason is itself an error.
+//!
+//! The `dqlint` binary (`rust/src/bin/dqlint.rs`) drives
+//! [`scan_paths`] over `rust/src/**` and `rust/benches/**` and exits
+//! nonzero on any error-severity diagnostic, gating `ci.sh` and
+//! `make lint`. The lint catalog and per-lint rationale live in
+//! `docs/LINTS.md`.
+
+pub mod allow;
+pub mod diag;
+pub mod lexer;
+pub mod scan;
+
+pub use diag::{report_json, Diagnostic, Lint, Severity};
+pub use scan::scan_source;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The default scan roots, relative to the repo root.
+pub const DEFAULT_ROOTS: [&str; 2] = ["rust/src", "rust/benches"];
+
+/// Recursively collect every `.rs` file under `root`, sorted by path so
+/// scan order (and therefore report order) is deterministic across
+/// platforms. A `root` that is itself a file is returned as-is.
+pub fn walk_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Render a path with forward slashes (diagnostics and the allowlists
+/// in [`scan`] are specified in `/`-separated form regardless of OS).
+pub fn display_path(path: &Path) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for comp in path.components() {
+        parts.push(comp.as_os_str().to_string_lossy().into_owned());
+    }
+    parts.join("/")
+}
+
+/// Scan a single file from disk.
+pub fn scan_file(path: &Path) -> io::Result<Vec<Diagnostic>> {
+    let src = fs::read_to_string(path)?;
+    Ok(scan::scan_source(&display_path(path), &src))
+}
+
+/// Scan every `.rs` file under each root (files are scanned directly).
+/// Returns all diagnostics plus the number of files scanned.
+pub fn scan_paths(roots: &[PathBuf]) -> io::Result<(Vec<Diagnostic>, usize)> {
+    let mut diags = Vec::new();
+    let mut files = 0usize;
+    for root in roots {
+        for file in walk_rs_files(root)? {
+            diags.extend(scan_file(&file)?);
+            files += 1;
+        }
+    }
+    Ok((diags, files))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_path_is_forward_slashed() {
+        let p: PathBuf = ["rust", "src", "lint", "mod.rs"].iter().collect();
+        assert_eq!(display_path(&p), "rust/src/lint/mod.rs");
+    }
+
+    #[test]
+    fn walker_is_sorted_and_rs_only() {
+        let dir = std::env::temp_dir().join(format!("dqlint-walk-{}", std::process::id()));
+        fs::create_dir_all(dir.join("b")).unwrap();
+        fs::write(dir.join("z.rs"), "fn z() {}\n").unwrap();
+        fs::write(dir.join("a.rs"), "fn a() {}\n").unwrap();
+        fs::write(dir.join("notes.md"), "skip\n").unwrap();
+        fs::write(dir.join("b").join("c.rs"), "fn c() {}\n").unwrap();
+        let files = walk_rs_files(&dir).unwrap();
+        let names: Vec<String> =
+            files.iter().map(|f| display_path(f.strip_prefix(&dir).unwrap())).collect();
+        assert_eq!(names, ["a.rs", "b/c.rs", "z.rs"]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_paths_counts_files() {
+        let dir = std::env::temp_dir().join(format!("dqlint-scan-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("bad.rs"), "fn f() { a.partial_cmp(b); }\n").unwrap();
+        fs::write(dir.join("good.rs"), "fn f() { a.total_cmp(b); }\n").unwrap();
+        let (diags, files) = scan_paths(&[dir.clone()]).unwrap();
+        assert_eq!(files, 2);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, Lint::FloatSortDeterminism);
+        assert!(diags[0].path.ends_with("bad.rs"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,350 @@
+//! The lint passes: token-pattern matching over a scrubbed file, the
+//! `#[cfg(test)]` exemption mask, and per-file diagnostic assembly.
+//!
+//! Every lint here is lexical — it pattern-matches the identifier/
+//! punctuation token stream from [`super::lexer`], which makes the pass
+//! dependency-free and fast, at the cost of being conservative: a lint
+//! fires on the *use of a pattern*, not on a proven semantic violation.
+//! That is the intended trade — a false positive at a genuinely-safe
+//! site is answered with a `// dqlint::allow(<lint>): <reason>`
+//! directive, which doubles as in-tree documentation of why the site is
+//! exempt (see `docs/LINTS.md`).
+
+use super::allow;
+use super::diag::{Diagnostic, Lint, Severity};
+use super::lexer::{self, Tok, TokKind};
+
+/// Modules allowed to read wall clocks: the timing surfaces whose
+/// outputs `PipelineRecord::canonical()` strips (`docs/CONCURRENCY.md`),
+/// plus everything under `benches/` (measuring wall time is a bench's
+/// purpose and bench output is never a canonical report).
+const WALLCLOCK_MODULES: [&str; 4] = [
+    "util/bench.rs",
+    "coordinator/stages.rs",
+    "coordinator/scheduler.rs",
+    "coordinator/registry.rs",
+];
+
+/// Entropy-source identifiers banned outside tests.
+const ENTROPY_IDENTS: [&str; 4] = ["thread_rng", "from_entropy", "OsRng", "getrandom"];
+
+/// `std::thread` members that bypass `util::threadpool`.
+const THREAD_MEMBERS: [&str; 3] = ["spawn", "scope", "Builder"];
+
+/// How many lines above an `unsafe` token a `// SAFETY:` comment may
+/// sit (same line also counts). Multi-line SAFETY comments fit because
+/// any line of the comment containing the marker satisfies the check.
+const SAFETY_WINDOW: usize = 3;
+
+fn ident<'a>(toks: &'a [Tok], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(toks: &[Tok], i: usize, c: u8) -> bool {
+    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+}
+
+/// Compute which 0-indexed lines fall inside a `#[cfg(test)]` item
+/// (attribute line through the item's closing `}` or `;`). The
+/// contracts govern shipping code; test modules are exempt from every
+/// lint except [`Lint::BadAllow`].
+pub fn test_line_mask(toks: &[Tok], n_lines: usize) -> Vec<bool> {
+    let mut mask = vec![false; n_lines];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_cfg_test = punct(toks, i, b'#')
+            && punct(toks, i + 1, b'[')
+            && ident(toks, i + 2) == Some("cfg")
+            && punct(toks, i + 3, b'(')
+            && ident(toks, i + 4) == Some("test")
+            && punct(toks, i + 5, b')')
+            && punct(toks, i + 6, b']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let attr_line = toks[i].line;
+        let mut j = i + 7;
+        // Skip any further attributes between #[cfg(test)] and the item.
+        while punct(toks, j, b'#') && punct(toks, j + 1, b'[') {
+            j += 2;
+            let mut depth = 1usize;
+            while j < toks.len() && depth > 0 {
+                if punct(toks, j, b'[') {
+                    depth += 1;
+                } else if punct(toks, j, b']') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+        }
+        // The item extends to the matching `}` of its first brace block,
+        // or to a top-level `;` (use/type items).
+        let mut brace = 0usize;
+        let mut end = j;
+        let mut end_line = n_lines.saturating_sub(1);
+        while end < toks.len() {
+            if punct(toks, end, b'{') {
+                brace += 1;
+            } else if punct(toks, end, b'}') {
+                brace = brace.saturating_sub(1);
+                if brace == 0 {
+                    end_line = toks[end].line;
+                    break;
+                }
+            } else if punct(toks, end, b';') && brace == 0 {
+                end_line = toks[end].line;
+                break;
+            }
+            end += 1;
+        }
+        for m in mask.iter_mut().take(end_line.min(n_lines - 1) + 1).skip(attr_line) {
+            *m = true;
+        }
+        i = end.max(i) + 1;
+    }
+    mask
+}
+
+struct Hit {
+    line: usize, // 0-indexed
+    lint: Lint,
+    message: String,
+}
+
+/// Run the seven token lints over one file's tokens.
+fn token_lints(path: &str, toks: &[Tok], scrub: &lexer::Scrubbed, mask: &[bool]) -> Vec<Hit> {
+    let wallclock_ok = in_benches(path) || WALLCLOCK_MODULES.iter().any(|m| path.ends_with(m));
+    let spawn_ok = path.ends_with("util/threadpool.rs");
+    let lock_ok = path.ends_with("util/sync.rs");
+    let mut hits = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if mask.get(t.line).copied().unwrap_or(false) {
+            continue;
+        }
+        let TokKind::Ident(name) = &t.kind else { continue };
+        match name.as_str() {
+            "partial_cmp" => hits.push(Hit {
+                line: t.line,
+                lint: Lint::FloatSortDeterminism,
+                message: "float comparator via partial_cmp — NaN panics or flips the order; \
+                          use f32::total_cmp / f64::total_cmp"
+                    .into(),
+            }),
+            "HashMap" | "HashSet" => hits.push(Hit {
+                line: t.line,
+                lint: Lint::NoMapIteration,
+                message: format!(
+                    "{name} in non-test code — hash iteration order is nondeterministic and \
+                     leaks into event logs/reports; use BTreeMap/BTreeSet, or allow with a \
+                     reason proving the container is never iterated"
+                ),
+            }),
+            "Instant" if !wallclock_ok && punct(toks, i + 1, b':') && punct(toks, i + 2, b':') && ident(toks, i + 3) == Some("now") => {
+                hits.push(Hit {
+                    line: t.line,
+                    lint: Lint::WallclockHygiene,
+                    message: wallclock_message("Instant::now()"),
+                });
+            }
+            "SystemTime" if !wallclock_ok => hits.push(Hit {
+                line: t.line,
+                lint: Lint::WallclockHygiene,
+                message: wallclock_message("SystemTime"),
+            }),
+            _ if ENTROPY_IDENTS.contains(&name.as_str()) => hits.push(Hit {
+                line: t.line,
+                lint: Lint::UnseededRng,
+                message: format!(
+                    "{name} is entropy-seeded — all randomness must derive from the run's \
+                     seed through util::prng::Pcg64 so runs replay bit-identically"
+                ),
+            }),
+            "thread" if !spawn_ok && punct(toks, i + 1, b':') && punct(toks, i + 2, b':') && ident(toks, i + 3).is_some_and(|m| THREAD_MEMBERS.contains(&m)) => {
+                hits.push(Hit {
+                    line: t.line,
+                    lint: Lint::RawThreadSpawn,
+                    message: format!(
+                        "raw thread::{} — all fan-out goes through util::threadpool \
+                         (panic containment + deterministic join order)",
+                        ident(toks, i + 3).unwrap_or("spawn")
+                    ),
+                });
+            }
+            "spawn_scoped" if !spawn_ok => hits.push(Hit {
+                line: t.line,
+                lint: Lint::RawThreadSpawn,
+                message: "raw spawn_scoped — all fan-out goes through util::threadpool \
+                          (panic containment + deterministic join order)"
+                    .into(),
+            }),
+            "lock" if !lock_ok && punct(toks, i.wrapping_sub(1), b'.') && i > 0 && punct(toks, i + 1, b'(') && punct(toks, i + 2, b')') && punct(toks, i + 3, b'.') && matches!(ident(toks, i + 4), Some("unwrap") | Some("expect")) => {
+                hits.push(Hit {
+                    line: t.line,
+                    lint: Lint::LockPoisonDiscipline,
+                    message: format!(
+                        ".lock().{}(..) panics on a poisoned mutex, cascading one worker's \
+                         panic into every thread that touches the lock; use \
+                         util::sync::lock_or_poisoned",
+                        ident(toks, i + 4).unwrap_or("unwrap")
+                    ),
+                });
+            }
+            "unsafe" => {
+                let lo = t.line.saturating_sub(SAFETY_WINDOW);
+                let documented = (lo..=t.line)
+                    .any(|l| scrub.lines.get(l).is_some_and(|m| m.has_safety()));
+                if !documented {
+                    hits.push(Hit {
+                        line: t.line,
+                        lint: Lint::UnsafeNeedsSafetyComment,
+                        message: format!(
+                            "unsafe without an adjacent `// SAFETY:` comment (within {SAFETY_WINDOW} \
+                             lines) stating the invariant that makes it sound"
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    hits
+}
+
+fn wallclock_message(what: &str) -> String {
+    format!(
+        "{what} outside the allowlisted timing modules ({}) — wall-clock reads feed \
+         nondeterminism into reports; route timing through the stage observer, or allow \
+         with a reason if the reading never reaches canonical output",
+        WALLCLOCK_MODULES.join(", ")
+    )
+}
+
+fn in_benches(path: &str) -> bool {
+    path.split('/').any(|c| c == "benches")
+}
+
+/// Scan one file's source text. `path` is used for allowlisting and
+/// diagnostic labels; use a normalized forward-slash path.
+pub fn scan_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let scrub = lexer::scrub(src);
+    let toks = lexer::tokenize(&scrub.code);
+    let n_lines = scrub.lines.len().max(1);
+    let mask = test_line_mask(&toks, n_lines);
+    let directives = allow::parse_directives(&scrub);
+    let mut line_has_code = vec![false; n_lines];
+    for t in &toks {
+        if let Some(slot) = line_has_code.get_mut(t.line) {
+            *slot = true;
+        }
+    }
+    let mut diags: Vec<Diagnostic> = token_lints(path, &toks, &scrub, &mask)
+        .into_iter()
+        .filter(|h| !allow::is_suppressed(h.lint, h.line, &directives, &line_has_code))
+        .map(|h| Diagnostic {
+            path: path.to_string(),
+            line: h.line + 1,
+            lint: h.lint,
+            severity: Severity::Error,
+            message: h.message,
+        })
+        .collect();
+    diags.extend(allow::bad_allow_diagnostics(path, &directives));
+    diags.sort_by(|a, b| a.line.cmp(&b.line).then(a.lint.cmp(&b.lint)));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints_of(path: &str, src: &str) -> Vec<Lint> {
+        scan_source(path, src).into_iter().map(|d| d.lint).collect()
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "\
+fn live() { let t = a.partial_cmp(b); }
+#[cfg(test)]
+mod tests {
+    fn helper() { let t = a.partial_cmp(b); }
+}
+";
+        let d = scan_source("x.rs", src);
+        assert_eq!(d.len(), 1, "only the non-test hit: {d:?}");
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn cfg_test_on_statement_item() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn f() {}\n";
+        assert!(lints_of("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wallclock_allowlist_is_path_based() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(lints_of("rust/src/serve/engine.rs", src), vec![Lint::WallclockHygiene]);
+        assert!(lints_of("rust/src/util/bench.rs", src).is_empty());
+        assert!(lints_of("rust/src/coordinator/stages.rs", src).is_empty());
+        assert!(lints_of("rust/benches/perf_decode.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_pattern_requires_empty_args_and_unwrap() {
+        let hit = "fn f() { state.lock().unwrap(); }\n";
+        let exp = "fn f() { state.lock().expect(\"m\"); }\n";
+        let ok = "fn f() { let g = lock_or_poisoned(&state); }\n";
+        assert_eq!(lints_of("a.rs", hit), vec![Lint::LockPoisonDiscipline]);
+        assert_eq!(lints_of("a.rs", exp), vec![Lint::LockPoisonDiscipline]);
+        assert!(lints_of("a.rs", ok).is_empty());
+        assert!(lints_of("rust/src/util/sync.rs", hit).is_empty(), "home module is exempt");
+    }
+
+    #[test]
+    fn thread_patterns() {
+        assert_eq!(
+            lints_of("a.rs", "fn f() { std::thread::spawn(|| {}); }\n"),
+            vec![Lint::RawThreadSpawn]
+        );
+        assert_eq!(
+            lints_of("a.rs", "fn f() { std::thread::scope(|s| {}); }\n"),
+            vec![Lint::RawThreadSpawn]
+        );
+        assert!(lints_of("a.rs", "fn f() { thread::available_parallelism(); }\n").is_empty());
+        assert!(
+            lints_of("rust/src/util/threadpool.rs", "fn f() { std::thread::spawn(|| {}); }\n")
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        let good = "fn f() {\n    // SAFETY: g has no preconditions here\n    unsafe { g() }\n}\n";
+        assert_eq!(lints_of("a.rs", bad), vec![Lint::UnsafeNeedsSafetyComment]);
+        assert!(lints_of("a.rs", good).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "fn f() { g(\"partial_cmp HashMap Instant::now\"); } // thread_rng\n";
+        assert!(lints_of("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_and_bare_allow_errors() {
+        let ok = "fn f() { let m = HashMap::new(); } // dqlint::allow(no-map-iteration): lookup-only\n";
+        assert!(lints_of("a.rs", ok).is_empty());
+        let bare = "fn f() { let m = HashMap::new(); } // dqlint::allow(no-map-iteration)\n";
+        assert_eq!(
+            lints_of("a.rs", bare),
+            vec![Lint::NoMapIteration, Lint::BadAllow],
+            "an ineffective allow suppresses nothing and is itself an error"
+        );
+    }
+}

@@ -19,6 +19,7 @@ use super::weights::{read_str, read_u32, write_str, Tensor, Weights};
 use crate::coordinator::budget::{MemoryGate, MemoryLease};
 use crate::runtime::{Executable, Runtime, Value};
 use crate::tensor::{Mat, QMat};
+use crate::util::sync::lock_or_poisoned;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
@@ -555,7 +556,7 @@ impl WeightStore {
     /// Total decoded bytes of the stored model (sum of per-tensor
     /// `nbytes` in the index — shrinks as write-backs pack tensors).
     pub fn total_nbytes(&self) -> u64 {
-        self.state.lock().unwrap().entries.values().map(|e| e.nbytes).sum()
+        lock_or_poisoned(&self.state).entries.values().map(|e| e.nbytes).sum()
     }
 
     /// Check `names` out of the store: blocks until their decoded bytes
@@ -564,7 +565,7 @@ impl WeightStore {
     pub fn checkout<S: AsRef<str>>(&self, names: &[S]) -> Result<WeightLease<'_>> {
         let mut bytes = 0u64;
         {
-            let st = self.state.lock().unwrap();
+            let st = lock_or_poisoned(&self.state);
             for n in names {
                 let e = st
                     .entries
@@ -581,7 +582,7 @@ impl WeightStore {
         })?;
         let mut tensors = Vec::with_capacity(names.len());
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_poisoned(&self.state);
             let StoreState { file, entries } = &mut *st;
             for n in names {
                 let e = entries[n.as_ref()].clone();
@@ -613,7 +614,7 @@ impl WeightStore {
     /// index entries in place (old blobs become dead file space — the
     /// file is a scratch artifact, not an archival format).
     fn write_back(&self, weights: &Weights) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_poisoned(&self.state);
         let StoreState { file, entries } = &mut *st;
         for (name, t) in weights.ordered_tensors() {
             let e = entries
@@ -649,7 +650,7 @@ impl WeightStore {
     /// under the budget; materializing the result is the caller's
     /// explicit decision to hold the full model.
     pub fn materialize(&self) -> Result<Weights> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_poisoned(&self.state);
         let StoreState { file, entries } = &mut *st;
         let mut tensors = Vec::with_capacity(self.order.len());
         for name in &self.order {

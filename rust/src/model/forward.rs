@@ -304,6 +304,10 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
             let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
             idx.sort_by(|&a, &b| {
                 logits[b]
+                    // dqlint::allow(float-sort-determinism): jax parity
+                    // needs -0.0 == +0.0 resolved by the index tie-break,
+                    // which total_cmp alone would order; NaN falls back to
+                    // total_cmp so the comparator is still total.
                     .partial_cmp(&logits[a])
                     .unwrap_or_else(|| logits[b].total_cmp(&logits[a]))
                     .then(a.cmp(&b))
@@ -376,11 +380,9 @@ pub fn forward_batch(w: &Weights, batch: &[Vec<i32>], opt: FwdOptions) -> Vec<Ve
         crate::util::threadpool::ThreadPool::default_parallelism().min(batch.len().max(1)),
     );
     // Weights are shared read-only across workers.
-    std::thread::scope(|_| {
-        pool.map(batch.to_vec(), {
-            let w = w.clone();
-            move |seq| forward_one(&w, &seq, opt, &mut NoCapture)
-        })
+    pool.map(batch.to_vec(), {
+        let w = w.clone();
+        move |seq| forward_one(&w, &seq, opt, &mut NoCapture)
     })
 }
 

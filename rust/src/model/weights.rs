@@ -148,8 +148,14 @@ impl Weights {
         successor: &[usize],
         n_outlier_channels: usize,
         outlier_scale: f32,
-    ) -> Weights {
-        assert_eq!(successor.len(), cfg.vocab, "successor table must cover vocab");
+    ) -> Result<Weights> {
+        anyhow::ensure!(
+            successor.len() == cfg.vocab,
+            "successor table covers {} tokens but model {} has vocab {}",
+            successor.len(),
+            cfg.name,
+            cfg.vocab
+        );
         let mut rng = Pcg64::new(seed);
         let mut map = BTreeMap::new();
         let order = cfg.param_names();
@@ -241,8 +247,14 @@ impl Weights {
             for i in 0..k_store {
                 *gram.at_mut(i, i) += damp;
             }
-            let ginv = crate::linalg::cholesky_inverse(&gram)
-                .expect("damped Gram matrix is SPD");
+            let ginv = crate::linalg::cholesky_inverse(&gram).with_context(|| {
+                format!(
+                    "planting the {prefix} grammar circuit in model {}: Cholesky of the \
+                     damped {k_store}x{k_store} feature Gram matrix failed (damp={damp:.3e}) \
+                     — the matrix should be SPD by construction",
+                    cfg.name
+                )
+            })?;
             // wd = targetsᵀ · G⁻¹ · Φ  → (d, f).
             let coef = crate::tensor::matmul(&ginv, &phi); // (k, f)
             let wd = crate::tensor::matmul(&targets.t(), &coef); // (d, f)
@@ -277,11 +289,11 @@ impl Weights {
                 }
             }
         }
-        w
+        Ok(w)
     }
 
     /// Grammar model with the default outlier planting.
-    pub fn default_grammar(cfg: &ModelConfig, seed: u64, successor: &[usize]) -> Weights {
+    pub fn default_grammar(cfg: &ModelConfig, seed: u64, successor: &[usize]) -> Result<Weights> {
         let n_out = (cfg.dim / 32).max(2);
         Weights::init_grammar(cfg, seed, successor, n_out, 10.0)
     }
@@ -655,7 +667,7 @@ mod grammar_tests {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let wiki = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
         let ptb = Corpus::new(Dialect::Ptb, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, wiki.successor());
+        let w = Weights::default_grammar(&cfg, 1, wiki.successor()).unwrap();
         let mean = |v: &[f32]| v.iter().sum::<f32>() as f64 / v.len() as f64;
         let seq_w = wiki.valid_batch(1, 96, 0).remove(0);
         let seq_p = ptb.valid_batch(1, 96, 0).remove(0);
@@ -664,5 +676,15 @@ mod grammar_tests {
         let uniform = (cfg.vocab as f64).ln();
         assert!(nll_w < uniform - 0.8, "grammar model not predictive: {nll_w} vs uniform {uniform}");
         assert!(nll_p > nll_w + 0.3, "no dialect specificity: wiki {nll_w} vs ptb {nll_p}");
+    }
+
+    #[test]
+    fn grammar_init_errors_are_contextful() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let err = Weights::default_grammar(&cfg, 1, &[0, 1, 2]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("successor table"), "{msg}");
+        assert!(msg.contains(&cfg.vocab.to_string()), "{msg}");
+        assert!(msg.contains(&cfg.name), "{msg}");
     }
 }

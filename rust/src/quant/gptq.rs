@@ -399,7 +399,7 @@ mod tests {
     fn gptq_packed_model_matches_dense() {
         let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = crate::data::Corpus::new(crate::data::Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let calib = corpus.calib_sequences(2, 32);
         let dense = gptq_quantize_model(&w, &calib, GptqConfig::default());
         let packed = gptq_quantize_model_packed(&w, &calib, GptqConfig::default());
@@ -412,7 +412,7 @@ mod tests {
     fn gptq_model_runs_and_changes_linears_only() {
         let cfg = crate::model::ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = crate::data::Corpus::new(crate::data::Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let calib = corpus.calib_sequences(2, 32);
         let q = gptq_quantize_model(&w, &calib, GptqConfig::default());
         assert_eq!(q.get("embed").data, w.get("embed").data);

@@ -277,7 +277,7 @@ mod tests {
 
         pub fn quik(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> Mat {
             let mut idx: Vec<usize> = (0..w.cols).collect();
-            idx.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+            idx.sort_by(|&a, &b| act_absmax[b].total_cmp(&act_absmax[a]));
             let protected: std::collections::HashSet<usize> = idx.into_iter().take(keep).collect();
             let qmax = ((1i32 << (bits - 1)) - 1) as f32;
             let mut out = w.clone();
@@ -299,7 +299,7 @@ mod tests {
 
         pub fn atom(w: &Mat, act_absmax: &[f32], bits: u8) -> Mat {
             let mut order: Vec<usize> = (0..w.cols).collect();
-            order.sort_by(|&a, &b| act_absmax[b].partial_cmp(&act_absmax[a]).unwrap());
+            order.sort_by(|&a, &b| act_absmax[b].total_cmp(&act_absmax[a]));
             const GROUP: usize = 32;
             let qmax_lo = ((1i32 << (bits - 1)) - 1) as f32;
             let qmax_hi = ((1i32 << 7) - 1) as f32;

@@ -397,7 +397,7 @@ mod tests {
     fn setup() -> (Weights, Vec<i32>, Corpus) {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-        let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+        let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
         let toks = corpus.valid_batch(1, 48, 0).remove(0);
         (w, toks, corpus)
     }

@@ -18,7 +18,7 @@ pub use value::Value;
 
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -27,7 +27,7 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
 }
 
 /// A compiled entry point with its typed signature.
@@ -44,7 +44,7 @@ impl Runtime {
         let manifest = Manifest::load(&manifest_path)
             .with_context(|| format!("loading {manifest_path:?} — run `make artifacts` first"))?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(BTreeMap::new()) })
     }
 
     /// The default artifacts directory: `$DARTQUANT_ARTIFACTS` or

@@ -21,6 +21,7 @@ use super::session::{sample_logits, DecodeSession};
 use crate::coordinator::budget::{MemoryGate, OwnedLease};
 use crate::model::{FwdOptions, Weights};
 use crate::util::prng::Pcg64;
+use crate::util::sync::lock_or_poisoned;
 use crate::util::threadpool::{scoped_try_map, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -295,7 +296,7 @@ impl BatchEngine {
         let temperature = self.cfg.temperature;
         let cells: Vec<Mutex<&mut Active>> = self.active.iter_mut().map(Mutex::new).collect();
         scoped_try_map(workers, &cells, |_, cell| {
-            cell.lock().expect("uncontended session cell").advance(temperature);
+            lock_or_poisoned(cell).advance(temperature);
         })
         .map_err(|p| {
             anyhow::anyhow!("decode step panicked in session slot {}: {}", p.index, p.message)

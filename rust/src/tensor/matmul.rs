@@ -69,15 +69,14 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     };
     let a_data = &a.data;
     let b_data = &b.data;
-    // SAFETY-free parallelism: split C's rows into disjoint ranges; each
-    // range is written by exactly one thread via raw pointer arithmetic on
-    // non-overlapping row slices.
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     par_ranges(m, threads, |lo, hi| {
         let c_ptr = &c_ptr;
         for i in lo..hi {
-            let c_row =
-                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
+            // SAFETY: par_ranges hands each thread a disjoint row range
+            // [lo, hi), so row i aliases no other thread's slice; i < m
+            // keeps the slice inside C's m*n buffer.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
             let a_row = &a_data[i * k..(i + 1) * k];
             for (kk, &aik) in a_row.iter().enumerate() {
                 if aik == 0.0 {
@@ -112,6 +111,8 @@ pub fn matmul_transb_with(a: &Mat, b: &Mat, threads: usize) -> Mat {
     par_ranges(m, threads, |lo, hi| {
         let c_ptr = &c_ptr;
         for i in lo..hi {
+            // SAFETY: disjoint row range per thread (see matmul_into) and
+            // i < m bounds the slice inside C's m*n buffer.
             let c_row = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
             let a_row = &a_data[i * k..(i + 1) * k];
             for (j, cij) in c_row.iter_mut().enumerate() {
@@ -125,6 +126,8 @@ pub fn matmul_transb_with(a: &Mat, b: &Mat, threads: usize) -> Mat {
 /// Shareable raw pointer for the disjoint-element parallel write pattern
 /// (each thread writes a disjoint row or column range).
 pub(crate) struct SendPtr(pub(crate) *mut f32);
+// SAFETY: shared only across par_ranges' scoped threads, each writing a
+// disjoint element range, so concurrent access never aliases a write.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 

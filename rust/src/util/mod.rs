@@ -12,6 +12,8 @@
 //! * [`propcheck`] — a seeded property-testing helper (proptest stand-in).
 //! * [`bench`] — the harness used by `cargo bench` targets.
 //! * [`mem`] — process RSS sampling for the cost tables.
+//! * [`sync`] — poison-tolerant lock helpers (the only module allowed
+//!   to unwrap a lock result; see `docs/LINTS.md`).
 
 pub mod bench;
 pub mod cli;
@@ -19,6 +21,7 @@ pub mod json;
 pub mod mem;
 pub mod propcheck;
 pub mod prng;
+pub mod sync;
 pub mod threadpool;
 
 /// Human-readable duration formatting used across benches and progress logs.

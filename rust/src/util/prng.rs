@@ -107,6 +107,9 @@ impl Pcg64 {
             all.truncate(k);
             all
         } else {
+            // dqlint::allow(no-map-iteration): membership probe only —
+            // the output order comes from `v` + the final sort, the set
+            // is never iterated.
             let mut set = std::collections::HashSet::with_capacity(k);
             let mut v = Vec::with_capacity(k);
             for j in (n - k)..n {
@@ -149,7 +152,7 @@ impl Zipf {
     /// Sample a 0-based rank.
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let u = rng.uniform();
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -238,6 +241,24 @@ mod tests {
             counts[z.sample(&mut rng)] += 1;
         }
         assert!(counts[0] > counts[4] && counts[4] > counts[20]);
+    }
+
+    #[test]
+    fn zipf_with_nan_weights_never_panics() {
+        // A NaN α poisons the whole CDF (every entry becomes NaN).
+        // total_cmp treats NaN as the maximum, so the binary search
+        // deterministically resolves to rank 0 instead of panicking
+        // mid-draw — the WeightedIndex analogue of PR 4's NaN fixes.
+        let mut rng = Pcg64::new(13);
+        let z = Zipf::new(8, f64::NAN);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+        // ∞ α is fine too: all mass collapses onto rank 0.
+        let z = Zipf::new(8, f64::INFINITY);
+        for _ in 0..100 {
+            assert!(z.sample(&mut rng) < 8);
+        }
     }
 
     #[test]

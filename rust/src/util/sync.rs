@@ -1,0 +1,112 @@
+//! Poison-tolerant lock helpers — the one place in the tree allowed to
+//! unwrap a lock result.
+//!
+//! `Mutex::lock()` returns `Err` only when another thread panicked while
+//! holding the guard. Propagating that as a second panic cascades one
+//! worker's failure into every thread that later touches the lock —
+//! exactly the failure mode the scheduler's panic containment
+//! (`docs/CONCURRENCY.md`) exists to avoid. For every shared structure
+//! in this crate (budget ledgers, event reorder buffers, pool queues,
+//! artifact caches, serve sessions) the protected data is valid at every
+//! guard drop point, so the right response to poisoning is to take the
+//! guard anyway, log where it happened, and keep going.
+//!
+//! The `lock-poison-discipline` lint (`docs/LINTS.md`) forbids bare
+//! `.lock().unwrap()` outside this module, so call sites route through
+//! [`lock_or_poisoned`] / [`wait_or_poisoned`].
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if the mutex is poisoned.
+///
+/// On poisoning, logs the recovery (with the caller's location) to
+/// stderr once per call and returns the inner guard — the data is
+/// whatever the panicking thread left behind, which every protected
+/// structure in this crate keeps valid between operations.
+#[track_caller]
+pub fn lock_or_poisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            let at = std::panic::Location::caller();
+            eprintln!("warning: recovering poisoned mutex at {}:{}", at.file(), at.line());
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Block on `cv` with `guard`, recovering the guard if the mutex was
+/// poisoned while waiting. Companion to [`lock_or_poisoned`] for
+/// condvar loops.
+#[track_caller]
+pub fn wait_or_poisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            let at = std::panic::Location::caller();
+            eprintln!("warning: recovering poisoned mutex at {}:{}", at.file(), at.line());
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m = Arc::clone(m);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(41));
+        poison(&m);
+        assert!(m.is_poisoned());
+        let mut g = lock_or_poisoned(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn lock_passes_through_when_clean() {
+        let m = Mutex::new("ok");
+        assert_eq!(*lock_or_poisoned(&m), "ok");
+    }
+
+    #[test]
+    fn wait_recovers_from_poison() {
+        // Poison the mutex, then have a peer notify the condvar while we
+        // wait on the recovered guard.
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let pair = Arc::clone(&pair);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let _guard = pair.0.lock().unwrap();
+                panic!("poison the lock");
+            }));
+        }
+        assert!(pair.0.is_poisoned());
+        let notifier = {
+            let pair = Arc::clone(&pair);
+            // dqlint::allow(raw-thread-spawn): test-only peer; the pool
+            // itself depends on this module.
+            std::thread::spawn(move || {
+                let mut ready = lock_or_poisoned(&pair.0);
+                *ready = true;
+                pair.1.notify_one();
+            })
+        };
+        let mut ready = lock_or_poisoned(&pair.0);
+        while !*ready {
+            ready = wait_or_poisoned(&pair.1, ready);
+        }
+        assert!(*ready);
+        notifier.join().unwrap();
+    }
+}

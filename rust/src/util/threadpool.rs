@@ -17,6 +17,7 @@
 //! the join, and `resume_unwind` across the pool boundary loses which job
 //! failed.
 
+use crate::util::sync::lock_or_poisoned;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -71,7 +72,7 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("dartquant-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { lock_or_poisoned(&rx).recv() };
                         match job {
                             // A panicking job must not kill the worker:
                             // queued jobs would strand and `map`'s join
@@ -81,7 +82,7 @@ impl ThreadPool {
                                     std::panic::AssertUnwindSafe(job),
                                 );
                                 if let Err(p) = r {
-                                    panics.lock().unwrap().push(panic_message(p.as_ref()));
+                                    lock_or_poisoned(&panics).push(panic_message(p.as_ref()));
                                 }
                             }
                             Err(_) => break, // sender dropped => shutdown
@@ -106,7 +107,7 @@ impl ThreadPool {
             // are never silently dropped.
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             if let Err(p) = r {
-                self.panics.lock().unwrap().push(panic_message(p.as_ref()));
+                self.lock_or_poisoned(&panics).push(panic_message(p.as_ref()));
             }
             return;
         }
@@ -117,7 +118,7 @@ impl ThreadPool {
     /// (`map`/`try_map` report their jobs' panics through their return
     /// value instead.)
     pub fn drain_panics(&self) -> Vec<String> {
-        std::mem::take(&mut *self.panics.lock().unwrap())
+        std::mem::take(&mut *lock_or_poisoned(&self.panics))
     }
 
     /// Map `f` over `items` on the pool, preserving item order, joining
@@ -217,7 +218,7 @@ where
                 break;
             }
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &items[i])));
-            *results[i].lock().unwrap() = Some(r);
+            *lock_or_poisoned(&results[i]) = Some(r);
         };
         for t in 1..threads {
             let _ = std::thread::Builder::new()
@@ -229,7 +230,10 @@ where
     let mut out = Vec::with_capacity(n);
     let mut first_panic: Option<JobPanic> = None;
     for (i, cell) in results.into_iter().enumerate() {
-        match cell.into_inner().unwrap().expect("every item ran") {
+        // Each cell's mutex is held only for the `Some(r)` store, so a
+        // poisoned cell still holds a valid slot — recover it.
+        let slot = cell.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match slot.expect("every item ran") {
             Ok(v) => out.push(v),
             Err(p) => {
                 if first_panic.is_none() {

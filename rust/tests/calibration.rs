@@ -127,7 +127,7 @@ fn dartquant_rotation_beats_hadamard_on_w4a4_ppl() {
     let Some(rt) = runtime_or_skip() else { return };
     let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+    let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
 
     // Capture R1-site activations through the PJRT capture artifact.
     let toks = TokenBatch::new(&corpus.calib_sequences(8, 256));

@@ -1,0 +1,130 @@
+//! Integration tests for `dqlint`: every lint fires on its bad fixture,
+//! stays quiet on the good fixture, suppresses through a reasoned allow
+//! directive, and — the gate that matters — the real tree is clean.
+
+use dartquant::lint::{self, Diagnostic, Lint, Severity};
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(lint_dir: &str, which: &str) -> Vec<Diagnostic> {
+    let path = repo_root()
+        .join("rust/tests/lint_fixtures")
+        .join(lint_dir)
+        .join(format!("{which}.rs"));
+    lint::scan_file(&path).unwrap_or_else(|e| panic!("reading fixture {path:?}: {e}"))
+}
+
+/// The seven suppressible lints with their fixture directories.
+const CASES: [Lint; 7] = Lint::ALL;
+
+#[test]
+fn every_lint_fires_on_its_bad_fixture() {
+    for lint in CASES {
+        let diags = fixture(lint.name(), "bad");
+        assert!(!diags.is_empty(), "{}: bad fixture produced no diagnostics", lint.name());
+        for d in &diags {
+            assert_eq!(d.lint, lint, "{}: unexpected cross-fire: {d}", lint.name());
+            assert_eq!(d.severity, Severity::Error);
+            assert!(d.line > 0, "lines are 1-based: {d}");
+            assert!(!d.message.is_empty());
+        }
+    }
+}
+
+#[test]
+fn every_lint_passes_its_good_fixture() {
+    for lint in CASES {
+        let diags = fixture(lint.name(), "good");
+        assert!(
+            diags.is_empty(),
+            "{}: good fixture should be clean, got: {:?}",
+            lint.name(),
+            diags
+        );
+    }
+}
+
+#[test]
+fn every_lint_suppresses_through_a_reasoned_allow() {
+    for lint in CASES {
+        let diags = fixture(lint.name(), "allowed");
+        assert!(
+            diags.is_empty(),
+            "{}: reasoned allow should suppress, got: {:?}",
+            lint.name(),
+            diags
+        );
+    }
+}
+
+#[test]
+fn cfg_test_code_is_exempt_in_fixtures() {
+    // The float fixture plants the same violation in a #[cfg(test)]
+    // module; only the shipping-code copy may fire.
+    let diags = fixture("float-sort-determinism", "bad");
+    assert_eq!(diags.len(), 1, "test-module copy must not fire: {diags:?}");
+}
+
+#[test]
+fn bad_allow_directives_are_errors() {
+    let diags = fixture("bad-allow", "bad");
+    assert_eq!(diags.len(), 2, "bare + unknown-lint allows: {diags:?}");
+    for d in &diags {
+        assert_eq!(d.lint, Lint::BadAllow);
+        assert_eq!(d.severity, Severity::Error);
+    }
+    assert!(diags[0].message.contains("without a reason"), "{}", diags[0].message);
+    assert!(diags[1].message.contains("unknown lint"), "{}", diags[1].message);
+
+    let clean = fixture("bad-allow", "good");
+    assert!(clean.is_empty(), "well-formed allow is not an error: {clean:?}");
+}
+
+#[test]
+fn seeded_violation_fails_a_scan() {
+    // What `ci.sh` relies on: reintroducing a partial_cmp comparator
+    // into any scanned file turns the scan red.
+    let seeded = "pub fn f(xs: &mut Vec<f32>) {\n    \
+                  xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let diags = lint::scan_source("rust/src/seeded.rs", seeded);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].lint, Lint::FloatSortDeterminism);
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    assert!(errors > 0, "the error count is what gates the exit code");
+}
+
+#[test]
+fn json_report_roundtrips_through_util_json() {
+    let diags = fixture("wallclock-hygiene", "bad");
+    let report = lint::report_json(&diags, 1).to_string();
+    let parsed = dartquant::util::json::Json::parse(&report).expect("valid JSON");
+    assert_eq!(parsed.get_usize("count"), Some(diags.len()));
+    assert_eq!(parsed.get_usize("errors"), Some(diags.len()));
+    assert_eq!(parsed.get_usize("files_scanned"), Some(1));
+    let arr = parsed.get("diagnostics").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), diags.len());
+    assert_eq!(arr[0].get_str("lint"), Some("wallclock-hygiene"));
+    assert_eq!(arr[0].get_str("severity"), Some("error"));
+}
+
+#[test]
+fn the_real_tree_is_clean() {
+    // The tier-1 gate: rust/src/** and rust/benches/** carry zero
+    // diagnostics — every suppression in the tree has a reason.
+    let roots: Vec<PathBuf> =
+        lint::DEFAULT_ROOTS.iter().map(|r| repo_root().join(r)).collect();
+    for root in &roots {
+        assert!(Path::new(root).is_dir(), "missing scan root {root:?}");
+    }
+    let (diags, files) = lint::scan_paths(&roots).expect("scan the tree");
+    assert!(files > 40, "expected the whole tree, scanned only {files} files");
+    assert!(
+        diags.is_empty(),
+        "the tree must be dqlint-clean, found {}:\n{}",
+        diags.len(),
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

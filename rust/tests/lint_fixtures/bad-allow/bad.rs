@@ -1,0 +1,7 @@
+// Fixture: malformed suppressions are themselves errors.
+pub fn noisy(mags: &mut Vec<f32>) {
+    // dqlint::allow(float-sort-determinism)
+    mags.sort_by(|a, b| a.total_cmp(b));
+    // dqlint::allow(not-a-real-lint): reason text
+    mags.reverse();
+}

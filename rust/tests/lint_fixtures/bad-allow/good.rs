@@ -1,0 +1,6 @@
+// Fixture: a well-formed allow (known lint + reason) is not an error,
+// even when nothing on the line needs suppressing.
+pub fn quiet(mags: &mut Vec<f32>) {
+    // dqlint::allow(float-sort-determinism): documents a sweep tool.
+    mags.sort_by(|a, b| a.total_cmp(b));
+}

@@ -1,0 +1,11 @@
+// Fixture: a justified partial_cmp survives with a reasoned allow.
+pub fn top_k_jax_parity(logits: &[f32], idx: &mut Vec<usize>) {
+    idx.sort_by(|&a, &b| {
+        logits[b]
+            // dqlint::allow(float-sort-determinism): jax top_k parity
+            // needs -0.0 == +0.0 broken by index; NaN falls back below.
+            .partial_cmp(&logits[a])
+            .unwrap_or_else(|| logits[b].total_cmp(&logits[a]))
+            .then(a.cmp(&b))
+    });
+}

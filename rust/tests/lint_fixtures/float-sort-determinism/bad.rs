@@ -1,0 +1,12 @@
+// Fixture: partial_cmp comparator — panics (or flips order) on NaN.
+pub fn rank_channels(mags: &mut Vec<f32>) {
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+#[cfg(test)]
+mod tests {
+    // The same pattern inside a test module is exempt.
+    fn helper(mags: &mut Vec<f32>) {
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+}

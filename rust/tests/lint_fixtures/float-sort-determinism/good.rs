@@ -1,0 +1,4 @@
+// Fixture: total_cmp is the contract-conforming float comparator.
+pub fn rank_channels(mags: &mut Vec<f32>) {
+    mags.sort_by(|a, b| a.total_cmp(b));
+}

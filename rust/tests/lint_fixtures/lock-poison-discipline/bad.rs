@@ -1,0 +1,12 @@
+// Fixture: bare lock unwraps cascade one panic into every thread.
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = counter.lock().unwrap();
+    *g += 1;
+    *g
+}
+
+pub fn read(counter: &Mutex<u64>) -> u64 {
+    *counter.lock().expect("counter lock")
+}

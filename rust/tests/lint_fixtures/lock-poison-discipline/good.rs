@@ -1,0 +1,9 @@
+// Fixture: poison-tolerant locking through util::sync.
+use dartquant::util::sync::lock_or_poisoned;
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = lock_or_poisoned(counter);
+    *g += 1;
+    *g
+}

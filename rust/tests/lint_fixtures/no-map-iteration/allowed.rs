@@ -1,0 +1,7 @@
+// Fixture: membership-only set use, justified per site.
+pub fn dedup_count(xs: &[u64]) -> usize {
+    // dqlint::allow(no-map-iteration): membership probe only, the set
+    // is never iterated so its order cannot leak.
+    let seen: std::collections::HashSet<u64> = xs.iter().copied().collect();
+    seen.len()
+}

@@ -1,0 +1,10 @@
+// Fixture: HashMap in shipping code — iteration order leaks into logs.
+use std::collections::HashMap;
+
+pub fn tally(names: &[String]) -> HashMap<String, usize> {
+    let mut m = HashMap::new();
+    for n in names {
+        *m.entry(n.clone()).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,10 @@
+// Fixture: BTreeMap iterates in key order — deterministic reports.
+use std::collections::BTreeMap;
+
+pub fn tally(names: &[String]) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for n in names {
+        *m.entry(n.clone()).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,8 @@
+// Fixture: a raw thread justified per site.
+pub fn watchdog() {
+    // dqlint::allow(raw-thread-spawn): detached watchdog that never
+    // joins into pipeline state, so pool containment buys nothing.
+    std::thread::spawn(|| loop {
+        std::hint::spin_loop();
+    });
+}

@@ -1,0 +1,8 @@
+// Fixture: raw spawn bypasses the pool's panic containment.
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 2 + 2);
+    let _ = h.join();
+    std::thread::scope(|s| {
+        s.spawn(|| ());
+    });
+}

@@ -1,0 +1,5 @@
+// Fixture: fan-out through the pool keeps join order deterministic.
+pub fn fan_out(items: Vec<usize>) -> Vec<usize> {
+    let pool = dartquant::util::threadpool::ThreadPool::new(4);
+    pool.map(items, |x| x * 2)
+}

@@ -1,0 +1,7 @@
+// Fixture: suppressing the lint (instead of a SAFETY comment) also works.
+pub fn read_first(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty());
+    // dqlint::allow(unsafe-needs-safety-comment): invariant documented
+    // on the caller; the assert above keeps the read in bounds.
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,4 @@
+// Fixture: undocumented unsafe.
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

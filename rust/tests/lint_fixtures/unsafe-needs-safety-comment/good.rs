@@ -1,0 +1,7 @@
+// Fixture: unsafe with the invariant stated next to it.
+pub fn read_first(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty());
+    // SAFETY: the assert above guarantees at least one element, so the
+    // pointer read is in bounds.
+    unsafe { *xs.as_ptr() }
+}

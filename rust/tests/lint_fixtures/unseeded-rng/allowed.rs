@@ -1,0 +1,7 @@
+// Fixture: an entropy source justified per site.
+pub fn session_nonce() -> u64 {
+    // dqlint::allow(unseeded-rng): nonce for a scratch file name only,
+    // never feeds calibration or reports.
+    let mut rng = thread_rng();
+    rng.next_u64()
+}

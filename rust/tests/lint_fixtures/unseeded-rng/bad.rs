@@ -1,0 +1,5 @@
+// Fixture: entropy-seeded randomness breaks bit-identical replay.
+pub fn jitter() -> u64 {
+    let mut rng = thread_rng();
+    rng.next_u64()
+}

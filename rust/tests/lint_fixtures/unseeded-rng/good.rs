@@ -1,0 +1,5 @@
+// Fixture: all randomness derives from the run seed.
+pub fn jitter(seed: u64) -> u64 {
+    let mut rng = dartquant::util::prng::Pcg64::new(seed ^ 0x1ee7);
+    rng.next_u64()
+}

@@ -1,0 +1,7 @@
+// Fixture: a CLI readout clock, justified per site.
+pub fn cli_readout() -> std::time::Duration {
+    // dqlint::allow(wallclock-hygiene): CLI progress line only, never
+    // reaches a canonical report.
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}

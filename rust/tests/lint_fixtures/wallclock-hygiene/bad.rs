@@ -1,0 +1,9 @@
+// Fixture: wall-clock read outside the allowlisted timing modules.
+pub fn stamped_run() -> std::time::Duration {
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

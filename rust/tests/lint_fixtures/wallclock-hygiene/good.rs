@@ -1,0 +1,4 @@
+// Fixture: no wall-clock reads; timing flows through the observer.
+pub fn run_steps(n: usize) -> usize {
+    (0..n).map(|i| i * i).sum()
+}

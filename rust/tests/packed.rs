@@ -14,7 +14,7 @@ use dartquant::model::{BitSetting, FwdOptions, ModelConfig, Weights};
 
 fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let w = Weights::default_grammar(cfg, 1, corpus.successor());
+    let w = Weights::default_grammar(cfg, 1, corpus.successor()).unwrap();
     (w, corpus)
 }
 

@@ -18,7 +18,7 @@ use std::sync::Arc;
 fn tiny() -> (Weights, Corpus) {
     let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let w = Weights::default_grammar(&cfg, 1, corpus.successor());
+    let w = Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap();
     (w, corpus)
 }
 

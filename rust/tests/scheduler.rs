@@ -27,7 +27,7 @@ use std::sync::Arc;
 fn tiny() -> Weights {
     let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    Weights::default_grammar(&cfg, 1, corpus.successor())
+    Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap()
 }
 
 /// Render an event stream without its run-varying fields (durations), so

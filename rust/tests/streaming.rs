@@ -25,7 +25,7 @@ use std::path::PathBuf;
 fn model(name: &str) -> Weights {
     let cfg = ModelConfig::builtin(name).unwrap();
     let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    Weights::default_grammar(&cfg, 1, corpus.successor())
+    Weights::default_grammar(&cfg, 1, corpus.successor()).unwrap()
 }
 
 fn scratch(tag: &str) -> PathBuf {
