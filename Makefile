@@ -13,9 +13,13 @@
 #   make check-links docs link checker (scripts/check_links.sh)
 #   make bench       run the paper-table bench binaries (needs artifacts)
 #   make bench-decode     run the serving-path bench (native; no artifacts)
+#   make bench-gemm       run the tiled-GEMM bench (native; no artifacts)
 #   make bench-streaming  run the out-of-core vs in-memory bench (native)
+#   make bench-json       pinned perf run emitting BENCH_*.json receipts
+#                         (scripts/bench_json.sh; perf_gemm + perf_decode
+#                         always, perf_hotpath when artifacts/ exists)
 
-.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-streaming
+.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-streaming bench-json
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -47,5 +51,11 @@ bench:
 bench-decode:
 	cargo bench --bench perf_decode
 
+bench-gemm:
+	cargo bench --bench perf_gemm
+
 bench-streaming:
 	cargo bench --bench perf_streaming
+
+bench-json:
+	./scripts/bench_json.sh

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (also `make check`):
-#   release build, bench compile (perf_decode/perf_streaming & friends
-#   build but do not run), example compile (quickstart & friends), quiet
-#   tests (includes the decode-parity suite rust/tests/serving.rs and
-#   the out-of-core suite rust/tests/streaming.rs), the dqlint
+#   release build, bench compile (perf_gemm/perf_decode & friends build
+#   but do not run; `make bench-json` runs the pinned perf set), example
+#   compile (quickstart & friends), quiet tests (includes the GEMM
+#   parity suite rust/tests/gemm.rs, the decode-parity suite
+#   rust/tests/serving.rs and the out-of-core suite
+#   rust/tests/streaming.rs), the dqlint
 #   static-analysis pass (docs/LINTS.md; lint_report.json is the
 #   machine-readable archive), clippy (warnings as errors), rustdoc
 #   (warnings as errors), docs link check, formatting.

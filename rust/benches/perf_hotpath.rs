@@ -18,8 +18,8 @@ use dartquant::calib::{sample_tokens, CALIB_TOKENS};
 use dartquant::model::{TokenBatch, Weights};
 use dartquant::runtime::Value;
 use dartquant::tensor::{
-    matmul, matmul_transb_deq_with, matmul_transb_q_with, matmul_transb_with, Mat, QMat,
-    QuantSpec,
+    matmul, matmul_transb_deq_with, matmul_transb_q_with, matmul_transb_qact_with,
+    matmul_transb_with, quantize_act, Mat, QMat, QuantSpec,
 };
 use dartquant::util::bench::{fnum, time, Table};
 use dartquant::util::prng::Pcg64;
@@ -114,10 +114,14 @@ fn main() {
         let mut rng = Pcg64::new(7);
         let x = Mat::from_fn(n, n, |_, _| rng.normal());
         let mut xq = x.clone();
-        dartquant::model::fake_quant_rows(&mut xq, 16.0); // the W4A4 activation grid
+        // The layer-boundary activation quantization (W4A4 grid): the
+        // `qact` rows below reuse these codes, like the forward does.
+        let qa = quantize_act(&mut xq, 16.0).expect("W4A4 activation grid");
         let w = Mat::from_fn(n, n, |_, _| rng.normal());
         let q8 = QMat::quantize_rtn(&w, QuantSpec::new(8));
         let q4 = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        q8.prepack();
+        q4.prepack();
         let gflops = |median: std::time::Duration| {
             fnum(2.0 * (n as f64).powi(3) / median.as_secs_f64() / 1e9, 1)
         };
@@ -148,6 +152,17 @@ fn main() {
                 dartquant::util::fmt_duration(meas.median),
                 gflops(meas.median),
                 format!("{}", q.nbytes()),
+            ]);
+            // The forward's actual hot path: boundary codes computed
+            // once (QAct), prepacked panels — no per-call recovery.
+            let meas = time("transb qact", 2, 8, || {
+                std::hint::black_box(matmul_transb_qact_with(&xq, &qa, q, threads));
+            });
+            ptable.row(&[
+                format!("packed-{label} qact {n}³"),
+                dartquant::util::fmt_duration(meas.median),
+                gflops(meas.median),
+                format!("{}", q.nbytes() + q.panel_nbytes()),
             ]);
         }
     }

@@ -17,47 +17,14 @@
 
 use super::kv::LayerKv;
 use super::weights::{Tensor, Weights};
-use crate::tensor::{matmul_transb, matmul_transb_q, Mat};
+use crate::tensor::{matmul_transb, matmul_transb_deq, matmul_transb_qact, Mat, QAct};
 
-/// Per-row asymmetric fake-quant grid `(mn, scale)` at `levels`, or
-/// `None` when quantization is disabled (`levels >= 32768`, the fp16
-/// settings) or the row is constant (zero range, left untouched).
-/// Shared by the activation quantizer below and the KV-cache code
-/// storage (`model::kv`), which must land on exactly this grid.
-pub(crate) fn fq_row_grid(row: &[f32], levels: f32) -> Option<(f32, f32)> {
-    if levels >= 32768.0 {
-        return None;
-    }
-    let (mut mn, mut mx) = (f32::MAX, f32::MIN);
-    for &v in row {
-        mn = mn.min(v);
-        mx = mx.max(v);
-    }
-    let scale = (mx - mn) / (levels - 1.0).max(1.0);
-    if scale <= 0.0 {
-        None
-    } else {
-        Some((mn, scale))
-    }
-}
-
-/// Fake-quantize one row in place on its `fq_row_grid` grid.
-pub fn fake_quant_row(row: &mut [f32], levels: f32) {
-    if let Some((mn, scale)) = fq_row_grid(row, levels) {
-        for v in row.iter_mut() {
-            *v = ((*v - mn) / scale).round() * scale + mn;
-        }
-    }
-}
-
-/// Per-token asymmetric fake quantization over rows (the activation
-/// quantizer). `levels >= 32768` disables (the fp16 settings) — mirrors
-/// `model._fq_act`.
-pub fn fake_quant_rows(x: &mut Mat, levels: f32) {
-    for i in 0..x.rows {
-        fake_quant_row(x.row_mut(i), levels);
-    }
-}
+// The per-row asymmetric activation grid and its fake-quant kernels live
+// with the quantized-activation type in `tensor::qact` (the KV-cache code
+// storage in `model::kv` lands on exactly this grid too); re-exported
+// here so the historical `model::forward` paths keep working.
+pub use crate::tensor::qact::{fake_quant_row, fake_quant_rows, quantize_act};
+pub(crate) use crate::tensor::qact::act_grid as fq_row_grid;
 
 /// Quantization/rotation switches for the native forward.
 #[derive(Clone, Copy, Debug)]
@@ -134,13 +101,15 @@ fn hadamard_rows(x: &mut Mat) {
 }
 
 /// One linear (`y = x · Wᵀ`): dense weights take the f32 kernel; packed
-/// weights stream their codes — the i8×i8 → i32 integer path when the
-/// (already fake-quantized) activations sit on a ≤ 8-bit grid, the
-/// bit-exact dequantizing path otherwise (see `tensor::matmul_transb_q`).
-fn linear(w: &Weights, name: &str, x: &Mat, a_levels: f32) -> Mat {
-    match w.tensor(name) {
-        Tensor::F32(m) => matmul_transb(x, m),
-        Tensor::Packed(q) => matmul_transb_q(x, q, a_levels),
+/// weights stream their codes — the tiled i8×i8 → i32 panel GEMM when
+/// the caller holds the activation's integer codes (`qx`, computed once
+/// per layer boundary by [`quantize_act`]), the bit-exact dequantizing
+/// path otherwise (fp/wide activation grids, grouped weight scales).
+fn linear(w: &Weights, name: &str, x: &Mat, qx: Option<&QAct>) -> Mat {
+    match (w.tensor(name), qx) {
+        (Tensor::F32(m), _) => matmul_transb(x, m),
+        (Tensor::Packed(q), Some(qa)) => matmul_transb_qact(x, qa, q),
+        (Tensor::Packed(q), None) => matmul_transb_deq(x, q),
     }
 }
 
@@ -208,11 +177,13 @@ pub fn block_step(
     let h = rmsnorm(x, cfg.norm_eps);
     hook.on_x_site(2 * l, &h);
     let mut hq = h;
-    fake_quant_rows(&mut hq, opt.a_levels);
+    // One activation quantization at the boundary; wq/wk/wv share the
+    // codes instead of re-deriving them per linear.
+    let qh = quantize_act(&mut hq, opt.a_levels);
     hook.on_linear_input(&name("wq"), &hq);
-    let q_all = linear(w, &name("wq"), &hq, opt.a_levels);
-    let k_all = linear(w, &name("wk"), &hq, opt.a_levels);
-    let v_all = linear(w, &name("wv"), &hq, opt.a_levels);
+    let q_all = linear(w, &name("wq"), &hq, qh.as_ref());
+    let k_all = linear(w, &name("wk"), &hq, qh.as_ref());
+    let v_all = linear(w, &name("wv"), &hq, qh.as_ref());
     hook.on_v_site(l, &v_all);
 
     // New positions' K/V rows into the cache; KV quantization happens at
@@ -273,9 +244,9 @@ pub fn block_step(
             }
         }
     }
-    fake_quant_rows(&mut attn_out, opt.a_levels);
+    let qo = quantize_act(&mut attn_out, opt.a_levels);
     hook.on_linear_input(&name("wo"), &attn_out);
-    let proj = linear(w, &name("wo"), &attn_out, opt.a_levels);
+    let proj = linear(w, &name("wo"), &attn_out, qo.as_ref());
     x.add_assign(&proj);
 
     // ---- ffn ----
@@ -291,9 +262,9 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
     let h2 = rmsnorm(x, cfg.norm_eps);
     hook.on_x_site(2 * l + 1, &h2);
     let mut h2q = h2;
-    fake_quant_rows(&mut h2q, opt.a_levels);
+    let qh2 = quantize_act(&mut h2q, opt.a_levels);
     if cfg.is_moe() {
-        let gate_logits = linear(w, &name("router"), &h2q, opt.a_levels); // (T, E)
+        let gate_logits = linear(w, &name("router"), &h2q, qh2.as_ref()); // (T, E)
         let mut ffn = Mat::zeros(t, d);
         for i in 0..t {
             // top-k experts by logit (jax lax.top_k tie-break: lower
@@ -316,18 +287,21 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
             let mx = logits[top[0]];
             let exps: Vec<f32> = top.iter().map(|&e| (logits[e] - mx).exp()).collect();
             let denom: f32 = exps.iter().sum();
+            // The token's codes come from the whole-matrix quantization —
+            // the grid is per-row, so slicing commutes with quantizing.
+            let qrow = qh2.as_ref().map(|qa| qa.rows_slice(i, i + 1));
             for (rank, &e) in top.iter().enumerate() {
                 let gate = exps[rank] / denom;
                 let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
                 let row = h2q.rows_slice(i, i + 1);
-                let g = linear(w, &ename("wg"), &row, opt.a_levels);
-                let u = linear(w, &ename("wu"), &row, opt.a_levels);
+                let g = linear(w, &ename("wg"), &row, qrow.as_ref());
+                let u = linear(w, &ename("wu"), &row, qrow.as_ref());
                 let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
                 if opt.use_had {
                     hadamard_rows(&mut a);
                 }
-                fake_quant_rows(&mut a, opt.a_levels);
-                let y = linear(w, &ename("wd"), &a, opt.a_levels);
+                let qa = quantize_act(&mut a, opt.a_levels);
+                let y = linear(w, &ename("wd"), &a, qa.as_ref());
                 for j in 0..d {
                     *ffn.at_mut(i, j) += gate * y.at(0, j);
                 }
@@ -336,15 +310,15 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
         x.add_assign(&ffn);
     } else {
         hook.on_linear_input(&name("wg"), &h2q);
-        let g = linear(w, &name("wg"), &h2q, opt.a_levels);
-        let u = linear(w, &name("wu"), &h2q, opt.a_levels);
+        let g = linear(w, &name("wg"), &h2q, qh2.as_ref());
+        let u = linear(w, &name("wu"), &h2q, qh2.as_ref());
         let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
         if opt.use_had {
             hadamard_rows(&mut a); // R4 (wd pre-fused with H)
         }
-        fake_quant_rows(&mut a, opt.a_levels);
+        let qa = quantize_act(&mut a, opt.a_levels);
         hook.on_linear_input(&name("wd"), &a);
-        let y = linear(w, &name("wd"), &a, opt.a_levels);
+        let y = linear(w, &name("wd"), &a, qa.as_ref());
         x.add_assign(&y);
     }
 }

@@ -17,7 +17,7 @@ pub use artifact_io::{
 };
 pub use config::{BitSetting, ModelConfig};
 pub use forward::{
-    fake_quant_row, fake_quant_rows, forward_batch, forward_one, nll_from_logits, CaptureHook,
-    FwdOptions, NoCapture,
+    fake_quant_row, fake_quant_rows, forward_batch, forward_one, nll_from_logits, quantize_act,
+    CaptureHook, FwdOptions, NoCapture,
 };
 pub use weights::{Tensor, Weights};

@@ -91,7 +91,9 @@ fn gptq_propagate(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
 /// on the propagated working matrix (bits ∈ [2, 8]).
 pub fn gptq_quantize_layer_qmat(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> QMat {
     let (working, scales) = gptq_propagate(w, hessian, cfg);
-    QMat::quantize_with_scales(&working, QuantSpec::new(cfg.bits), scales)
+    let q = QMat::quantize_with_scales(&working, QuantSpec::new(cfg.bits), scales);
+    q.prepack();
+    q
 }
 
 /// Quantize one weight matrix ([out, in]) given the layer's input Hessian

@@ -49,8 +49,12 @@ pub(crate) fn wide_qmax(bits: u8) -> f32 {
 // ---------------------------------------------------------------------------
 
 /// Per-output-channel symmetric RTN into packed codes (bits ∈ [2, 8]).
+/// The result is panel-packed for the tiled GEMM so the pack cost is
+/// paid here, at quantization time, not on the first forward.
 pub fn rtn_quantize_qmat(w: &Mat, bits: u8) -> QMat {
-    QMat::quantize_rtn(w, QuantSpec::new(bits))
+    let q = QMat::quantize_rtn(w, QuantSpec::new(bits));
+    q.prepack();
+    q
 }
 
 /// Per-output-channel symmetric RTN fake quantization of a weight matrix
@@ -164,7 +168,9 @@ fn quik_mask(act_absmax: &[f32], keep: usize) -> Vec<bool> {
 /// keep full precision in the QMat metadata, the rest quantize to `bits`.
 pub fn quik_quantize_qmat(w: &Mat, act_absmax: &[f32], keep: usize, bits: u8) -> QMat {
     assert_eq!(act_absmax.len(), w.cols);
-    QMat::quantize_protected(w, QuantSpec::new(bits), &quik_mask(act_absmax, keep))
+    let q = QMat::quantize_protected(w, QuantSpec::new(bits), &quik_mask(act_absmax, keep));
+    q.prepack();
+    q
 }
 
 /// QUIK-like mixed precision: protect the `keep` highest-magnitude input

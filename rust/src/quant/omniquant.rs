@@ -52,7 +52,9 @@ fn clipped_scales(w: &Mat, qmax: f32) -> Vec<f32> {
 pub fn omniquant_quantize_qmat(w: &Mat, bits: u8) -> QMat {
     let spec = QuantSpec::new(bits);
     let scales = clipped_scales(w, spec.qmax());
-    QMat::quantize_with_scales(w, spec, scales)
+    let q = QMat::quantize_with_scales(w, spec, scales);
+    q.prepack();
+    q
 }
 
 /// Per-output-channel clipped RTN with MSE-optimal clip ratio.

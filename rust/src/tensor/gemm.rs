@@ -1,0 +1,344 @@
+//! Cache-blocked, register-tiled integer GEMM over packed weights and
+//! quantized activations — the kernel that turns "8× smaller" into
+//! "measurably faster".
+//!
+//! GotoBLAS-style structure, specialized to `y = x · Wᵀ` with u8
+//! activation codes and i8/i4 weight codes:
+//!
+//! * **Panels** — weight rows are repacked once per [`super::QMat`]
+//!   (cached on the matrix, see `QMat::prepack`) into `NR`-row panels
+//!   laid out k-major (`panel[kk * NR + jr]`), so the micro-kernel
+//!   streams one contiguous buffer with unit stride. ≤ 4-bit codes stay
+//!   nibble-packed in the panel (two k positions per byte) and are
+//!   sign-extended in registers, halving panel memory traffic. Per-row
+//!   code sums (`Σ_k qw[j][k]`) are precomputed alongside — the
+//!   asymmetric-activation offset term needs them on every call.
+//! * **Blocking** — `MC`-row activation blocks × `KC`-deep k blocks are
+//!   accumulated into an on-stack `MC×NR` i32 tile before the float
+//!   epilogue runs, keeping the working set in L1/L2.
+//! * **Register tiling** — the micro-kernel advances `MR = 4` activation
+//!   rows at once against one `NR = 8`-wide panel row, reusing each
+//!   loaded weight vector four times.
+//! * **Parallelism** — panels (disjoint output column ranges) are
+//!   distributed over [`crate::util::threadpool::par_ranges`], the same
+//!   sanctioned parallel-for every other tensor kernel uses; thread
+//!   count changes never change results (i32 accumulation is exact).
+//!
+//! **Equivalence contract**: i32 accumulation is associative, so any
+//! blocking order produces bit-identical sums; the float epilogue is the
+//! verbatim expression of the historical scalar kernel (retained as
+//! `qmat::matmul_transb_q_ref`, the oracle of `rust/tests/gemm.rs`).
+//! The dequantizing path `matmul_transb_deq` remains the bit-exact f32
+//! oracle and the fallback for grouped scales / wide activation grids.
+
+use super::matmul::{resolve_threads, SendPtr};
+use super::qact::QAct;
+use super::qmat::{sign_extend_nibble, QMat};
+use super::Mat;
+use crate::util::threadpool::par_ranges;
+
+/// Weight rows per panel (output-column tile width).
+pub(crate) const NR: usize = 8;
+/// Activation rows per register tile.
+pub(crate) const MR: usize = 4;
+/// Activation rows per cache block.
+pub(crate) const MC: usize = 64;
+/// Inner-dimension depth per cache block (even, so nibble-packed panels
+/// split on byte boundaries).
+pub(crate) const KC: usize = 256;
+
+/// Panel-packed weight codes cached on a [`QMat`] (derived data — never
+/// serialized, excluded from `nbytes`/`PartialEq`). Rows are grouped in
+/// `NR`-row panels stored k-major; the last panel zero-pads missing rows
+/// so the micro-kernel never branches on ragged edges.
+#[derive(Clone, Debug)]
+pub(crate) struct Panels {
+    k: usize,
+    n: usize,
+    data: PanelData,
+    /// Per weight row: `Σ_k qw[j][k]` (the asymmetric-offset term).
+    colsums: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+enum PanelData {
+    /// Per panel: `k × NR` codes, `data[kk * NR + jr]`.
+    I8(Vec<i8>),
+    /// Per panel: `ceil(k/2) × NR` bytes; byte `g` holds k = 2g in the
+    /// low nibble and k = 2g+1 in the high nibble (zero-padded at odd k).
+    I4(Vec<u8>),
+}
+
+impl Panels {
+    /// Repack `q`'s codes into the panel layout (one pass over the
+    /// stored rows; zero cost thereafter — `QMat` caches the result).
+    pub(crate) fn build(q: &QMat) -> Panels {
+        let (n, k) = q.shape();
+        let n_panels = n.div_ceil(NR);
+        let mut row = vec![0i8; k];
+        let mut colsums = vec![0i32; n];
+        let data = if q.spec().packs_nibbles() {
+            let kg = k.div_ceil(2);
+            let mut d = vec![0u8; n_panels * kg * NR];
+            for (j, sum) in colsums.iter_mut().enumerate() {
+                q.codes_row_into(j, &mut row);
+                *sum = row.iter().map(|&c| c as i32).sum();
+                let base = (j / NR) * kg * NR + (j % NR);
+                for (g, pair) in row.chunks(2).enumerate() {
+                    let lo = pair[0] as u8 & 0x0F;
+                    let hi = if pair.len() == 2 { (pair[1] as u8 & 0x0F) << 4 } else { 0 };
+                    d[base + g * NR] = lo | hi;
+                }
+            }
+            PanelData::I4(d)
+        } else {
+            let mut d = vec![0i8; n_panels * k * NR];
+            for (j, sum) in colsums.iter_mut().enumerate() {
+                q.codes_row_into(j, &mut row);
+                *sum = row.iter().map(|&c| c as i32).sum();
+                let base = (j / NR) * k * NR + (j % NR);
+                for (kk, &c) in row.iter().enumerate() {
+                    d[base + kk * NR] = c;
+                }
+            }
+            PanelData::I8(d)
+        };
+        Panels { k, n, data, colsums }
+    }
+
+    /// Cache footprint in bytes (reported via `QMat::panel_nbytes`).
+    pub(crate) fn nbytes(&self) -> u64 {
+        let d = match &self.data {
+            PanelData::I8(v) => v.len(),
+            PanelData::I4(v) => v.len(),
+        };
+        (d + 4 * self.colsums.len()) as u64
+    }
+}
+
+/// `y = x · dequantize(Q)ᵀ` through the tiled integer GEMM, with the
+/// activation codes supplied by the caller (computed **once** per layer
+/// boundary by [`super::quantize_act`], not once per linear). `x` must
+/// be the fake-quantized f32 matrix `qa` was derived from — the epilogue
+/// reads it for QUIK protected columns. Grouped-scale weights take the
+/// bit-exact dequantizing fallback.
+pub fn matmul_transb_qact(x: &Mat, qa: &QAct, q: &QMat) -> Mat {
+    matmul_transb_qact_with(x, qa, q, 0)
+}
+
+/// [`matmul_transb_qact`] with an explicit thread count (0 = the same
+/// flops-based default the f32 kernels use; benches pass `DQ_WORKERS`).
+pub fn matmul_transb_qact_with(x: &Mat, qa: &QAct, q: &QMat, threads: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_qact inner-dim mismatch");
+    assert_eq!((qa.rows(), qa.cols()), x.shape(), "QAct/x shape mismatch");
+    if q.is_grouped() {
+        return super::qmat::matmul_transb_deq_with(x, q, threads);
+    }
+    gemm_qact(x, qa, q, threads)
+}
+
+/// The blocked kernel proper (callers have already routed grouped scales
+/// to the deq path).
+pub(crate) fn gemm_qact(x: &Mat, qa: &QAct, q: &QMat, threads: usize) -> Mat {
+    let (m, k, n) = (x.rows, x.cols, q.rows());
+    let mut y = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return y;
+    }
+    let panels = q.panels().expect("panel GEMM requires per-row scales");
+    let n_panels = n.div_ceil(NR);
+    let threads = resolve_threads(threads, 2 * m * k * n);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    par_ranges(n_panels, threads, |plo, phi| {
+        let y_ptr = &y_ptr;
+        for p in plo..phi {
+            panel_block(x, qa, q, panels, p, y_ptr);
+        }
+    });
+    y
+}
+
+/// One panel (`NR` output columns) against all activation rows: MC×KC
+/// cache blocks accumulate into an on-stack i32 tile, then the float
+/// epilogue applies scales, the asymmetric offset and any protected
+/// columns — the exact per-output expression of the scalar kernel.
+fn panel_block(x: &Mat, qa: &QAct, q: &QMat, panels: &Panels, p: usize, y_ptr: &SendPtr) {
+    let (m, k, n) = (x.rows, panels.k, panels.n);
+    let j0 = p * NR;
+    let jn = NR.min(n - j0);
+    let kg = k.div_ceil(2);
+    // Per-panel scale/protection metadata, hoisted out of the row loops.
+    let sws: [f32; NR] = std::array::from_fn(|jr| if jr < jn { q.row_scale(j0 + jr) } else { 0.0 });
+    let prots: [Option<(&[u32], &[f32])>; NR] =
+        std::array::from_fn(|jr| if jr < jn { q.protected_row(j0 + jr) } else { None });
+    for i0 in (0..m).step_by(MC) {
+        let mb = MC.min(m - i0);
+        let mut acc = [[0i32; NR]; MC];
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            match &panels.data {
+                PanelData::I8(d) => {
+                    let base = p * k * NR;
+                    let pb = &d[base + k0 * NR..base + (k0 + kc) * NR];
+                    accumulate_i8(qa, i0, mb, k0, kc, pb, &mut acc);
+                }
+                PanelData::I4(d) => {
+                    // KC is even, so k blocks split on nibble-pair bytes.
+                    let base = p * kg * NR;
+                    let g0 = k0 / 2;
+                    let gc = (k0 + kc).div_ceil(2) - g0;
+                    let pb = &d[base + g0 * NR..base + (g0 + gc) * NR];
+                    accumulate_i4(qa, i0, mb, k0, kc, pb, &mut acc);
+                }
+            }
+        }
+        for (ii, accr) in acc.iter().enumerate().take(mb) {
+            let i = i0 + ii;
+            let (mn, sx) = qa.grid(i);
+            let xrow = x.row(i);
+            let colsums = &panels.colsums[j0..j0 + jn];
+            for (jr, &colsum) in colsums.iter().enumerate() {
+                let mut v = sws[jr] * (sx * accr[jr] as f32 + mn * colsum as f32);
+                if let Some((idx, vals)) = prots[jr] {
+                    for (&c, &pv) in idx.iter().zip(vals) {
+                        v += xrow[c as usize] * pv;
+                    }
+                }
+                // SAFETY: this thread owns panels [plo, phi) from
+                // par_ranges, i.e. the disjoint output columns
+                // [plo*NR, phi*NR) — no two threads write the same element.
+                unsafe { *y_ptr.0.add(i * n + j0 + jr) = v };
+            }
+        }
+    }
+}
+
+/// i8 micro-kernel: advance `MR` activation rows at once down a `KC`
+/// slab of one panel, accumulating into the i32 tile.
+fn accumulate_i8(
+    qa: &QAct,
+    i0: usize,
+    mb: usize,
+    k0: usize,
+    kc: usize,
+    pb: &[i8],
+    acc: &mut [[i32; NR]; MC],
+) {
+    let mut ii = 0;
+    while ii < mb {
+        let mrb = MR.min(mb - ii);
+        // The slice pattern selects the full MR-row register tile; ragged
+        // tails (mrb < MR) fall through to the one-row loop.
+        if let [t0, t1, t2, t3] = &mut acc[ii..ii + mrb] {
+            let a0 = &qa.code_row(i0 + ii)[k0..k0 + kc];
+            let a1 = &qa.code_row(i0 + ii + 1)[k0..k0 + kc];
+            let a2 = &qa.code_row(i0 + ii + 2)[k0..k0 + kc];
+            let a3 = &qa.code_row(i0 + ii + 3)[k0..k0 + kc];
+            for (kk, b) in pb.chunks_exact(NR).enumerate() {
+                let (v0, v1, v2, v3) =
+                    (a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32);
+                for (jr, &w) in b.iter().enumerate() {
+                    let w = w as i32;
+                    t0[jr] += v0 * w;
+                    t1[jr] += v1 * w;
+                    t2[jr] += v2 * w;
+                    t3[jr] += v3 * w;
+                }
+            }
+        } else {
+            for (t, ir) in acc[ii..ii + mrb].iter_mut().zip(0..) {
+                let a = &qa.code_row(i0 + ii + ir)[k0..k0 + kc];
+                for (b, &av) in pb.chunks_exact(NR).zip(a) {
+                    let v = av as i32;
+                    for (t_el, &w) in t.iter_mut().zip(b) {
+                        *t_el += v * w as i32;
+                    }
+                }
+            }
+        }
+        ii += mrb;
+    }
+}
+
+/// i4 micro-kernel: weights stay nibble-packed in the panel; each byte
+/// supplies two k positions, sign-extended in registers. An odd `kc`
+/// tail (only possible at odd `k`) consumes the low nibble alone — the
+/// padded high nibble is zero and its activation index doesn't exist.
+fn accumulate_i4(
+    qa: &QAct,
+    i0: usize,
+    mb: usize,
+    k0: usize,
+    kc: usize,
+    pb: &[u8],
+    acc: &mut [[i32; NR]; MC],
+) {
+    let pairs = kc / 2;
+    let mut ii = 0;
+    while ii < mb {
+        let mrb = MR.min(mb - ii);
+        if let [t0, t1, t2, t3] = &mut acc[ii..ii + mrb] {
+            let a0 = &qa.code_row(i0 + ii)[k0..k0 + kc];
+            let a1 = &qa.code_row(i0 + ii + 1)[k0..k0 + kc];
+            let a2 = &qa.code_row(i0 + ii + 2)[k0..k0 + kc];
+            let a3 = &qa.code_row(i0 + ii + 3)[k0..k0 + kc];
+            for (g, b) in pb.chunks_exact(NR).enumerate().take(pairs) {
+                let (l0, l1, l2, l3) = (
+                    a0[2 * g] as i32,
+                    a1[2 * g] as i32,
+                    a2[2 * g] as i32,
+                    a3[2 * g] as i32,
+                );
+                let (h0, h1, h2, h3) = (
+                    a0[2 * g + 1] as i32,
+                    a1[2 * g + 1] as i32,
+                    a2[2 * g + 1] as i32,
+                    a3[2 * g + 1] as i32,
+                );
+                for (jr, &byte) in b.iter().enumerate() {
+                    let wlo = sign_extend_nibble(byte) as i32;
+                    let whi = sign_extend_nibble(byte >> 4) as i32;
+                    t0[jr] += l0 * wlo + h0 * whi;
+                    t1[jr] += l1 * wlo + h1 * whi;
+                    t2[jr] += l2 * wlo + h2 * whi;
+                    t3[jr] += l3 * wlo + h3 * whi;
+                }
+            }
+            if kc % 2 == 1 {
+                let b = &pb[pairs * NR..(pairs + 1) * NR];
+                let (l0, l1, l2, l3) = (
+                    a0[kc - 1] as i32,
+                    a1[kc - 1] as i32,
+                    a2[kc - 1] as i32,
+                    a3[kc - 1] as i32,
+                );
+                for (jr, &byte) in b.iter().enumerate() {
+                    let wlo = sign_extend_nibble(byte) as i32;
+                    t0[jr] += l0 * wlo;
+                    t1[jr] += l1 * wlo;
+                    t2[jr] += l2 * wlo;
+                    t3[jr] += l3 * wlo;
+                }
+            }
+        } else {
+            for (t, ir) in acc[ii..ii + mrb].iter_mut().zip(0..) {
+                let a = &qa.code_row(i0 + ii + ir)[k0..k0 + kc];
+                for (g, b) in pb.chunks_exact(NR).enumerate().take(pairs) {
+                    let (lo, hi) = (a[2 * g] as i32, a[2 * g + 1] as i32);
+                    for (t_el, &byte) in t.iter_mut().zip(b) {
+                        *t_el += lo * sign_extend_nibble(byte) as i32
+                            + hi * sign_extend_nibble(byte >> 4) as i32;
+                    }
+                }
+                if kc % 2 == 1 {
+                    let b = &pb[pairs * NR..(pairs + 1) * NR];
+                    let lo = a[kc - 1] as i32;
+                    for (t_el, &byte) in t.iter_mut().zip(b) {
+                        *t_el += lo * sign_extend_nibble(byte) as i32;
+                    }
+                }
+            }
+        }
+        ii += mrb;
+    }
+}

@@ -3,15 +3,22 @@
 //! Llama-style models natively, compute GPTQ Hessians, and verify the
 //! PJRT-executed artifacts against a pure-rust oracle. `qmat` adds the
 //! packed quantized-weight representation (integer codes + scales) and
-//! its streaming/integer matmul kernels.
+//! its streaming/integer matmul kernels; `qact` is the quantized-
+//! activation side (per-row asymmetric u8 codes, computed once per layer
+//! boundary); `gemm` is the cache-blocked, register-tiled i8/i4 GEMM
+//! that consumes both.
 
+mod gemm;
 mod matmul;
+pub mod qact;
 pub mod qmat;
 
+pub use gemm::{matmul_transb_qact, matmul_transb_qact_with};
 pub use matmul::{matmul, matmul_into, matmul_transb, matmul_transb_with};
+pub use qact::{fake_quant_row, fake_quant_rows, quantize_act, QAct};
 pub use qmat::{
-    matmul_transb_deq, matmul_transb_deq_with, matmul_transb_q, matmul_transb_q_with,
-    quantize_into, QMat, QuantSpec,
+    matmul_transb_deq, matmul_transb_deq_with, matmul_transb_q, matmul_transb_q_ref,
+    matmul_transb_q_with, quantize_into, QMat, QuantSpec,
 };
 
 /// Row-major 2-D f32 matrix.

@@ -1,0 +1,227 @@
+//! Quantized activations: the per-row asymmetric fake-quant grid plus
+//! [`QAct`], the integer-code representation of a fake-quantized
+//! activation matrix.
+//!
+//! Historically the activation grid lived in `model::forward`
+//! (`fq_row_grid` / `fake_quant_row`) and the integer matmul re-derived
+//! every row's codes on **every** linear. [`quantize_act`] factors that
+//! pipeline: fake-quantize once at the layer boundary, recover the codes
+//! once, and hand the same [`QAct`] to every linear that consumes the
+//! activation (wq/wk/wv share one, wg/wu share one). The numeric
+//! semantics are **bit-identical** to the historical two-step
+//! (fake-quant then per-linear recovery): [`quantize_act`] literally runs
+//! [`fake_quant_row`] and then [`QAct::from_quantized`], the verbatim
+//! recovery loop the old `matmul_transb_q` carried inline.
+//!
+//! Grid contract (shared with the KV-cache code storage in `model::kv`):
+//! per-row asymmetric, `scale = (mx - mn) / (levels - 1)`, disabled at
+//! `levels >= 32768` (the fp16 settings), constant rows (`scale <= 0`)
+//! left untouched with the offset carrying the value.
+
+use super::Mat;
+
+/// Per-row asymmetric fake-quant grid `(mn, scale)` at `levels`, or
+/// `None` when quantization is disabled (`levels >= 32768`) or the row
+/// is constant (zero range, left untouched).
+pub fn act_grid(row: &[f32], levels: f32) -> Option<(f32, f32)> {
+    if levels >= 32768.0 {
+        return None;
+    }
+    let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+    for &v in row {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let scale = (mx - mn) / (levels - 1.0).max(1.0);
+    if scale <= 0.0 {
+        None
+    } else {
+        Some((mn, scale))
+    }
+}
+
+/// Fake-quantize one row in place on its [`act_grid`] grid.
+pub fn fake_quant_row(row: &mut [f32], levels: f32) {
+    if let Some((mn, scale)) = act_grid(row, levels) {
+        for v in row.iter_mut() {
+            *v = ((*v - mn) / scale).round() * scale + mn;
+        }
+    }
+}
+
+/// Per-token asymmetric fake quantization over rows (the activation
+/// quantizer). `levels >= 32768` disables — mirrors `model._fq_act`.
+pub fn fake_quant_rows(x: &mut Mat, levels: f32) {
+    for i in 0..x.rows {
+        fake_quant_row(x.row_mut(i), levels);
+    }
+}
+
+/// A fake-quantized activation matrix in integer form: per-row u8 codes
+/// plus the `(mn, scale)` grid each row sits on. `scale == 0` marks a
+/// constant (untouched) row whose value rides entirely in `mn` — its
+/// codes are all zero, exactly like the historical in-kernel recovery.
+///
+/// Decode semantics: `x[i][k] = codes[i][k] as f32 * scale[i] + mn[i]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QAct {
+    rows: usize,
+    cols: usize,
+    codes: Vec<u8>,
+    mns: Vec<f32>,
+    scales: Vec<f32>,
+}
+
+impl QAct {
+    /// Recover codes from rows **already on** the `levels` fake-quant
+    /// grid — the verbatim recovery loop of the historical integer
+    /// matmul: the grid is re-derived per row and round-to-nearest
+    /// against it is exact. `levels` must be ≤ 256 so codes fit u8.
+    pub fn from_quantized(x: &Mat, levels: f32) -> QAct {
+        assert!(levels <= 256.0, "QAct codes are u8: levels {levels} > 256");
+        let (m, k) = (x.rows, x.cols);
+        let mut codes = vec![0u8; m * k];
+        let mut mns = vec![0f32; m];
+        let mut scales = vec![0f32; m];
+        let hi = levels - 1.0;
+        for i in 0..m {
+            let row = x.row(i);
+            let (mut mn, mut mx) = (f32::MAX, f32::MIN);
+            for &v in row {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let scale = (mx - mn) / (levels - 1.0).max(1.0);
+            mns[i] = mn;
+            if scale <= 0.0 {
+                continue; // constant row: codes 0, offset carries the value
+            }
+            scales[i] = scale;
+            for (o, &v) in codes[i * k..(i + 1) * k].iter_mut().zip(row) {
+                *o = ((v - mn) / scale).round().clamp(0.0, hi) as u8;
+            }
+        }
+        QAct { rows: m, cols: k, codes, mns, scales }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i`'s codes.
+    #[inline]
+    pub fn code_row(&self, i: usize) -> &[u8] {
+        &self.codes[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i`'s grid `(mn, scale)`; `scale == 0` for constant rows.
+    #[inline]
+    pub fn grid(&self, i: usize) -> (f32, f32) {
+        (self.mns[i], self.scales[i])
+    }
+
+    /// Take a contiguous row slice [lo, hi) as a new `QAct` (the MoE
+    /// per-token expert dispatch slices single rows).
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> QAct {
+        assert!(lo <= hi && hi <= self.rows);
+        QAct {
+            rows: hi - lo,
+            cols: self.cols,
+            codes: self.codes[lo * self.cols..hi * self.cols].to_vec(),
+            mns: self.mns[lo..hi].to_vec(),
+            scales: self.scales[lo..hi].to_vec(),
+        }
+    }
+
+    /// Decode into a fresh f32 matrix (tests / diagnostics; the hot path
+    /// never materializes this).
+    pub fn decode(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (mn, scale) = self.grid(i);
+            for (o, &c) in out.row_mut(i).iter_mut().zip(self.code_row(i)) {
+                *o = c as f32 * scale + mn;
+            }
+        }
+        out
+    }
+
+    /// Memory footprint in bytes.
+    pub fn nbytes(&self) -> u64 {
+        (self.codes.len() + 4 * self.mns.len() + 4 * self.scales.len()) as u64
+    }
+}
+
+/// The layer-boundary activation quantizer: fake-quantize `x` in place
+/// (bit-identical to [`fake_quant_rows`]) and, when the grid is integer
+/// (`levels <= 256`, i.e. the ≤ 8-bit activation settings), return the
+/// recovered codes so downstream linears skip the per-call re-derivation.
+/// Returns `None` — with `x` still correctly fake-quantized or left
+/// untouched per the `levels >= 32768` disable — for the wide/fp grids.
+pub fn quantize_act(x: &mut Mat, levels: f32) -> Option<QAct> {
+    fake_quant_rows(x, levels);
+    if levels > 256.0 {
+        return None;
+    }
+    Some(QAct::from_quantized(x, levels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn quantize_act_writeback_is_fake_quant_rows_bitwise() {
+        for levels in [4.0f32, 16.0, 256.0, 1024.0, 65536.0] {
+            let mut a = rand_mat(7, 5, 33);
+            let mut b = a.clone();
+            let qa = quantize_act(&mut a, levels);
+            fake_quant_rows(&mut b, levels);
+            assert_eq!(a, b, "levels {levels}");
+            assert_eq!(qa.is_some(), levels <= 256.0);
+        }
+    }
+
+    #[test]
+    fn codes_match_the_in_kernel_recovery_and_decode_roundtrips() {
+        let mut x = rand_mat(3, 4, 17);
+        let qa = quantize_act(&mut x, 16.0).unwrap();
+        // Recovery of the already-quantized mat reproduces the same codes
+        // and grids exactly.
+        assert_eq!(QAct::from_quantized(&x, 16.0), qa);
+        // Decode lands within one re-derived-grid rounding of x.
+        let d = qa.decode().max_abs_diff(&x);
+        assert!(d <= 1e-5 * x.max_abs().max(1e-12), "decode drift {d}");
+    }
+
+    #[test]
+    fn constant_rows_ride_in_the_offset() {
+        let mut x = Mat::from_vec(2, 3, vec![2.5, 2.5, 2.5, 0.0, 1.0, 2.0]);
+        let qa = quantize_act(&mut x, 4.0).unwrap();
+        assert_eq!(qa.grid(0), (2.5, 0.0));
+        assert_eq!(qa.code_row(0), &[0, 0, 0]);
+        assert_eq!(x.row(0), &[2.5, 2.5, 2.5], "constant row left untouched");
+        assert_eq!(qa.decode().row(0), &[2.5, 2.5, 2.5]);
+        let (mn, scale) = qa.grid(1);
+        assert!(scale > 0.0 && mn == 0.0);
+    }
+
+    #[test]
+    fn rows_slice_matches_whole_mat_quantization() {
+        let mut x = rand_mat(11, 6, 9);
+        let qa = quantize_act(&mut x, 16.0).unwrap();
+        let sliced = qa.rows_slice(2, 5);
+        let direct = QAct::from_quantized(&x.rows_slice(2, 5), 16.0);
+        assert_eq!(sliced, direct);
+    }
+}

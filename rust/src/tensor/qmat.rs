@@ -20,11 +20,17 @@
 //! dequantized matrix (same dot kernel, same operands). The integer path
 //! [`matmul_transb_q`] trades that bit-exactness for i8×i8 → i32
 //! accumulation with scales applied once per output; it agrees with the
-//! dequantized oracle to f32 reassociation error (~1e-6 relative).
+//! dequantized oracle to f32 reassociation error (~1e-6 relative) and
+//! runs through the cache-blocked panel GEMM in `tensor::gemm` — which
+//! is in turn bit-identical to the scalar reference
+//! [`matmul_transb_q_ref`] (i32 sums are associative; the float epilogue
+//! is the same expression).
 
 use super::matmul::{dot_unrolled, resolve_threads, SendPtr};
+use super::qact::QAct;
 use super::Mat;
 use crate::util::threadpool::par_ranges;
+use std::sync::OnceLock;
 
 /// Symmetric quantization grid: bit width + derived constants. The one
 /// scale/round/clamp definition every weight quantizer shares.
@@ -103,7 +109,7 @@ enum Codes {
 }
 
 #[inline]
-fn sign_extend_nibble(n: u8) -> i8 {
+pub(crate) fn sign_extend_nibble(n: u8) -> i8 {
     (((n & 0x0F) << 4) as i8) >> 4
 }
 
@@ -207,13 +213,35 @@ impl Scheme {
 /// A packed quantized matrix: integer codes + scale metadata standing in
 /// for a dense `[rows, cols]` f32 weight (applied as `x · Wᵀ`, exactly
 /// like [`Mat`] weights).
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Alongside the stored representation, a `QMat` lazily caches the
+/// panel-packed code layout the tiled integer GEMM streams
+/// (`tensor::gemm`). The cache is **derived data**: it is rebuilt on
+/// demand, never serialized, excluded from [`QMat::nbytes`] (see
+/// [`QMat::panel_nbytes`]) and ignored by `PartialEq`. Quantizers call
+/// [`QMat::prepack`] so the pack cost is paid at quantization time, not
+/// on the first forward.
+#[derive(Clone, Debug)]
 pub struct QMat {
     rows: usize,
     cols: usize,
     spec: QuantSpec,
     codes: Codes,
     scheme: Scheme,
+    panels: OnceLock<super::gemm::Panels>,
+}
+
+impl PartialEq for QMat {
+    /// Equality over the stored representation only — the derived panel
+    /// cache (built or not) never affects comparison, so a prepacked
+    /// matrix compares equal to its deserialized blob roundtrip.
+    fn eq(&self, other: &QMat) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.spec == other.spec
+            && self.codes == other.codes
+            && self.scheme == other.scheme
+    }
 }
 
 impl QMat {
@@ -242,6 +270,7 @@ impl QMat {
             spec,
             codes: Codes::pack(flat, w.rows, w.cols, spec),
             scheme: Scheme::PerRow { scales },
+            panels: OnceLock::new(),
         }
     }
 
@@ -283,6 +312,7 @@ impl QMat {
             spec,
             codes: Codes::pack(flat, w.rows, w.cols, spec),
             scheme: Scheme::Protected { scales, mask: mask.to_vec(), cols_idx, values },
+            panels: OnceLock::new(),
         }
     }
 
@@ -324,6 +354,7 @@ impl QMat {
             spec,
             codes: Codes::pack(flat, w.rows, w.cols, spec),
             scheme: Scheme::Grouped { rank, group, n_groups, scales, hi_codes, hi_len },
+            panels: OnceLock::new(),
         }
     }
 
@@ -372,8 +403,59 @@ impl QMat {
 
     /// Unpack row `i`'s bulk codes (protected columns read 0; grouped
     /// top-group columns read 0 — their codes live in the scheme).
-    fn codes_row_into(&self, i: usize, out: &mut [i8]) {
+    pub(crate) fn codes_row_into(&self, i: usize, out: &mut [i8]) {
         self.codes.row_into(i, self.cols, out);
+    }
+
+    /// Whether the scale scheme is grouped (Atom) — those take the
+    /// dequantizing matmul path instead of the panel GEMM.
+    pub(crate) fn is_grouped(&self) -> bool {
+        matches!(self.scheme, Scheme::Grouped { .. })
+    }
+
+    /// Row `j`'s symmetric scale (per-row and protected schemes only).
+    pub(crate) fn row_scale(&self, j: usize) -> f32 {
+        match &self.scheme {
+            Scheme::PerRow { scales } | Scheme::Protected { scales, .. } => scales[j],
+            Scheme::Grouped { .. } => unreachable!("grouped delegates to the deq path"),
+        }
+    }
+
+    /// Row `j`'s protected columns `(indices, full-precision values)`,
+    /// or `None` for schemes without protection.
+    pub(crate) fn protected_row(&self, j: usize) -> Option<(&[u32], &[f32])> {
+        match &self.scheme {
+            Scheme::Protected { cols_idx, values, .. } => {
+                let np = cols_idx.len();
+                Some((cols_idx.as_slice(), &values[j * np..(j + 1) * np]))
+            }
+            _ => None,
+        }
+    }
+
+    /// The cached panel-packed code layout for the tiled integer GEMM,
+    /// built on first use. `None` for grouped scales (no per-row scale
+    /// to fold into the panel epilogue — those run the deq path).
+    pub(crate) fn panels(&self) -> Option<&super::gemm::Panels> {
+        if self.is_grouped() {
+            return None;
+        }
+        Some(self.panels.get_or_init(|| super::gemm::Panels::build(self)))
+    }
+
+    /// Eagerly build the panel cache. Quantizers call this at pack time
+    /// so the repack cost lands in quantization, not on the first
+    /// forward; deserialized weights (`from_bytes`) pack lazily instead.
+    /// No-op for grouped scales.
+    pub fn prepack(&self) {
+        let _ = self.panels();
+    }
+
+    /// Bytes held by the derived panel cache — 0 until built. Reported
+    /// separately from [`QMat::nbytes`], which counts only the stored
+    /// representation (codes + scale metadata).
+    pub fn panel_nbytes(&self) -> u64 {
+        self.panels.get().map_or(0, |p| p.nbytes())
     }
 
     /// Decode row `i` into `out` — bit-identical to the historical
@@ -540,7 +622,7 @@ impl QMat {
             t => anyhow::bail!("unknown scale scheme tag {t}"),
         };
         anyhow::ensure!(c.at == buf.len(), "trailing bytes in packed blob");
-        Ok(QMat { rows, cols, spec, codes, scheme })
+        Ok(QMat { rows, cols, spec, codes, scheme, panels: OnceLock::new() })
     }
 
     /// Materialize the dense f32 matrix this QMat stands in for.
@@ -587,7 +669,8 @@ struct Cursor<'a> {
 
 impl Cursor<'_> {
     fn bytes(&mut self, n: usize) -> anyhow::Result<&[u8]> {
-        anyhow::ensure!(self.at + n <= self.buf.len(), "packed blob truncated");
+        let end = self.at.checked_add(n);
+        anyhow::ensure!(end.is_some_and(|e| e <= self.buf.len()), "packed blob truncated");
         let s = &self.buf[self.at..self.at + n];
         self.at += n;
         Ok(s)
@@ -608,15 +691,18 @@ impl Cursor<'_> {
     }
 
     fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        // Bound n against buf.len()/4 *before* computing n * 4 — a
+        // corrupt length near usize::MAX would wrap the multiplication
+        // and sneak past the bytes() check.
         let n = self.u64()? as usize;
-        anyhow::ensure!(n <= self.buf.len(), "f32 array length {n} exceeds blob");
+        anyhow::ensure!(n <= self.buf.len() / 4, "f32 array length {n} exceeds blob");
         let b = self.bytes(n * 4)?;
         Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
     fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
         let n = self.u64()? as usize;
-        anyhow::ensure!(n <= self.buf.len(), "u32 array length {n} exceeds blob");
+        anyhow::ensure!(n <= self.buf.len() / 4, "u32 array length {n} exceeds blob");
         let b = self.bytes(n * 4)?;
         Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
@@ -674,10 +760,34 @@ pub fn matmul_transb_q(x: &Mat, q: &QMat, a_levels: f32) -> Mat {
 }
 
 /// [`matmul_transb_q`] with an explicit thread count (0 = default).
+///
+/// The activation codes are recovered **once** for the whole call
+/// ([`QAct::from_quantized`] — x rows sit on the fake-quant grid, so
+/// round-to-nearest against the recomputed (mn, scale) is exact) and the
+/// product runs through the cache-blocked panel GEMM (`tensor::gemm`).
+/// i32 accumulation is associative, so the blocked sum is bit-identical
+/// to the historical scalar loop — retained below as
+/// [`matmul_transb_q_ref`], the oracle `rust/tests/gemm.rs` sweeps
+/// against.
 pub fn matmul_transb_q_with(x: &Mat, q: &QMat, a_levels: f32, threads: usize) -> Mat {
     assert_eq!(x.cols, q.cols, "matmul_transb_q inner-dim mismatch");
     if a_levels > 256.0 || matches!(q.scheme, Scheme::Grouped { .. }) {
         return matmul_transb_deq_with(x, q, threads);
+    }
+    let qa = QAct::from_quantized(x, a_levels);
+    super::gemm::gemm_qact(x, &qa, q, threads)
+}
+
+/// The pre-tiling scalar integer kernel, kept **verbatim** as the
+/// reference implementation: one dot loop per output, per-call code
+/// recovery, identical i32 accumulation semantics and float epilogue.
+/// `rust/tests/gemm.rs` asserts the blocked GEMM is bit-identical to
+/// this across ragged shapes, schemes and edge grids. Not a hot path —
+/// serial, no panel cache.
+pub fn matmul_transb_q_ref(x: &Mat, q: &QMat, a_levels: f32) -> Mat {
+    assert_eq!(x.cols, q.cols, "matmul_transb_q inner-dim mismatch");
+    if a_levels > 256.0 || matches!(q.scheme, Scheme::Grouped { .. }) {
+        return matmul_transb_deq_with(x, q, 1);
     }
     let (m, k, n) = (x.rows, x.cols, q.rows);
     // Recover the activation codes: x rows sit on the fake-quant grid, so
@@ -704,40 +814,34 @@ pub fn matmul_transb_q_with(x: &Mat, q: &QMat, a_levels: f32, threads: usize) ->
         }
     }
     let mut y = Mat::zeros(m, n);
-    let threads = resolve_threads(threads, 2 * m * k * n);
-    let y_ptr = SendPtr(y.data.as_mut_ptr());
-    par_ranges(n, threads, |jlo, jhi| {
-        let y_ptr = &y_ptr;
-        let mut wbuf = vec![0i8; k];
-        for j in jlo..jhi {
-            q.codes_row_into(j, &mut wbuf);
-            let colsum: i32 = wbuf.iter().map(|&c| c as i32).sum();
-            let (sw, prot) = match &q.scheme {
-                Scheme::PerRow { scales } => (scales[j], None),
-                Scheme::Protected { scales, cols_idx, values, .. } => {
-                    let np = cols_idx.len();
-                    (scales[j], Some((cols_idx, &values[j * np..(j + 1) * np])))
-                }
-                Scheme::Grouped { .. } => unreachable!("grouped delegates to the deq path"),
-            };
-            for i in 0..m {
-                let qrow = &qx[i * k..(i + 1) * k];
-                let mut acc: i32 = 0;
-                for (&a, &w) in qrow.iter().zip(wbuf.iter()) {
-                    acc += a as i32 * w as i32;
-                }
-                let mut v = sw * (sx[i] * acc as f32 + mns[i] * colsum as f32);
-                if let Some((idx, vals)) = prot {
-                    let xrow = x.row(i);
-                    for (&c, &pv) in idx.iter().zip(vals) {
-                        v += xrow[c as usize] * pv;
-                    }
-                }
-                // SAFETY: disjoint column range per thread (see above).
-                unsafe { *y_ptr.0.add(i * n + j) = v };
+    let mut wbuf = vec![0i8; k];
+    for j in 0..n {
+        q.codes_row_into(j, &mut wbuf);
+        let colsum: i32 = wbuf.iter().map(|&c| c as i32).sum();
+        let (sw, prot) = match &q.scheme {
+            Scheme::PerRow { scales } => (scales[j], None),
+            Scheme::Protected { scales, cols_idx, values, .. } => {
+                let np = cols_idx.len();
+                (scales[j], Some((cols_idx, &values[j * np..(j + 1) * np])))
             }
+            Scheme::Grouped { .. } => unreachable!("grouped delegates to the deq path"),
+        };
+        for i in 0..m {
+            let qrow = &qx[i * k..(i + 1) * k];
+            let mut acc: i32 = 0;
+            for (&a, &w) in qrow.iter().zip(wbuf.iter()) {
+                acc += a as i32 * w as i32;
+            }
+            let mut v = sw * (sx[i] * acc as f32 + mns[i] * colsum as f32);
+            if let Some((idx, vals)) = prot {
+                let xrow = x.row(i);
+                for (&c, &pv) in idx.iter().zip(vals) {
+                    v += xrow[c as usize] * pv;
+                }
+            }
+            *y.at_mut(i, j) = v;
         }
-    });
+    }
     y
 }
 
@@ -936,6 +1040,70 @@ mod tests {
         let mut short = blob;
         short[9] = 0xff; // code storage tag byte offset: 1 + 4 + 4 = 9
         assert!(QMat::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn scale_array_length_overflow_is_rejected_not_panicking() {
+        // Regression: Cursor::f32s/u32s bound the element count against
+        // buf.len()/4 *before* computing n * 4 — a corrupt length near
+        // usize::MAX would wrap the byte count and bypass the bounds
+        // check. Every hostile length must Err, never panic.
+        let q = QMat::quantize_rtn(&rand_mat(22, 6, 10), QuantSpec::new(4));
+        let blob = q.to_bytes();
+        // The per-row blob ends [scales-len u64][6 × f32 scales].
+        let len_at = blob.len() - 8 - 6 * 4;
+        for bad_len in [u64::MAX, u64::MAX / 4, u64::MAX / 4 + 1, blob.len() as u64] {
+            let mut b = blob.clone();
+            b[len_at..len_at + 8].copy_from_slice(&bad_len.to_le_bytes());
+            assert!(QMat::from_bytes(&b).is_err(), "length {bad_len:#x} must be rejected");
+        }
+    }
+
+    #[test]
+    fn tiled_gemm_is_bit_identical_to_scalar_reference() {
+        // Ragged everything: m crosses MC and the MR register tile, n
+        // leaves a partial NR panel, k crosses KC and is odd (the i4
+        // panels exercise the trailing-nibble half step).
+        let (m, k, n) = (70, 259, 19);
+        let mut x = rand_mat(31, m, k);
+        crate::model::fake_quant_rows(&mut x, 16.0);
+        let w = rand_mat(32, n, k);
+        let mut mask = vec![false; k];
+        mask[0] = true;
+        mask[258] = true;
+        for q in [
+            QMat::quantize_rtn(&w, QuantSpec::new(4)),
+            QMat::quantize_rtn(&w, QuantSpec::new(8)),
+            QMat::quantize_protected(&w, QuantSpec::new(4), &mask),
+        ] {
+            assert_eq!(
+                matmul_transb_q(&x, &q, 16.0).data,
+                matmul_transb_q_ref(&x, &q, 16.0).data,
+                "{} {}b",
+                q.scheme_label(),
+                q.spec().bits()
+            );
+        }
+    }
+
+    #[test]
+    fn panel_cache_is_derived_data_only() {
+        let w = rand_mat(33, 9, 33);
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        let nbytes = q.nbytes();
+        let blob = q.to_bytes();
+        assert_eq!(q.panel_nbytes(), 0, "no cache before first use");
+        q.prepack();
+        assert!(q.panel_nbytes() > 0);
+        assert_eq!(q.nbytes(), nbytes, "panels don't count in the stored footprint");
+        assert_eq!(q.to_bytes(), blob, "panels are never serialized");
+        let back = QMat::from_bytes(&blob).unwrap();
+        assert_eq!(back, q, "equality ignores the cache");
+        // Grouped scales never panel-pack (deq fallback path).
+        let order: Vec<usize> = (0..33).collect();
+        let g = QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 16);
+        g.prepack();
+        assert_eq!(g.panel_nbytes(), 0);
     }
 
     #[test]

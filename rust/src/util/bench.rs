@@ -102,6 +102,23 @@ impl Table {
     }
 }
 
+/// Machine-readable bench receipts: when `DQ_BENCH_JSON` names a
+/// directory, serialize `payload` to `<dir>/BENCH_<area>.json` and return
+/// the path. Unset means no side effects — plain `cargo bench` runs stay
+/// table-only. `scripts/bench_json.sh` (`make bench-json`) pins the env
+/// together with `DQ_WORKERS` so committed receipts are comparable
+/// across machines and runs.
+pub fn write_receipt(area: &str, payload: &crate::util::json::Json) -> Option<std::path::PathBuf> {
+    let dir = std::env::var("DQ_BENCH_JSON").ok()?;
+    let path = std::path::PathBuf::from(dir).join(format!("BENCH_{area}.json"));
+    if let Err(e) = std::fs::write(&path, format!("{payload}\n")) {
+        eprintln!("bench receipt {} not written: {e}", path.display());
+        return None;
+    }
+    println!("bench receipt written to {}", path.display());
+    Some(path)
+}
+
 /// Format a float with `p` decimals; NaN/huge values print like the paper's
 /// divergent-PPL cells.
 pub fn fnum(x: f64, p: usize) -> String {

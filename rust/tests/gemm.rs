@@ -1,0 +1,288 @@
+//! GEMM parity suite: the cache-blocked, register-tiled i8/i4 panel GEMM
+//! (`tensor::gemm`) must be **bit-identical** to the retained scalar
+//! integer kernel `matmul_transb_q_ref` — i32 accumulation is
+//! associative, and the float epilogue is the same expression, so any
+//! divergence is a packing or indexing bug, not rounding. On top of the
+//! bit-identity bar, every product must sit within 1e-4 relative of the
+//! dequantizing f32 oracle `matmul_transb_deq`, and the fallback routes
+//! (fp/wide activation grids, grouped weight scales) must *equal* that
+//! oracle bitwise.
+//!
+//! Also covers the [`QAct`] layer-boundary quantizer: its in-place
+//! writeback is `fake_quant_rows` bitwise, its code recovery is
+//! idempotent (exact), and feeding its codes to `matmul_transb_qact`
+//! reproduces the per-call recovery path `matmul_transb_q` bit-for-bit.
+//!
+//! Runs natively (no artifacts needed).
+
+use dartquant::tensor::{
+    fake_quant_rows, matmul_transb, matmul_transb_deq, matmul_transb_q, matmul_transb_q_ref,
+    matmul_transb_qact, matmul_transb_qact_with, quantize_act, Mat, QAct, QMat, QuantSpec,
+};
+use dartquant::util::propcheck::{gen, Runner};
+use dartquant::util::prng::Pcg64;
+
+fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// A fake-quantized activation matrix on the `levels` grid.
+fn act_mat(seed: u64, m: usize, k: usize, levels: f32) -> Mat {
+    let mut x = rand_mat(seed, m, k);
+    fake_quant_rows(&mut x, levels);
+    x
+}
+
+/// The one assertion the suite is built on: tiled result bit-identical
+/// to the scalar reference, and within 1e-4 relative of the dequantizing
+/// f32 oracle.
+fn assert_parity(x: &Mat, q: &QMat, a_levels: f32, label: &str) {
+    let tiled = matmul_transb_q(x, q, a_levels);
+    let reference = matmul_transb_q_ref(x, q, a_levels);
+    assert_eq!(tiled.data, reference.data, "{label}: tiled != scalar reference");
+    let oracle = matmul_transb(x, &q.dequantize());
+    let d = tiled.max_abs_diff(&oracle);
+    let tol = 1e-4 * oracle.max_abs().max(1.0);
+    assert!(d <= tol, "{label}: |tiled - deq oracle| {d} > {tol}");
+}
+
+/// Blocking parameters of `tensor::gemm` (NR=8, MR=4, MC=64, KC=256):
+/// the sweep crosses every one of them, plus the ragged remainders the
+/// micro-kernel must special-case. Odd k exercises the i4 panels'
+/// trailing-nibble half step.
+const SHAPES: [(usize, usize, usize); 12] = [
+    (1, 1, 1),      // degenerate minimum
+    (3, 7, 5),      // everything below one tile
+    (4, 8, 8),      // exactly one MR×NR tile, k below a nibble pair boundary test
+    (5, 9, 17),     // one ragged row / odd k / partial third panel
+    (6, 2, 3),      // k smaller than a nibble pair count edge
+    (16, 33, 8),    // odd k crossing 32
+    (63, 64, 9),    // m one short of MC
+    (64, 255, 8),   // odd k one short of KC
+    (65, 256, 10),  // m crosses MC, k exactly KC
+    (70, 259, 19),  // ragged everything: MC+, KC+ odd, partial panel
+    (9, 513, 24),   // k crosses 2×KC with an odd remainder
+    (129, 31, 1),   // deep m sweep against a single output column
+];
+
+#[test]
+fn tiled_gemm_is_bit_identical_to_reference_across_shape_sweep() {
+    for (case, &(m, k, n)) in SHAPES.iter().enumerate() {
+        let x = act_mat(100 + case as u64, m, k, 16.0);
+        let w = rand_mat(200 + case as u64, n, k);
+        for bits in [4u8, 8] {
+            let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+            assert_parity(&x, &q, 16.0, &format!("({m},{k},{n}) {bits}b"));
+        }
+    }
+}
+
+#[test]
+fn odd_k_exercises_the_i4_trailing_nibble() {
+    // k = 1 and k = 3: every panel byte's high nibble is padding at the
+    // tail; the half-step must read only the low nibble and never index
+    // a non-existent activation column.
+    for k in [1usize, 3, 255, 257] {
+        let x = act_mat(300 + k as u64, 10, k, 16.0);
+        let w = rand_mat(400 + k as u64, 12, k);
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        assert_parity(&x, &q, 16.0, &format!("odd-k {k}"));
+    }
+}
+
+#[test]
+fn protected_columns_survive_the_panel_epilogue() {
+    // QUIK mixed precision: the protected columns' f32 contribution is
+    // added per output in the epilogue. Masks at the first, an interior
+    // and the last column — including the odd-k last column whose i4
+    // panel nibble is the padded half-byte.
+    let (m, k, n) = (21, 67, 13);
+    let x = act_mat(5, m, k, 16.0);
+    let w = rand_mat(6, n, k);
+    for protected in [vec![0usize], vec![0, 33, k - 1], vec![k - 1]] {
+        let mut mask = vec![false; k];
+        for &c in &protected {
+            mask[c] = true;
+        }
+        for bits in [4u8, 8] {
+            let q = QMat::quantize_protected(&w, QuantSpec::new(bits), &mask);
+            assert_parity(&x, &q, 16.0, &format!("protected {protected:?} {bits}b"));
+        }
+    }
+}
+
+#[test]
+fn constant_activation_rows_ride_in_the_offset_term() {
+    // scale == 0 rows carry their value entirely in mn; their codes are
+    // zero so the integer sum vanishes and the colsum term does the work.
+    let k = 40;
+    let mut x = Mat::from_fn(6, k, |i, j| match i {
+        0 => 2.5,                       // constant positive
+        1 => 0.0,                       // all zero
+        2 => -1.25,                     // constant negative
+        _ => ((i * k + j) as f32).sin(), // ordinary rows
+    });
+    fake_quant_rows(&mut x, 16.0);
+    let w = rand_mat(7, 11, k);
+    for bits in [4u8, 8] {
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+        assert_parity(&x, &q, 16.0, &format!("constant rows {bits}b"));
+    }
+}
+
+#[test]
+fn a8_grid_saturates_the_u8_code_range() {
+    // 256 activation levels: codes span the full u8 range — the widest
+    // grid the integer path accepts before falling back.
+    let x = act_mat(8, 33, 96, 256.0);
+    let w = rand_mat(9, 17, 96);
+    let q = QMat::quantize_rtn(&w, QuantSpec::new(8));
+    assert_parity(&x, &q, 256.0, "a8");
+}
+
+#[test]
+fn fallback_routes_are_bit_exact_against_the_deq_oracle() {
+    let x = rand_mat(10, 9, 64);
+    let w = rand_mat(11, 14, 64);
+    let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+    // fp / wide activation grids skip the integer path entirely.
+    for a_levels in [1024.0f32, 65536.0] {
+        assert_eq!(
+            matmul_transb_q(&x, &q, a_levels).data,
+            matmul_transb_deq(&x, &q).data,
+            "a_levels {a_levels}"
+        );
+    }
+    // Grouped weight scales always take the deq path — through both the
+    // levels-based entry point and the explicit QAct one.
+    let order: Vec<usize> = (0..64).rev().collect();
+    let g = QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 32);
+    let mut xq = x.clone();
+    let qa = quantize_act(&mut xq, 16.0).unwrap();
+    assert_eq!(matmul_transb_q(&xq, &g, 16.0).data, matmul_transb_deq(&xq, &g).data);
+    assert_eq!(matmul_transb_qact(&xq, &qa, &g).data, matmul_transb_deq(&xq, &g).data);
+}
+
+#[test]
+fn shared_qact_codes_reproduce_the_per_call_recovery() {
+    // The layer-boundary path: quantize once, hand the codes to many
+    // linears. Must be bit-identical to the per-call recovery path for
+    // every scheme that takes the panel GEMM.
+    let (m, k) = (26, 72);
+    let mut x = rand_mat(12, m, k);
+    let qa = quantize_act(&mut x, 16.0).unwrap();
+    let mut mask = vec![false; k];
+    mask[5] = true;
+    let mats = [
+        QMat::quantize_rtn(&rand_mat(13, 9, k), QuantSpec::new(4)),
+        QMat::quantize_rtn(&rand_mat(14, 21, k), QuantSpec::new(8)),
+        QMat::quantize_protected(&rand_mat(15, 12, k), QuantSpec::new(4), &mask),
+    ];
+    for q in &mats {
+        assert_eq!(
+            matmul_transb_qact(&x, &qa, q).data,
+            matmul_transb_q(&x, q, 16.0).data,
+            "{} {}b",
+            q.scheme_label(),
+            q.spec().bits()
+        );
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    // Panels partition the output columns; i32 accumulation is exact, so
+    // any worker count must produce the same bits.
+    let (m, k, n) = (70, 130, 29);
+    let mut x = rand_mat(16, m, k);
+    let qa = quantize_act(&mut x, 16.0).unwrap();
+    let q = QMat::quantize_rtn(&rand_mat(17, n, k), QuantSpec::new(4));
+    let serial = matmul_transb_qact_with(&x, &qa, &q, 1);
+    for threads in [2usize, 4, 7] {
+        assert_eq!(
+            matmul_transb_qact_with(&x, &qa, &q, threads).data,
+            serial.data,
+            "{threads} threads"
+        );
+    }
+}
+
+#[test]
+fn empty_activation_batch_yields_an_empty_product() {
+    let x = Mat::zeros(0, 24);
+    let qa = QAct::from_quantized(&x, 16.0);
+    let q = QMat::quantize_rtn(&rand_mat(18, 5, 24), QuantSpec::new(4));
+    let y = matmul_transb_qact(&x, &qa, &q);
+    assert_eq!(y.shape(), (0, 5));
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_tiled_gemm_matches_reference_on_random_shapes() {
+    Runner::new().cases(24).run("tiled GEMM == scalar reference", |rng| {
+        let m = gen::size(rng, 1, 80);
+        let k = gen::size(rng, 1, 300);
+        let n = gen::size(rng, 1, 24);
+        let bits = [4u8, 8][rng.below(2)];
+        let levels = [4.0f32, 16.0, 256.0][rng.below(3)];
+        let mut x = Mat::from_vec(m, k, gen::activations(rng, m * k));
+        fake_quant_rows(&mut x, levels);
+        let w = Mat::from_vec(n, k, gen::vec_f32(rng, n * k));
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+        let tiled = matmul_transb_q(&x, &q, levels);
+        let reference = matmul_transb_q_ref(&x, &q, levels);
+        if tiled.data != reference.data {
+            return Err(format!("({m},{k},{n}) {bits}b a{levels}: bit mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_act_writeback_is_fake_quant_rows_bitwise() {
+    Runner::new().cases(24).run("quantize_act writeback", |rng| {
+        let m = gen::size(rng, 1, 12);
+        let k = gen::size(rng, 1, 80);
+        let levels = [4.0f32, 16.0, 256.0, 1024.0, 65536.0][rng.below(5)];
+        let data = gen::activations(rng, m * k);
+        let mut a = Mat::from_vec(m, k, data.clone());
+        let mut b = Mat::from_vec(m, k, data);
+        let qa = quantize_act(&mut a, levels);
+        fake_quant_rows(&mut b, levels);
+        if a.data != b.data {
+            return Err(format!("({m},{k}) a{levels}: writeback diverged"));
+        }
+        if qa.is_some() != (levels <= 256.0) {
+            return Err(format!("a{levels}: wrong integer-grid gate"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qact_recovery_is_idempotent_and_decode_is_bounded() {
+    // Codes recovered from an already-quantized matrix are a fixed point
+    // (exact, not tolerance), and decode lands within one float rounding
+    // of the fake-quantized values.
+    Runner::new().cases(24).run("QAct recovery idempotence", |rng| {
+        let m = gen::size(rng, 1, 10);
+        let k = gen::size(rng, 2, 64);
+        let levels = [4.0f32, 16.0, 256.0][rng.below(3)];
+        let mut x = Mat::from_vec(m, k, gen::activations(rng, m * k));
+        let qa = match quantize_act(&mut x, levels) {
+            Some(qa) => qa,
+            None => return Err(format!("a{levels} must return codes")),
+        };
+        if QAct::from_quantized(&x, levels) != qa {
+            return Err("re-recovery changed codes or grids".into());
+        }
+        let d = qa.decode().max_abs_diff(&x);
+        let tol = 1e-5 * x.max_abs().max(1e-12);
+        if d > tol {
+            return Err(format!("decode drift {d} > {tol}"));
+        }
+        Ok(())
+    });
+}

@@ -80,6 +80,40 @@ fn packed_pipeline_shrinks_weights_and_matches_dense_ppl() {
 }
 
 #[test]
+fn true_w4a4_native_eval_matches_dense_fake_quant_oracle() {
+    // The full W4A4 gate: 4-bit packed weights AND 4-bit activations
+    // (plus a 4-bit KV cache) through the tiled integer GEMM, against
+    // the dense fake-quant f32 forward. The integer path's only
+    // divergence from the oracle is f32 reassociation in the epilogue,
+    // so perplexity must agree to 1e-4 relative on the table2 configs.
+    for name in TABLE2_CONFIGS {
+        let cfg = ModelConfig::builtin(name).unwrap();
+        let (w, corpus) = grammar(&cfg);
+        let mk = |packed: bool| {
+            Pipeline::builder(&w)
+                .method("rtn")
+                .unwrap()
+                .bits(BitSetting::W4A4)
+                .packed(packed)
+                .run_native()
+                .unwrap()
+        };
+        let dense = mk(false);
+        let packed = mk(true);
+        let spec = EvalSpec { batch: 2, seq: 64, n_batches: 1 };
+        for opt in [FwdOptions::quant(4, 4, false), FwdOptions::quant(4, 16, false)] {
+            let ppl_dense = ppl_native(&dense.weights, &corpus, spec, opt);
+            let ppl_packed = ppl_native(&packed.weights, &corpus, spec, opt);
+            assert!(
+                (ppl_dense - ppl_packed).abs() <= 1e-4 * ppl_dense,
+                "{name} a{}: dense ppl {ppl_dense} vs packed ppl {ppl_packed}",
+                opt.a_levels
+            );
+        }
+    }
+}
+
+#[test]
 fn packed_gptq_pipeline_matches_dense_and_shrinks() {
     let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
     let (w, _corpus) = grammar(&cfg);

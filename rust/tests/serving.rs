@@ -116,6 +116,48 @@ fn packed_decode_matches_packed_full_forward() {
 }
 
 #[test]
+fn w4a4_packed_greedy_decode_is_token_identical_to_full_forward() {
+    // The QAct-threaded decode path (one activation quantization per
+    // layer boundary inside each step) must pick the same greedy token
+    // as a fresh full prefill of the whole prefix — chunk schedules
+    // never change the argmax.
+    let argmax = |row: &[f32]| {
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    };
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 21);
+        let packed = Arc::new(dartquant::quant::rtn_quantize_model_packed(&w, 4));
+        let opt = FwdOptions::quant(4, 4, false);
+        let mut prefix = toks[..12].to_vec();
+        let mut sess = DecodeSession::new(Arc::clone(&packed), opt);
+        let logits = sess.prefill(&prefix);
+        let mut next = argmax(logits.row(prefix.len() - 1));
+        for _ in 0..8 {
+            // Oracle: a fresh session prefills the whole extended prefix
+            // in one shot (== the full forward, per chunked-prefill
+            // equivalence) and must agree on the next token.
+            let mut full = Vec::with_capacity(prefix.len() + 1);
+            full.extend_from_slice(&prefix);
+            full.push(next);
+            let mut oracle = DecodeSession::new(Arc::clone(&packed), opt);
+            let olog = oracle.prefill(&full);
+            let want = argmax(olog.row(full.len() - 1));
+            let row = sess.step(next);
+            let got = argmax(&row);
+            assert_eq!(got, want, "{name}: diverged at position {}", full.len());
+            prefix = full;
+            next = got;
+        }
+    }
+}
+
+#[test]
 fn decode_parity_holds_on_moe_models() {
     let cfg = ModelConfig::builtin("mixtral-tiny").unwrap();
     let w = Arc::new(Weights::default_synthetic(&cfg, 5));

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Persistent bench harness (`make bench-json`): run the perf benches on
+# pinned configs and collect machine-readable receipts (BENCH_*.json)
+# next to this repo's EXPERIMENTS.md.
+#
+# Pinning: DQ_WORKERS is fixed (4 unless the caller overrides) so
+# committed receipts are comparable across runs; DQ_BENCH_JSON names the
+# receipt directory and is what turns the receipt writer on — without it
+# the benches are table-only.
+#
+#   perf_gemm    native; emits BENCH_gemm.json (gflops_f32 / gflops_i8 /
+#                gflops_i4 / weight_bytes — acceptance: i8 ≥ f32)
+#   perf_decode  native; the KV-cached serving-path ledger
+#   perf_hotpath needs artifacts/ (PJRT executables); skipped with a
+#                note when `make artifacts` hasn't run
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export DQ_WORKERS="${DQ_WORKERS:-4}"
+export DQ_BENCH_JSON="${DQ_BENCH_JSON:-$PWD}"
+
+echo "bench-json: DQ_WORKERS=$DQ_WORKERS receipts -> $DQ_BENCH_JSON"
+cargo bench --bench perf_gemm
+cargo bench --bench perf_decode
+if [ -d artifacts ]; then
+    cargo bench --bench perf_hotpath
+else
+    echo "bench-json: artifacts/ missing — skipping perf_hotpath (run 'make artifacts' first)"
+fi
