@@ -14,12 +14,14 @@
 #   make bench       run the paper-table bench binaries (needs artifacts)
 #   make bench-decode     run the serving-path bench (native; no artifacts)
 #   make bench-gemm       run the tiled-GEMM bench (native; no artifacts)
+#   make bench-serve      run the paged-KV vs contiguous serving bench
+#                         (native; sessions/GB, prefix hit rate, p99 step)
 #   make bench-streaming  run the out-of-core vs in-memory bench (native)
 #   make bench-json       pinned perf run emitting BENCH_*.json receipts
-#                         (scripts/bench_json.sh; perf_gemm + perf_decode
-#                         always, perf_hotpath when artifacts/ exists)
+#                         (scripts/bench_json.sh; gemm/decode/serve/streaming
+#                         always, hotpath + scheduler when artifacts/ exists)
 
-.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-streaming bench-json
+.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-serve bench-streaming bench-json
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -53,6 +55,9 @@ bench-decode:
 
 bench-gemm:
 	cargo bench --bench perf_gemm
+
+bench-serve:
+	cargo bench --bench perf_serve
 
 bench-streaming:
 	cargo bench --bench perf_streaming

@@ -13,7 +13,8 @@ mod common;
 
 use dartquant::model::{forward_one, FwdOptions, NoCapture, Weights};
 use dartquant::serve::{BatchEngine, DecodeSession, EngineConfig, GenRequest};
-use dartquant::util::bench::{fnum, Table};
+use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::json::Json;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,6 +28,7 @@ fn per_token_us(wall: std::time::Duration, tokens: usize) -> f64 {
 fn main() {
     let prefixes: &[usize] = if common::full() { &[32, 128, 256, 512] } else { &[32, 128, 256] };
     let mut table = Table::new(&["model", "weights", "path", "prefix", "µs/token", "tokens/s"]);
+    let mut receipt_rows: Vec<Json> = Vec::new();
     let mut row = |model: &str, weights: &str, path: &str, prefix: usize, us: f64| {
         table.row(&[
             model.to_string(),
@@ -36,6 +38,13 @@ fn main() {
             fnum(us, 1),
             fnum(1e6 / us, 0),
         ]);
+        receipt_rows.push(Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("weights", Json::Str(weights.to_string())),
+            ("path", Json::Str(path.to_string())),
+            ("prefix", Json::Num(prefix as f64)),
+            ("us_per_token", Json::Num(us)),
+        ]));
     };
 
     for cfg in common::bench_models() {
@@ -110,5 +119,15 @@ fn main() {
         "\nacceptance: 'decode step' µs/token should be ~flat across prefixes and ≪ the\n\
          'full recompute' row at prefix {PREFILL_LEN} (which pays the whole O(prefix²) forward\n\
          per token)."
+    );
+
+    write_receipt(
+        "decode",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_decode".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("workers", Json::Num(common::workers() as f64)),
+            ("rows", Json::Arr(receipt_rows)),
+        ]),
     );
 }

@@ -15,7 +15,8 @@ mod common;
 
 use dartquant::coordinator::{MethodRegistry, Pipeline, PipelineConfig, PipelineReport};
 use dartquant::model::BitSetting;
-use dartquant::util::bench::{fnum, Table};
+use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::json::Json;
 use dartquant::util::threadpool::ThreadPool;
 
 fn run(
@@ -48,6 +49,7 @@ fn main() {
         "Model", "Method", "Workers", "calibrate (s)", "quantize (s)", "total (s)", "speedup",
         "identical",
     ]);
+    let mut receipt_rows: Vec<Json> = Vec::new();
     for cfg in common::bench_models() {
         let (weights, _corpus) = common::grammar_model(&cfg);
         for method in methods {
@@ -114,7 +116,25 @@ fn main() {
                     cfg.name
                 );
             }
+            receipt_rows.push(Json::obj(vec![
+                ("model", Json::Str(cfg.name.clone())),
+                ("method", Json::Str(method.to_string())),
+                ("workers", Json::Num(par as f64)),
+                ("serial_stage_s", Json::Num(stage_time(&serial))),
+                ("parallel_stage_s", Json::Num(stage_time(&parallel))),
+                ("speedup", Json::Num(speedup)),
+                ("canonical_identical", Json::Bool(same)),
+            ]));
         }
     }
     table.print(&format!("perf_scheduler — calibrate-stage scaling (1 vs {par} workers)"));
+    write_receipt(
+        "scheduler",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_scheduler".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("workers", Json::Num(par as f64)),
+            ("rows", Json::Arr(receipt_rows)),
+        ]),
+    );
 }

@@ -1,0 +1,271 @@
+//! §Perf: paged-KV serving bench — sessions/GB, prefix-page hit rate,
+//! and p99 step latency for the paged cache (`serve::pager`) vs the
+//! contiguous baseline, under the same `--budget`-style gate.
+//!
+//! Two seeded scenarios per model:
+//!
+//! * `zipf-tail` — unique prompts, heavy-tailed (Zipf) continuation
+//!   lengths: page-granular charging alone admits more concurrent
+//!   sessions than full-lifetime reservation, because short sessions
+//!   never pay for their worst case.
+//! * `shared-prefix` — every session opens with the same system prompt:
+//!   prefix pages are mapped once and shared, compounding with paging.
+//!   Acceptance: ≥ 2× the contiguous baseline's peak concurrent
+//!   sessions under the same budget.
+//!
+//! Both scenarios assert the paged token streams are identical to the
+//! contiguous oracle's before reporting any number. Runs natively (no
+//! artifacts); honors `DQ_MODELS` / `DQ_FULL` / `DQ_WORKERS`, and
+//! writes `BENCH_serve.json` when `DQ_BENCH_JSON` is set.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::serve::{BatchEngine, EngineConfig, GenRequest, GenResult, PagedConfig};
+use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::json::Json;
+use dartquant::util::mem::gib;
+use dartquant::util::prng::{Pcg64, Zipf};
+use std::sync::Arc;
+use std::time::Instant;
+
+const PAGE_POSITIONS: usize = 16;
+
+/// One engine run: drive step-by-step so per-step latency is visible.
+struct RunStats {
+    results: Vec<GenResult>,
+    peak_concurrent: usize,
+    peak_bytes: u64,
+    steps: usize,
+    p99_step_us: f64,
+    wall_s: f64,
+    prefix_hit_rate: Option<f64>,
+    spilled_pages: u64,
+}
+
+/// The first request is submitted alone and stepped once before the rest
+/// arrive — a warm cache, so shared-prefix scenarios have registered
+/// prompt pages to hit (admission-time sharing needs a prior prefill).
+/// Token streams are schedule-independent, so the oracle comparison is
+/// unaffected as long as both modes use the same arrival order.
+fn drive(mut engine: BatchEngine, reqs: &[GenRequest]) -> RunStats {
+    let mut step_us: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    engine.submit(reqs[0].clone());
+    engine.step().expect("warmup step");
+    for r in &reqs[1..] {
+        engine.submit(r.clone());
+    }
+    let mut seen = engine.steps();
+    loop {
+        let s0 = Instant::now();
+        let more = engine.step().expect("engine step");
+        // Idle admission-only ticks don't advance the step counter and
+        // are excluded from the latency distribution.
+        if engine.steps() > seen {
+            seen = engine.steps();
+            step_us.push(s0.elapsed().as_secs_f64() * 1e6);
+        }
+        if !more {
+            break;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    step_us.sort_by(f64::total_cmp);
+    let p99_step_us =
+        step_us.get(step_us.len().saturating_sub(1) * 99 / 100).copied().unwrap_or(0.0);
+    let mut results = engine.results().to_vec();
+    results.sort_by_key(|r| r.id);
+    RunStats {
+        results,
+        peak_concurrent: engine.peak_concurrent(),
+        peak_bytes: engine.peak_cache_bytes(),
+        steps: engine.steps(),
+        p99_step_us,
+        wall_s,
+        prefix_hit_rate: engine.pager_stats().map(|s| s.prefix_hit_rate()),
+        spilled_pages: engine.pager_stats().map(|s| s.spilled_pages).unwrap_or(0),
+    }
+}
+
+fn main() {
+    let sessions = if common::full() { 24 } else { 12 };
+    let mut table = Table::new(&[
+        "model",
+        "scenario",
+        "mode",
+        "sessions",
+        "peak conc",
+        "sess/GB",
+        "p99 step µs",
+        "prefix hit",
+        "spilled",
+        "wall (s)",
+    ]);
+    let mut receipt_scenarios: Vec<Json> = Vec::new();
+    let mut headline_ratio = f64::INFINITY;
+    let mut headline_hit = 0.0f64;
+    let mut headline_p99 = 0.0f64;
+
+    for cfg in common::bench_models() {
+        let (w, corpus) = common::grammar_model(&cfg);
+        let weights = Arc::new(w);
+        let kv_levels = dartquant::model::FwdOptions::quant(4, 4, false).kv_levels;
+
+        // Heavy-tailed continuation lengths, seeded: rank 0 is the
+        // common short chat turn, the tail the rare long generation.
+        let zipf = Zipf::new(24, 1.1);
+        let mut rng = Pcg64::new(42);
+        let lengths: Vec<usize> = (0..sessions).map(|_| 4 + 2 * zipf.sample(&mut rng)).collect();
+
+        let system_prompt = corpus.sequence(3 * PAGE_POSITIONS, 2, 99);
+        let scenarios: [(&str, Vec<GenRequest>); 2] = [
+            (
+                "zipf-tail",
+                (0..sessions)
+                    .map(|i| GenRequest {
+                        prompt: corpus.sequence(24, 2, i as u64),
+                        max_new: lengths[i],
+                    })
+                    .collect(),
+            ),
+            (
+                "shared-prefix",
+                (0..sessions)
+                    .map(|i| {
+                        let mut prompt = system_prompt.clone();
+                        prompt.extend(corpus.sequence(4, 2, 1000 + i as u64));
+                        GenRequest { prompt, max_new: lengths[i] }
+                    })
+                    .collect(),
+            ),
+        ];
+
+        for (scenario, reqs) in scenarios {
+            // Budget: every session must fit alone (no rejections — the
+            // runs must decode identical streams), but far below the sum
+            // of full-lifetime reservations, so admission policy is what
+            // differs. ~3 average contiguous sessions' worth.
+            let per_session: Vec<u64> = reqs
+                .iter()
+                .map(|r| {
+                    dartquant::serve::request_cache_bytes(
+                        &cfg,
+                        kv_levels,
+                        r.prompt.len(),
+                        r.max_new,
+                    )
+                })
+                .collect();
+            let max_one = *per_session.iter().max().expect("non-empty");
+            let avg = per_session.iter().sum::<u64>() / per_session.len() as u64;
+            // Paged sessions round up to page granularity; double the
+            // worst case so neither mode ever rejects.
+            let budget = (2 * max_one).max(3 * avg);
+
+            let ecfg = EngineConfig {
+                opt: dartquant::model::FwdOptions::quant(4, 4, false),
+                workers: common::workers(),
+                budget: Some(budget),
+                ..EngineConfig::default()
+            };
+            let contiguous = drive(BatchEngine::new(Arc::clone(&weights), ecfg), &reqs);
+            let paged = drive(
+                BatchEngine::new(
+                    Arc::clone(&weights),
+                    EngineConfig {
+                        paged: Some(PagedConfig {
+                            page_positions: PAGE_POSITIONS,
+                            spill: true,
+                        }),
+                        ..ecfg
+                    },
+                ),
+                &reqs,
+            );
+            assert_eq!(
+                contiguous.results, paged.results,
+                "{} {scenario}: paged decode diverged from the contiguous oracle",
+                cfg.name
+            );
+
+            let spg = |r: &RunStats| r.peak_concurrent as f64 / gib(budget);
+            let ratio = spg(&paged) / spg(&contiguous);
+            let mut row = |mode: &str, r: &RunStats| {
+                table.row(&[
+                    cfg.name.clone(),
+                    scenario.to_string(),
+                    mode.to_string(),
+                    sessions.to_string(),
+                    r.peak_concurrent.to_string(),
+                    fnum(spg(r), 0),
+                    fnum(r.p99_step_us, 1),
+                    r.prefix_hit_rate
+                        .map(|h| format!("{:.0}%", 100.0 * h))
+                        .unwrap_or_else(|| "-".into()),
+                    r.spilled_pages.to_string(),
+                    fnum(r.wall_s, 3),
+                ]);
+            };
+            row("contiguous", &contiguous);
+            row("paged+spill", &paged);
+
+            if scenario == "shared-prefix" {
+                headline_ratio = headline_ratio.min(ratio);
+                headline_hit = paged.prefix_hit_rate.unwrap_or(0.0);
+                headline_p99 = paged.p99_step_us;
+            }
+            let run_json = |r: &RunStats| {
+                Json::obj(vec![
+                    ("peak_concurrent", Json::Num(r.peak_concurrent as f64)),
+                    ("sessions_per_gb", Json::Num(spg(r))),
+                    ("p99_step_us", Json::Num(r.p99_step_us)),
+                    ("peak_gate_bytes", Json::Num(r.peak_bytes as f64)),
+                    ("steps", Json::Num(r.steps as f64)),
+                    ("spilled_pages", Json::Num(r.spilled_pages as f64)),
+                ])
+            };
+            receipt_scenarios.push(Json::obj(vec![
+                ("model", Json::Str(cfg.name.clone())),
+                ("scenario", Json::Str(scenario.to_string())),
+                ("sessions", Json::Num(sessions as f64)),
+                ("budget_bytes", Json::Num(budget as f64)),
+                ("contiguous", run_json(&contiguous)),
+                ("paged", run_json(&paged)),
+                (
+                    "prefix_hit_rate",
+                    Json::Num(paged.prefix_hit_rate.unwrap_or(0.0)),
+                ),
+                ("sessions_per_gb_ratio", Json::Num(ratio)),
+            ]));
+        }
+    }
+
+    table.print(&format!(
+        "perf_serve — paged KV vs contiguous under one budget (P={PAGE_POSITIONS}, workers {})",
+        common::workers()
+    ));
+    println!(
+        "\nacceptance: shared-prefix sessions/GB ratio (paged/contiguous) = {} — must be ≥ 2,\n\
+         with bit-identical token streams (asserted above) at every page size.",
+        fnum(headline_ratio, 2)
+    );
+    assert!(
+        headline_ratio >= 2.0,
+        "shared-prefix paged mode admitted only {headline_ratio:.2}x the contiguous sessions"
+    );
+
+    write_receipt(
+        "serve",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_serve".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("workers", Json::Num(common::workers() as f64)),
+            ("page_positions", Json::Num(PAGE_POSITIONS as f64)),
+            ("sessions_per_gb_ratio_shared_prefix", Json::Num(headline_ratio)),
+            ("prefix_hit_rate", Json::Num(headline_hit)),
+            ("p99_step_us_paged", Json::Num(headline_p99)),
+            ("scenarios", Json::Arr(receipt_scenarios)),
+        ]),
+    );
+}

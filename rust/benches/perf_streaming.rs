@@ -13,7 +13,8 @@ mod common;
 
 use dartquant::coordinator::{Pipeline, PipelineReport, WeightQuant};
 use dartquant::model::{suggested_resident_budget, BitSetting};
-use dartquant::util::bench::{fnum, Table};
+use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::json::Json;
 
 fn mib(b: u64) -> f64 {
     b as f64 / (1 << 20) as f64
@@ -35,6 +36,7 @@ fn main() {
         "model (MiB)",
         "canonical",
     ]);
+    let mut receipt_rows: Vec<Json> = Vec::new();
     for cfg in &models {
         if cfg.is_moe() {
             continue; // keep the table to the dense table2 ladder
@@ -89,9 +91,28 @@ fn main() {
                 fnum(mib(model_bytes), 1),
                 if identical { "byte-identical".into() } else { "MISMATCH".into() },
             ]);
+            receipt_rows.push(Json::obj(vec![
+                ("model", Json::Str(cfg.name.clone())),
+                ("workers", Json::Num(wk as f64)),
+                ("inmem_wall_s", Json::Num(inmem.stats.total_time.as_secs_f64())),
+                ("streamed_wall_s", Json::Num(streamed.stats.total_time.as_secs_f64())),
+                ("peak_weight_bytes", Json::Num(streamed.stats.peak_weight_bytes as f64)),
+                ("resident_budget_bytes", Json::Num(budget as f64)),
+                ("model_bytes", Json::Num(model_bytes as f64)),
+                ("canonical_identical", Json::Bool(identical)),
+            ]));
         }
     }
     table.print("perf_streaming — out-of-core vs in-memory pipeline cost (Table-3 style)");
+    write_receipt(
+        "streaming",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_streaming".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("workers", Json::Num(common::workers() as f64)),
+            ("rows", Json::Arr(receipt_rows)),
+        ]),
+    );
     if let Some(cfg) = models.iter().filter(|c| !c.is_moe()).max_by_key(|c| c.n_params()) {
         let budget = suggested_resident_budget(cfg);
         let model = cfg.n_params() as u64 * 4;

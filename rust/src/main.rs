@@ -394,6 +394,8 @@ fn serving_flags(cmd: Command) -> Command {
         .switch("budget-3090", "scaled single-3090 KV budget (24 MiB)")
         .switch("packed", "packed low-bit weight storage (integer decode path)")
         .switch("online-had", "enable online R3/R4 hadamard (rotated ckpts)")
+        .flag_default("page-size", "0", "paged KV cache, positions per page (0 = contiguous)")
+        .switch("spill", "paged mode: evict cold KV pages to a temp spill file under pressure")
 }
 
 fn serving_setup(
@@ -415,6 +417,14 @@ fn serving_setup(
     if let Some(b) = a.get("budget-bytes") {
         budget = Some(b.parse()?);
     }
+    let page_size = a.get_usize("page-size", 0)?;
+    if a.get_bool("spill") && page_size == 0 {
+        bail!("--spill needs paged mode — pass --page-size N");
+    }
+    let paged = (page_size > 0).then(|| dartquant::serve::PagedConfig {
+        page_positions: page_size,
+        spill: a.get_bool("spill"),
+    });
     let ecfg = dartquant::serve::EngineConfig {
         opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, a.get_bool("online-had")),
         seed: a.get_usize("seed", 0)? as u64,
@@ -422,6 +432,7 @@ fn serving_setup(
         workers: a.get_usize("workers", 0)?,
         budget,
         max_sessions: 0,
+        paged,
     };
     Ok((weights, corpus, bits, ecfg))
 }
@@ -545,14 +556,55 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         let prompt = corpus.sequence(prompt_len + i * stagger, 2, i as u64);
         engine.submit(dartquant::serve::GenRequest { prompt, max_new });
     }
+    // Step by hand (instead of engine.run) so per-step latency is
+    // visible — the p99 column is the tentpole's tail-latency claim.
     // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
     let t0 = std::time::Instant::now();
-    let results = engine.run()?.to_vec();
+    let mut step_wall: Vec<std::time::Duration> = Vec::new();
+    loop {
+        // dqlint::allow(wallclock-hygiene): CLI step-latency readout, never in canonical reports
+        let s0 = std::time::Instant::now();
+        let more = engine.step()?;
+        if engine.steps() > step_wall.len() {
+            step_wall.push(s0.elapsed()); // idle admission-only ticks don't count
+        }
+        if !more {
+            break;
+        }
+    }
     let wall = t0.elapsed();
+    let results = engine.results().to_vec();
     let ok = results.iter().filter(|r| r.error.is_none()).count();
     let total: usize = results.iter().map(|r| r.tokens.len()).sum();
+    step_wall.sort_unstable();
+    let p99 = step_wall
+        .get(step_wall.len().saturating_sub(1) * 99 / 100)
+        .copied()
+        .unwrap_or_default();
+    // Sessions-per-GB headline: peak concurrency over the gate budget
+    // (or, unlimited, over the peak bytes actually charged).
+    let denom_bytes = ecfg.budget.unwrap_or_else(|| engine.peak_cache_bytes());
+    let sess_per_gb = if denom_bytes == 0 {
+        "n/a".to_string()
+    } else {
+        fnum(engine.peak_concurrent() as f64 / dartquant::util::mem::gib(denom_bytes), 1)
+    };
+    let prefix_hit = engine
+        .pager_stats()
+        .map(|s| format!("{:.0}%", 100.0 * s.prefix_hit_rate()))
+        .unwrap_or_else(|| "-".to_string());
     let mut t = Table::new(&[
-        "sessions", "ok", "steps", "tokens", "wall", "tok/s", "peak kv bytes", "budget",
+        "sessions",
+        "ok",
+        "steps",
+        "tokens",
+        "wall",
+        "tok/s",
+        "p99 step",
+        "sess/GB",
+        "peak kv bytes",
+        "budget",
+        "prefix hit",
     ]);
     t.row(&[
         sessions.to_string(),
@@ -561,10 +613,21 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         total.to_string(),
         fmt_duration(wall),
         fnum(total as f64 / wall.as_secs_f64().max(1e-9), 0),
+        fmt_duration(p99),
+        sess_per_gb,
         engine.peak_cache_bytes().to_string(),
         ecfg.budget.map(|b| b.to_string()).unwrap_or_else(|| "unlimited".to_string()),
+        prefix_hit,
     ]);
-    t.print(&format!("{model_name} serve-bench @ {} (workers {})", bits.label(), ecfg.workers));
+    let mode = ecfg
+        .paged
+        .map(|p| format!("paged P={}{}", p.page_positions, if p.spill { "+spill" } else { "" }))
+        .unwrap_or_else(|| "contiguous".to_string());
+    t.print(&format!(
+        "{model_name} serve-bench @ {} (workers {}, {mode})",
+        bits.label(),
+        ecfg.workers
+    ));
     Ok(())
 }
 

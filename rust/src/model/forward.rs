@@ -8,14 +8,15 @@
 //!
 //! The attention/FFN block body is the **shared incremental function**
 //! [`block_step`]: it processes "the next `tn` positions" against a
-//! [`LayerKv`] cache holding everything before them. [`forward_one`]
+//! [`KvSlot`] cache (contiguous [`LayerKv`] or the serving layer's paged
+//! view) holding everything before them. [`forward_one`]
 //! calls it with a fresh per-layer cache over the whole sequence (the
 //! historical full-sequence semantics, bit-for-bit); the serving path
 //! (`serve::DecodeSession`) calls the same function per prefill chunk /
 //! per decoded token with a persistent cache — which is why KV-cached
 //! decode is bit-identical to this oracle in fp32 (`rust/tests/serving.rs`).
 
-use super::kv::LayerKv;
+use super::kv::{KvSlot, LayerKv};
 use super::weights::{Tensor, Weights};
 use crate::tensor::{matmul_transb, matmul_transb_deq, matmul_transb_qact, Mat, QAct};
 
@@ -163,7 +164,7 @@ pub fn block_step(
     w: &Weights,
     l: usize,
     x: &mut Mat,
-    kv: &mut LayerKv,
+    kv: &mut dyn KvSlot,
     opt: FwdOptions,
     hook: &mut dyn CaptureHook,
 ) {

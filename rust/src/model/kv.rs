@@ -9,7 +9,7 @@
 //! full-sequence oracle applies, so a cached row reads back bit-identical
 //! to what `forward_one` attends over.
 //!
-//! Two storage modes:
+//! Two storage modes, both provided by the reusable [`RowStore`]:
 //!
 //! * **f32** — rows stored as (fake-quantized) f32 values; the oracle
 //!   layout, and the only representable one for fp / wide KV grids.
@@ -25,6 +25,11 @@
 //!   elements non-finite) — blow-ups surface either way instead of being
 //!   silently clamped.
 //!
+//! `block_step` consumes the cache through the [`KvSlot`] trait, so the
+//! same block body serves both this contiguous layout and the paged
+//! layout in `serve::pager` (whose spill path round-trips pages through
+//! [`RowStore::to_bytes`] / [`RowStore::from_bytes`] bit-exactly).
+//!
 //! The serving layer aggregates one `LayerKv` per layer into
 //! `serve::KvCache` (which also owns the engine's byte accounting); see
 //! `docs/SERVING.md`.
@@ -32,72 +37,212 @@
 use super::config::ModelConfig;
 use super::forward::{fake_quant_row, fq_row_grid};
 use crate::tensor::Mat;
+use anyhow::{bail, Result};
 
 /// Largest level count representable by the u8 code storage.
 const CODE_LEVELS_MAX: f32 = 256.0;
 
-/// u8-coded rows: one `(mn, scale)` grid per row; `scale == 0` marks a
-/// constant row whose every code decodes to `mn`.
-#[derive(Clone, Debug)]
-struct CodeRows {
-    codes: Vec<u8>,
-    grids: Vec<(f32, f32)>,
+/// Whether `(levels, compact)` selects the u8 code layout.
+fn use_codes(levels: f32, compact: bool) -> bool {
+    compact && levels <= CODE_LEVELS_MAX
 }
 
-impl CodeRows {
-    fn new() -> CodeRows {
-        CodeRows { codes: Vec::new(), grids: Vec::new() }
-    }
+/// Fixed-width row storage in one of the two KV layouts (module docs):
+/// fake-quantized f32 rows, or u8 codes with one `(mn, scale)` grid per
+/// row (`scale == 0` marks a constant row whose every code decodes to
+/// `mn`). [`LayerKv`] holds one per K/V side; `serve::pager` holds one
+/// pair per page and serializes them across the spill boundary.
+#[derive(Clone, Debug)]
+pub enum RowStore {
+    /// Fake-quantized f32 rows, stored verbatim.
+    F32 {
+        /// Row-major values, `width` per row.
+        data: Vec<f32>,
+    },
+    /// u8 codes + per-row `(mn, scale)` decode grids.
+    Codes {
+        /// Row-major codes, `width` per row.
+        codes: Vec<u8>,
+        /// One `(mn, scale)` grid per row.
+        grids: Vec<(f32, f32)>,
+    },
+}
 
-    fn extend(&mut self, rows: usize, width: usize) {
-        self.codes.resize(self.codes.len() + rows * width, 0);
-        self.grids.resize(self.grids.len() + rows, (0.0, 0.0));
-    }
-
-    fn set(&mut self, idx: usize, width: usize, row: &[f32], levels: f32) {
-        let out = &mut self.codes[idx * width..(idx + 1) * width];
-        if row.iter().any(|v| !v.is_finite()) {
-            // A poisoned (NaN/∞) row has no finite code grid; decode it
-            // as all-NaN so numeric blow-ups surface loudly instead of
-            // being clamped to the grid offset (the one place the code
-            // store is not bit-identical to the f32 store — see the
-            // module docs).
-            self.grids[idx] = (f32::NAN, 0.0);
-            out.fill(0);
-            return;
+impl RowStore {
+    /// An empty store in the layout selected by `(levels, compact)`.
+    pub fn new(levels: f32, compact: bool) -> RowStore {
+        if use_codes(levels, compact) {
+            RowStore::Codes { codes: Vec::new(), grids: Vec::new() }
+        } else {
+            RowStore::F32 { data: Vec::new() }
         }
-        match fq_row_grid(row, levels) {
-            Some((mn, scale)) => {
-                self.grids[idx] = (mn, scale);
-                for (o, &v) in out.iter_mut().zip(row) {
-                    *o = ((v - mn) / scale).round() as u8;
+    }
+
+    /// A store pre-sized to `rows` zeroed rows of `width` values — the
+    /// pager's fixed-capacity page allocation.
+    pub fn with_rows(levels: f32, compact: bool, rows: usize, width: usize) -> RowStore {
+        let mut s = RowStore::new(levels, compact);
+        s.grow(rows, width);
+        s
+    }
+
+    /// Append `rows` zeroed row slots of `width` values.
+    pub fn grow(&mut self, rows: usize, width: usize) {
+        match self {
+            RowStore::F32 { data } => data.resize(data.len() + rows * width, 0.0),
+            RowStore::Codes { codes, grids } => {
+                codes.resize(codes.len() + rows * width, 0);
+                grids.resize(grids.len() + rows, (0.0, 0.0));
+            }
+        }
+    }
+
+    /// Store `row` into slot `idx`, fake-quantizing at `levels` (the
+    /// cache-boundary quantization both layouts share).
+    pub fn set_row(&mut self, idx: usize, width: usize, row: &[f32], levels: f32) {
+        assert_eq!(row.len(), width, "row width");
+        match self {
+            RowStore::F32 { data } => {
+                let out = &mut data[idx * width..(idx + 1) * width];
+                out.copy_from_slice(row);
+                fake_quant_row(out, levels);
+            }
+            RowStore::Codes { codes, grids } => {
+                let out = &mut codes[idx * width..(idx + 1) * width];
+                if row.iter().any(|v| !v.is_finite()) {
+                    // A poisoned (NaN/∞) row has no finite code grid;
+                    // decode it as all-NaN so numeric blow-ups surface
+                    // loudly instead of being clamped to the grid offset
+                    // (the one place the code store is not bit-identical
+                    // to the f32 store — see the module docs).
+                    grids[idx] = (f32::NAN, 0.0);
+                    out.fill(0);
+                    return;
+                }
+                match fq_row_grid(row, levels) {
+                    Some((mn, scale)) => {
+                        grids[idx] = (mn, scale);
+                        for (o, &v) in out.iter_mut().zip(row) {
+                            *o = ((v - mn) / scale).round() as u8;
+                        }
+                    }
+                    None => {
+                        // Constant row: the fake-quant kernel leaves it
+                        // untouched, so store its value as the offset and
+                        // decode codes of 0.
+                        grids[idx] = (row.first().copied().unwrap_or(0.0), 0.0);
+                        out.fill(0);
+                    }
                 }
             }
-            None => {
-                // Constant row: the fake-quant kernel leaves it untouched,
-                // so store its value as the offset and decode codes of 0.
-                self.grids[idx] = (row.first().copied().unwrap_or(0.0), 0.0);
-                out.fill(0);
+        }
+    }
+
+    /// Decode slot `idx` into `out` (bit-identical across layouts at
+    /// ≤ 8-bit grids; module docs).
+    pub fn decode_row(&self, idx: usize, width: usize, out: &mut [f32]) {
+        match self {
+            RowStore::F32 { data } => out.copy_from_slice(&data[idx * width..(idx + 1) * width]),
+            RowStore::Codes { codes, grids } => {
+                let (mn, scale) = grids[idx];
+                for (o, &c) in out.iter_mut().zip(&codes[idx * width..(idx + 1) * width]) {
+                    *o = c as f32 * scale + mn;
+                }
             }
         }
     }
 
-    fn decode(&self, idx: usize, width: usize, out: &mut [f32]) {
-        let (mn, scale) = self.grids[idx];
-        for (o, &c) in out.iter_mut().zip(&self.codes[idx * width..(idx + 1) * width]) {
-            *o = c as f32 * scale + mn;
+    /// Resident bytes (codes + grids, or f32 values) — also the exact
+    /// length of [`RowStore::to_bytes`].
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            RowStore::F32 { data } => 4 * data.len() as u64,
+            RowStore::Codes { codes, grids } => codes.len() as u64 + 8 * grids.len() as u64,
         }
     }
 
-    fn nbytes(&self) -> u64 {
-        self.codes.len() as u64 + 8 * self.grids.len() as u64
+    /// [`RowStore::nbytes`] of a store holding `rows` rows of `width` —
+    /// exact, before the rows exist.
+    pub fn estimate_nbytes(rows: u64, width: u64, levels: f32, compact: bool) -> u64 {
+        if use_codes(levels, compact) {
+            rows * width + 8 * rows
+        } else {
+            4 * rows * width
+        }
+    }
+
+    /// Serialize to little-endian bytes (f32 values, or codes followed by
+    /// per-row grid pairs). Exactly [`RowStore::nbytes`] long, and
+    /// bit-exact under [`RowStore::from_bytes`] — including NaN payloads,
+    /// which is what makes the pager's spill/fault cycle invisible to
+    /// decode.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.nbytes() as usize);
+        match self {
+            RowStore::F32 { data } => {
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            RowStore::Codes { codes, grids } => {
+                out.extend_from_slice(codes);
+                for (mn, scale) in grids {
+                    out.extend_from_slice(&mn.to_le_bytes());
+                    out.extend_from_slice(&scale.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`RowStore::to_bytes`] for a store of `rows` rows of
+    /// `width` values in the `(levels, compact)` layout. Errors on a
+    /// length mismatch (a corrupt or mis-sized spill slot).
+    pub fn from_bytes(
+        levels: f32,
+        compact: bool,
+        rows: usize,
+        width: usize,
+        bytes: &[u8],
+    ) -> Result<RowStore> {
+        let want = RowStore::estimate_nbytes(rows as u64, width as u64, levels, compact);
+        if bytes.len() as u64 != want {
+            bail!("row store blob is {} bytes, layout needs {want}", bytes.len());
+        }
+        let f32_at = |b: &[u8], i: usize| {
+            f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
+        };
+        if use_codes(levels, compact) {
+            let split = rows * width;
+            let (code_b, grid_b) = bytes.split_at(split);
+            let grids =
+                (0..rows).map(|r| (f32_at(grid_b, 2 * r), f32_at(grid_b, 2 * r + 1))).collect();
+            Ok(RowStore::Codes { codes: code_b.to_vec(), grids })
+        } else {
+            Ok(RowStore::F32 { data: (0..rows * width).map(|i| f32_at(bytes, i)).collect() })
+        }
     }
 }
 
-#[derive(Clone, Debug)]
-enum Store {
-    F32 { k: Vec<f32>, v: Vec<f32> },
-    Codes { k: CodeRows, v: CodeRows },
+/// The cache interface `forward::block_step` writes and attends over —
+/// one object per layer. Implemented by the contiguous [`LayerKv`] and
+/// by the paged view `serve::pager::PagedLayerKv`, which is how the same
+/// block body serves both layouts bit-identically.
+pub trait KvSlot {
+    /// Cached positions.
+    fn positions(&self) -> usize;
+    /// Reserve row slots for `tn` more positions (all KV heads).
+    fn extend(&mut self, tn: usize);
+    /// Store position `pos`'s K row for `head` (raw post-RoPE/R3 values;
+    /// the KV fake-quant happens at the cache boundary).
+    fn set_k(&mut self, pos: usize, head: usize, row: &[f32]);
+    /// Store position `pos`'s V row for `head`.
+    fn set_v(&mut self, pos: usize, head: usize, row: &[f32]);
+    /// Decode `head`'s K rows over all cached positions into the
+    /// caller's `(positions × head_dim)` scratch.
+    fn k_head_into(&self, head: usize, out: &mut Mat);
+    /// Decode `head`'s V rows into the caller's scratch.
+    fn v_head_into(&self, head: usize, out: &mut Mat);
 }
 
 /// One layer's cached K/V rows (see the module docs for the layout and
@@ -108,7 +253,8 @@ pub struct LayerKv {
     hd: usize,
     levels: f32,
     positions: usize,
-    store: Store,
+    k: RowStore,
+    v: RowStore,
 }
 
 impl LayerKv {
@@ -117,12 +263,14 @@ impl LayerKv {
     /// taken when the grid fits (`levels` ≤ 256); the full-sequence
     /// oracle passes `false` and always stores f32.
     pub fn new(nkv: usize, hd: usize, levels: f32, compact: bool) -> LayerKv {
-        let store = if compact && levels <= CODE_LEVELS_MAX {
-            Store::Codes { k: CodeRows::new(), v: CodeRows::new() }
-        } else {
-            Store::F32 { k: Vec::new(), v: Vec::new() }
-        };
-        LayerKv { nkv, hd, levels, positions: 0, store }
+        LayerKv {
+            nkv,
+            hd,
+            levels,
+            positions: 0,
+            k: RowStore::new(levels, compact),
+            v: RowStore::new(levels, compact),
+        }
     }
 
     /// A cache for one layer of `cfg`.
@@ -138,16 +286,8 @@ impl LayerKv {
     /// Reserve row slots for `tn` more positions (all KV heads).
     pub fn extend(&mut self, tn: usize) {
         let rows = tn * self.nkv;
-        match &mut self.store {
-            Store::F32 { k, v } => {
-                k.resize(k.len() + rows * self.hd, 0.0);
-                v.resize(v.len() + rows * self.hd, 0.0);
-            }
-            Store::Codes { k, v } => {
-                k.extend(rows, self.hd);
-                v.extend(rows, self.hd);
-            }
-        }
+        self.k.grow(rows, self.hd);
+        self.v.grow(rows, self.hd);
         self.positions += tn;
     }
 
@@ -156,42 +296,25 @@ impl LayerKv {
         pos * self.nkv + head
     }
 
-    fn set_row(&mut self, is_k: bool, pos: usize, head: usize, row: &[f32]) {
-        assert_eq!(row.len(), self.hd, "kv row width");
-        let idx = self.slot(pos, head);
-        let (hd, levels) = (self.hd, self.levels);
-        match &mut self.store {
-            Store::F32 { k, v } => {
-                let out = &mut (if is_k { k } else { v })[idx * hd..(idx + 1) * hd];
-                out.copy_from_slice(row);
-                fake_quant_row(out, levels);
-            }
-            Store::Codes { k, v } => (if is_k { k } else { v }).set(idx, hd, row, levels),
-        }
-    }
-
     /// Store position `pos`'s K row for `head` (raw post-RoPE/R3 values;
     /// the KV fake-quant happens here, at the cache boundary).
     pub fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
-        self.set_row(true, pos, head, row);
+        let idx = self.slot(pos, head);
+        self.k.set_row(idx, self.hd, row, self.levels);
     }
 
     /// Store position `pos`'s V row for `head`.
     pub fn set_v(&mut self, pos: usize, head: usize, row: &[f32]) {
-        self.set_row(false, pos, head, row);
+        let idx = self.slot(pos, head);
+        self.v.set_row(idx, self.hd, row, self.levels);
     }
 
     fn head_mat_into(&self, is_k: bool, head: usize, out: &mut Mat) {
         assert_eq!(out.shape(), (self.positions, self.hd), "kv scratch shape");
+        let store = if is_k { &self.k } else { &self.v };
         for pos in 0..self.positions {
             let idx = self.slot(pos, head);
-            let row = out.row_mut(pos);
-            match &self.store {
-                Store::F32 { k, v } => row.copy_from_slice(
-                    &(if is_k { k } else { v })[idx * self.hd..(idx + 1) * self.hd],
-                ),
-                Store::Codes { k, v } => (if is_k { k } else { v }).decode(idx, self.hd, row),
-            }
+            store.decode_row(idx, self.hd, out.row_mut(pos));
         }
     }
 
@@ -225,10 +348,7 @@ impl LayerKv {
 
     /// Resident cache bytes (codes + grids, or f32 rows).
     pub fn nbytes(&self) -> u64 {
-        match &self.store {
-            Store::F32 { k, v } => 4 * (k.len() + v.len()) as u64,
-            Store::Codes { k, v } => k.nbytes() + v.nbytes(),
-        }
+        self.k.nbytes() + self.v.nbytes()
     }
 
     /// [`LayerKv::nbytes`] of a cache holding `positions` positions —
@@ -241,12 +361,28 @@ impl LayerKv {
         positions: usize,
         compact: bool,
     ) -> u64 {
-        let rows = (positions * nkv) as u64;
-        if compact && levels <= CODE_LEVELS_MAX {
-            2 * (rows * hd as u64 + 8 * rows)
-        } else {
-            2 * rows * hd as u64 * 4
-        }
+        2 * RowStore::estimate_nbytes((positions * nkv) as u64, hd as u64, levels, compact)
+    }
+}
+
+impl KvSlot for LayerKv {
+    fn positions(&self) -> usize {
+        LayerKv::positions(self)
+    }
+    fn extend(&mut self, tn: usize) {
+        LayerKv::extend(self, tn);
+    }
+    fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
+        LayerKv::set_k(self, pos, head, row);
+    }
+    fn set_v(&mut self, pos: usize, head: usize, row: &[f32]) {
+        LayerKv::set_v(self, pos, head, row);
+    }
+    fn k_head_into(&self, head: usize, out: &mut Mat) {
+        LayerKv::k_head_into(self, head, out);
+    }
+    fn v_head_into(&self, head: usize, out: &mut Mat) {
+        LayerKv::v_head_into(self, head, out);
     }
 }
 
@@ -354,6 +490,54 @@ mod tests {
     }
 
     #[test]
+    fn row_store_bytes_roundtrip_bitwise() {
+        let mut rng = Pcg64::new(4);
+        for (levels, compact) in [(16.0f32, true), (256.0, true), (16.0, false), (65536.0, true)] {
+            let mut s = RowStore::with_rows(levels, compact, 5, 8);
+            for idx in 0..4 {
+                s.set_row(idx, 8, &rand_row(&mut rng, 8), levels);
+            }
+            // A poisoned row must survive the byte cycle non-finite.
+            s.set_row(4, 8, &[f32::NAN; 8], levels);
+            let bytes = s.to_bytes();
+            assert_eq!(bytes.len() as u64, s.nbytes(), "blob length = nbytes");
+            let back = RowStore::from_bytes(levels, compact, 5, 8, &bytes).unwrap();
+            let (mut a, mut b) = (vec![0.0f32; 8], vec![0.0f32; 8]);
+            for idx in 0..5 {
+                s.decode_row(idx, 8, &mut a);
+                back.decode_row(idx, 8, &mut b);
+                // Bit-exact, NaN payloads included.
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "levels {levels} compact {compact} row {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_store_from_bytes_rejects_wrong_length() {
+        let s = RowStore::with_rows(16.0, true, 2, 4);
+        let bytes = s.to_bytes();
+        assert!(RowStore::from_bytes(16.0, true, 2, 4, &bytes[1..]).is_err());
+        assert!(RowStore::from_bytes(16.0, true, 3, 4, &bytes).is_err());
+    }
+
+    #[test]
+    fn layer_kv_works_through_the_kv_slot_trait() {
+        let mut rng = Pcg64::new(5);
+        let mut kv = LayerKv::new(2, 8, 16.0, true);
+        let slot: &mut dyn KvSlot = &mut kv;
+        slot.extend(2);
+        let row = rand_row(&mut rng, 8);
+        slot.set_k(1, 1, &row);
+        slot.set_v(1, 1, &row);
+        assert_eq!(slot.positions(), 2);
+        let mut scratch = Mat::zeros(2, 8);
+        slot.k_head_into(1, &mut scratch);
+        assert_eq!(scratch.data, kv.k_head(1).data);
+    }
+
+    #[test]
     fn prop_code_roundtrip_bounded_by_half_step() {
         Runner::new().cases(48).run("kv code roundtrip bound", |rng| {
             let hd = 1 << gen::size(rng, 2, 6);
@@ -396,6 +580,34 @@ mod tests {
             let want = LayerKv::estimate_nbytes(nkv, hd, levels, total, compact);
             if kv.nbytes() != want {
                 return Err(format!("nbytes {} != estimate {want}", kv.nbytes()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_row_store_serialization_is_bit_exact() {
+        Runner::new().cases(32).run("row store byte roundtrip", |rng| {
+            let width = 1 << gen::size(rng, 1, 5);
+            let rows = gen::size(rng, 1, 12);
+            let compact = rng.below(2) == 0;
+            let levels = [16.0f32, 256.0, 65536.0][rng.below(3)];
+            let mut s = RowStore::with_rows(levels, compact, rows, width);
+            for idx in 0..rows {
+                let row = gen::vec_f32(rng, width);
+                s.set_row(idx, width, &row, levels);
+            }
+            let back = RowStore::from_bytes(levels, compact, rows, width, &s.to_bytes())
+                .map_err(|e| e.to_string())?;
+            let (mut a, mut b) = (vec![0.0f32; width], vec![0.0f32; width]);
+            for idx in 0..rows {
+                s.decode_row(idx, width, &mut a);
+                back.decode_row(idx, width, &mut b);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                if ab != bb {
+                    return Err(format!("row {idx} differs after byte roundtrip"));
+                }
             }
             Ok(())
         });

@@ -1,22 +1,39 @@
 //! Continuous-batching decode engine.
 //!
 //! [`BatchEngine`] runs many [`DecodeSession`]s in lock step: each
-//! [`BatchEngine::step`] first admits pending requests (FIFO) while
-//! their full KV-cache footprint fits the `coordinator::budget` gate,
-//! then advances every active session by one token on scoped worker
-//! threads (`util::threadpool::scoped_try_map`), then retires finished
-//! sessions — releasing their cache lease so the next pending request
-//! can slide in *between* steps, not at batch boundaries.
+//! [`BatchEngine::step`] first admits pending requests (FIFO), then
+//! advances active sessions by one token on scoped worker threads
+//! (`util::threadpool::scoped_try_map`), then retires finished sessions
+//! — releasing their cache bytes so the next pending request can slide
+//! in *between* steps, not at batch boundaries.
+//!
+//! Two cache modes share that loop:
+//!
+//! * **contiguous** (default) — one contiguous [`KvCache`] per session,
+//!   full-lifetime bytes reserved at admission through the
+//!   `coordinator::budget` gate. The parity oracle.
+//! * **paged** (`EngineConfig::paged`) — sessions map fixed-size pages
+//!   from a [`Pager`]: bytes are charged page-granularly as sessions
+//!   grow, identical prompt prefixes share their prefill pages, and
+//!   (with `spill`) cold pages are evicted to a temp file under budget
+//!   pressure. Each step selects sessions least-recently-stepped first
+//!   and calls [`Pager::prepare_step`] for each, stopping at the first
+//!   that cannot be made resident — deferred sessions are the oldest
+//!   next step, so nothing starves.
 //!
 //! Determinism follows the `docs/CONCURRENCY.md` contract: every session
 //! samples from its own `Pcg64` seeded `seed ⊕ f(id)`, sessions never
-//! share mutable state, and [`EngineEvent`]s are recorded only on the
-//! engine thread at deterministic points (admission order, then retire
-//! scan in admission order after each join). Two runs of the same
-//! submissions produce identical token streams and event logs at any
-//! worker count — enforced by `rust/tests/serving.rs`.
+//! share mutable state (shared pages are read-only by the pager's CoW
+//! contract), and [`EngineEvent`]s are recorded only on the engine
+//! thread at deterministic points. Two runs of the same submissions
+//! produce identical token streams and event logs at any worker count;
+//! across cache modes and page sizes the *token streams* and the
+//! [`BatchEngine::canonical_events`] projection are identical, while raw
+//! byte/step events legitimately differ — enforced by
+//! `rust/tests/serving.rs`.
 
 use super::kv_cache::KvCache;
+use super::pager::{Pager, PagerStats};
 use super::session::{sample_logits, DecodeSession};
 use crate::coordinator::budget::{MemoryGate, OwnedLease};
 use crate::model::{FwdOptions, Weights};
@@ -26,10 +43,12 @@ use crate::util::threadpool::{scoped_try_map, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
-/// The KV bytes one request holds for its whole active lifetime: the
-/// prompt plus every generated token except the last (sampled but never
-/// fed back through the model). The single formula behind the engine's
-/// admission charge and the CLI's single-session budget check.
+/// The KV bytes one request holds for its whole active lifetime in
+/// contiguous mode: the prompt plus every generated token except the
+/// last (sampled but never fed back through the model). The single
+/// formula behind the contiguous admission charge and the CLI's
+/// single-session budget check; in paged mode the analogue is
+/// `PageLayout::session_max_bytes` over the same position count.
 pub fn request_cache_bytes(
     cfg: &crate::model::ModelConfig,
     kv_levels: f32,
@@ -65,14 +84,34 @@ pub struct GenResult {
 /// module docs).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineEvent {
-    /// A request was admitted: its cache lease is now charged.
+    /// A request was admitted; `cache_bytes` is its full-lifetime
+    /// reservation (contiguous) or its maximum marginal page bytes
+    /// (paged — shared prefix pages excluded).
     Admitted { id: usize, prompt: usize, cache_bytes: u64 },
     /// A request can never fit the budget and was failed outright.
     Rejected { id: usize, need: u64, budget: u64 },
-    /// One lock-step advance of all active sessions.
+    /// One lock-step advance; `active` counts the sessions that stepped.
     StepBatch { step: usize, active: usize },
-    /// A session finished and released its cache lease.
+    /// A session finished and released its cache bytes.
     Retired { id: usize, generated: usize },
+}
+
+/// Paged-KV engine mode (see `serve::pager` for the machinery).
+#[derive(Clone, Copy, Debug)]
+pub struct PagedConfig {
+    /// Positions per page.
+    pub page_positions: usize,
+    /// `true`: evict cold pages to a temp spill file under budget
+    /// pressure (admission checks feasibility only). `false`: keep all
+    /// pages resident and admit conservatively against the total
+    /// commitment instead.
+    pub spill: bool,
+}
+
+impl Default for PagedConfig {
+    fn default() -> Self {
+        PagedConfig { page_positions: 16, spill: false }
+    }
 }
 
 /// Engine knobs.
@@ -90,6 +129,8 @@ pub struct EngineConfig {
     pub budget: Option<u64>,
     /// Cap on concurrent sessions (0 = bounded by the budget only).
     pub max_sessions: usize,
+    /// Paged KV cache mode (None = contiguous per-session caches).
+    pub paged: Option<PagedConfig>,
 }
 
 impl Default for EngineConfig {
@@ -101,6 +142,7 @@ impl Default for EngineConfig {
             workers: 0,
             budget: None,
             max_sessions: 0,
+            paged: None,
         }
     }
 }
@@ -114,6 +156,15 @@ struct Active {
     generated: Vec<i32>,
     max_new: usize,
     last: i32,
+    /// Whether the prompt (suffix) has been prefilled yet.
+    prefilled: bool,
+    /// Engine step this session last advanced in (0 = never) — the
+    /// least-recently-stepped ordering key under paged pressure.
+    last_tick: usize,
+    /// Pager session id in paged mode.
+    sid: Option<u64>,
+    /// Full-lifetime gate lease in contiguous mode (paged sessions are
+    /// charged per page by the pager instead).
     _lease: Option<OwnedLease>,
 }
 
@@ -124,14 +175,20 @@ impl Active {
 
     /// Advance by one token: prefill on first touch (continuous batching
     /// admits mid-flight, so fresh sessions prefill while others step).
+    /// A paged session admitted onto shared prefix pages starts with
+    /// cached positions and prefills only its prompt suffix — the
+    /// chunked-prefill equivalence keeps that bit-identical to a full
+    /// prefill.
     fn advance(&mut self, temperature: f32) {
         if self.done() {
             return;
         }
-        let row: Vec<f32> = if self.session.positions() == 0 {
-            self.session.prefill_last(&self.prompt)
-        } else {
+        let row: Vec<f32> = if self.prefilled {
             self.session.step(self.last)
+        } else {
+            let from = self.session.positions();
+            self.prefilled = true;
+            self.session.prefill_last(&self.prompt[from..])
         };
         let next = sample_logits(&row, temperature, &mut self.rng) as i32;
         self.generated.push(next);
@@ -146,7 +203,7 @@ impl Active {
 ///
 /// ```no_run
 /// use dartquant::model::{ModelConfig, Weights};
-/// use dartquant::serve::{BatchEngine, EngineConfig, GenRequest};
+/// use dartquant::serve::{BatchEngine, EngineConfig, GenRequest, PagedConfig};
 /// use std::sync::Arc;
 /// # fn main() -> anyhow::Result<()> {
 /// let cfg = ModelConfig::builtin("llama2-tiny")?;
@@ -155,6 +212,7 @@ impl Active {
 ///     weights,
 ///     EngineConfig {
 ///         budget: Some(24 << 20), // scaled single-3090 KV budget
+///         paged: Some(PagedConfig::default()), // page-granular charging
 ///         ..EngineConfig::default()
 ///     },
 /// );
@@ -169,20 +227,34 @@ pub struct BatchEngine {
     weights: Arc<Weights>,
     cfg: EngineConfig,
     gate: Arc<MemoryGate>,
+    pager: Option<Arc<Pager>>,
     pending: VecDeque<(usize, GenRequest)>,
     active: Vec<Active>,
     finished: Vec<GenResult>,
     events: Vec<EngineEvent>,
     next_id: usize,
     steps: usize,
+    peak_active: usize,
 }
 
 impl BatchEngine {
     /// An engine over shared weights; the admission gate is sized by
-    /// `cfg.budget`.
+    /// `cfg.budget`, and `cfg.paged` mounts a [`Pager`] on that same
+    /// gate.
     pub fn new(weights: Arc<Weights>, cfg: EngineConfig) -> BatchEngine {
+        let gate = Arc::new(MemoryGate::new(cfg.budget));
+        let pager = cfg.paged.map(|p| {
+            Arc::new(Pager::new(
+                &weights.cfg,
+                cfg.opt.kv_levels,
+                p.page_positions,
+                p.spill,
+                Arc::clone(&gate),
+            ))
+        });
         BatchEngine {
-            gate: Arc::new(MemoryGate::new(cfg.budget)),
+            gate,
+            pager,
             weights,
             cfg,
             pending: VecDeque::new(),
@@ -191,12 +263,13 @@ impl BatchEngine {
             events: Vec::new(),
             next_id: 0,
             steps: 0,
+            peak_active: 0,
         }
     }
 
     /// Queue a request; returns its id. Empty prompts fail immediately;
-    /// `max_new == 0` succeeds trivially without ever holding a cache
-    /// lease or occupying a step slot.
+    /// `max_new == 0` succeeds trivially without ever holding cache
+    /// bytes or occupying a step slot.
     pub fn submit(&mut self, req: GenRequest) -> usize {
         let id = self.next_id;
         self.next_id += 1;
@@ -220,7 +293,8 @@ impl BatchEngine {
         id
     }
 
-    /// The KV bytes request `req` will hold while active.
+    /// The KV bytes request `req` will hold while active (contiguous
+    /// mode).
     fn cache_bytes(&self, req: &GenRequest) -> u64 {
         request_cache_bytes(
             &self.weights.cfg,
@@ -230,56 +304,149 @@ impl BatchEngine {
         )
     }
 
-    /// Admit pending requests (FIFO) while their cache bytes fit the gate
-    /// and the session cap allows.
+    fn mk_active(
+        &self,
+        id: usize,
+        req: GenRequest,
+        sid: Option<u64>,
+        lease: Option<OwnedLease>,
+    ) -> Active {
+        let session = match (&self.pager, sid) {
+            (Some(pager), Some(sid)) => DecodeSession::with_cache(
+                Arc::clone(&self.weights),
+                self.cfg.opt,
+                KvCache::paged(pager, sid),
+            ),
+            _ => DecodeSession::new(Arc::clone(&self.weights), self.cfg.opt),
+        };
+        Active {
+            id,
+            session,
+            rng: Pcg64::new(self.cfg.seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_new: req.max_new,
+            last: 0,
+            prefilled: false,
+            last_tick: 0,
+            sid,
+            _lease: lease,
+        }
+    }
+
+    /// Admit pending requests (FIFO) while the cache-mode's admission
+    /// test passes and the session cap allows. Contiguous mode charges
+    /// the full-lifetime bytes up front; paged mode asks the pager,
+    /// which maps shared prefix pages and charges growth per step.
     fn admit_pending(&mut self) {
         while let Some((_, req)) = self.pending.front() {
             if self.cfg.max_sessions > 0 && self.active.len() >= self.cfg.max_sessions {
                 break;
             }
-            let bytes = self.cache_bytes(req);
-            match MemoryGate::try_admit_owned(&self.gate, bytes) {
-                Err(e) => {
-                    let (id, req) = self.pending.pop_front().expect("front exists");
-                    self.events.push(EngineEvent::Rejected {
-                        id,
-                        need: e.need,
-                        budget: e.budget,
-                    });
-                    self.finished.push(GenResult {
-                        id,
-                        prompt_len: req.prompt.len(),
-                        tokens: Vec::new(),
-                        error: Some(e.to_string()),
-                    });
+            if let Some(pager) = &self.pager {
+                // Prompt + every generated token except the last — the
+                // same lifetime positions contiguous mode reserves.
+                let target = req.prompt.len() + req.max_new - 1;
+                match pager.admit(&req.prompt, target.max(req.prompt.len())) {
+                    Err(e) => {
+                        let (id, req) = self.pending.pop_front().expect("front exists");
+                        self.events.push(EngineEvent::Rejected {
+                            id,
+                            need: e.need,
+                            budget: e.budget,
+                        });
+                        self.finished.push(GenResult {
+                            id,
+                            prompt_len: req.prompt.len(),
+                            tokens: Vec::new(),
+                            error: Some(e.to_string()),
+                        });
+                    }
+                    Ok(None) => break, // FIFO: wait for retirements to free pages
+                    Ok(Some(sid)) => {
+                        let (id, req) = self.pending.pop_front().expect("front exists");
+                        self.events.push(EngineEvent::Admitted {
+                            id,
+                            prompt: req.prompt.len(),
+                            cache_bytes: pager.session_marginal_max_bytes(sid),
+                        });
+                        let active = self.mk_active(id, req, Some(sid), None);
+                        self.active.push(active);
+                    }
                 }
-                Ok(None) => break, // FIFO: wait for a retirement to free bytes
-                Ok(Some(lease)) => {
-                    let (id, req) = self.pending.pop_front().expect("front exists");
-                    self.events.push(EngineEvent::Admitted {
-                        id,
-                        prompt: req.prompt.len(),
-                        cache_bytes: bytes,
-                    });
-                    self.active.push(Active {
-                        id,
-                        session: DecodeSession::new(Arc::clone(&self.weights), self.cfg.opt),
-                        rng: Pcg64::new(
-                            self.cfg.seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-                        ),
-                        prompt: req.prompt,
-                        generated: Vec::new(),
-                        max_new: req.max_new,
-                        last: 0,
-                        _lease: lease,
-                    });
+            } else {
+                let bytes = self.cache_bytes(req);
+                match MemoryGate::try_admit_owned(&self.gate, bytes) {
+                    Err(e) => {
+                        let (id, req) = self.pending.pop_front().expect("front exists");
+                        self.events.push(EngineEvent::Rejected {
+                            id,
+                            need: e.need,
+                            budget: e.budget,
+                        });
+                        self.finished.push(GenResult {
+                            id,
+                            prompt_len: req.prompt.len(),
+                            tokens: Vec::new(),
+                            error: Some(e.to_string()),
+                        });
+                    }
+                    Ok(None) => break, // FIFO: wait for a retirement to free bytes
+                    Ok(Some(lease)) => {
+                        let (id, req) = self.pending.pop_front().expect("front exists");
+                        self.events.push(EngineEvent::Admitted {
+                            id,
+                            prompt: req.prompt.len(),
+                            cache_bytes: bytes,
+                        });
+                        let active = self.mk_active(id, req, None, Some(lease));
+                        self.active.push(active);
+                    }
                 }
             }
         }
+        self.peak_active = self.peak_active.max(self.active.len());
     }
 
-    /// One engine tick: admit → advance every active session one token in
-    /// parallel → retire finished sessions. Returns whether work remains.
+    /// Pick this step's sessions. Contiguous mode advances everyone; in
+    /// paged mode sessions are prepared least-recently-stepped first
+    /// (ties to the lower id) and selection stops at the first whose
+    /// working set cannot be made resident — already-selected sessions
+    /// are protected from eviction, and the deferred session is the
+    /// oldest candidate next step, so no session starves.
+    fn select_step(&mut self) -> anyhow::Result<Vec<usize>> {
+        let Some(pager) = &self.pager else {
+            return Ok((0..self.active.len()).collect());
+        };
+        let mut order: Vec<usize> = (0..self.active.len()).collect();
+        order.sort_by_key(|&i| (self.active[i].last_tick, self.active[i].id));
+        let mut prot: Vec<u64> = Vec::with_capacity(order.len());
+        let mut sel = Vec::with_capacity(order.len());
+        for i in order {
+            let a = &self.active[i];
+            let sid = a.sid.expect("paged session has a pager id");
+            let new_positions =
+                if a.prefilled { 1 } else { a.prompt.len() - a.session.positions() };
+            prot.push(sid);
+            if pager.prepare_step(sid, new_positions, &prot)? {
+                sel.push(i);
+            } else {
+                break; // strict stop: keep the step's working set coherent
+            }
+        }
+        if sel.is_empty() {
+            // Unreachable by construction — the first candidate protects
+            // only itself and its working set passed admission — but a
+            // wedged scheduler must fail loudly, not spin.
+            anyhow::bail!("paged scheduling made no progress: no session fits the budget");
+        }
+        sel.sort_unstable();
+        Ok(sel)
+    }
+
+    /// One engine tick: admit → advance the selected sessions one token
+    /// in parallel → retire finished sessions. Returns whether work
+    /// remains.
     pub fn step(&mut self) -> anyhow::Result<bool> {
         self.admit_pending();
         if self.active.is_empty() {
@@ -288,13 +455,24 @@ impl BatchEngine {
             // can ever fit), so the queue is empty too.
             return Ok(false);
         }
+        let sel = self.select_step()?;
+        // Sessions prefilling this step: register their prompt pages in
+        // the prefix index after the join, when they are content-complete.
+        let newly_prefilled: Vec<usize> =
+            sel.iter().copied().filter(|&i| !self.active[i].prefilled).collect();
         let workers = if self.cfg.workers == 0 {
             ThreadPool::default_parallelism()
         } else {
             self.cfg.workers
         };
         let temperature = self.cfg.temperature;
-        let cells: Vec<Mutex<&mut Active>> = self.active.iter_mut().map(Mutex::new).collect();
+        let cells: Vec<Mutex<&mut Active>> = self
+            .active
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| sel.binary_search(i).is_ok())
+            .map(|(_, a)| Mutex::new(a))
+            .collect();
         scoped_try_map(workers, &cells, |_, cell| {
             lock_or_poisoned(cell).advance(temperature);
         })
@@ -303,8 +481,18 @@ impl BatchEngine {
         })?;
         drop(cells);
         self.steps += 1;
-        self.events.push(EngineEvent::StepBatch { step: self.steps, active: self.active.len() });
-        // Retire in admission order; dropping an Active releases its lease.
+        self.events.push(EngineEvent::StepBatch { step: self.steps, active: sel.len() });
+        for &i in &sel {
+            self.active[i].last_tick = self.steps;
+        }
+        if let Some(pager) = &self.pager {
+            for &i in &newly_prefilled {
+                let a = &self.active[i];
+                pager.register_prefix(a.sid.expect("paged session"), &a.prompt);
+            }
+        }
+        // Retire in admission order; dropping an Active releases its
+        // lease (contiguous) or its pages (paged, via the PagedKv drop).
         let mut still = Vec::with_capacity(self.active.len());
         for a in self.active.drain(..) {
             if a.done() {
@@ -336,6 +524,31 @@ impl BatchEngine {
         &self.events
     }
 
+    /// Scheduling- and layout-independent projection of the event log:
+    /// per-session lifecycle facts (admitted/rejected/retired), sorted by
+    /// id, with byte counts and step cadence dropped — those legitimately
+    /// differ between cache modes and page sizes while the projection
+    /// must not. The cross-mode equality gate in `rust/tests/serving.rs`
+    /// compares exactly this.
+    pub fn canonical_events(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                EngineEvent::Admitted { id, prompt, .. } => {
+                    Some(format!("{id:08} admitted prompt={prompt}"))
+                }
+                EngineEvent::Rejected { id, .. } => Some(format!("{id:08} rejected")),
+                EngineEvent::Retired { id, generated } => {
+                    Some(format!("{id:08} retired generated={generated}"))
+                }
+                EngineEvent::StepBatch { .. } => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
     /// Results so far (complete and id-ordered after [`BatchEngine::run`]).
     pub fn results(&self) -> &[GenResult] {
         &self.finished
@@ -346,15 +559,34 @@ impl BatchEngine {
         self.steps
     }
 
-    /// Currently-resident KV bytes across active sessions.
+    /// Currently-mapped KV bytes summed across active sessions (in paged
+    /// mode shared pages count toward each mapper; the gate charge is
+    /// [`BatchEngine::pager`]'s `charged_bytes`, which counts them once).
     pub fn active_cache_bytes(&self) -> u64 {
         self.active.iter().map(|a| a.session.cache_nbytes()).sum()
     }
 
-    /// High-water mark of admitted cache bytes (≤ the budget by the gate
-    /// invariant).
+    /// High-water mark of gate-charged cache bytes (≤ the budget by the
+    /// gate invariant, in both cache modes).
     pub fn peak_cache_bytes(&self) -> u64 {
         self.gate.peak_bytes()
+    }
+
+    /// Most sessions concurrently active after any admission pass — the
+    /// numerator of the serve bench's sessions/GB headline.
+    pub fn peak_concurrent(&self) -> usize {
+        self.peak_active
+    }
+
+    /// The pager, in paged mode.
+    pub fn pager(&self) -> Option<&Arc<Pager>> {
+        self.pager.as_ref()
+    }
+
+    /// Pager counters (prefix hits, spills, faults, forks), in paged
+    /// mode.
+    pub fn pager_stats(&self) -> Option<PagerStats> {
+        self.pager.as_ref().map(|p| p.stats())
     }
 }
 
@@ -367,6 +599,12 @@ mod tests {
         let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
         let w = Arc::new(Weights::default_synthetic(&cfg, 1));
         BatchEngine::new(w, EngineConfig { workers, budget, ..EngineConfig::default() })
+    }
+
+    fn paged_engine(budget: Option<u64>, paged: PagedConfig) -> BatchEngine {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 1));
+        BatchEngine::new(w, EngineConfig { budget, paged: Some(paged), ..EngineConfig::default() })
     }
 
     #[test]
@@ -413,5 +651,43 @@ mod tests {
         // peak stayed charged and is visible
         assert!(e.peak_cache_bytes() > 0);
         assert_eq!(e.active_cache_bytes(), 0, "all sessions retired");
+    }
+
+    #[test]
+    fn paged_mode_decodes_the_same_tokens_as_contiguous() {
+        let reqs = |e: &mut BatchEngine| {
+            e.submit(GenRequest { prompt: vec![3, 1, 4, 1, 5], max_new: 6 });
+            e.submit(GenRequest { prompt: vec![2, 7], max_new: 3 });
+        };
+        let mut oracle = engine(None, 1);
+        reqs(&mut oracle);
+        let want = oracle.run().unwrap().to_vec();
+        for page_positions in [1, 3, 16] {
+            let mut e = paged_engine(None, PagedConfig { page_positions, spill: false });
+            reqs(&mut e);
+            let got = e.run().unwrap().to_vec();
+            assert_eq!(got, want, "page size {page_positions} diverged");
+            assert_eq!(e.canonical_events(), oracle.canonical_events());
+        }
+    }
+
+    #[test]
+    fn paged_prefix_sharing_kicks_in_for_repeated_prompts() {
+        let mut e = paged_engine(None, PagedConfig { page_positions: 2, spill: false });
+        let prompt = vec![5i32, 6, 7, 8, 9];
+        // Step once so session 0 prefills and registers its prompt pages
+        // *before* session 1 is admitted — prefix entries only live as
+        // long as the pages they point at.
+        e.submit(GenRequest { prompt: prompt.clone(), max_new: 8 });
+        e.step().unwrap();
+        e.submit(GenRequest { prompt, max_new: 2 });
+        let r = e.run().unwrap().to_vec();
+        // Greedy decode of the same prompt: session 1's shared-prefix
+        // suffix prefill must land on session 0's exact token stream.
+        assert_eq!(r[1].tokens[..], r[0].tokens[..2]);
+        let stats = e.pager_stats().unwrap();
+        assert_eq!(stats.prefix_pages_hit, 2, "(5-1)/2 full pages mapped from the index");
+        assert_eq!(stats.cow_forks, 0, "append-only writes never fork");
+        assert_eq!(e.pager().unwrap().charged_bytes(), 0, "all pages released");
     }
 }

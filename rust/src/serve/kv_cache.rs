@@ -1,29 +1,46 @@
 //! Session-level KV-cache aggregation and byte accounting.
 //!
 //! The per-layer storage primitive is [`model::kv::LayerKv`] (it is part
-//! of the forward contract — `model::forward::block_step` takes one);
-//! this module aggregates one per layer into a session's [`KvCache`] and
-//! owns the byte accounting the serving engine charges against the
-//! `coordinator::budget` gate: [`KvCache::nbytes`] reports resident
-//! bytes and [`KvCache::estimate_nbytes`] predicts them **exactly** for
-//! a given position count (property-tested in `model::kv` and
+//! of the forward contract — `model::forward::block_step` takes any
+//! [`KvSlot`]); this module aggregates a session's layers into a
+//! [`KvCache`] with two interchangeable backends:
+//!
+//! * **contiguous** — one owned `LayerKv` per layer; full-lifetime byte
+//!   accounting via [`KvCache::estimate_nbytes`]. The fallback path and
+//!   the parity oracle for the paged backend.
+//! * **paged** — a [`PagedKv`] handle mapping fixed-size pages owned by
+//!   `serve::pager::Pager` (prefix sharing, eviction/spill); bytes are
+//!   charged page-granularly as the session grows. Bit-identical token
+//!   streams to the contiguous backend at every page size — the gate in
+//!   `rust/tests/serving.rs`.
+//!
+//! [`KvCache::nbytes`] reports what the session maps right now (exact
+//! in both backends — property-tested in `model::kv` and
 //! `rust/tests/serving.rs`). Layout and the bit-identity contract are
 //! documented on [`LayerKv`] and in `docs/SERVING.md`.
 //!
 //! [`model::kv::LayerKv`]: crate::model::kv::LayerKv
 
+use super::pager::{PagedKv, Pager};
 use crate::model::ModelConfig;
+use std::sync::Arc;
 
-pub use crate::model::kv::LayerKv;
+pub use crate::model::kv::{KvSlot, LayerKv};
 
-/// All layers' KV state for one decode session.
+enum Backend {
+    Contiguous(Vec<LayerKv>),
+    Paged(PagedKv),
+}
+
+/// All layers' KV state for one decode session (contiguous or paged —
+/// see the module docs).
 ///
-/// Byte accounting is exact by contract — what a session *will* cost is
-/// known before it is admitted:
+/// Contiguous byte accounting is exact by contract — what a session
+/// *will* cost is known before it is admitted:
 ///
 /// ```
 /// use dartquant::model::ModelConfig;
-/// use dartquant::serve::KvCache;
+/// use dartquant::serve::{KvCache, KvSlot};
 /// # fn main() -> anyhow::Result<()> {
 /// let cfg = ModelConfig::builtin("llama2-tiny")?;
 /// let mut cache = KvCache::new(&cfg, 16.0, true); // 4-bit KV codes
@@ -35,39 +52,56 @@ pub use crate::model::kv::LayerKv;
 /// assert_eq!(cache.nbytes(), KvCache::estimate_nbytes(&cfg, 16.0, 5, true));
 /// # Ok(()) }
 /// ```
-#[derive(Clone, Debug)]
 pub struct KvCache {
-    layers: Vec<LayerKv>,
+    backend: Backend,
 }
 
 impl KvCache {
-    /// Fresh empty cache for `cfg` at `kv_levels` (see [`LayerKv::new`]
-    /// for `compact`).
+    /// Fresh empty contiguous cache for `cfg` at `kv_levels` (see
+    /// [`LayerKv::new`] for `compact`).
     pub fn new(cfg: &ModelConfig, kv_levels: f32, compact: bool) -> KvCache {
         KvCache {
-            layers: (0..cfg.n_layers)
-                .map(|_| LayerKv::for_model(cfg, kv_levels, compact))
-                .collect(),
+            backend: Backend::Contiguous(
+                (0..cfg.n_layers).map(|_| LayerKv::for_model(cfg, kv_levels, compact)).collect(),
+            ),
         }
     }
 
-    /// Layer `l`'s cache.
-    pub fn layer_mut(&mut self, l: usize) -> &mut LayerKv {
-        &mut self.layers[l]
+    /// A paged cache over pager session `sid` (created by
+    /// `Pager::admit`); dropping it releases the session's pages.
+    pub fn paged(pager: &Arc<Pager>, sid: u64) -> KvCache {
+        KvCache { backend: Backend::Paged(PagedKv::new(pager, sid)) }
+    }
+
+    /// Layer `l`'s cache slot — what `block_step` writes and reads.
+    pub fn layer_mut(&mut self, l: usize) -> &mut dyn KvSlot {
+        match &mut self.backend {
+            Backend::Contiguous(layers) => &mut layers[l],
+            Backend::Paged(kv) => kv.layer_mut(l),
+        }
     }
 
     /// Cached positions (identical across layers by construction).
     pub fn positions(&self) -> usize {
-        self.layers.first().map(|l| l.positions()).unwrap_or(0)
+        match &self.backend {
+            Backend::Contiguous(layers) => layers.first().map(|l| l.positions()).unwrap_or(0),
+            Backend::Paged(kv) => kv.positions(),
+        }
     }
 
-    /// Total resident cache bytes across layers.
+    /// Bytes this session maps: summed row bytes (contiguous) or mapped
+    /// pages × page bytes (paged; shared pages count toward each mapper
+    /// here but only once against the gate).
     pub fn nbytes(&self) -> u64 {
-        self.layers.iter().map(|l| l.nbytes()).sum()
+        match &self.backend {
+            Backend::Contiguous(layers) => layers.iter().map(|l| l.nbytes()).sum(),
+            Backend::Paged(kv) => kv.nbytes(),
+        }
     }
 
-    /// Exact byte cost of caching `positions` positions for `cfg` — what
-    /// the serving engine charges the memory gate per session.
+    /// Exact byte cost of caching `positions` positions contiguously for
+    /// `cfg` — what the serving engine charges the memory gate per
+    /// session in contiguous mode.
     pub fn estimate_nbytes(
         cfg: &ModelConfig,
         kv_levels: f32,
@@ -101,5 +135,31 @@ mod tests {
         }
         assert_eq!(fp.nbytes(), KvCache::estimate_nbytes(&cfg, 65536.0, 3, true));
         assert!(fp.nbytes() > cache.nbytes() / 7 * 3, "f32 rows outweigh codes");
+    }
+
+    #[test]
+    fn paged_backend_reports_page_granular_bytes() {
+        use crate::coordinator::budget::MemoryGate;
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let pager =
+            Arc::new(Pager::new(&cfg, 16.0, 4, false, Arc::new(MemoryGate::new(None))));
+        let sid = pager.admit(&[1, 2, 3], 6).unwrap().unwrap();
+        let mut cache = KvCache::paged(&pager, sid);
+        assert_eq!(cache.positions(), 0);
+        assert!(pager.prepare_step(sid, 3, &[sid]).unwrap());
+        for l in 0..cfg.n_layers {
+            cache.layer_mut(l).extend(3);
+        }
+        assert_eq!(cache.positions(), 3);
+        // 3 positions at P=4 → one (partially filled) page per layer,
+        // charged at full capacity.
+        assert_eq!(
+            cache.nbytes(),
+            cfg.n_layers as u64 * pager.layout().page_bytes(),
+            "page-granular accounting"
+        );
+        assert_eq!(cache.nbytes(), pager.charged_bytes());
+        drop(cache);
+        assert_eq!(pager.charged_bytes(), 0, "dropping the cache releases the session");
     }
 }

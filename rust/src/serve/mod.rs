@@ -1,29 +1,43 @@
-//! Autoregressive serving: KV-cached incremental decode and continuous
-//! batching on top of the shared `model::forward::block_step` block body.
+//! Autoregressive serving: KV-cached incremental decode, paged KV
+//! storage with prefix sharing, and continuous batching on top of the
+//! shared `model::forward::block_step` block body.
 //!
-//! Three pieces (see `docs/SERVING.md` for the contracts):
+//! Four pieces (see `docs/SERVING.md` for the contracts):
 //!
-//! * [`kv_cache`] — [`KvCache`]: one `model::kv::LayerKv` per layer
-//!   (fp32 or u8 codes at ≤ 8-bit KV settings, bit-identical to the
-//!   full-sequence oracle's fake-quant values either way) plus the
-//!   exact byte accounting the engine charges the budget gate.
+//! * [`kv_cache`] — [`KvCache`]: a session's per-layer KV state (fp32 or
+//!   u8 codes at ≤ 8-bit KV settings, bit-identical to the full-sequence
+//!   oracle's fake-quant values either way) with two backends —
+//!   contiguous `model::kv::LayerKv`s (the parity oracle) or paged
+//!   handles — plus the exact byte accounting the engine charges the
+//!   budget gate.
+//! * [`pager`] — [`Pager`]: fixed-size KV pages behind a free list,
+//!   refcounted copy-on-write prefix sharing (identical prompt prefixes
+//!   map the same prefill pages), and budget-gated LRU eviction to a
+//!   temp spill file, faulting back bit-identically.
 //! * [`session`] — [`DecodeSession`]: prefill once, then O(1)-per-token
 //!   steps (attention stays O(prefix); every full-sequence recompute the
 //!   pre-serving code did was O(prefix²)).
 //! * [`engine`] — [`BatchEngine`]: continuous batching with admission
-//!   charged against the `coordinator::budget` gate and per-session
-//!   seeded sampling, deterministic at any worker count.
+//!   charged against the `coordinator::budget` gate — full-lifetime
+//!   reservation (contiguous) or page-granular growth (paged) — and
+//!   per-session seeded sampling, deterministic at any worker count,
+//!   page size, and eviction pressure.
 //!
 //! CLI entry points: `dartquant generate`, `dartquant serve-bench`;
-//! throughput numbers come from the `perf_decode` bench. Parity with the
-//! full-sequence forward is enforced by `rust/tests/serving.rs`.
+//! throughput numbers come from the `perf_decode` and `perf_serve`
+//! benches. Parity with the full-sequence forward and the
+//! paged-vs-contiguous bit-identity gate are enforced by
+//! `rust/tests/serving.rs`.
 
 pub mod engine;
 pub mod kv_cache;
+pub mod pager;
 pub mod session;
 
 pub use engine::{
     request_cache_bytes, BatchEngine, EngineConfig, EngineEvent, GenRequest, GenResult,
+    PagedConfig,
 };
-pub use kv_cache::{KvCache, LayerKv};
+pub use kv_cache::{KvCache, KvSlot, LayerKv};
+pub use pager::{PageLayout, PagedKv, Pager, PagerStats};
 pub use session::{sample_logits, DecodeSession};

@@ -1,0 +1,1068 @@
+//! Paged KV storage: fixed-size pages, refcounted copy-on-write prefix
+//! sharing, and budget-gated eviction to a spill file.
+//!
+//! A **page** holds `page_positions` positions × one layer's K/V rows in
+//! the same [`RowStore`] layout the contiguous cache uses, so every row
+//! a page serves is bit-identical to what `model::kv::LayerKv` would
+//! have stored. The [`Pager`] owns all pages behind one metadata lock:
+//!
+//! * a **free list** recycles page slots LIFO (engine-thread-only
+//!   mutation keeps it deterministic);
+//! * **prefix sharing** — after a session prefills, its *full* prompt
+//!   pages are registered under the prompt-prefix tokens; a later
+//!   session admitted with the same prefix maps those pages read-only
+//!   (refcount + 1) and prefills only its suffix. Sharing whole pages
+//!   only (and always leaving ≥ 1 suffix token to prefill) means shared
+//!   pages are content-complete and never re-written, which is what
+//!   makes the skipped prefill bit-exact — the chunked-prefill
+//!   equivalence `rust/tests/serving.rs` already proves;
+//! * **copy-on-write** — a write into a page with `refs > 1` is a
+//!   contract violation caught by an assert; `prepare_step` forks such
+//!   pages (fresh slot, deep copy, refcount swap) *before* the step, so
+//!   worker threads only ever write exclusively-owned pages;
+//! * **eviction/spill** — under budget pressure (`spill = true`) the
+//!   least-recently-prepared unprotected resident page is serialized to
+//!   a temp spill file ([`RowStore::to_bytes`]) and its `MemoryGate`
+//!   lease released; `prepare_step` faults a session's spilled pages
+//!   back in ([`RowStore::from_bytes`]) bit-identically before the
+//!   session advances.
+//!
+//! **Determinism.** All metadata mutation (allocate, free, spill, fault,
+//! fork, refcounts, the prefix index) happens on the engine thread, in
+//! admission/scheduling order; worker threads only read shared pages and
+//! write pages they own exclusively. Recency is a logical tick (one per
+//! [`Pager::prepare_step`] call), never wallclock. Maps are `BTreeMap`s.
+//! Together that keeps token streams and event logs identical at any
+//! worker count, page size, and eviction pressure — the gate in
+//! `rust/tests/serving.rs`.
+//!
+//! `docs/SERVING.md` walks through the page layout, the CoW fork rule,
+//! and the eviction/spill lifecycle.
+
+use crate::coordinator::budget::{MemoryGate, OverBudget, OwnedLease};
+use crate::model::kv::{KvSlot, RowStore};
+use crate::model::ModelConfig;
+use crate::tensor::Mat;
+use crate::util::sync::lock_or_poisoned;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Page geometry and storage mode — everything needed to size, allocate,
+/// and (de)serialize one page.
+#[derive(Clone, Debug)]
+pub struct PageLayout {
+    /// Positions per page (`P`).
+    pub page_positions: usize,
+    /// Transformer layers (a session maps `n_layers` page tables).
+    pub n_layers: usize,
+    /// KV heads per layer.
+    pub nkv: usize,
+    /// Values per K/V row.
+    pub hd: usize,
+    /// KV fake-quant levels (decides the `RowStore` layout with
+    /// `compact`).
+    pub levels: f32,
+    /// Compact u8 code storage when the grid fits (the serving default).
+    pub compact: bool,
+}
+
+impl PageLayout {
+    /// The layout for one layer of `cfg` at `kv_levels`, `page_positions`
+    /// positions per page (compact storage, like every serving cache).
+    pub fn for_model(cfg: &ModelConfig, kv_levels: f32, page_positions: usize) -> PageLayout {
+        assert!(page_positions >= 1, "page size must be at least one position");
+        PageLayout {
+            page_positions,
+            n_layers: cfg.n_layers,
+            nkv: cfg.n_kv_heads,
+            hd: cfg.head_dim,
+            levels: kv_levels,
+            compact: true,
+        }
+    }
+
+    /// K/V row slots per page side.
+    pub fn rows(&self) -> usize {
+        self.page_positions * self.nkv
+    }
+
+    /// Bytes of one side (K or V) of a page.
+    fn side_bytes(&self) -> u64 {
+        RowStore::estimate_nbytes(self.rows() as u64, self.hd as u64, self.levels, self.compact)
+    }
+
+    /// Bytes one full page holds (K + V) — the unit every gate lease and
+    /// spill slot is denominated in. Pages are charged at full capacity
+    /// even while partially filled, so accounting never depends on fill
+    /// order.
+    pub fn page_bytes(&self) -> u64 {
+        2 * self.side_bytes()
+    }
+
+    /// Pages needed per layer to hold `positions` positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_positions)
+    }
+
+    /// Bytes a session caching `positions` positions maps across all
+    /// layers — its maximum working set, the paged analogue of
+    /// `KvCache::estimate_nbytes`.
+    pub fn session_max_bytes(&self, positions: usize) -> u64 {
+        self.pages_for(positions) as u64 * self.n_layers as u64 * self.page_bytes()
+    }
+}
+
+/// Counters the serve bench and CLI report (`prefix_pages_*` feed the
+/// prefix-page hit rate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagerStats {
+    /// Prompt pages served from the prefix index instead of prefilled.
+    pub prefix_pages_hit: u64,
+    /// Prompt pages admitted sessions needed in total.
+    pub prefix_pages_total: u64,
+    /// Pages spilled to the temp file under budget pressure.
+    pub spilled_pages: u64,
+    /// Spilled pages faulted back in before a step.
+    pub faulted_pages: u64,
+    /// Copy-on-write forks (defense in depth — unreachable from the
+    /// engine's append-only write pattern, see the module docs).
+    pub cow_forks: u64,
+}
+
+impl PagerStats {
+    /// Fraction of prompt pages served from the prefix index (0 when no
+    /// session was admitted yet).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_pages_total == 0 {
+            0.0
+        } else {
+            self.prefix_pages_hit as f64 / self.prefix_pages_total as f64
+        }
+    }
+}
+
+/// One page's row contents (K side + V side).
+#[derive(Clone, Debug)]
+struct PageData {
+    k: RowStore,
+    v: RowStore,
+}
+
+impl PageData {
+    fn fresh(layout: &PageLayout) -> PageData {
+        PageData {
+            k: RowStore::with_rows(layout.levels, layout.compact, layout.rows(), layout.hd),
+            v: RowStore::with_rows(layout.levels, layout.compact, layout.rows(), layout.hd),
+        }
+    }
+
+    /// Serialize K then V — exactly `layout.page_bytes()` long.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = self.k.to_bytes();
+        out.extend_from_slice(&self.v.to_bytes());
+        out
+    }
+
+    fn from_bytes(layout: &PageLayout, bytes: &[u8]) -> Result<PageData> {
+        let side = layout.side_bytes() as usize;
+        if bytes.len() != 2 * side {
+            bail!("spill page blob is {} bytes, layout needs {}", bytes.len(), 2 * side);
+        }
+        let decode = |b: &[u8]| {
+            RowStore::from_bytes(layout.levels, layout.compact, layout.rows(), layout.hd, b)
+        };
+        Ok(PageData { k: decode(&bytes[..side])?, v: decode(&bytes[side..])? })
+    }
+}
+
+/// Fixed-slot spill file: one slot per page, LIFO free-slot reuse,
+/// removed from disk on drop. All I/O happens on the engine thread
+/// inside `prepare_step`'s `Result` path.
+struct SpillFile {
+    file: std::fs::File,
+    path: std::path::PathBuf,
+    slot_bytes: u64,
+    slots: usize,
+    free: Vec<usize>,
+}
+
+/// Disambiguates spill files of pagers created by the same process.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl SpillFile {
+    fn create(slot_bytes: u64) -> Result<SpillFile> {
+        let path = std::env::temp_dir().join(format!(
+            "dartquant-kv-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("create KV spill file {}", path.display()))?;
+        Ok(SpillFile { file, path, slot_bytes, slots: 0, free: Vec::new() })
+    }
+
+    fn write_page(&mut self, bytes: &[u8]) -> Result<usize> {
+        assert_eq!(bytes.len() as u64, self.slot_bytes, "spill slot size");
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.slots += 1;
+            self.slots - 1
+        });
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.slot_bytes))
+            .and_then(|_| self.file.write_all(bytes))
+            .with_context(|| format!("write KV spill slot {slot} in {}", self.path.display()))?;
+        Ok(slot)
+    }
+
+    fn read_page(&mut self, slot: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; self.slot_bytes as usize];
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.slot_bytes))
+            .and_then(|_| self.file.read_exact(&mut buf))
+            .with_context(|| format!("read KV spill slot {slot} in {}", self.path.display()))?;
+        Ok(buf)
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        self.free.push(slot);
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// One page slot: contents (when resident), its gate lease, and the
+/// sharing/eviction metadata.
+struct PageSlot {
+    /// Sessions mapping this page (0 = on the free list).
+    refs: usize,
+    /// Logical tick of the last `prepare_step` that touched it.
+    last_use: u64,
+    /// Contents — `None` while spilled. Behind its own mutex so workers
+    /// of different sessions never serialize on the metadata lock while
+    /// reading/writing rows.
+    data: Option<Arc<Mutex<PageData>>>,
+    /// Gate lease held while resident.
+    lease: Option<OwnedLease>,
+    /// Spill-file slot while spilled.
+    spill_slot: Option<usize>,
+}
+
+/// Per-session page tables and position counters.
+struct SessionState {
+    /// `[layer][page index] → slot` — uniform length across layers
+    /// between steps (pages are allocated for every layer up front in
+    /// `prepare_step`).
+    tables: Vec<Vec<usize>>,
+    /// Cached positions per layer (layers advance in sequence inside a
+    /// step; equal between steps).
+    positions: Vec<usize>,
+    /// Most positions this session will ever cache (prompt + max_new - 1)
+    /// — the admission commitment.
+    target: usize,
+    /// Positions served by shared prefix pages at admission.
+    shared_positions: usize,
+}
+
+impl SessionState {
+    fn mapped_pages(&self) -> usize {
+        self.tables.first().map(|t| t.len()).unwrap_or(0)
+    }
+}
+
+/// Everything behind the metadata lock.
+struct PagerState {
+    slots: Vec<PageSlot>,
+    free: Vec<usize>,
+    sessions: BTreeMap<u64, SessionState>,
+    next_sid: u64,
+    /// Prompt-prefix tokens (a whole number of pages) → per-layer page
+    /// slots. Weak: holds no refcounts; entries are dropped when a
+    /// member page is freed.
+    prefix_index: BTreeMap<Vec<i32>, Vec<Vec<usize>>>,
+    spill: Option<SpillFile>,
+    /// Logical clock: + 1 per `prepare_step` call (engine thread), the
+    /// only recency source — wallclock never enters scheduling.
+    tick: u64,
+    stats: PagerStats,
+}
+
+/// The paged KV allocator (module docs). One per `BatchEngine` in paged
+/// mode; sessions hold it through [`PagedKv`] handles.
+pub struct Pager {
+    layout: PageLayout,
+    gate: Arc<MemoryGate>,
+    spill_enabled: bool,
+    state: Mutex<PagerState>,
+}
+
+/// Charge one page against the gate; by the pager's admission invariants
+/// the lease must be grantable, so both failure shapes are internal
+/// errors, surfaced with context instead of unwrapped.
+fn charge_page(gate: &Arc<MemoryGate>, bytes: u64) -> Result<OwnedLease> {
+    match MemoryGate::try_admit_owned(gate, bytes) {
+        Ok(Some(lease)) => Ok(lease),
+        Ok(None) => bail!(
+            "pager admission invariant violated: no headroom for a {bytes}-byte page \
+             (commitment accounting or eviction should have guaranteed it)"
+        ),
+        Err(e) => Err(e).context("pager page charge"),
+    }
+}
+
+/// Allocate a fresh zeroed resident page (free-list LIFO, else a new
+/// slot); refcount starts at 1.
+fn alloc_page(layout: &PageLayout, gate: &Arc<MemoryGate>, st: &mut PagerState) -> Result<usize> {
+    let lease = charge_page(gate, layout.page_bytes())?;
+    let slot = PageSlot {
+        refs: 1,
+        last_use: st.tick,
+        data: Some(Arc::new(Mutex::new(PageData::fresh(layout)))),
+        lease: Some(lease),
+        spill_slot: None,
+    };
+    match st.free.pop() {
+        Some(i) => {
+            st.slots[i] = slot;
+            Ok(i)
+        }
+        None => {
+            st.slots.push(slot);
+            Ok(st.slots.len() - 1)
+        }
+    }
+}
+
+/// Return a refcount-0 page to the free list, releasing its lease and
+/// spill slot.
+fn free_page(st: &mut PagerState, slot: usize) {
+    debug_assert_eq!(st.slots[slot].refs, 0, "freeing a mapped page");
+    st.slots[slot].data = None;
+    st.slots[slot].lease = None;
+    if let Some(s) = st.slots[slot].spill_slot.take() {
+        if let Some(spill) = st.spill.as_mut() {
+            spill.free_slot(s);
+        }
+    }
+    st.free.push(slot);
+}
+
+/// Serialize a resident page to the spill file and release its lease.
+fn spill_page(layout: &PageLayout, st: &mut PagerState, slot: usize) -> Result<()> {
+    let bytes = {
+        let data = st.slots[slot].data.as_ref().expect("spilling a resident page");
+        lock_or_poisoned(data).to_bytes()
+    };
+    if st.spill.is_none() {
+        st.spill = Some(SpillFile::create(layout.page_bytes())?);
+    }
+    let sslot = st.spill.as_mut().expect("spill file just ensured").write_page(&bytes)?;
+    let sl = &mut st.slots[slot];
+    sl.data = None;
+    sl.lease = None; // releases the gate bytes
+    sl.spill_slot = Some(sslot);
+    st.stats.spilled_pages += 1;
+    Ok(())
+}
+
+/// Fault a spilled page back in, bit-identically, re-charging the gate.
+fn fault_page(
+    layout: &PageLayout,
+    gate: &Arc<MemoryGate>,
+    st: &mut PagerState,
+    slot: usize,
+) -> Result<()> {
+    let sslot = st.slots[slot].spill_slot.take().expect("faulting a spilled page");
+    let spill = st.spill.as_mut().expect("spilled pages imply a spill file");
+    let bytes = spill.read_page(sslot)?;
+    spill.free_slot(sslot);
+    let data = PageData::from_bytes(layout, &bytes)?;
+    let lease = charge_page(gate, layout.page_bytes())?;
+    let sl = &mut st.slots[slot];
+    sl.data = Some(Arc::new(Mutex::new(data)));
+    sl.lease = Some(lease);
+    st.stats.faulted_pages += 1;
+    Ok(())
+}
+
+impl Pager {
+    /// A pager for `cfg` at `kv_levels`, `page_positions` positions per
+    /// page, charging every resident page against `gate`. `spill`
+    /// selects the eviction mode: `true` spills cold pages to a temp
+    /// file under pressure; `false` keeps everything resident and makes
+    /// admission conservative instead (virtual commitment accounting),
+    /// so gate charges can never fail mid-flight.
+    pub fn new(
+        cfg: &ModelConfig,
+        kv_levels: f32,
+        page_positions: usize,
+        spill: bool,
+        gate: Arc<MemoryGate>,
+    ) -> Pager {
+        Pager {
+            layout: PageLayout::for_model(cfg, kv_levels, page_positions),
+            gate,
+            spill_enabled: spill,
+            state: Mutex::new(PagerState {
+                slots: Vec::new(),
+                free: Vec::new(),
+                sessions: BTreeMap::new(),
+                next_sid: 0,
+                prefix_index: BTreeMap::new(),
+                spill: None,
+                tick: 0,
+                stats: PagerStats::default(),
+            }),
+        }
+    }
+
+    /// The page geometry.
+    pub fn layout(&self) -> &PageLayout {
+        &self.layout
+    }
+
+    /// The gate resident pages are charged against.
+    pub fn gate(&self) -> &Arc<MemoryGate> {
+        &self.gate
+    }
+
+    /// Bytes the sessions of `st` can still grow by — every future page
+    /// is private (only materialized prefix pages are ever shared), so
+    /// this plus the gate's live bytes bounds what the no-spill mode can
+    /// ever charge.
+    fn future_bytes(&self, st: &PagerState) -> u64 {
+        let pb = self.layout.page_bytes();
+        st.sessions
+            .values()
+            .map(|s| {
+                (self.layout.pages_for(s.target).saturating_sub(s.mapped_pages())) as u64
+                    * self.layout.n_layers as u64
+                    * pb
+            })
+            .sum()
+    }
+
+    /// Admit a session that will cache at most `target` positions
+    /// (prompt + continuation − 1), mapping the longest registered
+    /// full-page prompt prefix read-only. Mirrors
+    /// `MemoryGate::try_admit_owned`: `Ok(Some(session id))` on
+    /// admission, `Ok(None)` to wait (no-spill mode: commitment doesn't
+    /// fit *yet*), `Err` when the session's maximum working set can
+    /// never fit the budget.
+    pub fn admit(&self, prompt: &[i32], target: usize) -> Result<Option<u64>, OverBudget> {
+        assert!(!prompt.is_empty(), "admission needs a prompt");
+        assert!(target >= prompt.len(), "target below prompt length");
+        let p = self.layout.page_positions;
+        let mut st = lock_or_poisoned(&self.state);
+        // Longest registered full-page prefix, always leaving ≥ 1 suffix
+        // token for this session to prefill itself.
+        let max_shared = (prompt.len() - 1) / p;
+        let mut shared = 0;
+        for k in (1..=max_shared).rev() {
+            if st.prefix_index.contains_key(&prompt[..k * p]) {
+                shared = k;
+                break;
+            }
+        }
+        let pb = self.layout.page_bytes();
+        let nl = self.layout.n_layers as u64;
+        let marginal =
+            (self.layout.pages_for(target).saturating_sub(shared)) as u64 * nl * pb;
+        if let Some(b) = self.gate.budget() {
+            let max_ws = self.layout.session_max_bytes(target);
+            if max_ws > b {
+                return Err(OverBudget { need: max_ws, budget: b });
+            }
+            if !self.spill_enabled {
+                // Virtual commitment: live unique page bytes + everyone's
+                // future private growth must stay under budget, so page
+                // charges never fail and nothing ever needs eviction.
+                let live = self.gate.current_bytes();
+                if live + self.future_bytes(&st) + marginal > b {
+                    return Ok(None);
+                }
+            }
+        }
+        let sid = st.next_sid;
+        st.next_sid += 1;
+        let mut tables = vec![Vec::new(); self.layout.n_layers];
+        if shared > 0 {
+            let pages = st.prefix_index[&prompt[..shared * p]].clone();
+            for (table, layer_pages) in tables.iter_mut().zip(&pages) {
+                for &slot in layer_pages {
+                    st.slots[slot].refs += 1;
+                    table.push(slot);
+                }
+            }
+        }
+        st.stats.prefix_pages_hit += shared as u64;
+        st.stats.prefix_pages_total += self.layout.pages_for(prompt.len()) as u64;
+        st.sessions.insert(
+            sid,
+            SessionState {
+                tables,
+                positions: vec![shared * p; self.layout.n_layers],
+                target,
+                shared_positions: shared * p,
+            },
+        );
+        Ok(Some(sid))
+    }
+
+    /// Positions session `sid` inherited from shared prefix pages.
+    pub fn shared_positions(&self, sid: u64) -> usize {
+        lock_or_poisoned(&self.state).sessions[&sid].shared_positions
+    }
+
+    /// The most bytes session `sid` can newly allocate over its lifetime
+    /// (its maximum working set minus the shared pages it mapped at
+    /// admission) — what the engine reports as the session's
+    /// `cache_bytes` in paged mode.
+    pub fn session_marginal_max_bytes(&self, sid: u64) -> u64 {
+        let st = lock_or_poisoned(&self.state);
+        let s = &st.sessions[&sid];
+        let shared_pages = s.shared_positions / self.layout.page_positions;
+        (self.layout.pages_for(s.target).saturating_sub(shared_pages)) as u64
+            * self.layout.n_layers as u64
+            * self.layout.page_bytes()
+    }
+
+    /// Make session `sid` runnable for a step that appends
+    /// `new_positions` positions: fork any shared page the step would
+    /// write (unreachable from the engine's append-only pattern, kept as
+    /// defense in depth), evict cold unprotected pages until the
+    /// session's faults + forks + fresh pages fit the gate, fault its
+    /// spilled pages back in, allocate the fresh pages for every layer,
+    /// and touch everything with the new logical tick.
+    ///
+    /// `protected` lists sessions (including `sid`) whose pages must not
+    /// be evicted — the engine passes the sessions already selected for
+    /// this step. Returns `Ok(false)` when the working set cannot be
+    /// made resident right now (spill mode under pressure): the engine
+    /// stops selecting and the session, now least-recently stepped, goes
+    /// first next step.
+    pub fn prepare_step(&self, sid: u64, new_positions: usize, protected: &[u64]) -> Result<bool> {
+        let mut st = lock_or_poisoned(&self.state);
+        let st = &mut *st;
+        st.tick += 1;
+        let now = st.tick;
+        let p = self.layout.page_positions;
+        let pb = self.layout.page_bytes();
+        let s = st.sessions.get(&sid).context("prepare_step: unknown session")?;
+        let cur = s.positions.first().copied().unwrap_or(0);
+        let have = s.mapped_pages();
+        let need_pages = self.layout.pages_for(cur + new_positions);
+        assert!(need_pages >= have, "session page table ahead of its positions");
+        let fresh_per_layer = need_pages - have;
+        // Shared pages this step would write (CoW fork targets).
+        let first_written = cur / p;
+        let forks: Vec<(usize, usize)> = (0..self.layout.n_layers)
+            .flat_map(|l| {
+                (first_written..have)
+                    .filter(|&pi| st.slots[s.tables[l][pi]].refs > 1)
+                    .map(move |pi| (l, pi))
+            })
+            .collect();
+        // Spilled session pages to fault back in.
+        let faults: Vec<usize> = s
+            .tables
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|&slot| st.slots[slot].data.is_none())
+            .collect();
+        let need_bytes = (forks.len()
+            + faults.len()
+            + fresh_per_layer * self.layout.n_layers) as u64
+            * pb;
+        // Make room under a finite budget.
+        if let Some(b) = self.gate.budget() {
+            let protected_slots: BTreeSet<usize> = protected
+                .iter()
+                .chain(std::iter::once(&sid))
+                .filter_map(|id| st.sessions.get(id))
+                .flat_map(|s| s.tables.iter().flatten().copied())
+                .collect();
+            while b.saturating_sub(self.gate.current_bytes()) < need_bytes {
+                if !self.spill_enabled {
+                    bail!(
+                        "pager commitment invariant violated: session {sid} needs \
+                         {need_bytes} bytes with no headroom and spill disabled"
+                    );
+                }
+                // Deterministic LRU victim: least-recently-prepared
+                // resident page of an unprotected session (ties break to
+                // the lowest slot id).
+                let victim = st
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, sl)| {
+                        sl.refs > 0 && sl.data.is_some() && !protected_slots.contains(i)
+                    })
+                    .min_by_key(|(i, sl)| (sl.last_use, *i))
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(v) => spill_page(&self.layout, st, v)?,
+                    None => return Ok(false), // nothing evictable: defer this session
+                }
+            }
+        }
+        for slot in faults {
+            fault_page(&self.layout, &self.gate, st, slot)?;
+        }
+        for (l, pi) in forks {
+            let fresh = alloc_page(&self.layout, &self.gate, st)?;
+            let old = st.sessions[&sid].tables[l][pi];
+            let copied = {
+                let src = st.slots[old].data.as_ref().expect("fork source faulted in above");
+                lock_or_poisoned(src).clone()
+            };
+            let dst = st.slots[fresh].data.as_ref().expect("fresh page is resident");
+            *lock_or_poisoned(dst) = copied;
+            st.slots[old].refs -= 1;
+            st.sessions.get_mut(&sid).expect("session exists").tables[l][pi] = fresh;
+            st.stats.cow_forks += 1;
+        }
+        for l in 0..self.layout.n_layers {
+            for _ in 0..fresh_per_layer {
+                let slot = alloc_page(&self.layout, &self.gate, st)?;
+                st.sessions.get_mut(&sid).expect("session exists").tables[l].push(slot);
+            }
+        }
+        let touched: Vec<usize> =
+            st.sessions[&sid].tables.iter().flatten().copied().collect();
+        for slot in touched {
+            st.slots[slot].last_use = now;
+        }
+        Ok(true)
+    }
+
+    /// Register session `sid`'s full prompt pages under every whole-page
+    /// prefix of `prompt` (first registration wins — identical prompts
+    /// admitted together register once, deterministically). The engine
+    /// calls this after the step in which the session prefilled, so
+    /// registered pages are content-complete before anyone maps them.
+    pub fn register_prefix(&self, sid: u64, prompt: &[i32]) {
+        let p = self.layout.page_positions;
+        let mut st = lock_or_poisoned(&self.state);
+        let Some(s) = st.sessions.get(&sid) else { return };
+        let avail = s.positions.first().copied().unwrap_or(0).min(prompt.len());
+        let full = (avail / p).min(s.mapped_pages());
+        let tables = s.tables.clone();
+        for k in 1..=full {
+            let key = prompt[..k * p].to_vec();
+            if st.prefix_index.contains_key(&key) {
+                continue;
+            }
+            let pages: Vec<Vec<usize>> = tables.iter().map(|t| t[..k].to_vec()).collect();
+            st.prefix_index.insert(key, pages);
+        }
+    }
+
+    /// Release session `sid`: unmap its pages, free the ones nobody else
+    /// maps, and drop prefix-index entries that referenced a freed page.
+    pub fn release_session(&self, sid: u64) {
+        let mut st = lock_or_poisoned(&self.state);
+        let st = &mut *st;
+        let Some(s) = st.sessions.remove(&sid) else { return };
+        let mut freed = BTreeSet::new();
+        for table in &s.tables {
+            for &slot in table {
+                st.slots[slot].refs -= 1;
+                if st.slots[slot].refs == 0 {
+                    free_page(st, slot);
+                    freed.insert(slot);
+                }
+            }
+        }
+        if !freed.is_empty() {
+            st.prefix_index
+                .retain(|_, pages| !pages.iter().flatten().any(|slot| freed.contains(slot)));
+        }
+    }
+
+    /// Bytes charged against the gate right now — `page_bytes` × unique
+    /// resident pages, by construction (shared pages count once).
+    pub fn charged_bytes(&self) -> u64 {
+        self.gate.current_bytes()
+    }
+
+    /// Unique resident (mapped, in-memory) pages.
+    pub fn resident_pages(&self) -> usize {
+        lock_or_poisoned(&self.state)
+            .slots
+            .iter()
+            .filter(|sl| sl.refs > 0 && sl.data.is_some())
+            .count()
+    }
+
+    /// Pages session `sid` maps (`× page_bytes` = its
+    /// [`PagedKv::nbytes`]), resident or spilled, shared or private.
+    pub fn session_pages(&self, sid: u64) -> usize {
+        let st = lock_or_poisoned(&self.state);
+        st.sessions[&sid].mapped_pages() * self.layout.n_layers
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PagerStats {
+        lock_or_poisoned(&self.state).stats
+    }
+
+    // ---- row operations (the `KvSlot` backing; worker threads call
+    // these during a step, taking the metadata lock only long enough to
+    // resolve a page handle) ----
+
+    fn positions(&self, sid: u64, layer: usize) -> usize {
+        lock_or_poisoned(&self.state).sessions[&sid].positions[layer]
+    }
+
+    fn extend(&self, sid: u64, layer: usize, tn: usize) {
+        let mut st = lock_or_poisoned(&self.state);
+        let s = st.sessions.get_mut(&sid).expect("extend on a live session");
+        let newpos = s.positions[layer] + tn;
+        assert!(
+            self.layout.pages_for(newpos) <= s.tables[layer].len(),
+            "prepare_step must pre-allocate pages before a step extends the cache"
+        );
+        s.positions[layer] = newpos;
+    }
+
+    fn set_row(&self, sid: u64, layer: usize, is_k: bool, pos: usize, head: usize, row: &[f32]) {
+        let p = self.layout.page_positions;
+        let (page, idx) = {
+            let st = lock_or_poisoned(&self.state);
+            let s = &st.sessions[&sid];
+            debug_assert!(pos < s.positions[layer], "kv position out of range");
+            let slot = s.tables[layer][pos / p];
+            let sl = &st.slots[slot];
+            assert_eq!(sl.refs, 1, "copy-on-write violation: write to a shared page");
+            let data = sl.data.as_ref().expect("written page resident (prepare_step)");
+            (Arc::clone(data), (pos % p) * self.layout.nkv + head)
+        };
+        let mut data = lock_or_poisoned(&page);
+        let store = if is_k { &mut data.k } else { &mut data.v };
+        store.set_row(idx, self.layout.hd, row, self.layout.levels);
+    }
+
+    fn head_into(&self, sid: u64, layer: usize, is_k: bool, head: usize, out: &mut Mat) {
+        let p = self.layout.page_positions;
+        let (pages, positions) = {
+            let st = lock_or_poisoned(&self.state);
+            let s = &st.sessions[&sid];
+            let positions = s.positions[layer];
+            let pages: Vec<Arc<Mutex<PageData>>> = s.tables[layer]
+                [..self.layout.pages_for(positions)]
+                .iter()
+                .map(|&slot| {
+                    Arc::clone(
+                        st.slots[slot].data.as_ref().expect("read page resident (prepare_step)"),
+                    )
+                })
+                .collect();
+            (pages, positions)
+        };
+        assert_eq!(out.shape(), (positions, self.layout.hd), "kv scratch shape");
+        for (pi, page) in pages.iter().enumerate() {
+            let data = lock_or_poisoned(page);
+            let store = if is_k { &data.k } else { &data.v };
+            let lo = pi * p;
+            for pos in lo..positions.min(lo + p) {
+                store.decode_row((pos - lo) * self.layout.nkv + head, self.layout.hd, out.row_mut(pos));
+            }
+        }
+    }
+}
+
+/// One layer's paged KV view — the [`KvSlot`] `block_step` drives in
+/// paged mode. Every operation resolves through the pager's page tables,
+/// so the rows live wherever the pager put them.
+pub struct PagedLayerKv {
+    pager: Arc<Pager>,
+    sid: u64,
+    layer: usize,
+}
+
+impl KvSlot for PagedLayerKv {
+    fn positions(&self) -> usize {
+        self.pager.positions(self.sid, self.layer)
+    }
+    fn extend(&mut self, tn: usize) {
+        self.pager.extend(self.sid, self.layer, tn);
+    }
+    fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
+        self.pager.set_row(self.sid, self.layer, true, pos, head, row);
+    }
+    fn set_v(&mut self, pos: usize, head: usize, row: &[f32]) {
+        self.pager.set_row(self.sid, self.layer, false, pos, head, row);
+    }
+    fn k_head_into(&self, head: usize, out: &mut Mat) {
+        self.pager.head_into(self.sid, self.layer, true, head, out);
+    }
+    fn v_head_into(&self, head: usize, out: &mut Mat) {
+        self.pager.head_into(self.sid, self.layer, false, head, out);
+    }
+}
+
+/// A session's handle on its paged KV state: one [`PagedLayerKv`] per
+/// layer plus RAII release — dropping the handle unmaps the session's
+/// pages (freeing unshared ones) on every engine path, error or not.
+pub struct PagedKv {
+    pager: Arc<Pager>,
+    sid: u64,
+    layers: Vec<PagedLayerKv>,
+}
+
+impl PagedKv {
+    /// The handle for pager session `sid` (created by [`Pager::admit`]).
+    pub fn new(pager: &Arc<Pager>, sid: u64) -> PagedKv {
+        let layers = (0..pager.layout().n_layers)
+            .map(|layer| PagedLayerKv { pager: Arc::clone(pager), sid, layer })
+            .collect();
+        PagedKv { pager: Arc::clone(pager), sid, layers }
+    }
+
+    /// The pager session id.
+    pub fn sid(&self) -> u64 {
+        self.sid
+    }
+
+    /// Layer `l`'s slot.
+    pub fn layer_mut(&mut self, l: usize) -> &mut PagedLayerKv {
+        &mut self.layers[l]
+    }
+
+    /// Cached positions (layer 0; identical across layers between steps).
+    pub fn positions(&self) -> usize {
+        self.pager.positions(self.sid, 0)
+    }
+
+    /// Bytes of every page this session maps (full page granularity —
+    /// shared pages count toward each mapper here, but only once against
+    /// the gate; `rust/tests/serving.rs` pins both sides).
+    pub fn nbytes(&self) -> u64 {
+        self.pager.session_pages(self.sid) as u64 * self.pager.layout().page_bytes()
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.pager.release_session(self.sid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pager(page_positions: usize, spill: bool, budget: Option<u64>) -> Arc<Pager> {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        Arc::new(Pager::new(&cfg, 16.0, page_positions, spill, Arc::new(MemoryGate::new(budget))))
+    }
+
+    /// Drive a full prefill of `prompt` through the KvSlot surface the
+    /// way the engine would: prepare, then extend + write rows per layer.
+    fn prefill(pager: &Arc<Pager>, kv: &mut PagedKv, prompt: usize, seed: f32) {
+        let from = kv.positions();
+        assert!(pager.prepare_step(kv.sid(), prompt - from, &[kv.sid()]).unwrap());
+        let (nl, nkv, hd) = {
+            let l = pager.layout();
+            (l.n_layers, l.nkv, l.hd)
+        };
+        for l in 0..nl {
+            let slot = kv.layer_mut(l);
+            slot.extend(prompt - from);
+            for pos in from..prompt {
+                for head in 0..nkv {
+                    let row: Vec<f32> =
+                        (0..hd).map(|i| seed + (pos * nkv + head) as f32 + i as f32 * 0.25).collect();
+                    slot.set_k(pos, head, &row);
+                    slot.set_v(pos, head, &row);
+                }
+            }
+        }
+    }
+
+    fn read_head(kv: &PagedKv, pager: &Arc<Pager>, layer: usize, head: usize) -> Mat {
+        let positions = pager.positions(kv.sid(), layer);
+        let mut out = Mat::zeros(positions, pager.layout().hd);
+        kv.layers[layer].k_head_into(head, &mut out);
+        out
+    }
+
+    #[test]
+    fn page_accounting_is_exact() {
+        let pager = tiny_pager(4, false, None);
+        let sid = pager.admit(&[1, 2, 3, 4, 5], 9).unwrap().unwrap();
+        let mut kv = PagedKv::new(&pager, sid);
+        prefill(&pager, &mut kv, 5, 0.0);
+        let pb = pager.layout().page_bytes();
+        // 5 positions at P=4 → 2 pages per layer.
+        assert_eq!(pager.layout().pages_for(5), 2);
+        assert_eq!(kv.nbytes(), 2 * pager.layout().n_layers as u64 * pb);
+        assert_eq!(pager.charged_bytes(), kv.nbytes(), "single session: mapped == charged");
+        assert_eq!(pager.resident_pages() as u64 * pb, pager.charged_bytes());
+        drop(kv);
+        assert_eq!(pager.charged_bytes(), 0, "release frees every page");
+        assert_eq!(pager.resident_pages(), 0);
+    }
+
+    #[test]
+    fn free_list_recycles_slots() {
+        let pager = tiny_pager(4, false, None);
+        let a = pager.admit(&[1, 2, 3, 4], 4).unwrap().unwrap();
+        let mut kv = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kv, 4, 0.0);
+        let slots_before = lock_or_poisoned(&pager.state).slots.len();
+        drop(kv);
+        let b = pager.admit(&[9, 8, 7, 6], 4).unwrap().unwrap();
+        let mut kv = PagedKv::new(&pager, b);
+        prefill(&pager, &mut kv, 4, 1.0);
+        assert_eq!(
+            lock_or_poisoned(&pager.state).slots.len(),
+            slots_before,
+            "second session reuses freed slots"
+        );
+    }
+
+    #[test]
+    fn prefix_sharing_maps_full_pages_and_counts_once() {
+        let pager = tiny_pager(4, false, None);
+        let prompt: Vec<i32> = (0..9).collect(); // 2 full pages + 1 token
+        let a = pager.admit(&prompt, 12).unwrap().unwrap();
+        let mut kva = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kva, 9, 0.0);
+        pager.register_prefix(a, &prompt);
+        let b = pager.admit(&prompt, 12).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(b), 8, "two full pages shared");
+        let mut kvb = PagedKv::new(&pager, b);
+        // B prefills only its suffix (position 8).
+        prefill(&pager, &mut kvb, 9, 0.0);
+        for l in [0, pager.layout().n_layers - 1] {
+            for head in 0..pager.layout().nkv {
+                assert_eq!(
+                    read_head(&kva, &pager, l, head).data,
+                    read_head(&kvb, &pager, l, head).data,
+                    "shared prefix reads bit-identically"
+                );
+            }
+        }
+        // Charged bytes: A's full set + only B's private tail page/layer.
+        let pb = pager.layout().page_bytes();
+        let nl = pager.layout().n_layers as u64;
+        assert_eq!(pager.charged_bytes(), (3 + 1) * nl * pb, "shared pages charged once");
+        assert_eq!(kva.nbytes(), 3 * nl * pb);
+        assert_eq!(kvb.nbytes(), 3 * nl * pb, "B maps 3 pages/layer too");
+        let stats = pager.stats();
+        assert_eq!(stats.prefix_pages_hit, 2);
+        assert_eq!(stats.prefix_pages_total, 6, "3 prompt pages per admission");
+        // A retires; shared pages stay alive under B.
+        drop(kva);
+        assert_eq!(pager.charged_bytes(), 3 * nl * pb);
+        drop(kvb);
+        assert_eq!(pager.charged_bytes(), 0);
+    }
+
+    #[test]
+    fn spill_and_fault_roundtrip_bit_identically() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let gate = Arc::new(MemoryGate::new(None));
+        let pager = Arc::new(Pager::new(&cfg, 16.0, 4, true, gate));
+        let a = pager.admit(&[1, 2, 3, 4, 5, 6], 6).unwrap().unwrap();
+        let mut kv = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kv, 6, 0.5);
+        let before: Vec<Vec<f32>> = (0..pager.layout().n_layers)
+            .map(|l| read_head(&kv, &pager, l, 0).data)
+            .collect();
+        // Spill every page by hand, then fault back via prepare_step.
+        {
+            let mut st = lock_or_poisoned(&pager.state);
+            let st = &mut *st;
+            let slots: Vec<usize> =
+                st.sessions[&a].tables.iter().flatten().copied().collect();
+            for slot in slots {
+                spill_page(pager.layout(), st, slot).unwrap();
+            }
+        }
+        assert_eq!(pager.charged_bytes(), 0, "spilled pages release their leases");
+        assert!(pager.prepare_step(a, 0, &[a]).unwrap());
+        let after: Vec<Vec<f32>> = (0..pager.layout().n_layers)
+            .map(|l| read_head(&kv, &pager, l, 0).data)
+            .collect();
+        let bits = |v: &Vec<Vec<f32>>| -> Vec<Vec<u32>> {
+            v.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+        };
+        assert_eq!(bits(&before), bits(&after), "fault-in is bit-identical");
+        let stats = pager.stats();
+        assert_eq!(stats.spilled_pages, 2 * pager.layout().n_layers as u64);
+        assert_eq!(stats.faulted_pages, stats.spilled_pages);
+    }
+
+    #[test]
+    fn cow_fork_isolates_a_diverging_writer() {
+        // Forks are unreachable from the engine's append-only writes
+        // (shared pages are full by construction); simulate divergence by
+        // rolling a sharer's position counter back into its shared page.
+        let pager = tiny_pager(4, false, None);
+        let prompt: Vec<i32> = (0..5).collect(); // 1 full page + 1 token
+        let a = pager.admit(&prompt, 8).unwrap().unwrap();
+        let mut kva = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kva, 5, 0.0);
+        pager.register_prefix(a, &prompt);
+        let b = pager.admit(&prompt, 8).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(b), 4);
+        let nl = pager.layout().n_layers;
+        {
+            let mut st = lock_or_poisoned(&pager.state);
+            let s = st.sessions.get_mut(&b).unwrap();
+            s.positions = vec![3; nl]; // diverge inside the shared page
+        }
+        // Preparing a 1-position step now forks the shared page per layer.
+        assert!(pager.prepare_step(b, 1, &[b]).unwrap());
+        assert_eq!(pager.stats().cow_forks, nl as u64);
+        let kvb = PagedKv::new(&pager, b);
+        let a_before = read_head(&kva, &pager, 0, 0).data;
+        // B overwrites position 3 in its (now private) copy.
+        {
+            let mut st = lock_or_poisoned(&pager.state);
+            if let Some(s) = st.sessions.get_mut(&b) {
+                s.positions = vec![4; nl];
+            }
+        }
+        pager.set_row(b, 0, true, 3, 0, &vec![99.0; pager.layout().hd]);
+        assert_eq!(read_head(&kva, &pager, 0, 0).data, a_before, "A's page untouched");
+        let b_row = read_head(&kvb, &pager, 0, 0);
+        assert!(b_row.row(3).iter().all(|&v| v > 90.0), "B sees its own write");
+        drop(kvb);
+        drop(kva);
+        assert_eq!(pager.charged_bytes(), 0);
+    }
+
+    #[test]
+    fn no_spill_admission_waits_instead_of_overcommitting() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let gate = Arc::new(MemoryGate::new(None));
+        let probe = Pager::new(&cfg, 16.0, 4, false, gate);
+        let one_session = probe.layout().session_max_bytes(8);
+        // Budget fits one session's full commitment, not two.
+        let gate = Arc::new(MemoryGate::new(Some(one_session + one_session / 2)));
+        let pager = Arc::new(Pager::new(&cfg, 16.0, 4, false, gate));
+        let a = pager.admit(&[1, 2, 3, 4], 8).unwrap().unwrap();
+        let kva = PagedKv::new(&pager, a);
+        assert!(pager.admit(&[5, 6, 7, 8], 8).unwrap().is_none(), "second must wait");
+        drop(kva);
+        assert!(pager.admit(&[5, 6, 7, 8], 8).unwrap().is_some(), "fits after release");
+        // And a session that can never fit is rejected outright.
+        assert!(pager.admit(&[1; 64], 64).is_err());
+    }
+}

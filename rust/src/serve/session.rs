@@ -54,6 +54,13 @@ impl DecodeSession {
         DecodeSession { weights, opt, cache }
     }
 
+    /// A session over a caller-built cache — how the engine mounts a
+    /// paged [`KvCache`] (which may already hold shared prefix
+    /// positions) instead of the contiguous default.
+    pub fn with_cache(weights: Arc<Weights>, opt: FwdOptions, cache: KvCache) -> DecodeSession {
+        DecodeSession { weights, opt, cache }
+    }
+
     /// Positions processed so far.
     pub fn positions(&self) -> usize {
         self.cache.positions()

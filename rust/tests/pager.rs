@@ -1,0 +1,266 @@
+//! Paged-KV pager suite (`serve::pager`), public API only:
+//!
+//! * page-table geometry and byte accounting are exact (mapped pages,
+//!   gate charge, and `PagedKv::nbytes` reconcile — shared pages count
+//!   once against the gate),
+//! * copy-on-write prefix sharing maps registered prompt pages
+//!   read-only and bit-identically,
+//! * eviction spills cold pages to the temp file and faults them back
+//!   **bit-identical** under the `MemoryGate` lease discipline,
+//! * no-spill mode defers admission instead of ever needing eviction,
+//! * a `util::propcheck` property pins the reconciliation across page
+//!   sizes, prompt lengths, and sharing degrees.
+//!
+//! Engine-level gates (paged decode ≡ contiguous decode) live in
+//! `rust/tests/serving.rs`; this file drives the pager directly.
+
+use dartquant::coordinator::MemoryGate;
+use dartquant::model::ModelConfig;
+use dartquant::serve::{KvSlot, PageLayout, PagedKv, Pager};
+use dartquant::tensor::Mat;
+use dartquant::util::propcheck::{gen, Runner};
+use std::sync::Arc;
+
+const KV_LEVELS: f32 = 16.0; // 4-bit KV codes — the paper's serving point
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig::builtin("llama2-tiny").unwrap()
+}
+
+fn tiny_pager(page_positions: usize, spill: bool, budget: Option<u64>) -> Arc<Pager> {
+    Arc::new(Pager::new(
+        &tiny_cfg(),
+        KV_LEVELS,
+        page_positions,
+        spill,
+        Arc::new(MemoryGate::new(budget)),
+    ))
+}
+
+/// Prefill `kv` up to `to` positions through the `KvSlot` surface the
+/// way `block_step` does: prepare, then extend + write rows per layer.
+/// Row contents are a deterministic function of (seed, pos, head, i).
+fn prefill_rows(pager: &Arc<Pager>, kv: &mut PagedKv, to: usize, seed: f32) {
+    let from = kv.positions();
+    assert!(
+        pager.prepare_step(kv.sid(), to - from, &[kv.sid()]).unwrap(),
+        "prepare_step deferred a session the test expected to run"
+    );
+    let (nl, nkv, hd) = {
+        let l = pager.layout();
+        (l.n_layers, l.nkv, l.hd)
+    };
+    for l in 0..nl {
+        let slot = kv.layer_mut(l);
+        slot.extend(to - from);
+        for pos in from..to {
+            for head in 0..nkv {
+                let row: Vec<f32> = (0..hd)
+                    .map(|i| seed + (pos * nkv + head) as f32 + i as f32 * 0.5)
+                    .collect();
+                slot.set_k(pos, head, &row);
+                slot.set_v(pos, head, &row);
+            }
+        }
+    }
+}
+
+/// Decode one K head of one layer into a dense matrix.
+fn k_head(kv: &mut PagedKv, layer: usize, head: usize, hd: usize) -> Mat {
+    let mut out = Mat::zeros(kv.positions(), hd);
+    kv.layer_mut(layer).k_head_into(head, &mut out);
+    out
+}
+
+#[test]
+fn layout_math_is_page_granular() {
+    let cfg = tiny_cfg();
+    for p in [1usize, 16, 64] {
+        let lay = PageLayout::for_model(&cfg, KV_LEVELS, p);
+        assert!(lay.page_bytes() > 0);
+        assert_eq!(lay.pages_for(0), 0);
+        assert_eq!(lay.pages_for(1), 1);
+        assert_eq!(lay.pages_for(p), 1);
+        assert_eq!(lay.pages_for(p + 1), 2);
+        for positions in [1usize, p, 3 * p - 1, 3 * p] {
+            assert_eq!(
+                lay.session_max_bytes(positions),
+                lay.pages_for(positions) as u64 * lay.n_layers as u64 * lay.page_bytes(),
+                "P={p} positions={positions}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prefix_pages_are_shared_charged_once_and_read_bit_identically() {
+    // P=4, prompt 9 = 2 full pages + 1: admission shares exactly the
+    // full pages, the suffix stays private.
+    let pager = tiny_pager(4, false, None);
+    let prompt: Vec<i32> = (0..9).collect();
+    let (nl, hd) = (pager.layout().n_layers, pager.layout().hd);
+    let pb = pager.layout().page_bytes();
+
+    let a = pager.admit(&prompt, prompt.len()).unwrap().unwrap();
+    assert_eq!(pager.shared_positions(a), 0, "empty index: nothing to share");
+    let mut kv_a = PagedKv::new(&pager, a);
+    prefill_rows(&pager, &mut kv_a, 9, 0.0);
+    pager.register_prefix(a, &prompt);
+
+    let b = pager.admit(&prompt, prompt.len()).unwrap().unwrap();
+    assert_eq!(pager.shared_positions(b), 8, "two full pages inherited");
+    let mut kv_b = PagedKv::new(&pager, b);
+    prefill_rows(&pager, &mut kv_b, 9, 100.0); // only position 8 is written
+
+    // Accounting: A maps 3 pages/layer, B maps the 2 shared + 1 private,
+    // the gate sees 4 unique pages/layer.
+    assert_eq!(kv_a.nbytes(), 3 * nl as u64 * pb);
+    assert_eq!(kv_b.nbytes(), 3 * nl as u64 * pb);
+    assert_eq!(pager.charged_bytes(), 4 * nl as u64 * pb, "shared pages charged once");
+    let stats = pager.stats();
+    assert_eq!(stats.prefix_pages_hit, 2);
+    assert_eq!(stats.cow_forks, 0, "append-only decode never forks");
+
+    // Shared positions read back bit-identical through B; the private
+    // suffix position differs (different write seed).
+    for l in 0..nl {
+        let ka = k_head(&mut kv_a, l, 0, hd);
+        let kb = k_head(&mut kv_b, l, 0, hd);
+        for pos in 0..8 {
+            assert_eq!(ka.row(pos), kb.row(pos), "layer {l} shared position {pos}");
+        }
+        assert_ne!(ka.row(8), kb.row(8), "layer {l} private suffix");
+    }
+
+    // A's release keeps the shared pages alive for B; B's frees the rest.
+    drop(kv_a);
+    assert_eq!(pager.charged_bytes(), 3 * nl as u64 * pb);
+    drop(kv_b);
+    assert_eq!(pager.charged_bytes(), 0);
+    assert_eq!(pager.resident_pages(), 0);
+}
+
+#[test]
+fn spill_and_fault_back_are_bit_identical() {
+    // Budget = exactly one session's working set: preparing the second
+    // session must evict the first's pages to the spill file, and
+    // re-preparing the first must fault them back unchanged.
+    let cfg = tiny_cfg();
+    let lay = PageLayout::for_model(&cfg, KV_LEVELS, 2);
+    let budget = lay.session_max_bytes(4);
+    let pager = tiny_pager(2, true, Some(budget));
+    let (nl, nkv, hd) = (lay.n_layers, lay.nkv, lay.hd);
+    let session_pages = (lay.pages_for(4) * nl) as u64;
+
+    let a = pager.admit(&[1, 2, 3, 4], 4).unwrap().unwrap();
+    let mut kv_a = PagedKv::new(&pager, a);
+    prefill_rows(&pager, &mut kv_a, 4, 0.0);
+    let snapshot: Vec<Mat> = (0..nl)
+        .flat_map(|l| (0..nkv).map(move |h| (l, h)))
+        .map(|(l, h)| k_head(&mut kv_a, l, h, hd))
+        .collect();
+
+    let b = pager.admit(&[9, 8, 7, 6], 4).unwrap().unwrap();
+    let mut kv_b = PagedKv::new(&pager, b);
+    prefill_rows(&pager, &mut kv_b, 4, 50.0);
+    assert_eq!(
+        pager.stats().spilled_pages,
+        session_pages,
+        "B's working set displaced every one of A's pages"
+    );
+    assert!(pager.charged_bytes() <= budget, "eviction kept the gate under budget");
+
+    // Fault A back (0 new positions — pure residency restore) and
+    // verify every row survived the disk round trip bit-for-bit.
+    assert!(pager.prepare_step(a, 0, &[a]).unwrap());
+    assert_eq!(pager.stats().faulted_pages, session_pages);
+    for (i, (l, h)) in
+        (0..nl).flat_map(|l| (0..nkv).map(move |h| (l, h))).enumerate()
+    {
+        let back = k_head(&mut kv_a, l, h, hd);
+        assert_eq!(back.data, snapshot[i].data, "layer {l} head {h} changed across spill");
+    }
+    assert!(pager.charged_bytes() <= budget);
+}
+
+#[test]
+fn admission_rejects_sessions_that_can_never_fit() {
+    let cfg = tiny_cfg();
+    let lay = PageLayout::for_model(&cfg, KV_LEVELS, 2);
+    let pager = tiny_pager(2, true, Some(lay.session_max_bytes(4) - 1));
+    let err = pager.admit(&[1, 2, 3, 4], 4).unwrap_err();
+    assert_eq!(err.need, lay.session_max_bytes(4));
+    assert_eq!(err.budget, lay.session_max_bytes(4) - 1);
+}
+
+#[test]
+fn no_spill_mode_defers_admission_instead_of_evicting() {
+    // Commitment accounting: with spill off, a second session waits
+    // (Ok(None)) while the first holds the budget, and admits cleanly
+    // once it releases — page charges can then never fail mid-flight.
+    let cfg = tiny_cfg();
+    let lay = PageLayout::for_model(&cfg, KV_LEVELS, 2);
+    let budget = lay.session_max_bytes(4);
+    let pager = tiny_pager(2, false, Some(budget));
+
+    let a = pager.admit(&[1, 2, 3, 4], 4).unwrap().unwrap();
+    let mut kv_a = PagedKv::new(&pager, a);
+    prefill_rows(&pager, &mut kv_a, 4, 0.0);
+    assert_eq!(pager.admit(&[9, 8, 7, 6], 4).unwrap(), None, "no headroom: wait");
+    drop(kv_a);
+    assert!(pager.admit(&[9, 8, 7, 6], 4).unwrap().is_some(), "release freed the budget");
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_session_bytes_reconcile_with_the_gate_charge() {
+    // Σ PagedKv::nbytes() == gate charge + one page_bytes per shared
+    // mapping (prefix_pages_hit × n_layers), at every page size, prompt
+    // length, and sharing degree — and the gate charge is exactly
+    // page_bytes × unique resident pages.
+    Runner::new().cases(12).run("paged bytes reconcile with the gate", |rng| {
+        let p = [1usize, 2, 4, 8][rng.below(4)];
+        let len = gen::size(rng, 2.max(p), 4 * p + 1);
+        let n = 1 + rng.below(3); // 1..=3 sessions over one prompt
+        let pager = tiny_pager(p, false, None);
+        let prompt: Vec<i32> = (0..len as i32).map(|i| i + 7).collect();
+        let mut kvs = Vec::new();
+        for s in 0..n {
+            let sid = match pager.admit(&prompt, len) {
+                Ok(Some(sid)) => sid,
+                other => return Err(format!("admit: {other:?}")),
+            };
+            let mut kv = PagedKv::new(&pager, sid);
+            prefill_rows(&pager, &mut kv, len, s as f32);
+            if s == 0 {
+                pager.register_prefix(sid, &prompt);
+            }
+            kvs.push(kv);
+        }
+        let lay = pager.layout();
+        let (pb, nl) = (lay.page_bytes(), lay.n_layers as u64);
+        let shared_k = ((len - 1) / p) as u64; // full pages short of the prompt end
+        let stats = pager.stats();
+        if stats.prefix_pages_hit != (n as u64 - 1) * shared_k {
+            return Err(format!(
+                "hits {} != {} sessions × {shared_k} full pages",
+                stats.prefix_pages_hit,
+                n - 1
+            ));
+        }
+        let mapped: u64 = kvs.iter().map(|kv| kv.nbytes()).sum();
+        let want = pager.charged_bytes() + stats.prefix_pages_hit * nl * pb;
+        if mapped != want {
+            return Err(format!("Σ nbytes {mapped} != charged + shared-once {want}"));
+        }
+        if pager.charged_bytes() != pager.resident_pages() as u64 * pb {
+            return Err("gate charge is not page_bytes × resident pages".into());
+        }
+        drop(kvs);
+        if pager.charged_bytes() != 0 {
+            return Err("sessions released but pages still charged".into());
+        }
+        Ok(())
+    });
+}

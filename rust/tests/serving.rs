@@ -6,16 +6,23 @@
 //!   packed weights (in practice also bit-identical; the tolerance is
 //!   the acceptance bar),
 //! * token-for-token across batched sessions with staggered
-//!   admit/retire, at any worker count, under a KV budget.
+//!   admit/retire, at any worker count, under a KV budget,
+//! * **paged ≡ contiguous**: the paged KV backend (`serve::pager`)
+//!   reproduces the contiguous engine's token streams and canonical
+//!   event log at every page size and worker count, including under
+//!   forced-eviction pressure with spilling enabled.
 //!
-//! Plus `util::propcheck` properties for the KV-cache quantizer. Runs
-//! natively (no artifacts needed).
+//! Plus `util::propcheck` properties for the KV-cache quantizer and the
+//! pager's gate accounting. Runs natively (no artifacts needed).
 
+use dartquant::coordinator::MemoryGate;
 use dartquant::model::{
     fake_quant_rows, forward_batch, forward_one, nll_from_logits, FwdOptions, ModelConfig,
     NoCapture, Weights,
 };
-use dartquant::serve::{BatchEngine, DecodeSession, EngineConfig, GenRequest, KvCache};
+use dartquant::serve::{
+    BatchEngine, DecodeSession, EngineConfig, GenRequest, KvCache, PageLayout, PagedConfig, Pager,
+};
 use dartquant::tensor::Mat;
 use dartquant::util::propcheck::{gen, Runner};
 use std::sync::Arc;
@@ -257,6 +264,102 @@ fn over_budget_request_fails_while_others_complete() {
     assert!(results[1].error.as_deref().unwrap().contains("memory budget"));
 }
 
+#[test]
+fn paged_decode_is_bit_identical_to_contiguous_at_every_page_size() {
+    // Page layout must be invisible: same tokens and the same canonical
+    // event log as the contiguous oracle at page sizes spanning
+    // one-position pages (maximal table churn) to pages larger than any
+    // session (single-page degenerate case), at 1 and 4 workers.
+    let (w, toks) = model("llama2-tiny", 31);
+    let base = EngineConfig { opt: FwdOptions::quant(4, 4, false), seed: 5, ..Default::default() };
+    let requests: Vec<(Vec<i32>, usize)> =
+        (0..4).map(|i| (toks[i * 5..i * 5 + 6 + i].to_vec(), 3 + 2 * i)).collect();
+    let run = |paged: Option<PagedConfig>, workers: usize| {
+        let mut engine =
+            BatchEngine::new(Arc::clone(&w), EngineConfig { workers, paged, ..base });
+        for (prompt, max_new) in &requests {
+            engine.submit(GenRequest { prompt: prompt.clone(), max_new: *max_new });
+        }
+        engine.run().unwrap();
+        engine
+    };
+    let oracle = run(None, 1);
+    for page_positions in [1usize, 16, 64] {
+        let paged = Some(PagedConfig { page_positions, spill: false });
+        let one = run(paged, 1);
+        let four = run(paged, 4);
+        for engine in [&one, &four] {
+            assert_eq!(engine.results(), oracle.results(), "P={page_positions}");
+            assert_eq!(
+                engine.canonical_events(),
+                oracle.canonical_events(),
+                "P={page_positions}"
+            );
+        }
+        // Within a mode the raw event stream is worker-count invariant.
+        assert_eq!(one.events(), four.events(), "P={page_positions}");
+        assert_eq!(
+            one.pager().unwrap().charged_bytes(),
+            0,
+            "run over: every page released"
+        );
+    }
+}
+
+#[test]
+fn paged_decode_under_eviction_pressure_matches_the_unbounded_oracle() {
+    // Budget = one session's maximum working set: four sessions force
+    // the pager to spill cold pages to disk and fault them back
+    // mid-decode, and the tokens must still match a contiguous engine
+    // with no budget at all. llama3-small adds GQA page geometry.
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 33);
+        let opt = FwdOptions::quant(4, 4, false);
+        let base = EngineConfig { opt, seed: 13, ..Default::default() };
+        let requests: Vec<(Vec<i32>, usize)> =
+            (0..4).map(|i| (toks[i * 7..i * 7 + 10 + i].to_vec(), 6)).collect();
+        let lay = PageLayout::for_model(&w.cfg, opt.kv_levels, 4);
+        let budget = requests
+            .iter()
+            .map(|(p, m)| lay.session_max_bytes(p.len() + m - 1))
+            .max()
+            .unwrap();
+        let mut oracle = BatchEngine::new(Arc::clone(&w), base);
+        for (prompt, max_new) in &requests {
+            oracle.submit(GenRequest { prompt: prompt.clone(), max_new: *max_new });
+        }
+        oracle.run().unwrap();
+        for workers in [1usize, 4] {
+            let mut engine = BatchEngine::new(
+                Arc::clone(&w),
+                EngineConfig {
+                    workers,
+                    budget: Some(budget),
+                    paged: Some(PagedConfig { page_positions: 4, spill: true }),
+                    ..base
+                },
+            );
+            for (prompt, max_new) in &requests {
+                engine.submit(GenRequest { prompt: prompt.clone(), max_new: *max_new });
+            }
+            engine.run().unwrap();
+            assert_eq!(engine.results(), oracle.results(), "{name} workers={workers}");
+            assert_eq!(
+                engine.canonical_events(),
+                oracle.canonical_events(),
+                "{name} workers={workers}"
+            );
+            let stats = engine.pager_stats().unwrap();
+            assert!(stats.spilled_pages > 0, "{name}: the budget never forced an eviction");
+            assert!(stats.faulted_pages > 0, "{name}: no spilled page was ever read back");
+            assert!(
+                engine.peak_cache_bytes() <= budget,
+                "{name}: eviction failed to keep the gate under budget"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------- properties
 
 #[test]
@@ -314,6 +417,54 @@ fn prop_session_cache_bytes_match_engine_accounting() {
         let want = KvCache::estimate_nbytes(&w.cfg, opt.kv_levels, len, true);
         if sess.cache_nbytes() != want {
             return Err(format!("cache {} != estimate {want}", sess.cache_nbytes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_paged_kv_cache_bytes_equal_the_gate_charge() {
+    // A paged `KvCache` reports exactly what the pager charged the gate
+    // (one session shares nothing, so mapped == unique), which is the
+    // layout's maximum working set for its target — and releasing the
+    // cache returns the charge to zero. The shared-pages-count-once side
+    // of the ledger is pinned by `rust/tests/pager.rs`.
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    Runner::new().cases(16).run("paged cache gate accounting", |rng| {
+        let page_positions = [1usize, 3, 8][rng.below(3)];
+        let len = gen::size(rng, 1, 24);
+        let pager = Arc::new(Pager::new(
+            &cfg,
+            16.0,
+            page_positions,
+            false,
+            Arc::new(MemoryGate::new(None)),
+        ));
+        let sid = match pager.admit(&vec![1; len], len) {
+            Ok(Some(sid)) => sid,
+            other => return Err(format!("admit: {other:?}")),
+        };
+        let kv = KvCache::paged(&pager, sid);
+        if kv.nbytes() != 0 {
+            return Err("pages mapped before prepare_step".into());
+        }
+        match pager.prepare_step(sid, len, &[sid]) {
+            Ok(true) => {}
+            other => return Err(format!("prepare_step: {other:?}")),
+        }
+        if kv.nbytes() != pager.charged_bytes() {
+            return Err(format!(
+                "cache reports {} but the gate holds {}",
+                kv.nbytes(),
+                pager.charged_bytes()
+            ));
+        }
+        if kv.nbytes() != pager.layout().session_max_bytes(len) {
+            return Err(format!("cache {} != max working set", kv.nbytes()));
+        }
+        drop(kv);
+        if pager.charged_bytes() != 0 {
+            return Err("cache dropped but pages still charged".into());
         }
         Ok(())
     });

@@ -8,11 +8,18 @@
 # receipt directory and is what turns the receipt writer on — without it
 # the benches are table-only.
 #
-#   perf_gemm    native; emits BENCH_gemm.json (gflops_f32 / gflops_i8 /
-#                gflops_i4 / weight_bytes — acceptance: i8 ≥ f32)
-#   perf_decode  native; the KV-cached serving-path ledger
-#   perf_hotpath needs artifacts/ (PJRT executables); skipped with a
-#                note when `make artifacts` hasn't run
+#   perf_gemm      native; emits BENCH_gemm.json (gflops_f32 / gflops_i8 /
+#                  gflops_i4 / weight_bytes — acceptance: i8 ≥ f32)
+#   perf_decode    native; BENCH_decode.json — the KV-cached serving-path
+#                  ledger (µs/token per path × prefix)
+#   perf_serve     native; BENCH_serve.json — paged KV vs contiguous
+#                  (sessions/GB, prefix hit rate, p99 step µs;
+#                  acceptance: shared-prefix ratio ≥ 2)
+#   perf_streaming native; BENCH_streaming.json — out-of-core vs
+#                  in-memory pipeline cost + canonical byte-identity
+#   perf_hotpath / perf_scheduler need artifacts/ (PJRT executables);
+#                  skipped with a note when `make artifacts` hasn't run
+#                  (perf_scheduler emits BENCH_scheduler.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,8 +29,11 @@ export DQ_BENCH_JSON="${DQ_BENCH_JSON:-$PWD}"
 echo "bench-json: DQ_WORKERS=$DQ_WORKERS receipts -> $DQ_BENCH_JSON"
 cargo bench --bench perf_gemm
 cargo bench --bench perf_decode
+cargo bench --bench perf_serve
+cargo bench --bench perf_streaming
 if [ -d artifacts ]; then
     cargo bench --bench perf_hotpath
+    cargo bench --bench perf_scheduler
 else
-    echo "bench-json: artifacts/ missing — skipping perf_hotpath (run 'make artifacts' first)"
+    echo "bench-json: artifacts/ missing — skipping perf_hotpath and perf_scheduler (run 'make artifacts' first)"
 fi
