@@ -20,8 +20,11 @@
 #   make bench-json       pinned perf run emitting BENCH_*.json receipts
 #                         (scripts/bench_json.sh; gemm/decode/serve/streaming
 #                         always, hotpath + scheduler when artifacts/ exists)
+#   make bench-diff       regenerate receipts into a temp dir and diff vs the
+#                         committed BENCH_*.json (scripts/bench_diff.sh;
+#                         warning-only while committed receipts are analytic)
 
-.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-serve bench-streaming bench-json
+.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-serve bench-streaming bench-json bench-diff
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -64,3 +67,6 @@ bench-streaming:
 
 bench-json:
 	./scripts/bench_json.sh
+
+bench-diff:
+	./scripts/bench_diff.sh

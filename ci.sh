@@ -22,3 +22,8 @@ cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 ./scripts/check_links.sh
 cargo fmt --check
+# Receipt drift (scripts/bench_diff.sh) stays warning-only while the
+# committed BENCH_*.json receipts remain analytic estimates — the script
+# itself exits 0 in its default WARN_ONLY mode, and the `|| echo` keeps
+# even an unexpected failure from gating tier-1.
+./scripts/bench_diff.sh || echo "ci: bench-diff reported drift (warning-only)"

@@ -23,7 +23,8 @@ mod common;
 
 use dartquant::model::ModelConfig;
 use dartquant::tensor::{
-    matmul_transb_deq_with, matmul_transb_qact_with, matmul_transb_with, quantize_act, Mat, QMat,
+    matmul_transb_deq_with, matmul_transb_qact_rowpar, matmul_transb_qact_sharded,
+    matmul_transb_qact_with, matmul_transb_sharded, matmul_transb_with, quantize_act, Mat, QMat,
     QuantSpec,
 };
 use dartquant::util::bench::{fnum, time, write_receipt, Table};
@@ -66,8 +67,14 @@ fn main() {
     let iters = if common::full() { 12 } else { 6 };
     let mut table = Table::new(&["config", "shape", "path", "median", "GFLOP/s", "weight bytes"]);
     let mut receipt_shapes: Vec<Json> = Vec::new();
+    let mut shard_shapes: Vec<Json> = Vec::new();
     // Canonical top-level numbers come from the largest (last) shape.
     let (mut gflops_f32, mut gflops_i8, mut gflops_i4, mut weight_bytes) = (0.0, 0.0, 0.0, 0u64);
+    let (mut gflops_f32_sh, mut gflops_i4_sh, mut gflops_i4_rp) = (0.0, 0.0, 0.0);
+    // Bit-identity is the shard plan's contract: verify every count
+    // before timing any sharded row.
+    const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+    const BENCH_SHARDS: usize = 4;
 
     for s in shapes() {
         let (m, k, n) = (s.m, s.k, s.n);
@@ -128,6 +135,65 @@ fn main() {
             format!("{}", qa.nbytes()),
         ]);
 
+        // --- sharded rows: column-parallel f32/i4 and the i32 row-
+        // parallel (k-split) reduce, all gated on bit-identity first.
+        let f32_ref = matmul_transb_with(&x, &w, threads);
+        let i4_ref = matmul_transb_qact_with(&xq, &qa, &q4, threads);
+        for shards in SHARD_COUNTS {
+            assert_eq!(
+                matmul_transb_sharded(&x, &w, shards).data,
+                f32_ref.data,
+                "f32 column-parallel moved a bit at {shards} shards"
+            );
+            assert_eq!(
+                matmul_transb_qact_sharded(&xq, &qa, &q4, shards).data,
+                i4_ref.data,
+                "i4 column-parallel moved a bit at {shards} shards"
+            );
+            assert_eq!(
+                matmul_transb_qact_rowpar(&xq, &qa, &q4, shards).data,
+                i4_ref.data,
+                "i4 row-parallel reduce moved a bit at {shards} shards"
+            );
+        }
+        let mut srow = |path: &str, median: std::time::Duration, bytes: u64| -> f64 {
+            let g = gflops(median);
+            table.row(&[
+                s.config.clone(),
+                shape_label.clone(),
+                path.to_string(),
+                dartquant::util::fmt_duration(median),
+                fnum(g, 1),
+                format!("{bytes}"),
+            ]);
+            g
+        };
+        let meas = time("f32 sharded", 2, iters, || {
+            std::hint::black_box(matmul_transb_sharded(&x, &w, BENCH_SHARDS));
+        });
+        let g_f32_sh = srow("f32-shard4", meas.median, w.nbytes());
+        let meas = time("i4 sharded", 2, iters, || {
+            std::hint::black_box(matmul_transb_qact_sharded(&xq, &qa, &q4, BENCH_SHARDS));
+        });
+        let g_i4_sh = srow("i4-shard4", meas.median, q4.nbytes());
+        let meas = time("i4 rowpar", 2, iters, || {
+            std::hint::black_box(matmul_transb_qact_rowpar(&xq, &qa, &q4, BENCH_SHARDS));
+        });
+        let g_i4_rp = srow("i4-rowpar4", meas.median, q4.nbytes());
+        shard_shapes.push(Json::obj(vec![
+            ("config", Json::Str(s.config.clone())),
+            ("label", Json::Str(s.label.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+            ("gflops_f32_sharded", Json::Num(g_f32_sh)),
+            ("gflops_i4_sharded", Json::Num(g_i4_sh)),
+            ("gflops_i4_rowpar", Json::Num(g_i4_rp)),
+        ]));
+        gflops_f32_sh = g_f32_sh;
+        gflops_i4_sh = g_i4_sh;
+        gflops_i4_rp = g_i4_rp;
+
         receipt_shapes.push(Json::obj(vec![
             ("config", Json::Str(s.config.clone())),
             ("label", Json::Str(s.label.to_string())),
@@ -166,6 +232,23 @@ fn main() {
             ("gflops_i4", Json::Num(gflops_i4)),
             ("weight_bytes", Json::Num(weight_bytes as f64)),
             ("shapes", Json::Arr(receipt_shapes)),
+        ]),
+    );
+    write_receipt(
+        "shard",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_gemm".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("workers", Json::Num(threads as f64)),
+            ("bench_shards", Json::Num(BENCH_SHARDS as f64)),
+            (
+                "shard_counts_verified_bit_identical",
+                Json::Arr(SHARD_COUNTS.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("gflops_f32_sharded", Json::Num(gflops_f32_sh)),
+            ("gflops_i4_sharded", Json::Num(gflops_i4_sh)),
+            ("gflops_i4_rowpar", Json::Num(gflops_i4_rp)),
+            ("shapes", Json::Arr(shard_shapes)),
         ]),
     );
 }

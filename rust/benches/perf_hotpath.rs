@@ -18,7 +18,8 @@ use dartquant::calib::{sample_tokens, CALIB_TOKENS};
 use dartquant::model::{TokenBatch, Weights};
 use dartquant::runtime::Value;
 use dartquant::tensor::{
-    matmul, matmul_transb_deq_with, matmul_transb_q_with, matmul_transb_qact_with,
+    matmul, matmul_transb_deq_with, matmul_transb_q_with, matmul_transb_qact_rowpar,
+    matmul_transb_qact_sharded, matmul_transb_qact_with, matmul_transb_sharded,
     matmul_transb_with, quantize_act, Mat, QMat, QuantSpec,
 };
 use dartquant::util::bench::{fnum, time, Table};
@@ -165,6 +166,51 @@ fn main() {
                 format!("{}", q.nbytes() + q.panel_nbytes()),
             ]);
         }
+        // --- within-layer sharding (the `--shards` plan): column-
+        // parallel f32/i4 and the i32 row-parallel reduce, gated on
+        // bit-identity at every count before any timing.
+        let f32_ref = matmul_transb_with(&x, &w, threads);
+        let i4_ref = matmul_transb_qact_with(&xq, &qa, &q4, threads);
+        for shards in [1usize, 2, 4, 7] {
+            assert_eq!(matmul_transb_sharded(&x, &w, shards).data, f32_ref.data, "f32 shard");
+            assert_eq!(
+                matmul_transb_qact_sharded(&xq, &qa, &q4, shards).data,
+                i4_ref.data,
+                "i4 shard"
+            );
+            assert_eq!(
+                matmul_transb_qact_rowpar(&xq, &qa, &q4, shards).data,
+                i4_ref.data,
+                "i4 rowpar"
+            );
+        }
+        let meas = time("transb f32 sharded", 2, 8, || {
+            std::hint::black_box(matmul_transb_sharded(&x, &w, 4));
+        });
+        ptable.row(&[
+            format!("f32 transb shard4 {n}³"),
+            dartquant::util::fmt_duration(meas.median),
+            gflops(meas.median),
+            format!("{}", w.nbytes()),
+        ]);
+        let meas = time("transb i4 sharded", 2, 8, || {
+            std::hint::black_box(matmul_transb_qact_sharded(&xq, &qa, &q4, 4));
+        });
+        ptable.row(&[
+            format!("packed-i4 qact shard4 {n}³"),
+            dartquant::util::fmt_duration(meas.median),
+            gflops(meas.median),
+            format!("{}", q4.nbytes() + q4.panel_nbytes()),
+        ]);
+        let meas = time("transb i4 rowpar", 2, 8, || {
+            std::hint::black_box(matmul_transb_qact_rowpar(&xq, &qa, &q4, 4));
+        });
+        ptable.row(&[
+            format!("packed-i4 rowpar4 {n}³"),
+            dartquant::util::fmt_duration(meas.median),
+            gflops(meas.median),
+            format!("{}", q4.nbytes()),
+        ]);
     }
 
     // --- GPTQ -------------------------------------------------------------

@@ -22,7 +22,7 @@
 mod common;
 
 use dartquant::serve::{BatchEngine, EngineConfig, GenRequest, GenResult, PagedConfig};
-use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::bench::{fnum, percentile, write_receipt, Table};
 use dartquant::util::json::Json;
 use dartquant::util::mem::gib;
 use dartquant::util::prng::{Pcg64, Zipf};
@@ -72,8 +72,7 @@ fn drive(mut engine: BatchEngine, reqs: &[GenRequest]) -> RunStats {
     }
     let wall_s = t0.elapsed().as_secs_f64();
     step_us.sort_by(f64::total_cmp);
-    let p99_step_us =
-        step_us.get(step_us.len().saturating_sub(1) * 99 / 100).copied().unwrap_or(0.0);
+    let p99_step_us = percentile(&step_us, 0.99).unwrap_or(0.0);
     let mut results = engine.results().to_vec();
     results.sort_by_key(|r| r.id);
     RunStats {

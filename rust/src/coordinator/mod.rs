@@ -177,6 +177,13 @@ pub struct PipelineConfig {
     /// Worker threads for the per-layer calibration scheduler
     /// (`0` = available parallelism, the default).
     pub workers: usize,
+    /// Within-layer tensor-parallel shards (CLI `--shards`; 1 = off).
+    /// GPTQ/OmniQuant per-layer jobs decompose into per-shard row-range
+    /// sub-jobs — same bits, smaller per-job gate charges — and the
+    /// packed eval/serving forward shards its linears and attention
+    /// (`tensor::shard`, `docs/CONCURRENCY.md`). Any shard count
+    /// produces byte-identical reports, weights, and token streams.
+    pub shards: usize,
     /// Emit packed low-bit weight storage (`tensor::QMat`) from the
     /// quantize stage instead of dequantized f32 — the true-footprint
     /// serving representation (CLI `--packed`). Applies when the weight
@@ -228,6 +235,7 @@ impl PipelineConfig {
             calib: CalibConfig::default(),
             spin: SpinConfig::default(),
             workers: 0, // 0 = available parallelism, resolved by the scheduler
+            shards: 1,
             packed: false,
             seed: 0,
             memory_budget: None,

@@ -16,9 +16,9 @@ use crate::calib::{self, CalibConfig};
 use crate::data::Corpus;
 use crate::model::{Tensor, TokenBatch, WeightStore, Weights};
 use crate::quant::{self, GptqConfig};
-use crate::tensor::{QMat, QuantSpec};
 use crate::rotation::RotationSet;
 use crate::runtime::{with_thread_runtime, Runtime};
+use crate::tensor::{shard_ranges, Mat, QMat, QuantSpec};
 use crate::util::prng::Pcg64;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -501,11 +501,100 @@ impl WeightQuantizer for GptqQuantizer {
             .corpus
             .calib_sequences(8.min(ctx.cfg.calib_sequences), ctx.cfg.calib_seq_len);
         let cfg = GptqConfig { bits: ctx.cfg.bits.w, damp: self.damp };
-        Ok(if packed_run(ctx.cfg) {
-            quant::gptq_quantize_model_packed(weights, &gseqs, cfg)
-        } else {
-            quant::gptq_quantize_model(weights, &gseqs, cfg)
-        })
+        if cfg.bits >= 16 {
+            // Identity grid (same early-out as gptq_quantize_layer); skip
+            // the capture passes entirely.
+            return Ok(weights.clone());
+        }
+        let packed = packed_run(ctx.cfg);
+        let shards = ctx.cfg.shards.max(1);
+        // Hessian capture stays sequential: the f32 `H += XᵀX`
+        // accumulation order is part of the determinism contract
+        // (docs/CONCURRENCY.md) and is never sharded.
+        let hessians = quant::gptq_capture_hessians(weights, &gseqs);
+        // Per-target setup (dampening + Cholesky + per-row scales) on the
+        // stage thread; only the row-independent error propagation fans
+        // out through the scheduler below.
+        let mut plans: Vec<(String, Mat, Vec<f32>)> = Vec::new();
+        for l in 0..weights.cfg.n_layers {
+            for (site, targets) in quant::gptq_sites(l) {
+                let Some(h) = hessians.get(&site) else { continue };
+                for t in targets {
+                    let (lmat, scales) = quant::gptq_prepare(weights.get(&t), h, cfg);
+                    plans.push((t, lmat, scales));
+                }
+            }
+        }
+        // One scheduler job per (target, row shard). Each sub-job reads
+        // and produces only its row slice, so the gate charges the
+        // per-shard working set (slice in + slice out) instead of
+        // whole-layer buffers.
+        let mut jobs: Vec<CalibJob<(usize, usize, usize)>> = Vec::new();
+        for (p, (target, _, _)) in plans.iter().enumerate() {
+            let w = weights.get(target);
+            let ranges = shard_ranges(w.rows, shards);
+            let multi = ranges.len() > 1;
+            for (s, (lo, hi)) in ranges.into_iter().enumerate() {
+                let label = if multi {
+                    format!("gptq[{target}#s{s}]")
+                } else {
+                    format!("gptq[{target}]")
+                };
+                let bytes = ((hi - lo) * w.cols * 4 * 2) as u64;
+                jobs.push(CalibJob::new(jobs.len(), label, bytes, (p, lo, hi)));
+            }
+        }
+        let results = Scheduler::new(ctx.cfg.workers).run(
+            &ctx.gate,
+            ctx.observer.as_ref(),
+            jobs,
+            |job, _sink| {
+                let (p, lo, hi) = job.payload;
+                let (target, lmat, scales) = &plans[p];
+                Ok((
+                    p,
+                    quant::gptq_propagate_rows(weights.get(target), lmat, scales, cfg, lo, hi),
+                ))
+            },
+        )?;
+        // Stitch the row blocks back in job order — per plan the shard
+        // ranges were emitted ascending, so appending reconstructs the
+        // propagated matrix bit-for-bit — then snap/encode once per
+        // target, the identical tail to gptq_quantize_layer(_qmat).
+        let mut working: BTreeMap<usize, Mat> = BTreeMap::new();
+        for (p, block) in results {
+            use std::collections::btree_map::Entry;
+            match working.entry(p) {
+                Entry::Vacant(e) => {
+                    e.insert(block);
+                }
+                Entry::Occupied(mut e) => {
+                    let m = e.get_mut();
+                    m.data.extend_from_slice(&block.data);
+                    m.rows += block.rows;
+                }
+            }
+        }
+        let mut out = weights.clone();
+        for (p, (target, _, scales)) in plans.iter().enumerate() {
+            let wmat = working.remove(&p).expect("every shard job ran");
+            debug_assert_eq!(wmat.shape(), weights.get(target).shape());
+            if QuantSpec::supports(cfg.bits) {
+                let q =
+                    QMat::quantize_with_scales(&wmat, QuantSpec::new(cfg.bits), scales.clone());
+                q.prepack();
+                if packed {
+                    out.set_packed(target, q);
+                } else {
+                    out.set(target, q.dequantize());
+                }
+            } else {
+                let mut m = wmat;
+                quant::gptq_snap_wide(&mut m, scales, cfg.bits);
+                out.set(target, m);
+            }
+        }
+        Ok(out)
     }
 
     fn quantize_streamed(&self, ctx: &StageContext, store: &WeightStore) -> Result<()> {
@@ -531,6 +620,9 @@ impl WeightQuantizer for OmniQuantQuantizer {
     fn quantize(&self, ctx: &StageContext, weights: &Weights) -> Result<Weights> {
         let bits = ctx.cfg.bits.w;
         let packed = packed_run(ctx.cfg);
+        if ctx.cfg.shards > 1 && bits < 16 {
+            return omniquant_quantize_sharded(ctx, weights, bits, packed, ctx.cfg.shards);
+        }
         // Group transformer weights by layer prefix ("l3.wq" → "l3");
         // unprefixed weights (final norm, …) form their own groups.
         let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
@@ -653,6 +745,86 @@ impl WeightQuantizer for OmniQuantQuantizer {
         )?;
         Ok(())
     }
+}
+
+/// The `--shards > 1` form of [`OmniQuantQuantizer::quantize`]: one
+/// scheduler job per (tensor, row range). The clip-ratio grid search is
+/// per-row separable, so each sub-job searches only its row slice with
+/// `clipped_scales_range` and the stage thread concatenates the slices in
+/// range order before the shared QMat encode — bit-identical weights to
+/// the unsharded path, with the gate charging per-shard working sets
+/// instead of whole layer groups.
+fn omniquant_quantize_sharded(
+    ctx: &StageContext,
+    weights: &Weights,
+    bits: u8,
+    packed: bool,
+    shards: usize,
+) -> Result<Weights> {
+    let qmax = quant::clip_qmax(bits);
+    let mut names: Vec<String> = Vec::new();
+    for n in weights.names() {
+        if n == "embed" || n == "head" {
+            continue;
+        }
+        names.push(n.clone());
+    }
+    let mut jobs: Vec<CalibJob<(usize, usize, usize)>> = Vec::new();
+    for (t, n) in names.iter().enumerate() {
+        let m = weights.get(n);
+        // Per-shard charge: the row slice of the historical whole-tensor
+        // bytes (dense input plus, for --packed runs, the packed output
+        // those rows produce).
+        let whole = m.nbytes()
+            + if packed {
+                QMat::packed_estimate(m.rows, m.cols, QuantSpec::new(bits))
+            } else {
+                0
+            };
+        for (s, (lo, hi)) in shard_ranges(m.rows, shards).into_iter().enumerate() {
+            let bytes = (whole * (hi - lo) as u64 / m.rows.max(1) as u64).max(1);
+            jobs.push(CalibJob::new(
+                jobs.len(),
+                format!("omniquant[{n}#s{s}]"),
+                bytes,
+                (t, lo, hi),
+            ));
+        }
+    }
+    let results = Scheduler::new(ctx.cfg.workers).run(
+        &ctx.gate,
+        ctx.observer.as_ref(),
+        jobs,
+        |job, _sink| {
+            let (t, lo, hi) = job.payload;
+            Ok((t, quant::clipped_scales_range(weights.get(&names[t]), qmax, lo, hi)))
+        },
+    )?;
+    // Concatenate scale slices in job order (shard ranges are emitted
+    // ascending per tensor), then encode each tensor exactly as
+    // omniquant_quantize_qmat / omniquant_quantize_mat would.
+    let mut scales: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+    for (t, part) in results {
+        scales.entry(t).or_default().extend(part);
+    }
+    let mut out = weights.clone();
+    for (t, n) in names.iter().enumerate() {
+        let m = weights.get(n);
+        let sc = scales.remove(&t).expect("every tensor searched");
+        debug_assert_eq!(sc.len(), m.rows);
+        if QuantSpec::supports(bits) {
+            let q = QMat::quantize_with_scales(m, QuantSpec::new(bits), sc);
+            q.prepack();
+            if packed {
+                out.set_packed(n, q);
+            } else {
+                out.set(n, q.dequantize());
+            }
+        } else {
+            out.set(n, quant::omniquant_snap_wide(m, &sc, bits));
+        }
+    }
+    Ok(out)
 }
 
 /// Per-channel activation abs-max at each linear's input, captured from a

@@ -217,6 +217,15 @@ impl<'w> PipelineBuilder<'w> {
         self
     }
 
+    /// Within-layer tensor-parallel shards (1 = off). GPTQ/OmniQuant
+    /// per-layer jobs split into per-shard row-range sub-jobs with
+    /// proportionally smaller gate charges; results are byte-identical
+    /// at any shard count (`docs/CONCURRENCY.md`).
+    pub fn shards(mut self, n: usize) -> PipelineBuilder<'w> {
+        self.cfg.shards = n.max(1);
+        self
+    }
+
     /// Receive typed [`PipelineEvent`]s during the run (default: none).
     pub fn observer(mut self, observer: Arc<dyn PipelineObserver>) -> PipelineBuilder<'w> {
         self.observer = observer;

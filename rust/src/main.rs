@@ -24,7 +24,7 @@ use dartquant::data::{Corpus, Dialect};
 use dartquant::eval::{self, EvalSpec};
 use dartquant::model::{BitSetting, ModelConfig, TokenBatch, TrainState, Weights};
 use dartquant::runtime::Runtime;
-use dartquant::util::bench::{fnum, Table};
+use dartquant::util::bench::{fnum, percentile, Table};
 use dartquant::util::cli::Command;
 use dartquant::util::fmt_duration;
 use std::sync::Arc;
@@ -162,6 +162,7 @@ fn pipeline_config(a: &dartquant::util::cli::Args) -> Result<PipelineConfig> {
     cfg.calib_sequences = a.get_usize("sequences", 32)?;
     cfg.calib.steps = a.get_usize("steps", 60)?;
     cfg.workers = a.get_usize("workers", cfg.workers)?;
+    cfg.shards = a.get_usize("shards", 1)?.max(1);
     cfg.packed = a.get_bool("packed");
     cfg.weight_quant = WeightQuant::parse(a.get_or("wquant", "gptq"))?;
     if a.get_bool("budget-3090") {
@@ -186,6 +187,7 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         .flag_default("sequences", "32", "calibration sequences")
         .flag_default("steps", "60", "calibration steps")
         .flag_default("workers", "0", "calibration worker threads (0 = all cores)")
+        .flag_default("shards", "1", "within-layer shards per quantize job (bit-identical)")
         .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("out", "write the quantized checkpoint here")
         .flag("checkpoint", "load base weights from a checkpoint")
@@ -321,6 +323,7 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         .flag_default("sequences", "32", "calibration sequences")
         .flag_default("steps", "60", "calibration steps")
         .flag_default("workers", "0", "scheduler worker threads (0 = all cores)")
+        .flag_default("shards", "1", "within-layer shards per quantize job (bit-identical)")
         .flag_default("items", "8", "zero-shot items per task")
         .flag_default("wquant", "gptq", "weight quantizer for rotation methods (rtn|gptq)")
         .flag("checkpoint", "base weights checkpoint")
@@ -389,6 +392,7 @@ fn serving_flags(cmd: Command) -> Command {
         .flag_default("temperature", "0", "sampling temperature (0 = greedy)")
         .flag_default("seed", "0", "base sampling seed (per-session streams derive from it)")
         .flag_default("workers", "0", "engine step worker threads (0 = all cores)")
+        .flag_default("shards", "1", "within-layer shards per linear/attention (bit-identical)")
         .flag("checkpoint", "load weights from a checkpoint file")
         .flag("budget-bytes", "KV-cache admission budget in bytes")
         .switch("budget-3090", "scaled single-3090 KV budget (24 MiB)")
@@ -426,7 +430,8 @@ fn serving_setup(
         spill: a.get_bool("spill"),
     });
     let ecfg = dartquant::serve::EngineConfig {
-        opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, a.get_bool("online-had")),
+        opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, a.get_bool("online-had"))
+            .with_shards(a.get_usize("shards", 1)?),
         seed: a.get_usize("seed", 0)? as u64,
         temperature: a.get_f64("temperature", 0.0)? as f32,
         workers: a.get_usize("workers", 0)?,
@@ -577,10 +582,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let ok = results.iter().filter(|r| r.error.is_none()).count();
     let total: usize = results.iter().map(|r| r.tokens.len()).sum();
     step_wall.sort_unstable();
-    let p99 = step_wall
-        .get(step_wall.len().saturating_sub(1) * 99 / 100)
-        .copied()
-        .unwrap_or_default();
+    let p99 = percentile(&step_wall, 0.99).unwrap_or_default();
     // Sessions-per-GB headline: peak concurrency over the gate budget
     // (or, unlimited, over the peak bytes actually charged).
     let denom_bytes = ecfg.budget.unwrap_or_else(|| engine.peak_cache_bytes());

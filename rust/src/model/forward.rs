@@ -18,7 +18,10 @@
 
 use super::kv::{KvSlot, LayerKv};
 use super::weights::{Tensor, Weights};
-use crate::tensor::{matmul_transb, matmul_transb_deq, matmul_transb_qact, Mat, QAct};
+use crate::tensor::{
+    matmul_transb, matmul_transb_deq, matmul_transb_deq_sharded, matmul_transb_qact,
+    matmul_transb_qact_sharded, matmul_transb_sharded, shard_ranges, Mat, QAct,
+};
 
 // The per-row asymmetric activation grid and its fake-quant kernels live
 // with the quantized-activation type in `tensor::qact` (the KV-cache code
@@ -36,18 +39,30 @@ pub struct FwdOptions {
     pub kv_levels: f32,
     /// Apply the online R3/R4 Hadamards (requires wd pre-fused with H_f).
     pub use_had: bool,
+    /// Within-layer tensor-parallel shards (1 = unsharded). Linears take
+    /// the column-parallel plan and attention shards over kv heads —
+    /// both bit-identical to the unsharded path by construction
+    /// (`tensor::shard`, `docs/CONCURRENCY.md`).
+    pub shards: usize,
 }
 
 impl FwdOptions {
     pub const FP: FwdOptions =
-        FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: false };
+        FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: false, shards: 1 };
 
     pub fn quant(a_bits: u8, kv_bits: u8, use_had: bool) -> FwdOptions {
         FwdOptions {
             a_levels: super::config::BitSetting::levels(a_bits),
             kv_levels: super::config::BitSetting::levels(kv_bits),
             use_had,
+            shards: 1,
         }
+    }
+
+    /// The same options with a within-layer shard count.
+    pub fn with_shards(mut self, shards: usize) -> FwdOptions {
+        self.shards = shards.max(1);
+        self
     }
 }
 
@@ -106,7 +121,17 @@ fn hadamard_rows(x: &mut Mat) {
 /// the caller holds the activation's integer codes (`qx`, computed once
 /// per layer boundary by [`quantize_act`]), the bit-exact dequantizing
 /// path otherwise (fp/wide activation grids, grouped weight scales).
-fn linear(w: &Weights, name: &str, x: &Mat, qx: Option<&QAct>) -> Mat {
+/// `shards > 1` routes every variant through its column-parallel plan —
+/// the same per-element arithmetic over explicit disjoint output ranges,
+/// so the result is bit-identical at any shard count.
+fn linear(w: &Weights, name: &str, x: &Mat, qx: Option<&QAct>, shards: usize) -> Mat {
+    if shards > 1 {
+        return match (w.tensor(name), qx) {
+            (Tensor::F32(m), _) => matmul_transb_sharded(x, m, shards),
+            (Tensor::Packed(q), Some(qa)) => matmul_transb_qact_sharded(x, qa, q, shards),
+            (Tensor::Packed(q), None) => matmul_transb_deq_sharded(x, q, shards),
+        };
+    }
     match (w.tensor(name), qx) {
         (Tensor::F32(m), _) => matmul_transb(x, m),
         (Tensor::Packed(q), Some(qa)) => matmul_transb_qact(x, qa, q),
@@ -182,9 +207,9 @@ pub fn block_step(
     // codes instead of re-deriving them per linear.
     let qh = quantize_act(&mut hq, opt.a_levels);
     hook.on_linear_input(&name("wq"), &hq);
-    let q_all = linear(w, &name("wq"), &hq, qh.as_ref());
-    let k_all = linear(w, &name("wk"), &hq, qh.as_ref());
-    let v_all = linear(w, &name("wv"), &hq, qh.as_ref());
+    let q_all = linear(w, &name("wq"), &hq, qh.as_ref(), opt.shards);
+    let k_all = linear(w, &name("wk"), &hq, qh.as_ref(), opt.shards);
+    let v_all = linear(w, &name("wv"), &hq, qh.as_ref(), opt.shards);
     hook.on_v_site(l, &v_all);
 
     // New positions' K/V rows into the cache; KV quantization happens at
@@ -206,40 +231,101 @@ pub fn block_step(
     let mut attn_out = Mat::zeros(tn, nh * hd);
     let rep = nh / nkv;
     let scale = 1.0 / (hd as f32).sqrt();
-    // One K and one V scratch per block call, refilled per kv head and
-    // shared by its q heads — no per-head allocation on the decode path.
     let t_total = kv.positions();
-    let mut kh = Mat::zeros(t_total, hd);
-    let mut vh = Mat::zeros(t_total, hd);
-    for kv_head in 0..nkv {
-        kv.k_head_into(kv_head, &mut kh);
-        kv.v_head_into(kv_head, &mut vh);
-        for head in kv_head * rep..(kv_head + 1) * rep {
-            let mut qh = head_block(&q_all, head, hd);
-            rope_block(&mut qh, start, cfg.rope_theta);
-            if opt.use_had {
-                hadamard_rows(&mut qh);
+    if opt.shards > 1 {
+        // Per-kv-head sharded attention. KV decode stays **sequential**
+        // on the calling thread — pager page faults / LRU touches keep
+        // their deterministic order — then the pure-f32 per-head compute
+        // fans out over kv heads, each shard writing the disjoint
+        // attn_out column block of its q heads. Per-element arithmetic
+        // (scores, softmax, weighted-V accumulation order) is the serial
+        // loop verbatim, so the residual stream is bit-identical.
+        let mut heads: Vec<(Mat, Mat)> = Vec::with_capacity(nkv);
+        for kv_head in 0..nkv {
+            let mut kh = Mat::zeros(t_total, hd);
+            let mut vh = Mat::zeros(t_total, hd);
+            kv.k_head_into(kv_head, &mut kh);
+            kv.v_head_into(kv_head, &mut vh);
+            heads.push((kh, vh));
+        }
+        let row_w = nh * hd;
+        let out_ptr = crate::tensor::SendPtr(attn_out.data.as_mut_ptr());
+        let q_all = &q_all;
+        crate::tensor::run_shards(&shard_ranges(nkv, opt.shards), |lo, hi| {
+            let out_ptr = &out_ptr;
+            for kv_head in lo..hi {
+                let (kh, vh) = &heads[kv_head];
+                for head in kv_head * rep..(kv_head + 1) * rep {
+                    let mut qh = head_block(q_all, head, hd);
+                    rope_block(&mut qh, start, cfg.rope_theta);
+                    if opt.use_had {
+                        hadamard_rows(&mut qh);
+                    }
+                    for i in 0..tn {
+                        let p = start + i;
+                        let mut scores = vec![0f32; p + 1];
+                        let qrow = qh.row(i);
+                        let mut mx = f32::MIN;
+                        for (j, s) in scores.iter_mut().enumerate() {
+                            *s = qrow.iter().zip(kh.row(j)).map(|(a, b)| a * b).sum::<f32>()
+                                * scale;
+                            mx = mx.max(*s);
+                        }
+                        let mut denom = 0f32;
+                        for s in scores.iter_mut() {
+                            *s = (*s - mx).exp();
+                            denom += *s;
+                        }
+                        for (j, s) in scores.iter().enumerate() {
+                            let prob = s / denom;
+                            for (c, vv) in vh.row(j).iter().enumerate() {
+                                // SAFETY: this shard owns kv heads
+                                // [lo, hi); their q heads' column blocks
+                                // are disjoint from other shards' writes.
+                                unsafe {
+                                    *out_ptr.0.add(i * row_w + head * hd + c) += prob * vv;
+                                }
+                            }
+                        }
+                    }
+                }
             }
-            // causal attention: new position start+i sees [0, start+i]
-            for i in 0..tn {
-                let p = start + i;
-                let mut scores = vec![0f32; p + 1];
-                let qrow = qh.row(i);
-                let mut mx = f32::MIN;
-                for (j, s) in scores.iter_mut().enumerate() {
-                    *s = qrow.iter().zip(kh.row(j)).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    mx = mx.max(*s);
+        });
+    } else {
+        // One K and one V scratch per block call, refilled per kv head and
+        // shared by its q heads — no per-head allocation on the decode path.
+        let mut kh = Mat::zeros(t_total, hd);
+        let mut vh = Mat::zeros(t_total, hd);
+        for kv_head in 0..nkv {
+            kv.k_head_into(kv_head, &mut kh);
+            kv.v_head_into(kv_head, &mut vh);
+            for head in kv_head * rep..(kv_head + 1) * rep {
+                let mut qh = head_block(&q_all, head, hd);
+                rope_block(&mut qh, start, cfg.rope_theta);
+                if opt.use_had {
+                    hadamard_rows(&mut qh);
                 }
-                let mut denom = 0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - mx).exp();
-                    denom += *s;
-                }
-                let out_row = attn_out.row_mut(i);
-                for (j, s) in scores.iter().enumerate() {
-                    let prob = s / denom;
-                    for (c, vv) in vh.row(j).iter().enumerate() {
-                        out_row[head * hd + c] += prob * vv;
+                // causal attention: new position start+i sees [0, start+i]
+                for i in 0..tn {
+                    let p = start + i;
+                    let mut scores = vec![0f32; p + 1];
+                    let qrow = qh.row(i);
+                    let mut mx = f32::MIN;
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        *s = qrow.iter().zip(kh.row(j)).map(|(a, b)| a * b).sum::<f32>() * scale;
+                        mx = mx.max(*s);
+                    }
+                    let mut denom = 0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - mx).exp();
+                        denom += *s;
+                    }
+                    let out_row = attn_out.row_mut(i);
+                    for (j, s) in scores.iter().enumerate() {
+                        let prob = s / denom;
+                        for (c, vv) in vh.row(j).iter().enumerate() {
+                            out_row[head * hd + c] += prob * vv;
+                        }
                     }
                 }
             }
@@ -247,7 +333,7 @@ pub fn block_step(
     }
     let qo = quantize_act(&mut attn_out, opt.a_levels);
     hook.on_linear_input(&name("wo"), &attn_out);
-    let proj = linear(w, &name("wo"), &attn_out, qo.as_ref());
+    let proj = linear(w, &name("wo"), &attn_out, qo.as_ref(), opt.shards);
     x.add_assign(&proj);
 
     // ---- ffn ----
@@ -265,7 +351,7 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
     let mut h2q = h2;
     let qh2 = quantize_act(&mut h2q, opt.a_levels);
     if cfg.is_moe() {
-        let gate_logits = linear(w, &name("router"), &h2q, qh2.as_ref()); // (T, E)
+        let gate_logits = linear(w, &name("router"), &h2q, qh2.as_ref(), opt.shards); // (T, E)
         let mut ffn = Mat::zeros(t, d);
         for i in 0..t {
             // top-k experts by logit (jax lax.top_k tie-break: lower
@@ -295,14 +381,14 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
                 let gate = exps[rank] / denom;
                 let ename = |leaf: &str| format!("l{l}.e{e}.{leaf}");
                 let row = h2q.rows_slice(i, i + 1);
-                let g = linear(w, &ename("wg"), &row, qrow.as_ref());
-                let u = linear(w, &ename("wu"), &row, qrow.as_ref());
+                let g = linear(w, &ename("wg"), &row, qrow.as_ref(), opt.shards);
+                let u = linear(w, &ename("wu"), &row, qrow.as_ref(), opt.shards);
                 let mut a = Mat::from_fn(1, cfg.ffn_dim, |_, j| silu(g.at(0, j)) * u.at(0, j));
                 if opt.use_had {
                     hadamard_rows(&mut a);
                 }
                 let qa = quantize_act(&mut a, opt.a_levels);
-                let y = linear(w, &ename("wd"), &a, qa.as_ref());
+                let y = linear(w, &ename("wd"), &a, qa.as_ref(), opt.shards);
                 for j in 0..d {
                     *ffn.at_mut(i, j) += gate * y.at(0, j);
                 }
@@ -311,15 +397,15 @@ fn ffn_step(w: &Weights, l: usize, x: &mut Mat, opt: FwdOptions, hook: &mut dyn 
         x.add_assign(&ffn);
     } else {
         hook.on_linear_input(&name("wg"), &h2q);
-        let g = linear(w, &name("wg"), &h2q, qh2.as_ref());
-        let u = linear(w, &name("wu"), &h2q, qh2.as_ref());
+        let g = linear(w, &name("wg"), &h2q, qh2.as_ref(), opt.shards);
+        let u = linear(w, &name("wu"), &h2q, qh2.as_ref(), opt.shards);
         let mut a = Mat::from_fn(t, cfg.ffn_dim, |i, j| silu(g.at(i, j)) * u.at(i, j));
         if opt.use_had {
             hadamard_rows(&mut a); // R4 (wd pre-fused with H)
         }
         let qa = quantize_act(&mut a, opt.a_levels);
         hook.on_linear_input(&name("wd"), &a);
-        let y = linear(w, &name("wd"), &a, qa.as_ref());
+        let y = linear(w, &name("wd"), &a, qa.as_ref(), opt.shards);
         x.add_assign(&y);
     }
 }
@@ -445,7 +531,7 @@ mod tests {
         let had = forward_one(
             &w,
             &toks,
-            FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true },
+            FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true, shards: 1 },
             &mut NoCapture,
         );
         for (a, b) in fp.iter().zip(&had) {

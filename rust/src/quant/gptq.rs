@@ -27,12 +27,12 @@ impl Default for GptqConfig {
     }
 }
 
-/// The GPTQ core: column-by-column quantize with Cholesky error
-/// propagation. Returns the propagated working matrix (entries on or near
-/// the per-row grid) plus the per-row scales — callers snap it onto the
-/// grid as packed codes ([`gptq_quantize_layer_qmat`]) or dense f32
-/// ([`gptq_quantize_layer`]).
-fn gptq_propagate(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
+/// The shared per-layer GPTQ setup: dampened Hessian → Cholesky factor
+/// of its inverse, plus the per-row symmetric scales from the original
+/// weights. Split out of [`gptq_propagate`] so the coordinator can run
+/// it **once** per layer and fan the row-independent propagation
+/// ([`gptq_propagate_rows`]) out over `--shards` sub-jobs.
+pub(crate) fn gptq_prepare(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
     assert_eq!(hessian.rows, w.cols);
     let n = w.cols;
     let qmax = wide_qmax(cfg.bits);
@@ -57,34 +57,76 @@ fn gptq_propagate(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
     let l = cholesky(&hinv).expect("Hinv SPD");
 
     // Per-row symmetric scale from the original weights.
-    let mut out = w.clone();
     let scales: Vec<f32> = (0..w.rows)
         .map(|i| {
             let amax = w.row(i).iter().map(|v| v.abs()).fold(0.0f32, f32::max);
             (amax / qmax).max(1e-10)
         })
         .collect();
+    (l, scales)
+}
 
-    // Column-by-column quantize + error propagation:
-    //   e_j = (w_j - q_j) / L[j][j];  w_k -= e_j * L[k][j]  for k > j.
+/// Column-by-column quantize + error propagation restricted to weight
+/// rows `[lo, hi)`:
+///   e_j = (w_j - q_j) / L[j][j];  w_k -= e_j * L[k][j]  for k > j.
+/// Each row's updates read and write only that row, so a row-range
+/// decomposition replays the exact per-row operation sequence of the
+/// whole-matrix loop — stitching the blocks back in order is
+/// bit-identical at any shard count. This is the `--shards` sub-job unit.
+pub(crate) fn gptq_propagate_rows(
+    w: &Mat,
+    l: &Mat,
+    scales: &[f32],
+    cfg: GptqConfig,
+    lo: usize,
+    hi: usize,
+) -> Mat {
+    let n = w.cols;
+    let qmax = wide_qmax(cfg.bits);
+    let mut out = Mat::from_fn(hi - lo, n, |r, j| w.at(lo + r, j));
     for j in 0..n {
         let ljj = l.at(j, j).max(1e-10);
-        for i in 0..w.rows {
-            let v = out.at(i, j);
-            let q = snap(v, scales[i], qmax);
-            *out.at_mut(i, j) = q;
+        for r in 0..out.rows {
+            let v = out.at(r, j);
+            let q = snap(v, scales[lo + r], qmax);
+            *out.at_mut(r, j) = q;
             let e = (v - q) / ljj;
             if e != 0.0 {
                 for k in (j + 1)..n {
                     let lkj = l.at(k, j);
                     if lkj != 0.0 {
-                        *out.at_mut(i, k) -= e * lkj;
+                        *out.at_mut(r, k) -= e * lkj;
                     }
                 }
             }
         }
     }
+    out
+}
+
+/// The GPTQ core: column-by-column quantize with Cholesky error
+/// propagation. Returns the propagated working matrix (entries on or near
+/// the per-row grid) plus the per-row scales — callers snap it onto the
+/// grid as packed codes ([`gptq_quantize_layer_qmat`]) or dense f32
+/// ([`gptq_quantize_layer`]).
+fn gptq_propagate(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> (Mat, Vec<f32>) {
+    let (l, scales) = gptq_prepare(w, hessian, cfg);
+    let out = gptq_propagate_rows(w, &l, &scales, cfg, 0, w.rows);
     (out, scales)
+}
+
+/// The wide-grid (non-packing bits) tail of [`gptq_quantize_layer`]:
+/// snap the propagated values onto the per-row f32 grid in place. Split
+/// out so the coordinator's sharded path finalizes stitched row blocks
+/// with the identical expression.
+pub(crate) fn gptq_snap_wide(out: &mut Mat, scales: &[f32], bits: u8) {
+    let qmax = wide_qmax(bits);
+    for i in 0..out.rows {
+        let s = scales[i];
+        for v in out.row_mut(i) {
+            *v = snap(*v, s, qmax);
+        }
+    }
 }
 
 /// GPTQ into packed codes: the final grid snap becomes the QMat encode
@@ -107,13 +149,7 @@ pub fn gptq_quantize_layer(w: &Mat, hessian: &Mat, cfg: GptqConfig) -> Mat {
     }
     // Wide grids: snap the propagated values onto the f32 grid directly.
     let (mut out, scales) = gptq_propagate(w, hessian, cfg);
-    let qmax = wide_qmax(cfg.bits);
-    for i in 0..out.rows {
-        let s = scales[i];
-        for v in out.row_mut(i) {
-            *v = snap(*v, s, qmax);
-        }
-    }
+    gptq_snap_wide(&mut out, &scales, cfg.bits);
     out
 }
 
@@ -206,14 +242,15 @@ pub fn gptq_quantize_store(
     })
 }
 
-fn gptq_quantize_model_with(
+/// Accumulate per-site input Hessians over `calib_seqs` via the native
+/// forward. The capture hook reports wq (shared input with wk/wv), wo,
+/// wg (shared with wu), wd — covering every linear's input. Sequential
+/// by construction: f32 `H += XᵀX` accumulation order is part of the
+/// determinism contract, so `--shards` never decomposes this step.
+pub(crate) fn gptq_capture_hessians(
     weights: &Weights,
     calib_seqs: &[Vec<i32>],
-    cfg: GptqConfig,
-    packed: bool,
-) -> Weights {
-    // The capture hook reports wq (shared input with wk/wv), wo, wg
-    // (shared with wu), wd — covering every linear's input.
+) -> std::collections::BTreeMap<String, Mat> {
     let mut names = Vec::new();
     for l in 0..weights.cfg.n_layers {
         for leaf in ["wq", "wo", "wg", "wd"] {
@@ -224,16 +261,31 @@ fn gptq_quantize_model_with(
     for seq in calib_seqs {
         crate::model::forward_one(weights, seq, FwdOptions::FP, &mut hook);
     }
+    hook.hessians
+}
+
+/// Layer `l`'s Hessian capture sites and the quantization targets that
+/// share each site's input.
+pub(crate) fn gptq_sites(l: usize) -> [(String, Vec<String>); 4] {
+    [
+        (format!("l{l}.wq"), vec![format!("l{l}.wq"), format!("l{l}.wk"), format!("l{l}.wv")]),
+        (format!("l{l}.wo"), vec![format!("l{l}.wo")]),
+        (format!("l{l}.wg"), vec![format!("l{l}.wg"), format!("l{l}.wu")]),
+        (format!("l{l}.wd"), vec![format!("l{l}.wd")]),
+    ]
+}
+
+fn gptq_quantize_model_with(
+    weights: &Weights,
+    calib_seqs: &[Vec<i32>],
+    cfg: GptqConfig,
+    packed: bool,
+) -> Weights {
+    let hessians = gptq_capture_hessians(weights, calib_seqs);
     let mut out = weights.clone();
     for l in 0..weights.cfg.n_layers {
-        let sites = [
-            (format!("l{l}.wq"), vec![format!("l{l}.wq"), format!("l{l}.wk"), format!("l{l}.wv")]),
-            (format!("l{l}.wo"), vec![format!("l{l}.wo")]),
-            (format!("l{l}.wg"), vec![format!("l{l}.wg"), format!("l{l}.wu")]),
-            (format!("l{l}.wd"), vec![format!("l{l}.wd")]),
-        ];
-        for (site, targets) in sites {
-            let Some(h) = hook.hessians.get(&site) else { continue };
+        for (site, targets) in gptq_sites(l) {
+            let Some(h) = hessians.get(&site) else { continue };
             for t in targets {
                 if packed {
                     let q = gptq_quantize_layer_qmat(out.get(&t), h, cfg);

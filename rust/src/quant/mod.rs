@@ -24,6 +24,12 @@ pub use omniquant::{
     omniquant_quantize_mat, omniquant_quantize_model, omniquant_quantize_model_packed,
     omniquant_quantize_qmat,
 };
+// Crate-internal: the coordinator's sharded GPTQ/OmniQuant stages reuse
+// the per-layer setup and the row-range decomposition units directly.
+pub(crate) use gptq::{
+    gptq_capture_hessians, gptq_prepare, gptq_propagate_rows, gptq_sites, gptq_snap_wide,
+};
+pub(crate) use omniquant::{clip_qmax, clipped_scales_range, omniquant_snap_wide};
 
 use crate::model::Weights;
 use crate::tensor::{Mat, QMat, QuantSpec};

@@ -26,7 +26,15 @@ fn quant_row(row: &[f32], gamma: f32, qmax: f32) -> Vec<f32> {
 
 /// MSE-optimal per-row clipped scales (the grid search itself).
 fn clipped_scales(w: &Mat, qmax: f32) -> Vec<f32> {
-    (0..w.rows)
+    clipped_scales_range(w, qmax, 0, w.rows)
+}
+
+/// [`clipped_scales`] restricted to rows `[lo, hi)`. The grid search is
+/// per-row separable, so the coordinator decomposes one tensor's search
+/// into `--shards` row-range sub-jobs and concatenates the results in
+/// range order — bit-identical to the whole-matrix search.
+pub(crate) fn clipped_scales_range(w: &Mat, qmax: f32, lo: usize, hi: usize) -> Vec<f32> {
+    (lo..hi)
         .map(|i| {
             let row = w.row(i);
             let amax = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
@@ -45,6 +53,33 @@ fn clipped_scales(w: &Mat, qmax: f32) -> Vec<f32> {
             (best.1 * amax / qmax).max(1e-10)
         })
         .collect()
+}
+
+/// The grid bound the clip search quantizes against for `bits` — the
+/// same qmax [`omniquant_quantize_qmat`] (packing bits) and
+/// [`omniquant_quantize_mat`] (wide bits) use internally, exposed so the
+/// coordinator's sharded search calls [`clipped_scales_range`] with the
+/// identical bound.
+pub(crate) fn clip_qmax(bits: u8) -> f32 {
+    if QuantSpec::supports(bits) {
+        QuantSpec::new(bits).qmax()
+    } else {
+        wide_qmax(bits)
+    }
+}
+
+/// The wide-grid tail of [`omniquant_quantize_mat`]: snap every row onto
+/// the clipped f32 grid given precomputed scales.
+pub(crate) fn omniquant_snap_wide(w: &Mat, scales: &[f32], bits: u8) -> Mat {
+    let qmax = wide_qmax(bits);
+    let mut out = w.clone();
+    for i in 0..w.rows {
+        let s = scales[i];
+        for v in out.row_mut(i) {
+            *v = snap(*v, s, qmax);
+        }
+    }
+    out
 }
 
 /// Clipped RTN into packed codes (bits ∈ [2, 8]): the MSE-optimal

@@ -431,7 +431,7 @@ mod tests {
         let mut rng = Pcg64::new(4);
         let rot = RotationSet::random_hadamard(w.cfg.dim, w.cfg.head_dim, w.cfg.n_layers, &mut rng);
         let fused = fuse(&w, &rot);
-        let opt = FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true };
+        let opt = FwdOptions { a_levels: 65536.0, kv_levels: 65536.0, use_had: true, shards: 1 };
         let got = forward_one(&fused, &toks, opt, &mut NoCapture);
         let d = (mean(&base) - mean(&got)).abs();
         assert!(d < 2e-2, "R3/R4 cancellation violated: {d}");

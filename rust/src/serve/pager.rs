@@ -192,10 +192,15 @@ struct SpillFile {
 /// Disambiguates spill files of pagers created by the same process.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Filename prefix of KV spill files in the OS temp dir — shared by
+/// [`SpillFile::create`] and the stale-file sweep in [`Pager::new`].
+/// Name shape: `dartquant-kv-spill-<pid>-<seq>.bin`.
+const SPILL_PREFIX: &str = "dartquant-kv-spill-";
+
 impl SpillFile {
     fn create(slot_bytes: u64) -> Result<SpillFile> {
         let path = std::env::temp_dir().join(format!(
-            "dartquant-kv-spill-{}-{}.bin",
+            "{SPILL_PREFIX}{}-{}.bin",
             std::process::id(),
             SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
@@ -237,7 +242,55 @@ impl SpillFile {
 
 impl Drop for SpillFile {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        // Best effort, but never silent: a leaked spill file costs disk
+        // until the next sweep, so report which one failed and why.
+        if let Err(e) = std::fs::remove_file(&self.path) {
+            eprintln!(
+                "warning: failed to remove KV spill file {}: {e}",
+                self.path.display()
+            );
+        }
+    }
+}
+
+/// Whether `pid` looks like a live process. Uses `/proc/<pid>` where
+/// procfs exists; elsewhere assume alive — the sweep must never delete a
+/// running process's spill file.
+fn process_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        std::path::Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        true
+    }
+}
+
+/// Best-effort sweep of spill files leaked by dead processes (a crash or
+/// `kill -9` never runs [`SpillFile::drop`]). Keyed on the
+/// [`SPILL_PREFIX`] name shape; files owned by live pids — including this
+/// process — are left alone, and every removal (or failed removal) is
+/// reported. Runs at [`Pager::new`], so long-lived servers reclaim the
+/// previous crash's disk before they start spilling themselves.
+fn sweep_stale_spill_files() {
+    let Ok(entries) = std::fs::read_dir(std::env::temp_dir()) else { return };
+    let me = std::process::id();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(SPILL_PREFIX) else { continue };
+        let Some(pid) = rest.split('-').next().and_then(|p| p.parse::<u32>().ok()) else {
+            continue;
+        };
+        if pid == me || process_alive(pid) {
+            continue;
+        }
+        let path = entry.path();
+        match std::fs::remove_file(&path) {
+            Ok(()) => eprintln!("note: removed stale KV spill file {}", path.display()),
+            Err(e) => eprintln!(
+                "warning: failed to remove stale KV spill file {}: {e}",
+                path.display()
+            ),
+        }
     }
 }
 
@@ -409,6 +462,7 @@ impl Pager {
         spill: bool,
         gate: Arc<MemoryGate>,
     ) -> Pager {
+        sweep_stale_spill_files();
         Pager {
             layout: PageLayout::for_model(cfg, kv_levels, page_positions),
             gate,
@@ -898,6 +952,25 @@ mod tests {
         let mut out = Mat::zeros(positions, pager.layout().hd);
         kv.layers[layer].k_head_into(head, &mut out);
         out
+    }
+
+    #[test]
+    fn stale_spill_files_are_swept_at_construction() {
+        // A dead pid's leaked file (crashes skip SpillFile::drop): pid
+        // 999_999_999 is far above any Linux pid_max, so it can't be
+        // alive. A live pid's file — our own — must survive the sweep.
+        let dir = std::env::temp_dir();
+        let stale = dir.join(format!("{SPILL_PREFIX}999999999-0.bin"));
+        let live = dir.join(format!("{SPILL_PREFIX}{}-987654321.bin", std::process::id()));
+        std::fs::write(&stale, b"leaked").unwrap();
+        std::fs::write(&live, b"in use").unwrap();
+        let _pager = tiny_pager(4, true, None);
+        let stale_gone = !stale.exists();
+        let live_kept = live.exists();
+        let _ = std::fs::remove_file(&stale);
+        let _ = std::fs::remove_file(&live);
+        assert!(stale_gone, "pre-seeded dead-pid spill file survived the sweep");
+        assert!(live_kept, "the sweep removed a live process's spill file");
     }
 
     #[test]

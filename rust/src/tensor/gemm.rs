@@ -162,7 +162,16 @@ pub(crate) fn gemm_qact(x: &Mat, qa: &QAct, q: &QMat, threads: usize) -> Mat {
 /// cache blocks accumulate into an on-stack i32 tile, then the float
 /// epilogue applies scales, the asymmetric offset and any protected
 /// columns — the exact per-output expression of the scalar kernel.
-fn panel_block(x: &Mat, qa: &QAct, q: &QMat, panels: &Panels, p: usize, y_ptr: &SendPtr) {
+/// `pub(crate)` so the column-parallel shard kernel (`super::shard`) can
+/// distribute the same panels over explicit shard ranges.
+pub(crate) fn panel_block(
+    x: &Mat,
+    qa: &QAct,
+    q: &QMat,
+    panels: &Panels,
+    p: usize,
+    y_ptr: &SendPtr,
+) {
     let (m, k, n) = (x.rows, panels.k, panels.n);
     let j0 = p * NR;
     let jn = NR.min(n - j0);

@@ -6,12 +6,14 @@
 //! its streaming/integer matmul kernels; `qact` is the quantized-
 //! activation side (per-row asymmetric u8 codes, computed once per layer
 //! boundary); `gemm` is the cache-blocked, register-tiled i8/i4 GEMM
-//! that consumes both.
+//! that consumes both; `shard` adds the bit-identical column-parallel /
+//! row-parallel tensor-parallel plans over all three kernel families.
 
 mod gemm;
 mod matmul;
 pub mod qact;
 pub mod qmat;
+pub mod shard;
 
 pub use gemm::{matmul_transb_qact, matmul_transb_qact_with};
 pub use matmul::{matmul, matmul_into, matmul_transb, matmul_transb_with};
@@ -20,6 +22,15 @@ pub use qmat::{
     matmul_transb_deq, matmul_transb_deq_with, matmul_transb_q, matmul_transb_q_ref,
     matmul_transb_q_with, quantize_into, QMat, QuantSpec,
 };
+pub use shard::{
+    matmul_transb_deq_sharded, matmul_transb_q_rowpar, matmul_transb_q_sharded,
+    matmul_transb_qact_rowpar, matmul_transb_qact_sharded, matmul_transb_sharded, reduce_i32,
+    shard_ranges,
+};
+// Crate-internal: the sharded attention in `model::forward` reuses the
+// disjoint-range writer pointer and the shard runner.
+pub(crate) use matmul::SendPtr;
+pub(crate) use shard::run_shards;
 
 /// Row-major 2-D f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

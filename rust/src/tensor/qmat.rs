@@ -468,7 +468,7 @@ impl QMat {
     /// [`QMat::decode_row_into`] with a caller-held code scratch — the
     /// streaming matmul and `dequantize` reuse one buffer across rows
     /// instead of allocating per weight row.
-    fn decode_row_scratch(&self, i: usize, buf: &mut [i8], out: &mut [f32]) {
+    pub(crate) fn decode_row_scratch(&self, i: usize, buf: &mut [i8], out: &mut [f32]) {
         assert_eq!(out.len(), self.cols);
         self.codes_row_into(i, buf);
         match &self.scheme {

@@ -1,0 +1,437 @@
+//! Within-layer tensor-parallel sharding — the single-process analogue of
+//! tensor parallelism for the linear kernels.
+//!
+//! Two plans, both built on `par_ranges`-style disjoint contiguous ranges
+//! ([`shard_ranges`]) so blocking and shard count can never move a bit:
+//!
+//! * **Column-parallel** — split the *output* columns (= rows of the
+//!   transposed weight). Every output element is still computed whole,
+//!   over the full inner dimension, by exactly one shard, so the
+//!   per-element arithmetic is identical to the unsharded kernel for
+//!   **every** dtype — including f32, whose accumulation order must not
+//!   change. This is the plan the forward path uses
+//!   ([`crate::model::FwdOptions::shards`]).
+//! * **Row-parallel** — split the inner (k) dimension; each shard
+//!   produces partial i32 accumulators that are reduced in shard-index
+//!   order ([`reduce_i32`]). i32 addition is associative, so the split
+//!   point and shard count cannot move a bit — which is exactly why this
+//!   plan exists **only for the integer kernels**. An f32 k-split would
+//!   reassociate the float sum and break the determinism contract
+//!   (`docs/CONCURRENCY.md`), so no f32 row-parallel variant is provided.
+//!
+//! Every sharded kernel is gated on bit-identity with its unsharded
+//! counterpart at shards ∈ {1, 2, 4, 7} (tests below plus
+//! `rust/tests/shard.rs`, `perf_gemm`, `perf_hotpath`).
+
+use super::gemm;
+use super::matmul::{dot_unrolled, SendPtr};
+use super::qact::QAct;
+use super::qmat::{matmul_transb_q_ref, QMat};
+use super::Mat;
+
+/// Split `[0, n)` into at most `shards` contiguous, disjoint,
+/// exactly-covering ranges — the same `div_ceil` chunking as
+/// `util::threadpool::par_ranges`, returned as data so callers can
+/// enumerate shards (job decomposition, gate charges) instead of running
+/// them. Degenerate inputs mirror `par_ranges`: `shards` ≤ 1, `shards` >
+/// `n`, and `n` = 0 all still cover every index exactly once (`n` = 0
+/// yields the single empty range `(0, 0)`).
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    if shards <= 1 || n == 0 {
+        return vec![(0, n)];
+    }
+    let chunk = n.div_ceil(shards);
+    let mut out = Vec::with_capacity(shards);
+    for t in 0..shards {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        out.push((lo, hi));
+    }
+    out
+}
+
+/// The shard-reduce half of the row-parallel plan: sum per-shard i32
+/// partial vectors elementwise, folding in **shard-index order**. i32
+/// addition is associative and overflow-free at our operand ranges, so
+/// the result is independent of how `[0, k)` was split — but fixing the
+/// fold order keeps the rule mechanical. Empty input reduces to an empty
+/// vector; a singleton reduces to itself.
+pub fn reduce_i32(parts: Vec<Vec<i32>>) -> Vec<i32> {
+    let mut it = parts.into_iter();
+    let Some(mut acc) = it.next() else { return Vec::new() };
+    for p in it {
+        assert_eq!(p.len(), acc.len(), "shard partials disagree on length");
+        for (a, v) in acc.iter_mut().zip(&p) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+/// Run `f(lo, hi)` for every shard range — through the panic-safe
+/// [`crate::util::threadpool::scoped_try_map`] fan-out when there is more
+/// than one range (a single range runs inline on the caller — shards = 1
+/// never pays a spawn).
+pub(crate) fn run_shards<F>(ranges: &[(usize, usize)], f: F)
+where
+    F: Fn(usize, usize) + Send + Sync,
+{
+    if let [(lo, hi)] = ranges {
+        f(*lo, *hi);
+        return;
+    }
+    crate::util::threadpool::scoped_try_map(ranges.len(), ranges, |_, &(lo, hi)| f(lo, hi))
+        .expect("shard closures do not panic");
+}
+
+/// Column-parallel `C = A · Bᵀ`: shard the output columns (rows of `b`).
+/// Each element is one full-k [`dot_unrolled`] — the identical expression
+/// of [`super::matmul_transb`] — so the result is bit-identical to the
+/// unsharded kernel at any shard count, f32 included.
+pub fn matmul_transb_sharded(a: &Mat, b: &Mat, shards: usize) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_transb_sharded inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    run_shards(&shard_ranges(n, shards), |jlo, jhi| {
+        let c_ptr = &c_ptr;
+        for i in 0..m {
+            let a_row = &a_data[i * k..(i + 1) * k];
+            for j in jlo..jhi {
+                let v = dot_unrolled(a_row, &b_data[j * k..(j + 1) * k]);
+                // SAFETY: each shard writes the disjoint column range
+                // [jlo, jhi) — no two shards touch the same element.
+                unsafe { *c_ptr.0.add(i * n + j) = v };
+            }
+        }
+    });
+    c
+}
+
+/// Column-parallel streamed-dequantize matmul: shard the output columns,
+/// each shard decoding its own weight rows into thread-local scratch —
+/// per-element math identical to [`super::matmul_transb_deq`].
+pub fn matmul_transb_deq_sharded(x: &Mat, q: &QMat, shards: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_deq_sharded inner-dim mismatch");
+    let (m, k, n) = (x.rows, x.cols, q.rows());
+    let mut y = Mat::zeros(m, n);
+    let x_data = &x.data;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    run_shards(&shard_ranges(n, shards), |jlo, jhi| {
+        let y_ptr = &y_ptr;
+        let mut cbuf = vec![0i8; k];
+        let mut wrow = vec![0f32; k];
+        for j in jlo..jhi {
+            q.decode_row_scratch(j, &mut cbuf, &mut wrow);
+            for i in 0..m {
+                let v = dot_unrolled(&x_data[i * k..(i + 1) * k], &wrow);
+                // SAFETY: disjoint column range per shard (see above).
+                unsafe { *y_ptr.0.add(i * n + j) = v };
+            }
+        }
+    });
+    y
+}
+
+/// Column-parallel integer matmul ([`super::matmul_transb_q`] sharded):
+/// recovers the activation codes once, then shards the panel GEMM.
+/// Mirrors the unsharded fallback rule exactly — wide/fp activation grids
+/// (> 256 levels) and grouped weight scales take the dequantizing path.
+pub fn matmul_transb_q_sharded(x: &Mat, q: &QMat, a_levels: f32, shards: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_q_sharded inner-dim mismatch");
+    if a_levels > 256.0 || q.is_grouped() {
+        return matmul_transb_deq_sharded(x, q, shards);
+    }
+    let qa = QAct::from_quantized(x, a_levels);
+    matmul_transb_qact_sharded(x, &qa, q, shards)
+}
+
+/// Column-parallel panel GEMM ([`super::matmul_transb_qact`] sharded):
+/// shard the weight panels (disjoint `NR`-column output ranges) and run
+/// the identical [`gemm::panel_block`] body per panel. i32 accumulation
+/// plus whole-panel ownership make it bit-identical to the unsharded
+/// GEMM at any shard count.
+pub fn matmul_transb_qact_sharded(x: &Mat, qa: &QAct, q: &QMat, shards: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_qact_sharded inner-dim mismatch");
+    assert_eq!((qa.rows(), qa.cols()), x.shape(), "QAct/x shape mismatch");
+    if q.is_grouped() {
+        return matmul_transb_deq_sharded(x, q, shards);
+    }
+    let (m, n) = (x.rows, q.rows());
+    let mut y = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return y;
+    }
+    let panels = q.panels().expect("panel GEMM requires per-row scales");
+    let n_panels = n.div_ceil(gemm::NR);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    run_shards(&shard_ranges(n_panels, shards), |plo, phi| {
+        let y_ptr = &y_ptr;
+        for p in plo..phi {
+            gemm::panel_block(x, qa, q, panels, p, y_ptr);
+        }
+    });
+    y
+}
+
+/// Row-parallel integer matmul: split the **k** dimension, each shard
+/// accumulating partial `Σ_k qx[i][k]·qw[j][k]` (and partial weight
+/// column sums) as i32 over its k range; partials reduce in shard-index
+/// order ([`reduce_i32`]) and the float epilogue — the verbatim
+/// expression of [`matmul_transb_q_ref`] — runs exactly once per output.
+/// Exact at any shard count because the split only ever reassociates i32
+/// sums. Wide grids / grouped scales take the (column-parallel)
+/// dequantizing path: there is no exact f32 k-split.
+pub fn matmul_transb_q_rowpar(x: &Mat, q: &QMat, a_levels: f32, shards: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_q_rowpar inner-dim mismatch");
+    if a_levels > 256.0 || q.is_grouped() {
+        return matmul_transb_deq_sharded(x, q, shards);
+    }
+    let qa = QAct::from_quantized(x, a_levels);
+    matmul_transb_qact_rowpar(x, &qa, q, shards)
+}
+
+/// The row-parallel kernel proper (integer codes already recovered).
+pub fn matmul_transb_qact_rowpar(x: &Mat, qa: &QAct, q: &QMat, shards: usize) -> Mat {
+    assert_eq!(x.cols, q.cols(), "matmul_transb_qact_rowpar inner-dim mismatch");
+    assert_eq!((qa.rows(), qa.cols()), x.shape(), "QAct/x shape mismatch");
+    if q.is_grouped() {
+        return matmul_transb_deq_sharded(x, q, shards);
+    }
+    let (m, k, n) = (x.rows, x.cols, q.rows());
+    let mut y = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return y;
+    }
+    let ranges = shard_ranges(k, shards);
+    // Each shard owns its own partial accumulators; scoped_try_map joins
+    // them back in shard-index (submission) order.
+    let parts = crate::util::threadpool::scoped_try_map(
+        ranges.len(),
+        &ranges,
+        |_, &(klo, khi)| {
+            let mut acc = vec![0i32; m * n];
+            let mut colsum = vec![0i32; n];
+            let mut wbuf = vec![0i8; k];
+            for j in 0..n {
+                q.codes_row_into(j, &mut wbuf);
+                let wslice = &wbuf[klo..khi];
+                colsum[j] = wslice.iter().map(|&c| c as i32).sum();
+                for i in 0..m {
+                    let arow = &qa.code_row(i)[klo..khi];
+                    let mut s: i32 = 0;
+                    for (&a, &w) in arow.iter().zip(wslice) {
+                        s += a as i32 * w as i32;
+                    }
+                    acc[i * n + j] = s;
+                }
+            }
+            (acc, colsum)
+        },
+    )
+    .expect("shard workers do not panic");
+    let (accs, colsums): (Vec<_>, Vec<_>) = parts.into_iter().unzip();
+    let acc = reduce_i32(accs);
+    let colsum = reduce_i32(colsums);
+    // One epilogue per output — the exact expression of the scalar
+    // reference kernel (matmul_transb_q_ref), protected columns included.
+    for j in 0..n {
+        let sw = q.row_scale(j);
+        let prot = q.protected_row(j);
+        for i in 0..m {
+            let (mn, sx) = qa.grid(i);
+            let mut v = sw * (sx * acc[i * n + j] as f32 + mn * colsum[j] as f32);
+            if let Some((idx, vals)) = prot {
+                let xrow = x.row(i);
+                for (&c, &pv) in idx.iter().zip(vals) {
+                    v += xrow[c as usize] * pv;
+                }
+            }
+            *y.at_mut(i, j) = v;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{
+        fake_quant_rows, matmul_transb, matmul_transb_deq, matmul_transb_qact, quantize_act,
+        QuantSpec,
+    };
+    use crate::util::prng::Pcg64;
+
+    const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+    fn rand_mat(seed: u64, r: usize, c: usize) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        for (n, shards) in [(1003usize, 7usize), (64, 4), (16, 16), (5, 2)] {
+            let mut hits = vec![0usize; n];
+            for (lo, hi) in shard_ranges(n, shards) {
+                for h in &mut hits[lo..hi] {
+                    *h += 1;
+                }
+            }
+            assert!(hits.iter().all(|&h| h == 1), "(n={n}, shards={shards})");
+        }
+    }
+
+    #[test]
+    fn shard_ranges_degenerate_inputs() {
+        // n = 0: one empty range, like par_ranges' single f(0, 0) call.
+        assert_eq!(shard_ranges(0, 0), vec![(0, 0)]);
+        assert_eq!(shard_ranges(0, 4), vec![(0, 0)]);
+        // shards = 0 and shards = 1 both mean "the whole range".
+        assert_eq!(shard_ranges(9, 0), vec![(0, 9)]);
+        assert_eq!(shard_ranges(9, 1), vec![(0, 9)]);
+        // shards > n clamps to n single-element ranges.
+        assert_eq!(shard_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        // Every case still covers exactly once.
+        for (n, shards) in [(0usize, 0usize), (0, 3), (1, 0), (1, 9), (3, 8), (7, 7)] {
+            let mut hits = vec![0usize; n];
+            let ranges = shard_ranges(n, shards);
+            assert!(!ranges.is_empty(), "ranges never empty");
+            for (lo, hi) in ranges {
+                assert!(lo <= hi && hi <= n);
+                for h in &mut hits[lo..hi] {
+                    *h += 1;
+                }
+            }
+            assert!(hits.iter().all(|&h| h == 1), "(n={n}, shards={shards})");
+        }
+    }
+
+    #[test]
+    fn reduce_i32_empty_and_singleton() {
+        assert_eq!(reduce_i32(Vec::new()), Vec::<i32>::new());
+        assert_eq!(reduce_i32(vec![vec![3, -1, 4]]), vec![3, -1, 4]);
+        assert_eq!(reduce_i32(vec![Vec::new(), Vec::new()]), Vec::<i32>::new());
+        assert_eq!(reduce_i32(vec![vec![1, 2], vec![10, 20], vec![100, 200]]), vec![111, 222]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reduce_i32_rejects_mismatched_lengths() {
+        reduce_i32(vec![vec![1, 2], vec![3]]);
+    }
+
+    #[test]
+    fn f32_column_parallel_is_bit_identical() {
+        let a = rand_mat(1, 13, 48);
+        let b = rand_mat(2, 29, 48);
+        let want = matmul_transb(&a, &b);
+        for shards in SHARD_COUNTS {
+            assert_eq!(matmul_transb_sharded(&a, &b, shards).data, want.data, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn deq_column_parallel_is_bit_identical() {
+        let w = rand_mat(3, 21, 40);
+        let x = rand_mat(4, 9, 40);
+        for bits in [4u8, 8] {
+            let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+            let want = matmul_transb_deq(&x, &q);
+            for shards in SHARD_COUNTS {
+                assert_eq!(
+                    matmul_transb_deq_sharded(&x, &q, shards).data,
+                    want.data,
+                    "{bits} bits, {shards} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_kernels_match_scalar_reference_at_all_shard_counts() {
+        let a_levels = 16.0;
+        for (seed, m, k) in [(5u64, 7usize, 33usize), (6, 12, 64)] {
+            let w = rand_mat(seed, 19, k);
+            let mut x = rand_mat(seed + 100, m, k);
+            fake_quant_rows(&mut x, a_levels);
+            for bits in [4u8, 8] {
+                let q = QMat::quantize_rtn(&w, QuantSpec::new(bits));
+                q.prepack();
+                let want = matmul_transb_q_ref(&x, &q, a_levels);
+                for shards in SHARD_COUNTS {
+                    assert_eq!(
+                        matmul_transb_q_sharded(&x, &q, a_levels, shards).data,
+                        want.data,
+                        "column-parallel, {bits} bits, {shards} shards"
+                    );
+                    assert_eq!(
+                        matmul_transb_q_rowpar(&x, &q, a_levels, shards).data,
+                        want.data,
+                        "row-parallel, {bits} bits, {shards} shards"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qact_sharded_matches_unsharded_including_protected() {
+        let k = 48;
+        let w = rand_mat(7, 17, k);
+        let mut x = rand_mat(8, 6, k);
+        fake_quant_rows(&mut x, 16.0);
+        let qa = quantize_act(&mut x, 16.0).expect("integer grid");
+        let mut mask = vec![false; k];
+        mask[3] = true;
+        mask[40] = true;
+        let quants = [
+            QMat::quantize_rtn(&w, QuantSpec::new(4)),
+            QMat::quantize_protected(&w, QuantSpec::new(4), &mask),
+        ];
+        for q in &quants {
+            q.prepack();
+            let want = matmul_transb_qact(&x, &qa, q);
+            for shards in SHARD_COUNTS {
+                assert_eq!(
+                    matmul_transb_qact_sharded(&x, &qa, q, shards).data,
+                    want.data,
+                    "{} scheme, {shards} shards",
+                    q.scheme_label()
+                );
+                assert_eq!(
+                    matmul_transb_qact_rowpar(&x, &qa, q, shards).data,
+                    want.data,
+                    "{} scheme rowpar, {shards} shards",
+                    q.scheme_label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_and_wide_grids_take_the_deq_path_sharded() {
+        let k = 32;
+        let w = rand_mat(9, 11, k);
+        let x = rand_mat(10, 5, k);
+        let order: Vec<usize> = (0..k).rev().collect();
+        let g = QMat::quantize_grouped(&w, QuantSpec::new(4), &order, 8);
+        let want = matmul_transb_deq(&x, &g);
+        for shards in SHARD_COUNTS {
+            assert_eq!(matmul_transb_q_sharded(&x, &g, 16.0, shards).data, want.data);
+            assert_eq!(matmul_transb_q_rowpar(&x, &g, 16.0, shards).data, want.data);
+        }
+        // Wide activation grid (> 256 levels) falls back identically.
+        let q = QMat::quantize_rtn(&w, QuantSpec::new(4));
+        let wide = matmul_transb_deq(&x, &q);
+        for shards in SHARD_COUNTS {
+            assert_eq!(matmul_transb_q_sharded(&x, &q, 65536.0, shards).data, wide.data);
+        }
+    }
+}

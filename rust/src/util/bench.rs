@@ -28,19 +28,22 @@ impl Measurement {
     }
 }
 
-/// Time `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs.
+/// Time `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs
+/// (`iters = 0` is promoted to one run — `Measurement::iters` always
+/// reports the count actually measured).
 pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
     for _ in 0..warmup {
         f();
     }
+    let iters = iters.max(1);
     let mut samples: Vec<Duration> = Vec::with_capacity(iters);
-    for _ in 0..iters.max(1) {
+    for _ in 0..iters {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed());
     }
     samples.sort();
-    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let q = |p: f64| percentile(&samples, p).expect("iters >= 1");
     Measurement {
         name: name.to_string(),
         median: q(0.5),
@@ -48,6 +51,19 @@ pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Me
         p90: q(0.9),
         iters: samples.len(),
     }
+}
+
+/// The `p`-th percentile (p ∈ [0, 1]) of an **ascending-sorted** sample
+/// slice, by the nearest-rank-below rule `idx = ⌊(len − 1) · p⌋` — the one
+/// shared index-rounding policy for every p99/p10/median in the repo
+/// (serve-bench, `perf_serve`, [`time`] all route through here).
+/// `None` on an empty slice.
+pub fn percentile<T: Copy>(sorted: &[T], p: f64) -> Option<T> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p) as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
 }
 
 /// Time a single run of `f` and return (result, wall time).
@@ -142,6 +158,41 @@ mod tests {
         });
         assert!(m.p10 <= m.median && m.median <= m.p90);
         assert_eq!(m.iters, 16);
+    }
+
+    #[test]
+    fn time_zero_iters_measures_once_and_reports_it() {
+        // iters = 0 must reserve and run the same (one) iteration, and the
+        // measurement must report what actually ran.
+        let m = time("noop", 0, 0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 1);
+        assert_eq!(m.p10, m.median);
+        assert_eq!(m.median, m.p90);
+    }
+
+    #[test]
+    fn percentile_boundary_sample_counts() {
+        // 1 sample: every percentile is the sample itself.
+        assert_eq!(percentile(&[7.0f64], 0.0), Some(7.0));
+        assert_eq!(percentile(&[7.0f64], 0.99), Some(7.0));
+        assert_eq!(percentile(&[7.0f64], 1.0), Some(7.0));
+        // 99 samples 0..99: idx = floor(98 * 0.99) = 97.
+        let v99: Vec<usize> = (0..99).collect();
+        assert_eq!(percentile(&v99, 0.99), Some(97));
+        // 100 samples 0..100: idx = floor(99 * 0.99) = 98.
+        let v100: Vec<usize> = (0..100).collect();
+        assert_eq!(percentile(&v100, 0.99), Some(98));
+        assert_eq!(percentile(&v100, 0.0), Some(0));
+        assert_eq!(percentile(&v100, 1.0), Some(99));
+        // Matches the historical integer computation `(len-1)*99/100` at
+        // every boundary count the hand-rolled call sites could disagree on.
+        for len in [1usize, 2, 50, 99, 100, 101] {
+            let v: Vec<usize> = (0..len).collect();
+            assert_eq!(percentile(&v, 0.99), Some((len - 1) * 99 / 100));
+        }
+        assert_eq!(percentile::<f64>(&[], 0.5), None);
     }
 
     #[test]

@@ -107,7 +107,7 @@ impl ThreadPool {
             // are never silently dropped.
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             if let Err(p) = r {
-                self.lock_or_poisoned(&panics).push(panic_message(p.as_ref()));
+                lock_or_poisoned(&self.panics).push(panic_message(p.as_ref()));
             }
             return;
         }
@@ -310,6 +310,31 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_ranges_degenerate_inputs_cover_exactly_once() {
+        // (n, threads) corners: empty range, zero threads, more threads
+        // than items. Every index must still be visited exactly once.
+        for (n, threads) in [(0usize, 0usize), (0, 4), (1, 0), (1, 8), (5, 9), (7, 7)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let calls = AtomicUsize::new(0);
+            par_ranges(n, threads, |lo, hi| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                assert!(lo <= hi && hi <= n, "range ({lo}, {hi}) out of [0, {n})");
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "(n={n}, threads={threads}) missed or repeated an index"
+            );
+            if n == 0 {
+                // Degenerate n still invokes f once with the empty range.
+                assert_eq!(calls.load(Ordering::SeqCst), 1);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Within-layer sharding integration: `--shards N` must never move a
+//! bit. Column-parallel linears and per-kv-head attention decompose the
+//! forward; GPTQ/OmniQuant per-layer jobs decompose into per-shard
+//! row-range sub-jobs under the same per-job-seed + replayed-event
+//! determinism contract as workers (docs/CONCURRENCY.md) —
+//!
+//! * canonical pipeline reports, packed weight bytes, and greedy decode
+//!   token streams are byte-identical across shards ∈ {1, 2, 4, 7} ×
+//!   workers ∈ {1, 4} on both table2 configs,
+//! * the gate charges per-shard working sets: sharded GPTQ/OmniQuant
+//!   peak job bytes sit strictly below the unsharded largest-layer
+//!   checkout.
+//!
+//! Runs natively (no artifacts needed).
+
+use dartquant::coordinator::{Pipeline, PipelineReport};
+use dartquant::data::{Corpus, Dialect};
+use dartquant::model::{forward_one, BitSetting, FwdOptions, ModelConfig, NoCapture, Weights};
+use dartquant::serve::{sample_logits, BatchEngine, DecodeSession, EngineConfig, GenRequest};
+use dartquant::util::prng::Pcg64;
+use std::sync::Arc;
+
+/// The table2 configs exercised by the quick bench grid (llama3-small
+/// adds grouped-query attention: 6 q heads over 2 kv heads).
+const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+
+/// The gate: every count must reproduce shards=1 bit-for-bit, including
+/// 7 (doesn't divide any head count or row count evenly).
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let w = Weights::default_grammar(cfg, 1, corpus.successor()).unwrap();
+    (w, corpus)
+}
+
+/// One quantization pipeline run at (method, shards, workers); packed
+/// storage so weight bytes compare the true low-bit footprint.
+fn run(w: &Weights, method: &str, shards: usize, workers: usize) -> PipelineReport {
+    Pipeline::builder(w)
+        .method(method)
+        .unwrap()
+        .bits(BitSetting::W4A4)
+        .packed(true)
+        .shards(shards)
+        .workers(workers)
+        .configure(|c| c.calib_sequences = 2)
+        .run_native()
+        .unwrap()
+}
+
+#[test]
+fn sharded_forward_is_bit_identical() {
+    // The pure forward path (column-parallel linears + per-kv-head
+    // attention) at fp and quantized settings, per table2 config.
+    for name in TABLE2_CONFIGS {
+        let cfg = ModelConfig::builtin(name).unwrap();
+        let (w, corpus) = grammar(&cfg);
+        let toks = corpus.sequence(48, 2, 0);
+        for base in [FwdOptions::FP, FwdOptions::quant(4, 4, false), FwdOptions::quant(8, 16, true)]
+        {
+            let oracle = forward_one(&w, &toks, base, &mut NoCapture);
+            for shards in SHARD_COUNTS {
+                let got = forward_one(&w, &toks, base.with_shards(shards), &mut NoCapture);
+                assert_eq!(got, oracle, "{name}: shards {shards} moved a bit");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_quantize_reports_and_weights_are_byte_identical() {
+    for name in TABLE2_CONFIGS {
+        let cfg = ModelConfig::builtin(name).unwrap();
+        let (w, _corpus) = grammar(&cfg);
+        for method in ["gptq", "omniquant"] {
+            let baseline = run(&w, method, 1, 1);
+            let canon = baseline.record().canonical().to_json().to_string();
+            for shards in SHARD_COUNTS {
+                for workers in [1usize, 4] {
+                    let r = run(&w, method, shards, workers);
+                    assert_eq!(
+                        r.record().canonical().to_json().to_string(),
+                        canon,
+                        "{name}/{method}: canonical report differs at shards {shards} workers {workers}"
+                    );
+                    assert!(r.weights.has_packed(), "{name}/{method}");
+                    for n in w.names() {
+                        assert_eq!(
+                            r.weights.tensor(n).to_mat().data,
+                            baseline.weights.tensor(n).to_mat().data,
+                            "{name}/{method}: tensor {n} differs at shards {shards} workers {workers}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_decode_token_streams_are_byte_identical() {
+    // Greedy decode through both serving entry points, on the packed
+    // W4A4 weights each shard count produced (so the whole
+    // quantize → serve chain is covered, not just the forward).
+    for name in TABLE2_CONFIGS {
+        let cfg = ModelConfig::builtin(name).unwrap();
+        let (w, corpus) = grammar(&cfg);
+        let mut oracle: Option<Vec<Vec<i32>>> = None;
+        for shards in SHARD_COUNTS {
+            let weights = Arc::new(run(&w, "gptq", shards, 2).weights);
+            let opt = FwdOptions::quant(4, 4, false).with_shards(shards);
+
+            // Single-session decode.
+            let prompt = corpus.sequence(16, 2, 0);
+            let mut sess = DecodeSession::new(Arc::clone(&weights), opt);
+            let last = sess.prefill_last(&prompt);
+            let mut tok = sample_logits(&last, 0.0, &mut Pcg64::new(0)) as i32;
+            let mut single = vec![tok];
+            for _ in 1..12 {
+                let row = sess.step(tok);
+                tok = sample_logits(&row, 0.0, &mut Pcg64::new(0)) as i32;
+                single.push(tok);
+            }
+
+            // Continuous batching, staggered prompt lengths.
+            let ecfg = EngineConfig { opt, ..EngineConfig::default() };
+            let mut engine = BatchEngine::new(Arc::clone(&weights), ecfg);
+            for i in 0..4u64 {
+                engine.submit(GenRequest {
+                    prompt: corpus.sequence(8 + 4 * i as usize, 2, i),
+                    max_new: 10,
+                });
+            }
+            let mut results = engine.run().unwrap().to_vec();
+            results.sort_by_key(|r| r.id);
+            let mut streams: Vec<Vec<i32>> = results
+                .into_iter()
+                .map(|r| {
+                    assert!(r.error.is_none(), "{name}: shards {shards} session failed");
+                    r.tokens
+                })
+                .collect();
+            streams.push(single);
+
+            match &oracle {
+                None => oracle = Some(streams),
+                Some(o) => assert_eq!(&streams, o, "{name}: streams differ at shards {shards}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_calibration_charges_per_shard_working_sets() {
+    // workers=1 makes peak_job_bytes the single largest checkout; at
+    // shards=4 every sub-job charges ~1/4 of a layer's rows, so the peak
+    // must drop strictly below the unsharded largest-layer charge.
+    let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+    let (w, _corpus) = grammar(&cfg);
+    for method in ["gptq", "omniquant"] {
+        let whole = run(&w, method, 1, 1).stats.peak_job_bytes;
+        let sharded = run(&w, method, 4, 1).stats.peak_job_bytes;
+        assert!(whole > 0, "{method}: unsharded run charged nothing");
+        assert!(
+            sharded < whole,
+            "{method}: sharded peak {sharded} not below unsharded largest-layer checkout {whole}"
+        );
+    }
+}

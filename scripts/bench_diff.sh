@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Receipt drift check (`make bench-diff`): regenerate the BENCH_*.json
+# receipts into a temp dir via scripts/bench_json.sh (same DQ_WORKERS
+# pinning) and diff them against the committed copies at the repo root.
+#
+# Warning-only by default: committed receipts may still carry provenance
+# "analytic estimate ..." (seeded in a container without a cargo
+# toolchain), and even measured gflops wobble run to run — so drift
+# prints a per-file report and exits 0. Set WARN_ONLY=0 to make drift
+# fail the run once committed receipts are measured and you want a hard
+# gate. Degrades to a clean skip when cargo is unavailable.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+WARN_ONLY="${WARN_ONLY:-1}"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench-diff: cargo not available — skipping receipt regeneration (committed receipts unchecked)"
+    exit 0
+fi
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+if ! DQ_BENCH_JSON="$tmp" ./scripts/bench_json.sh; then
+    echo "bench-diff: bench run failed — cannot compare receipts"
+    if [ "$WARN_ONLY" = "1" ]; then exit 0; else exit 1; fi
+fi
+
+status=0
+found=0
+for fresh in "$tmp"/BENCH_*.json; do
+    [ -e "$fresh" ] || continue
+    found=1
+    name="$(basename "$fresh")"
+    committed="./$name"
+    if [ ! -f "$committed" ]; then
+        echo "bench-diff: $name: no committed receipt — commit the fresh one"
+        status=1
+        continue
+    fi
+    if grep -q '"provenance": "analytic estimate' "$committed"; then
+        echo "bench-diff: $name: committed receipt is an analytic estimate — fresh numbers are expected to differ"
+    fi
+    if diff -u "$committed" "$fresh" > "$tmp/$name.diff" 2>&1; then
+        echo "bench-diff: $name matches the committed receipt"
+    else
+        echo "bench-diff: $name drifted from the committed receipt:"
+        sed 's/^/  /' "$tmp/$name.diff"
+        status=1
+    fi
+done
+
+if [ "$found" = "0" ]; then
+    echo "bench-diff: no receipts generated — nothing to compare"
+    exit 0
+fi
+
+if [ "$status" -ne 0 ] && [ "$WARN_ONLY" = "1" ]; then
+    echo "bench-diff: drift found (warning-only while committed receipts remain analytic estimates; WARN_ONLY=0 to enforce)"
+    exit 0
+fi
+exit "$status"

@@ -20,6 +20,11 @@
 #   perf_hotpath / perf_scheduler need artifacts/ (PJRT executables);
 #                  skipped with a note when `make artifacts` hasn't run
 #                  (perf_scheduler emits BENCH_scheduler.json)
+#
+# perf_gemm additionally emits BENCH_shard.json (the `--shards` plan's
+# column-/row-parallel kernel rows, bit-identity gated). To compare a
+# fresh run against the committed receipts, use `make bench-diff`
+# (scripts/bench_diff.sh), which points DQ_BENCH_JSON at a temp dir.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
