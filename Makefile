@@ -16,6 +16,8 @@
 #   make bench-gemm       run the tiled-GEMM bench (native; no artifacts)
 #   make bench-serve      run the paged-KV vs contiguous serving bench
 #                         (native; sessions/GB, prefix hit rate, p99 step)
+#   make bench-spec       run the self-speculative decoding bench (native;
+#                         accept rate, tokens/round, decode speedup)
 #   make bench-streaming  run the out-of-core vs in-memory bench (native)
 #   make bench-json       pinned perf run emitting BENCH_*.json receipts
 #                         (scripts/bench_json.sh; gemm/decode/serve/streaming
@@ -24,7 +26,7 @@
 #                         committed BENCH_*.json (scripts/bench_diff.sh;
 #                         warning-only while committed receipts are analytic)
 
-.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-serve bench-streaming bench-json bench-diff
+.PHONY: artifacts check test lint fmt clippy doc check-links bench bench-decode bench-gemm bench-serve bench-spec bench-streaming bench-json bench-diff
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -61,6 +63,9 @@ bench-gemm:
 
 bench-serve:
 	cargo bench --bench perf_serve
+
+bench-spec:
+	cargo bench --bench perf_spec
 
 bench-streaming:
 	cargo bench --bench perf_streaming

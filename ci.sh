@@ -4,7 +4,8 @@
 #   but do not run; `make bench-json` runs the pinned perf set), example
 #   compile (quickstart & friends), quiet tests (includes the GEMM
 #   parity suite rust/tests/gemm.rs, the decode-parity suite
-#   rust/tests/serving.rs and the out-of-core suite
+#   rust/tests/serving.rs, the speculative-decode equality gate
+#   rust/tests/spec.rs and the out-of-core suite
 #   rust/tests/streaming.rs), the dqlint
 #   static-analysis pass (docs/LINTS.md; lint_report.json is the
 #   machine-readable archive), clippy (warnings as errors), rustdoc

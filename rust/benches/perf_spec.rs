@@ -1,0 +1,167 @@
+//! §Perf: self-speculative decoding bench (`serve::spec`) — accept rate,
+//! per-precision step cost, and effective tokens/round when a packed
+//! W4A4 draft of the checkpoint proposes for an A8 verifier.
+//!
+//! Per model × k ∈ {2, 4, 8}:
+//!
+//! * greedy speculative decode is asserted token-for-token identical to
+//!   the verifier decoding alone *before any number is reported* — the
+//!   correctness contract `rust/tests/spec.rs` gates,
+//! * a draft ≡ verifier pair is asserted to accept 100% of proposals
+//!   (the protocol's self-consistency acceptance),
+//! * reported: accept rate, effective tokens/round, per-token step µs
+//!   for each precision alone, and end-to-end decode speedup over the
+//!   plain verifier.
+//!
+//! Runs natively (no artifacts); honors `DQ_MODELS` / `DQ_FULL`, and
+//! writes `BENCH_spec.json` when `DQ_BENCH_JSON` is set.
+
+#[path = "common.rs"]
+mod common;
+
+use dartquant::model::{FwdOptions, Weights};
+use dartquant::serve::{sample_logits, DecodeSession, SpecSession};
+use dartquant::util::bench::{fnum, write_receipt, Table};
+use dartquant::util::json::Json;
+use dartquant::util::prng::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+const KS: [usize; 3] = [2, 4, 8];
+
+/// Plain greedy decode: the oracle stream plus its per-token step cost
+/// (prefill excluded — speculation changes nothing about the prefill).
+fn plain_decode(
+    weights: &Arc<Weights>,
+    opt: FwdOptions,
+    prompt: &[i32],
+    max_new: usize,
+) -> (Vec<i32>, f64, f64) {
+    let mut sess = DecodeSession::new(Arc::clone(weights), opt);
+    let row = sess.prefill_last(prompt);
+    let t0 = Instant::now();
+    let mut tok = sample_logits(&row, 0.0, &mut Pcg64::new(0)) as i32;
+    let mut out = vec![tok];
+    while out.len() < max_new {
+        let next = sess.step(tok);
+        tok = sample_logits(&next, 0.0, &mut Pcg64::new(0)) as i32;
+        out.push(tok);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (out, wall, wall * 1e6 / (max_new.saturating_sub(1).max(1)) as f64)
+}
+
+fn main() {
+    let max_new = if common::full() { 64 } else { 32 };
+    let mut table = Table::new(&[
+        "model",
+        "k",
+        "accept",
+        "tok/round",
+        "rounds",
+        "draft µs/tok",
+        "verify µs/tok",
+        "plain tok/s",
+        "spec tok/s",
+        "speedup",
+    ]);
+    let mut receipt_rows: Vec<Json> = Vec::new();
+    let mut worst_accept = f64::INFINITY;
+    let mut best_speedup = 0.0f64;
+
+    for cfg in common::bench_models() {
+        let (w, corpus) = common::grammar_model(&cfg);
+        let verifier = Arc::new(w);
+        let draft = Arc::new(dartquant::quant::rtn_quantize_model_packed(&verifier, 4));
+        let vopt = FwdOptions::quant(8, 4, false);
+        let dopt = FwdOptions::quant(4, 4, false);
+        let prompt = corpus.sequence(24, 2, 0);
+
+        let (oracle, plain_wall, verify_us) = plain_decode(&verifier, vopt, &prompt, max_new);
+        let (_, _, draft_us) = plain_decode(&draft, dopt, &prompt, max_new);
+
+        // Protocol self-consistency: a draft at the verifier's own
+        // precision must accept every proposal.
+        let mut same = SpecSession::new(
+            DecodeSession::new(Arc::clone(&verifier), vopt),
+            DecodeSession::new(Arc::clone(&verifier), vopt),
+            4,
+        );
+        let out = same
+            .generate(&prompt, max_new, 0.0, &mut Pcg64::new(0))
+            .expect("identity speculation");
+        assert_eq!(out, oracle, "{}: identity pair diverged from plain decode", cfg.name);
+        let s = same.stats();
+        assert_eq!(s.accepted, s.proposed, "{}: identity pair rejected a proposal", cfg.name);
+
+        for k in KS {
+            let mut spec = SpecSession::new(
+                DecodeSession::new(Arc::clone(&draft), dopt),
+                DecodeSession::new(Arc::clone(&verifier), vopt),
+                k,
+            );
+            let t0 = Instant::now();
+            let out = spec
+                .generate(&prompt, max_new, 0.0, &mut Pcg64::new(0))
+                .expect("speculative decode");
+            let spec_wall = t0.elapsed().as_secs_f64();
+            assert_eq!(
+                out, oracle,
+                "{} k={k}: speculative stream diverged from the verifier's",
+                cfg.name
+            );
+            let stats = spec.stats();
+            let speedup = plain_wall / spec_wall;
+            worst_accept = worst_accept.min(stats.accept_rate());
+            best_speedup = best_speedup.max(speedup);
+            table.row(&[
+                cfg.name.clone(),
+                k.to_string(),
+                format!("{:.0}%", 100.0 * stats.accept_rate()),
+                fnum(stats.tokens_per_round(), 2),
+                stats.rounds.to_string(),
+                fnum(draft_us, 1),
+                fnum(verify_us, 1),
+                fnum(max_new as f64 / plain_wall, 0),
+                fnum(max_new as f64 / spec_wall, 0),
+                fnum(speedup, 2),
+            ]);
+            receipt_rows.push(Json::obj(vec![
+                ("model", Json::Str(cfg.name.clone())),
+                ("k", Json::Num(k as f64)),
+                ("accept_rate", Json::Num(stats.accept_rate())),
+                ("tokens_per_round", Json::Num(stats.tokens_per_round())),
+                ("rounds", Json::Num(stats.rounds as f64)),
+                ("plain_steps", Json::Num(stats.plain_steps as f64)),
+                ("draft_step_us", Json::Num(draft_us)),
+                ("verify_step_us", Json::Num(verify_us)),
+                ("plain_tok_s", Json::Num(max_new as f64 / plain_wall)),
+                ("spec_tok_s", Json::Num(max_new as f64 / spec_wall)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+
+    table.print(&format!(
+        "perf_spec — self-speculative decode, packed W4A4 draft vs A8 verifier ({max_new} tokens)"
+    ));
+    println!(
+        "\nacceptance: every speculative stream above was asserted token-identical to the\n\
+         plain verifier's, and a draft ≡ verifier pair accepted 100% of proposals.\n\
+         worst accept rate {} | best end-to-end speedup {}x",
+        fnum(100.0 * worst_accept, 0),
+        fnum(best_speedup, 2)
+    );
+
+    write_receipt(
+        "spec",
+        &Json::obj(vec![
+            ("bench", Json::Str("perf_spec".into())),
+            ("provenance", Json::Str("measured (make bench-json)".into())),
+            ("max_new", Json::Num(max_new as f64)),
+            ("worst_accept_rate", Json::Num(worst_accept)),
+            ("best_speedup", Json::Num(best_speedup)),
+            ("runs", Json::Arr(receipt_rows)),
+        ]),
+    );
+}

@@ -8,7 +8,8 @@
 //!   pipeline   quantize + eval in one go, printing a paper-style row
 //!              (`--json` emits the machine-readable PipelineReport row)
 //!   generate   autoregressive generation via the KV-cached decode path
-//!              (single session, or continuous batching at --sessions N)
+//!              (single session, or continuous batching at --sessions N;
+//!              --speculate drafts from a packed low-bit copy of the model)
 //!   serve-bench  continuous-batching throughput benchmark
 //!   train      train the tiny config on a synthetic dialect (AOT Adam step)
 //!   info       artifacts, models, registered methods, runtime platform
@@ -88,7 +89,8 @@ fn help_text() -> String {
            pipeline    quantize + eval, print a paper-style row (--json for a\n\
                        machine-readable PipelineReport row)\n\
            generate    KV-cached autoregressive generation (continuous\n\
-                       batching at --sessions N)\n\
+                       batching at --sessions N, --speculate for\n\
+                       self-speculative decoding)\n\
            serve-bench continuous-batching throughput benchmark\n\
            train       train the tiny config (AOT Adam step)\n\
            info        artifacts + models + registered methods + platform\n\
@@ -400,11 +402,28 @@ fn serving_flags(cmd: Command) -> Command {
         .switch("online-had", "enable online R3/R4 hadamard (rotated ckpts)")
         .flag_default("page-size", "0", "paged KV cache, positions per page (0 = contiguous)")
         .switch("spill", "paged mode: evict cold KV pages to a temp spill file under pressure")
+        .switch(
+            "speculate",
+            "self-speculative decoding: a packed low-bit draft of the same checkpoint \
+             proposes, this precision verifies (greedy output identical)",
+        )
+        .flag_default("draft-bits", "4", "draft weight/activation bits for --speculate")
+        .flag_default("spec-k", "4", "draft tokens proposed per speculative round")
 }
 
-fn serving_setup(
-    a: &dartquant::util::cli::Args,
-) -> Result<(Weights, Corpus, BitSetting, dartquant::serve::EngineConfig)> {
+/// Everything `generate` and `serve-bench` share after flag parsing:
+/// serving weights (RTN-quantized when W < 16), the prompt corpus, the
+/// parsed bit setting, the engine config, and — under `--speculate` —
+/// the packed low-bit draft quantized from the same base checkpoint.
+struct ServeSetup {
+    weights: Arc<Weights>,
+    corpus: Corpus,
+    bits: BitSetting,
+    ecfg: dartquant::serve::EngineConfig,
+    draft: Option<(Arc<Weights>, dartquant::model::FwdOptions)>,
+}
+
+fn serving_setup(a: &dartquant::util::cli::Args) -> Result<ServeSetup> {
     let (_cfg, weights, corpus) = load_model(a)?;
     let bits = BitSetting::parse(a.get_or("bits", "16-16-16"))?;
     if a.get_bool("packed") && bits.w >= 16 {
@@ -413,6 +432,21 @@ fn serving_setup(
              to quantize and pack the linears"
         );
     }
+    let shards = a.get_usize("shards", 1)?;
+    let use_had = a.get_bool("online-had");
+    // The draft is cut from the *base* checkpoint (before the verifier's
+    // own serving quantization) so both precisions come from one model —
+    // the self-speculative setup. Its KV grid stays the serving KV grid;
+    // only weights and activations drop to --draft-bits.
+    let draft = if a.get_bool("speculate") {
+        let draft_bits = u8::try_from(a.get_usize("draft-bits", 4)?)?;
+        let dw = dartquant::quant::rtn_quantize_model_packed(&weights, draft_bits);
+        let dopt = dartquant::model::FwdOptions::quant(draft_bits, bits.kv, use_had)
+            .with_shards(shards);
+        Some((Arc::new(dw), dopt))
+    } else {
+        None
+    };
     let weights = serving_weights(weights, bits, a.get_bool("packed"));
     let mut budget = None;
     if a.get_bool("budget-3090") {
@@ -429,17 +463,41 @@ fn serving_setup(
         page_positions: page_size,
         spill: a.get_bool("spill"),
     });
+    let spec_k = a.get_usize("spec-k", 4)?.max(1);
     let ecfg = dartquant::serve::EngineConfig {
-        opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, a.get_bool("online-had"))
-            .with_shards(a.get_usize("shards", 1)?),
+        opt: dartquant::model::FwdOptions::quant(bits.a, bits.kv, use_had).with_shards(shards),
         seed: a.get_usize("seed", 0)? as u64,
         temperature: a.get_f64("temperature", 0.0)? as f32,
         workers: a.get_usize("workers", 0)?,
         budget,
         max_sessions: 0,
         paged,
+        speculate: a.get_bool("speculate").then_some(dartquant::serve::SpecConfig { k: spec_k }),
     };
-    Ok((weights, corpus, bits, ecfg))
+    Ok(ServeSetup { weights: Arc::new(weights), corpus, bits, ecfg, draft })
+}
+
+/// Build the engine both serving commands drive: construct it over the
+/// shared setup, install the draft model when speculating, and submit
+/// `sessions` dialect prompts (`prompt_len + i·stagger` tokens each) —
+/// the session-submission block `generate` and `serve-bench` used to
+/// duplicate.
+fn serving_engine(
+    setup: &ServeSetup,
+    sessions: usize,
+    prompt_len: usize,
+    stagger: usize,
+    max_new: usize,
+) -> dartquant::serve::BatchEngine {
+    let mut engine = dartquant::serve::BatchEngine::new(Arc::clone(&setup.weights), setup.ecfg);
+    if let Some((dw, dopt)) = &setup.draft {
+        engine.set_draft(Arc::clone(dw), *dopt);
+    }
+    for i in 0..sessions {
+        let prompt = setup.corpus.sequence(prompt_len + i * stagger, 2, i as u64);
+        engine.submit(dartquant::serve::GenRequest { prompt, max_new });
+    }
+    engine
 }
 
 fn cmd_generate(argv: &[String]) -> Result<()> {
@@ -451,39 +509,80 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
             .flag_default("sessions", "1", "concurrent sessions (continuous batching when > 1)"),
     );
     let a = cmd.parse(argv)?;
-    let (weights, corpus, bits, ecfg) = serving_setup(&a)?;
+    let setup = serving_setup(&a)?;
+    let (weights, ecfg, bits) = (&setup.weights, setup.ecfg, setup.bits);
     let prompt_len = a.get_usize("prompt-len", 16)?.max(1);
     let max_new = a.get_usize("max-new", 48)?.max(1);
     let sessions = a.get_usize("sessions", 1)?.max(1);
     println!(
-        "generate: {} @ {} | prompt {} | max-new {} | sessions {}{}",
+        "generate: {} @ {} | prompt {} | max-new {} | sessions {}{}{}",
         weights.cfg.name,
         bits.label(),
         prompt_len,
         max_new,
         sessions,
-        if weights.has_packed() { " | packed weights" } else { "" }
+        if weights.has_packed() { " | packed weights" } else { "" },
+        ecfg.speculate.map(|s| format!(" | speculative k={}", s.k)).unwrap_or_default()
     );
-    let weights = Arc::new(weights);
     if sessions == 1 {
-        // Single session: drive DecodeSession directly so prefill and
-        // decode throughput are separately visible. The budget flags
+        // Single session: drive the session types directly so prefill
+        // and decode throughput are separately visible. The budget flags
         // still apply — enforce the same full-lifetime cache check the
-        // engine's admission gate performs.
-        let prompt = corpus.sequence(prompt_len, 2, 0);
+        // engine's admission gate performs (both caches of a speculative
+        // pair).
+        let prompt = setup.corpus.sequence(prompt_len, 2, 0);
         if let Some(budget) = ecfg.budget {
-            let need = dartquant::serve::request_cache_bytes(
-                &weights.cfg,
-                ecfg.opt.kv_levels,
-                prompt_len,
-                max_new,
-            );
+            let one = |kv_levels: f32| {
+                dartquant::serve::request_cache_bytes(&weights.cfg, kv_levels, prompt_len, max_new)
+            };
+            let mut need = one(ecfg.opt.kv_levels);
+            if ecfg.speculate.is_some() {
+                need += one(setup.draft.as_ref().map_or(ecfg.opt.kv_levels, |(_, o)| o.kv_levels));
+            }
             if need > budget {
                 bail!("session needs {need} KV-cache bytes but the budget is {budget}");
             }
         }
-        let mut sess = dartquant::serve::DecodeSession::new(Arc::clone(&weights), ecfg.opt);
         let mut rng = dartquant::util::prng::Pcg64::new(ecfg.seed);
+        if let Some(sc) = ecfg.speculate {
+            // Speculative pair: begin (both prefills) then whole rounds.
+            let (dw, dopt) = setup
+                .draft
+                .as_ref()
+                .map(|(w, o)| (Arc::clone(w), *o))
+                .unwrap_or_else(|| (Arc::clone(weights), ecfg.opt));
+            let draft = dartquant::serve::DecodeSession::new(dw, dopt);
+            let verifier = dartquant::serve::DecodeSession::new(Arc::clone(weights), ecfg.opt);
+            let mut spec = dartquant::serve::SpecSession::new(draft, verifier, sc.k);
+            // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
+            let t0 = std::time::Instant::now();
+            let first = spec.begin(&prompt, ecfg.temperature, &mut rng)?;
+            let prefill_wall = t0.elapsed();
+            let mut generated = vec![first];
+            // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
+            let t1 = std::time::Instant::now();
+            while generated.len() < max_new {
+                let left = max_new - generated.len();
+                generated.extend(spec.round(ecfg.temperature, &mut rng, left)?);
+            }
+            let decode_wall = t1.elapsed();
+            let st = spec.stats();
+            println!("prompt     {:?}", prompt);
+            println!("generated  {:?}", generated);
+            println!(
+                "prefill ×2 in {} | decode {} tok in {} ({:.0} tok/s) | {} rounds, accept {:.0}%, {:.2} tok/round | kv cache {} bytes",
+                fmt_duration(prefill_wall),
+                generated.len().saturating_sub(1),
+                fmt_duration(decode_wall),
+                generated.len().saturating_sub(1) as f64 / decode_wall.as_secs_f64().max(1e-9),
+                st.rounds,
+                100.0 * st.accept_rate(),
+                st.tokens_per_round(),
+                spec.cache_nbytes()
+            );
+            return Ok(());
+        }
+        let mut sess = dartquant::serve::DecodeSession::new(Arc::clone(weights), ecfg.opt);
         // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
         let t0 = std::time::Instant::now();
         let last = sess.prefill_last(&prompt);
@@ -512,11 +611,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
-    let mut engine = dartquant::serve::BatchEngine::new(weights, ecfg);
-    for i in 0..sessions {
-        let prompt = corpus.sequence(prompt_len, 2, i as u64);
-        engine.submit(dartquant::serve::GenRequest { prompt, max_new });
-    }
+    let mut engine = serving_engine(&setup, sessions, prompt_len, 0, max_new);
     // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
     let t0 = std::time::Instant::now();
     let results = engine.run()?.to_vec();
@@ -529,13 +624,21 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     }
     let total: usize = results.iter().map(|r| r.tokens.len()).sum();
     println!(
-        "{} sessions | {} tokens in {} ({:.0} tok/s) | {} engine steps | peak kv cache {} bytes",
+        "{} sessions | {} tokens in {} ({:.0} tok/s) | {} engine steps | peak kv cache {} bytes{}",
         results.len(),
         total,
         fmt_duration(wall),
         total as f64 / wall.as_secs_f64().max(1e-9),
         engine.steps(),
-        engine.peak_cache_bytes()
+        engine.peak_cache_bytes(),
+        engine
+            .spec_stats()
+            .map(|s| format!(
+                " | accept {:.0}%, {:.2} tok/round",
+                100.0 * s.accept_rate(),
+                s.tokens_per_round()
+            ))
+            .unwrap_or_default()
     );
     Ok(())
 }
@@ -550,17 +653,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             .flag_default("stagger", "8", "extra prompt tokens per successive request"),
     );
     let a = cmd.parse(argv)?;
-    let (weights, corpus, bits, ecfg) = serving_setup(&a)?;
+    let setup = serving_setup(&a)?;
+    let (ecfg, bits) = (setup.ecfg, setup.bits);
     let prompt_len = a.get_usize("prompt-len", 32)?.max(1);
     let sessions = a.get_usize("sessions", 8)?.max(1);
     let stagger = a.get_usize("stagger", 8)?;
     let max_new = a.get_usize("max-new", 48)?;
-    let model_name = weights.cfg.name.clone();
-    let mut engine = dartquant::serve::BatchEngine::new(Arc::new(weights), ecfg);
-    for i in 0..sessions {
-        let prompt = corpus.sequence(prompt_len + i * stagger, 2, i as u64);
-        engine.submit(dartquant::serve::GenRequest { prompt, max_new });
-    }
+    let model_name = setup.weights.cfg.name.clone();
+    let mut engine = serving_engine(&setup, sessions, prompt_len, stagger, max_new);
     // Step by hand (instead of engine.run) so per-step latency is
     // visible — the p99 column is the tentpole's tail-latency claim.
     // dqlint::allow(wallclock-hygiene): CLI throughput readout, never in canonical reports
@@ -595,6 +695,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         .pager_stats()
         .map(|s| format!("{:.0}%", 100.0 * s.prefix_hit_rate()))
         .unwrap_or_else(|| "-".to_string());
+    let accept = engine
+        .spec_stats()
+        .map(|s| format!("{:.0}%", 100.0 * s.accept_rate()))
+        .unwrap_or_else(|| "-".to_string());
     let mut t = Table::new(&[
         "sessions",
         "ok",
@@ -607,6 +711,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         "peak kv bytes",
         "budget",
         "prefix hit",
+        "accept",
     ]);
     t.row(&[
         sessions.to_string(),
@@ -620,13 +725,15 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         engine.peak_cache_bytes().to_string(),
         ecfg.budget.map(|b| b.to_string()).unwrap_or_else(|| "unlimited".to_string()),
         prefix_hit,
+        accept,
     ]);
     let mode = ecfg
         .paged
         .map(|p| format!("paged P={}{}", p.page_positions, if p.spill { "+spill" } else { "" }))
         .unwrap_or_else(|| "contiguous".to_string());
+    let spec = ecfg.speculate.map(|s| format!(", spec k={}", s.k)).unwrap_or_default();
     t.print(&format!(
-        "{model_name} serve-bench @ {} (workers {}, {mode})",
+        "{model_name} serve-bench @ {} (workers {}, {mode}{spec})",
         bits.label(),
         ecfg.workers
     ));

@@ -152,6 +152,16 @@ pub fn head_logits(w: &Weights, x: &Mat) -> Mat {
     matmul_transb(&h, w.get("head"))
 }
 
+/// [`head_logits`] over residual rows `[lo, hi)` only. RMSNorm and the
+/// head are per-row, so this is bit-identical to slicing the full
+/// `head_logits` output while skipping the other rows' vocab-wide
+/// matmuls — what lets serving evaluate the head for exactly the
+/// positions it will read (the last row for plain decode, a proposal
+/// window for speculative verification).
+pub fn head_logits_range(w: &Weights, x: &Mat, lo: usize, hi: usize) -> Mat {
+    head_logits(w, &x.rows_slice(lo, hi))
+}
+
 /// NLL of token `next` under one logits row (log-sum-exp minus the
 /// target logit) — shared by `forward_one` and the decode-parity tests.
 pub fn nll_from_logits(row: &[f32], next: usize) -> f32 {

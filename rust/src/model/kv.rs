@@ -97,6 +97,20 @@ impl RowStore {
         }
     }
 
+    /// Drop every row slot past the first `rows` — speculative-decode
+    /// rollback. Shrinks the backing vectors so [`RowStore::nbytes`]
+    /// (and [`RowStore::to_bytes`]) after truncation is identical to a
+    /// store that only ever held `rows` rows.
+    pub fn truncate(&mut self, rows: usize, width: usize) {
+        match self {
+            RowStore::F32 { data } => data.truncate(rows * width),
+            RowStore::Codes { codes, grids } => {
+                codes.truncate(rows * width);
+                grids.truncate(rows);
+            }
+        }
+    }
+
     /// Store `row` into slot `idx`, fake-quantizing at `levels` (the
     /// cache-boundary quantization both layouts share).
     pub fn set_row(&mut self, idx: usize, width: usize, row: &[f32], levels: f32) {
@@ -233,6 +247,12 @@ pub trait KvSlot {
     fn positions(&self) -> usize;
     /// Reserve row slots for `tn` more positions (all KV heads).
     fn extend(&mut self, tn: usize);
+    /// Discard every cached position past the first `positions` —
+    /// speculative-decode rollback. After truncation the slot is
+    /// indistinguishable (positions, bytes, decoded rows) from one that
+    /// only ever cached that prefix. `positions` must not exceed
+    /// [`KvSlot::positions`].
+    fn truncate(&mut self, positions: usize);
     /// Store position `pos`'s K row for `head` (raw post-RoPE/R3 values;
     /// the KV fake-quant happens at the cache boundary).
     fn set_k(&mut self, pos: usize, head: usize, row: &[f32]);
@@ -289,6 +309,16 @@ impl LayerKv {
         self.k.grow(rows, self.hd);
         self.v.grow(rows, self.hd);
         self.positions += tn;
+    }
+
+    /// Discard every cached position past the first `positions`
+    /// (speculative-decode rollback; [`KvSlot::truncate`] contract).
+    pub fn truncate(&mut self, positions: usize) {
+        assert!(positions <= self.positions, "kv truncate beyond cached positions");
+        let rows = positions * self.nkv;
+        self.k.truncate(rows, self.hd);
+        self.v.truncate(rows, self.hd);
+        self.positions = positions;
     }
 
     fn slot(&self, pos: usize, head: usize) -> usize {
@@ -371,6 +401,9 @@ impl KvSlot for LayerKv {
     }
     fn extend(&mut self, tn: usize) {
         LayerKv::extend(self, tn);
+    }
+    fn truncate(&mut self, positions: usize) {
+        LayerKv::truncate(self, positions);
     }
     fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
         LayerKv::set_k(self, pos, head, row);
@@ -535,6 +568,61 @@ mod tests {
         let mut scratch = Mat::zeros(2, 8);
         slot.k_head_into(1, &mut scratch);
         assert_eq!(scratch.data, kv.k_head(1).data);
+    }
+
+    #[test]
+    fn truncate_matches_a_fresh_cache_bit_for_bit() {
+        // Rollback contract: extending to 6 positions then truncating to
+        // 4 leaves exactly the cache a fresh 4-position fill produces —
+        // same nbytes, same serialized bytes, same decoded rows.
+        for compact in [false, true] {
+            let mut rng = Pcg64::new(6);
+            let rows: Vec<Vec<f32>> = (0..12).map(|_| rand_row(&mut rng, 8)).collect();
+            let fill = |kv: &mut LayerKv, positions: usize| {
+                kv.extend(positions);
+                for pos in 0..positions {
+                    for head in 0..2 {
+                        kv.set_k(pos, head, &rows[pos * 2 + head]);
+                        kv.set_v(pos, head, &rows[pos * 2 + head]);
+                    }
+                }
+            };
+            let mut long = LayerKv::new(2, 8, 16.0, compact);
+            fill(&mut long, 6);
+            long.truncate(4);
+            let mut fresh = LayerKv::new(2, 8, 16.0, compact);
+            fill(&mut fresh, 4);
+            assert_eq!(long.positions(), 4, "compact {compact}");
+            assert_eq!(long.nbytes(), fresh.nbytes(), "compact {compact}");
+            assert_eq!(long.k.to_bytes(), fresh.k.to_bytes(), "compact {compact}: k bytes");
+            assert_eq!(long.v.to_bytes(), fresh.v.to_bytes(), "compact {compact}: v bytes");
+            for head in 0..2 {
+                assert_eq!(long.k_head(head).data, fresh.k_head(head).data);
+                assert_eq!(long.v_head(head).data, fresh.v_head(head).data);
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_then_extend_reuses_slots_cleanly() {
+        let mut rng = Pcg64::new(7);
+        let mut kv = LayerKv::new(1, 4, 16.0, true);
+        kv.extend(3);
+        for pos in 0..3 {
+            kv.set_k(pos, 0, &rand_row(&mut rng, 4));
+        }
+        kv.truncate(1);
+        kv.extend(2);
+        assert_eq!(kv.positions(), 3);
+        let row = rand_row(&mut rng, 4);
+        kv.set_k(2, 0, &row);
+        let mut out = vec![0.0f32; 4];
+        kv.k.decode_row(2, 4, &mut out);
+        let mut want = RowStore::with_rows(16.0, true, 1, 4);
+        want.set_row(0, 4, &row, 16.0);
+        let mut w = vec![0.0f32; 4];
+        want.decode_row(0, 4, &mut w);
+        assert_eq!(out, w);
     }
 
     #[test]

@@ -21,6 +21,16 @@
 //!   that cannot be made resident — deferred sessions are the oldest
 //!   next step, so nothing starves.
 //!
+//! With [`EngineConfig::speculate`], each admitted request decodes
+//! through a [`SpecSession`] instead of a plain session: a low-bit draft
+//! (installed via [`BatchEngine::set_draft`], defaulting to the
+//! verifier's own weights) proposes `k` tokens per round and the
+//! engine's serving precision verifies them in one batched prefill. In
+//! paged mode the draft holds a second, *private* pager session
+//! ([`Pager::admit_private`]) — its KV rows come from a
+//! different-precision forward, so it must never map or register shared
+//! prefix pages; only verifier prompts enter the prefix index.
+//!
 //! Determinism follows the `docs/CONCURRENCY.md` contract: every session
 //! samples from its own `Pcg64` seeded `seed ⊕ f(id)`, sessions never
 //! share mutable state (shared pages are read-only by the pager's CoW
@@ -35,6 +45,7 @@
 use super::kv_cache::KvCache;
 use super::pager::{Pager, PagerStats};
 use super::session::{sample_logits, DecodeSession};
+use super::spec::{SpecConfig, SpecSession, SpecStats};
 use crate::coordinator::budget::{MemoryGate, OwnedLease};
 use crate::model::{FwdOptions, Weights};
 use crate::util::prng::Pcg64;
@@ -131,6 +142,10 @@ pub struct EngineConfig {
     pub max_sessions: usize,
     /// Paged KV cache mode (None = contiguous per-session caches).
     pub paged: Option<PagedConfig>,
+    /// Speculative decoding (None = plain one-token-per-step decode).
+    /// The draft model comes from [`BatchEngine::set_draft`]; greedy
+    /// output is token-for-token identical either way.
+    pub speculate: Option<SpecConfig>,
 }
 
 impl Default for EngineConfig {
@@ -143,14 +158,22 @@ impl Default for EngineConfig {
             budget: None,
             max_sessions: 0,
             paged: None,
+            speculate: None,
         }
     }
+}
+
+/// Per-request decode state: one plain session, or a speculative
+/// draft/verifier pair under [`EngineConfig::speculate`].
+enum Decoder {
+    Plain(DecodeSession),
+    Spec(SpecSession),
 }
 
 /// An admitted, in-flight session.
 struct Active {
     id: usize,
-    session: DecodeSession,
+    decoder: Decoder,
     rng: Pcg64,
     prompt: Vec<i32>,
     generated: Vec<i32>,
@@ -161,8 +184,10 @@ struct Active {
     /// Engine step this session last advanced in (0 = never) — the
     /// least-recently-stepped ordering key under paged pressure.
     last_tick: usize,
-    /// Pager session id in paged mode.
+    /// Pager session id in paged mode (the verifier's, when speculating).
     sid: Option<u64>,
+    /// The draft's private pager session id (paged speculative mode).
+    draft_sid: Option<u64>,
     /// Full-lifetime gate lease in contiguous mode (paged sessions are
     /// charged per page by the pager instead).
     _lease: Option<OwnedLease>,
@@ -173,26 +198,52 @@ impl Active {
         self.generated.len() >= self.max_new
     }
 
-    /// Advance by one token: prefill on first touch (continuous batching
+    /// Currently-mapped KV bytes — both caches of a speculative pair.
+    fn cache_nbytes(&self) -> u64 {
+        match &self.decoder {
+            Decoder::Plain(session) => session.cache_nbytes(),
+            Decoder::Spec(spec) => spec.cache_nbytes(),
+        }
+    }
+
+    /// Advance this session: prefill on first touch (continuous batching
     /// admits mid-flight, so fresh sessions prefill while others step).
     /// A paged session admitted onto shared prefix pages starts with
     /// cached positions and prefills only its prompt suffix — the
     /// chunked-prefill equivalence keeps that bit-identical to a full
-    /// prefill.
-    fn advance(&mut self, temperature: f32) {
+    /// prefill. Plain sessions commit one token per tick; a speculative
+    /// pair commits its `begin` token on first touch, then a whole round
+    /// (1 ..= k+1 tokens) per tick.
+    fn advance(&mut self, temperature: f32) -> anyhow::Result<()> {
         if self.done() {
-            return;
+            return Ok(());
         }
-        let row: Vec<f32> = if self.prefilled {
-            self.session.step(self.last)
-        } else {
-            let from = self.session.positions();
-            self.prefilled = true;
-            self.session.prefill_last(&self.prompt[from..])
-        };
-        let next = sample_logits(&row, temperature, &mut self.rng) as i32;
-        self.generated.push(next);
-        self.last = next;
+        match &mut self.decoder {
+            Decoder::Plain(session) => {
+                let row: Vec<f32> = if self.prefilled {
+                    session.step(self.last)
+                } else {
+                    let from = session.positions();
+                    self.prefilled = true;
+                    session.prefill_last(&self.prompt[from..])
+                };
+                let next = sample_logits(&row, temperature, &mut self.rng) as i32;
+                self.generated.push(next);
+                self.last = next;
+            }
+            Decoder::Spec(spec) => {
+                if self.prefilled {
+                    let remaining = self.max_new - self.generated.len();
+                    let toks = spec.round(temperature, &mut self.rng, remaining)?;
+                    self.generated.extend(toks);
+                } else {
+                    self.prefilled = true;
+                    let first = spec.begin(&self.prompt, temperature, &mut self.rng)?;
+                    self.generated.push(first);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -228,6 +279,9 @@ pub struct BatchEngine {
     cfg: EngineConfig,
     gate: Arc<MemoryGate>,
     pager: Option<Arc<Pager>>,
+    /// Draft weights/options for speculative mode (None = draft with the
+    /// verifier's own weights — correct, but every proposal accepts).
+    draft: Option<(Arc<Weights>, FwdOptions)>,
     pending: VecDeque<(usize, GenRequest)>,
     active: Vec<Active>,
     finished: Vec<GenResult>,
@@ -235,6 +289,8 @@ pub struct BatchEngine {
     next_id: usize,
     steps: usize,
     peak_active: usize,
+    /// Speculation counters folded in from retired sessions.
+    spec_totals: SpecStats,
 }
 
 impl BatchEngine {
@@ -257,6 +313,7 @@ impl BatchEngine {
             pager,
             weights,
             cfg,
+            draft: None,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
@@ -264,6 +321,29 @@ impl BatchEngine {
             next_id: 0,
             steps: 0,
             peak_active: 0,
+            spec_totals: SpecStats::default(),
+        }
+    }
+
+    /// Install the draft model for speculative mode
+    /// ([`EngineConfig::speculate`]) — typically the same checkpoint
+    /// re-quantized to an aggressive packed grid
+    /// (`quant::rtn_quantize_model_packed`). The draft's `kv_levels` is
+    /// forced to the engine's own: the pager sizes its pages for one KV
+    /// grid, and caching both sessions on that grid keeps the draft's
+    /// proposals — and therefore the accepted-prefix length — invariant
+    /// to the cache backend. Left unset, speculation drafts with the
+    /// verifier's weights (every proposal accepted).
+    pub fn set_draft(&mut self, weights: Arc<Weights>, mut opt: FwdOptions) {
+        opt.kv_levels = self.cfg.opt.kv_levels;
+        self.draft = Some((weights, opt));
+    }
+
+    /// The draft weights/options speculative sessions decode with.
+    fn draft_pair(&self) -> (Arc<Weights>, FwdOptions) {
+        match &self.draft {
+            Some((w, o)) => (Arc::clone(w), *o),
+            None => (Arc::clone(&self.weights), self.cfg.opt),
         }
     }
 
@@ -294,14 +374,17 @@ impl BatchEngine {
     }
 
     /// The KV bytes request `req` will hold while active (contiguous
-    /// mode).
+    /// mode). A speculative pair holds two caches over the same
+    /// positions, so both are reserved up front.
     fn cache_bytes(&self, req: &GenRequest) -> u64 {
-        request_cache_bytes(
-            &self.weights.cfg,
-            self.cfg.opt.kv_levels,
-            req.prompt.len(),
-            req.max_new,
-        )
+        let one = |kv_levels: f32| {
+            request_cache_bytes(&self.weights.cfg, kv_levels, req.prompt.len(), req.max_new)
+        };
+        let verifier = one(self.cfg.opt.kv_levels);
+        match self.cfg.speculate {
+            Some(_) => verifier + one(self.draft_pair().1.kv_levels),
+            None => verifier,
+        }
     }
 
     fn mk_active(
@@ -309,19 +392,30 @@ impl BatchEngine {
         id: usize,
         req: GenRequest,
         sid: Option<u64>,
+        draft_sid: Option<u64>,
         lease: Option<OwnedLease>,
     ) -> Active {
-        let session = match (&self.pager, sid) {
-            (Some(pager), Some(sid)) => DecodeSession::with_cache(
-                Arc::clone(&self.weights),
-                self.cfg.opt,
-                KvCache::paged(pager, sid),
-            ),
-            _ => DecodeSession::new(Arc::clone(&self.weights), self.cfg.opt),
+        let session = |weights: &Arc<Weights>, opt: FwdOptions, psid: Option<u64>| match (
+            &self.pager,
+            psid,
+        ) {
+            (Some(pager), Some(psid)) => {
+                DecodeSession::with_cache(Arc::clone(weights), opt, KvCache::paged(pager, psid))
+            }
+            _ => DecodeSession::new(Arc::clone(weights), opt),
+        };
+        let verifier = session(&self.weights, self.cfg.opt, sid);
+        let decoder = match self.cfg.speculate {
+            Some(sc) => {
+                let (dw, dopt) = self.draft_pair();
+                let draft = session(&dw, dopt, draft_sid);
+                Decoder::Spec(SpecSession::engine_managed(draft, verifier, sc.k))
+            }
+            None => Decoder::Plain(verifier),
         };
         Active {
             id,
-            session,
+            decoder,
             rng: Pcg64::new(self.cfg.seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
             prompt: req.prompt,
             generated: Vec::new(),
@@ -330,6 +424,7 @@ impl BatchEngine {
             prefilled: false,
             last_tick: 0,
             sid,
+            draft_sid,
             _lease: lease,
         }
     }
@@ -364,13 +459,48 @@ impl BatchEngine {
                     }
                     Ok(None) => break, // FIFO: wait for retirements to free pages
                     Ok(Some(sid)) => {
+                        // Speculative mode: the draft needs its own
+                        // *private* pager session (its KV precision
+                        // differs, so it must not map shared prompt
+                        // pages). Admit both halves or neither — a
+                        // verifier holding pages while the draft waits
+                        // would skew the FIFO accounting.
+                        let draft_sid = if self.cfg.speculate.is_some() {
+                            match pager.admit_private(&req.prompt, target.max(req.prompt.len())) {
+                                Err(e) => {
+                                    pager.release_session(sid);
+                                    let (id, req) = self.pending.pop_front().expect("front exists");
+                                    self.events.push(EngineEvent::Rejected {
+                                        id,
+                                        need: e.need,
+                                        budget: e.budget,
+                                    });
+                                    self.finished.push(GenResult {
+                                        id,
+                                        prompt_len: req.prompt.len(),
+                                        tokens: Vec::new(),
+                                        error: Some(e.to_string()),
+                                    });
+                                    continue;
+                                }
+                                Ok(None) => {
+                                    pager.release_session(sid);
+                                    break;
+                                }
+                                Ok(Some(d)) => Some(d),
+                            }
+                        } else {
+                            None
+                        };
                         let (id, req) = self.pending.pop_front().expect("front exists");
+                        let marginal = pager.session_marginal_max_bytes(sid)
+                            + draft_sid.map_or(0, |d| pager.session_marginal_max_bytes(d));
                         self.events.push(EngineEvent::Admitted {
                             id,
                             prompt: req.prompt.len(),
-                            cache_bytes: pager.session_marginal_max_bytes(sid),
+                            cache_bytes: marginal,
                         });
-                        let active = self.mk_active(id, req, Some(sid), None);
+                        let active = self.mk_active(id, req, Some(sid), draft_sid, None);
                         self.active.push(active);
                     }
                 }
@@ -399,7 +529,7 @@ impl BatchEngine {
                             prompt: req.prompt.len(),
                             cache_bytes: bytes,
                         });
-                        let active = self.mk_active(id, req, None, Some(lease));
+                        let active = self.mk_active(id, req, None, None, Some(lease));
                         self.active.push(active);
                     }
                 }
@@ -425,10 +555,29 @@ impl BatchEngine {
         for i in order {
             let a = &self.active[i];
             let sid = a.sid.expect("paged session has a pager id");
-            let new_positions =
-                if a.prefilled { 1 } else { a.prompt.len() - a.session.positions() };
             prot.push(sid);
-            if pager.prepare_step(sid, new_positions, &prot)? {
+            if let Some(dsid) = a.draft_sid {
+                prot.push(dsid);
+            }
+            let ready = match &a.decoder {
+                Decoder::Plain(session) => {
+                    let new_positions =
+                        if a.prefilled { 1 } else { a.prompt.len() - session.positions() };
+                    pager.prepare_step(sid, new_positions, &prot)?
+                }
+                Decoder::Spec(spec) => {
+                    // The hint is exact for the round the pair will run
+                    // this tick (prefill, k-proposal round, or the plain
+                    // closing step) — pages prepared here are pages the
+                    // round writes, nothing more.
+                    let remaining = a.max_new - a.generated.len();
+                    let (draft_new, verifier_new) = spec.reserve_hint(a.prompt.len(), remaining);
+                    let dsid = a.draft_sid.expect("speculative paged session has a draft id");
+                    pager.prepare_step(sid, verifier_new, &prot)?
+                        && pager.prepare_step(dsid, draft_new, &prot)?
+                }
+            };
+            if ready {
                 sel.push(i);
             } else {
                 break; // strict stop: keep the step's working set coherent
@@ -473,13 +622,16 @@ impl BatchEngine {
             .filter(|(i, _)| sel.binary_search(i).is_ok())
             .map(|(_, a)| Mutex::new(a))
             .collect();
-        scoped_try_map(workers, &cells, |_, cell| {
-            lock_or_poisoned(cell).advance(temperature);
+        let advanced = scoped_try_map(workers, &cells, |_, cell| {
+            lock_or_poisoned(cell).advance(temperature)
         })
         .map_err(|p| {
             anyhow::anyhow!("decode step panicked in session slot {}: {}", p.index, p.message)
         })?;
         drop(cells);
+        for r in advanced {
+            r?;
+        }
         self.steps += 1;
         self.events.push(EngineEvent::StepBatch { step: self.steps, active: sel.len() });
         for &i in &sel {
@@ -496,6 +648,9 @@ impl BatchEngine {
         let mut still = Vec::with_capacity(self.active.len());
         for a in self.active.drain(..) {
             if a.done() {
+                if let Decoder::Spec(spec) = &a.decoder {
+                    self.spec_totals.merge(&spec.stats());
+                }
                 self.events.push(EngineEvent::Retired { id: a.id, generated: a.generated.len() });
                 self.finished.push(GenResult {
                     id: a.id,
@@ -563,7 +718,7 @@ impl BatchEngine {
     /// mode shared pages count toward each mapper; the gate charge is
     /// [`BatchEngine::pager`]'s `charged_bytes`, which counts them once).
     pub fn active_cache_bytes(&self) -> u64 {
-        self.active.iter().map(|a| a.session.cache_nbytes()).sum()
+        self.active.iter().map(|a| a.cache_nbytes()).sum()
     }
 
     /// High-water mark of gate-charged cache bytes (≤ the budget by the
@@ -576,6 +731,13 @@ impl BatchEngine {
     /// numerator of the serve bench's sessions/GB headline.
     pub fn peak_concurrent(&self) -> usize {
         self.peak_active
+    }
+
+    /// Aggregated speculation counters over retired sessions (Some only
+    /// when [`EngineConfig::speculate`] is set) — the accept-rate and
+    /// tokens/round numbers `serve-bench` and `perf_spec` report.
+    pub fn spec_stats(&self) -> Option<SpecStats> {
+        self.cfg.speculate.map(|_| self.spec_totals)
     }
 
     /// The pager, in paged mode.
@@ -669,6 +831,55 @@ mod tests {
             assert_eq!(got, want, "page size {page_positions} diverged");
             assert_eq!(e.canonical_events(), oracle.canonical_events());
         }
+    }
+
+    #[test]
+    fn speculative_engine_matches_plain_greedy_decoding() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 1));
+        let draft = Arc::new(crate::quant::rtn_quantize_model_packed(&w, 4));
+        let reqs = |e: &mut BatchEngine| {
+            e.submit(GenRequest { prompt: vec![3, 1, 4, 1, 5], max_new: 7 });
+            e.submit(GenRequest { prompt: vec![2, 7], max_new: 3 });
+        };
+        let mut oracle = BatchEngine::new(Arc::clone(&w), EngineConfig::default());
+        reqs(&mut oracle);
+        let want = oracle.run().unwrap().to_vec();
+        for paged in [None, Some(PagedConfig::default())] {
+            let mut e = BatchEngine::new(
+                Arc::clone(&w),
+                EngineConfig {
+                    speculate: Some(SpecConfig { k: 3 }),
+                    paged,
+                    ..EngineConfig::default()
+                },
+            );
+            e.set_draft(Arc::clone(&draft), FwdOptions::quant(4, 4, false));
+            reqs(&mut e);
+            let got = e.run().unwrap().to_vec();
+            assert_eq!(got, want, "speculative decode diverged (paged={})", paged.is_some());
+            assert_eq!(e.canonical_events(), oracle.canonical_events());
+            assert_eq!(e.active_cache_bytes(), 0, "both caches of every pair retired");
+        }
+    }
+
+    #[test]
+    fn undrafted_speculation_accepts_everything_and_still_matches() {
+        // No set_draft: the pair drafts with the verifier's own weights.
+        // Fewer engine steps than tokens proves whole rounds committed.
+        let mut plain = engine(None, 1);
+        plain.submit(GenRequest { prompt: vec![9, 8, 7], max_new: 9 });
+        let want = plain.run().unwrap().to_vec();
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 1));
+        let mut e = BatchEngine::new(
+            w,
+            EngineConfig { speculate: Some(SpecConfig { k: 4 }), ..EngineConfig::default() },
+        );
+        e.submit(GenRequest { prompt: vec![9, 8, 7], max_new: 9 });
+        let got = e.run().unwrap().to_vec();
+        assert_eq!(got, want);
+        assert!(e.steps() < 9, "all-accept rounds must beat one-token-per-step");
     }
 
     #[test]

@@ -89,6 +89,35 @@ impl KvCache {
         }
     }
 
+    /// Roll every layer back to `positions` cached positions
+    /// (speculative-decode rejection; [`KvSlot::truncate`] contract).
+    /// Contiguous: row storage shrinks so `nbytes()` matches a fresh
+    /// cache of that length bit-for-bit. Paged: whole pages past
+    /// `pages_for(positions)` are unmapped and freed when unshared.
+    pub fn truncate(&mut self, positions: usize) {
+        match &mut self.backend {
+            Backend::Contiguous(layers) => {
+                for l in layers {
+                    l.truncate(positions);
+                }
+            }
+            Backend::Paged(kv) => kv.truncate(positions),
+        }
+    }
+
+    /// Make the cache writable for a step appending `new_positions`
+    /// positions. Contiguous caches are always writable; a paged cache
+    /// forwards to `Pager::prepare_step` so its pages are resident and
+    /// fresh ones pre-allocated (standalone sessions — the engine calls
+    /// the pager directly with its protected set). Returns `false` when
+    /// a paged working set cannot be made resident right now.
+    pub fn reserve(&mut self, new_positions: usize) -> anyhow::Result<bool> {
+        match &mut self.backend {
+            Backend::Contiguous(_) => Ok(true),
+            Backend::Paged(kv) => kv.prepare(new_positions),
+        }
+    }
+
     /// Bytes this session maps: summed row bytes (contiguous) or mapped
     /// pages × page bytes (paged; shared pages count toward each mapper
     /// here but only once against the gate).

@@ -2,7 +2,7 @@
 //! storage with prefix sharing, and continuous batching on top of the
 //! shared `model::forward::block_step` block body.
 //!
-//! Four pieces (see `docs/SERVING.md` for the contracts):
+//! Five pieces (see `docs/SERVING.md` for the contracts):
 //!
 //! * [`kv_cache`] — [`KvCache`]: a session's per-layer KV state (fp32 or
 //!   u8 codes at ≤ 8-bit KV settings, bit-identical to the full-sequence
@@ -22,17 +22,25 @@
 //!   reservation (contiguous) or page-granular growth (paged) — and
 //!   per-session seeded sampling, deterministic at any worker count,
 //!   page size, and eviction pressure.
+//! * [`spec`] — [`SpecSession`]: self-speculative decoding from the
+//!   quantization grid — a packed low-bit draft proposes `k` tokens per
+//!   round, a higher-precision verifier over the *same* checkpoint
+//!   scores all of them in one batched prefill, and rejected positions
+//!   are rolled back bit-exactly; greedy output is token-for-token the
+//!   verifier's own stream.
 //!
-//! CLI entry points: `dartquant generate`, `dartquant serve-bench`;
-//! throughput numbers come from the `perf_decode` and `perf_serve`
-//! benches. Parity with the full-sequence forward and the
-//! paged-vs-contiguous bit-identity gate are enforced by
-//! `rust/tests/serving.rs`.
+//! CLI entry points: `dartquant generate` (`--speculate`),
+//! `dartquant serve-bench`; throughput numbers come from the
+//! `perf_decode`, `perf_serve`, and `perf_spec` benches. Parity with the
+//! full-sequence forward and the paged-vs-contiguous bit-identity gate
+//! are enforced by `rust/tests/serving.rs`; the speculative equality
+//! gate is `rust/tests/spec.rs`.
 
 pub mod engine;
 pub mod kv_cache;
 pub mod pager;
 pub mod session;
+pub mod spec;
 
 pub use engine::{
     request_cache_bytes, BatchEngine, EngineConfig, EngineEvent, GenRequest, GenResult,
@@ -41,3 +49,4 @@ pub use engine::{
 pub use kv_cache::{KvCache, KvSlot, LayerKv};
 pub use pager::{PageLayout, PagedKv, Pager, PagerStats};
 pub use session::{sample_logits, DecodeSession};
+pub use spec::{SpecConfig, SpecSession, SpecStats};

@@ -514,13 +514,32 @@ impl Pager {
     /// fit *yet*), `Err` when the session's maximum working set can
     /// never fit the budget.
     pub fn admit(&self, prompt: &[i32], target: usize) -> Result<Option<u64>, OverBudget> {
+        self.admit_inner(prompt, target, true)
+    }
+
+    /// [`Pager::admit`] without prefix sharing: the session maps no
+    /// registered prompt pages, ever. Speculative decoding's draft
+    /// sessions use this — their KV rows come from a different-precision
+    /// forward, so sharing a verifier session's prefill pages (keyed by
+    /// prompt tokens alone) would silently mix precisions. Pair it with
+    /// never calling [`Pager::register_prefix`] for the session.
+    pub fn admit_private(&self, prompt: &[i32], target: usize) -> Result<Option<u64>, OverBudget> {
+        self.admit_inner(prompt, target, false)
+    }
+
+    fn admit_inner(
+        &self,
+        prompt: &[i32],
+        target: usize,
+        share: bool,
+    ) -> Result<Option<u64>, OverBudget> {
         assert!(!prompt.is_empty(), "admission needs a prompt");
         assert!(target >= prompt.len(), "target below prompt length");
         let p = self.layout.page_positions;
         let mut st = lock_or_poisoned(&self.state);
         // Longest registered full-page prefix, always leaving ≥ 1 suffix
         // token for this session to prefill itself.
-        let max_shared = (prompt.len() - 1) / p;
+        let max_shared = if share { (prompt.len() - 1) / p } else { 0 };
         let mut shared = 0;
         for k in (1..=max_shared).rev() {
             if st.prefix_index.contains_key(&prompt[..k * p]) {
@@ -792,6 +811,40 @@ impl Pager {
         s.positions[layer] = newpos;
     }
 
+    /// Roll layer `layer` of session `sid` back to `positions` cached
+    /// positions (speculative-decode rejection): reset the position
+    /// counter, unmap page-table entries past `pages_for(positions)`,
+    /// free the unmapped pages nobody else maps, and drop prefix-index
+    /// entries that referenced a freed page (the same weak-index rule as
+    /// [`Pager::release_session`]). Rows inside the kept last page past
+    /// `positions` become unreachable and are overwritten by the next
+    /// extend; shared kept pages stay shared and are CoW-forked by
+    /// `prepare_step` before any rewrite.
+    fn truncate(&self, sid: u64, layer: usize, positions: usize) {
+        let keep = self.layout.pages_for(positions);
+        let mut st = lock_or_poisoned(&self.state);
+        let st = &mut *st;
+        let dropped: Vec<usize> = {
+            let s = st.sessions.get_mut(&sid).expect("truncate on a live session");
+            assert!(positions <= s.positions[layer], "paged truncate beyond cached positions");
+            s.positions[layer] = positions;
+            let table = &mut s.tables[layer];
+            table.split_off(keep.min(table.len()))
+        };
+        let mut freed = BTreeSet::new();
+        for slot in dropped {
+            st.slots[slot].refs -= 1;
+            if st.slots[slot].refs == 0 {
+                free_page(st, slot);
+                freed.insert(slot);
+            }
+        }
+        if !freed.is_empty() {
+            st.prefix_index
+                .retain(|_, pages| !pages.iter().flatten().any(|slot| freed.contains(slot)));
+        }
+    }
+
     fn set_row(&self, sid: u64, layer: usize, is_k: bool, pos: usize, head: usize, row: &[f32]) {
         let p = self.layout.page_positions;
         let (page, idx) = {
@@ -854,6 +907,9 @@ impl KvSlot for PagedLayerKv {
     fn extend(&mut self, tn: usize) {
         self.pager.extend(self.sid, self.layer, tn);
     }
+    fn truncate(&mut self, positions: usize) {
+        self.pager.truncate(self.sid, self.layer, positions);
+    }
     fn set_k(&mut self, pos: usize, head: usize, row: &[f32]) {
         self.pager.set_row(self.sid, self.layer, true, pos, head, row);
     }
@@ -906,6 +962,23 @@ impl PagedKv {
     /// the gate; `rust/tests/serving.rs` pins both sides).
     pub fn nbytes(&self) -> u64 {
         self.pager.session_pages(self.sid) as u64 * self.pager.layout().page_bytes()
+    }
+
+    /// Make the session runnable for a step appending `new_positions`
+    /// positions (the standalone-session analogue of the engine's
+    /// per-step [`Pager::prepare_step`] call; `serve::spec` drives this
+    /// before every draft/verifier chunk in paged mode).
+    pub fn prepare(&self, new_positions: usize) -> Result<bool> {
+        self.pager.prepare_step(self.sid, new_positions, &[self.sid])
+    }
+
+    /// Roll every layer back to `positions` cached positions, releasing
+    /// whole pages past `pages_for(positions)` ([`KvSlot::truncate`]
+    /// contract; speculative-decode rejection).
+    pub fn truncate(&mut self, positions: usize) {
+        for l in 0..self.layers.len() {
+            self.layers[l].truncate(positions);
+        }
     }
 }
 
@@ -1119,6 +1192,94 @@ mod tests {
         drop(kvb);
         drop(kva);
         assert_eq!(pager.charged_bytes(), 0);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_and_keeps_shared_ones() {
+        let pager = tiny_pager(4, false, None);
+        let pb = pager.layout().page_bytes();
+        let nl = pager.layout().n_layers as u64;
+        let prompt: Vec<i32> = (0..4).collect(); // exactly 1 full page
+        let a = pager.admit(&prompt, 12).unwrap().unwrap();
+        let mut kva = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kva, 10, 0.0); // 3 pages/layer
+        pager.register_prefix(a, &prompt);
+        // B's 5-token prompt shares A's full prompt page (admission always
+        // leaves ≥ 1 suffix token, so B's own prompt must be longer).
+        let b = pager.admit(&[0, 1, 2, 3, 9], 12).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(b), 4, "B maps A's prompt page");
+        let kvb = PagedKv::new(&pager, b);
+        assert_eq!(pager.charged_bytes(), 3 * nl * pb, "shared page charged once");
+
+        // Rolling A back to 5 positions drops its third page per layer
+        // (pages_for(5) = 2) but keeps the partially-filled second one.
+        let before = read_head(&kva, &pager, 0, 0).data[..5 * pager.layout().hd].to_vec();
+        kva.truncate(5);
+        assert_eq!(kva.positions(), 5);
+        assert_eq!(kva.nbytes(), 2 * nl * pb, "one page released per layer");
+        assert_eq!(pager.charged_bytes(), 2 * nl * pb);
+        let after = read_head(&kva, &pager, 0, 0);
+        assert_eq!(after.shape().0, 5, "reads stop at the truncated length");
+        assert_eq!(&after.data[..before.len()], &before[..], "kept rows untouched");
+
+        // Rolling A back to its prompt page leaves the page B shares
+        // mapped — truncation unmaps A's reference, it doesn't free a
+        // shared page out from under another session.
+        kva.truncate(4);
+        assert_eq!(pager.charged_bytes(), nl * pb, "only the shared prompt page left");
+        drop(kva);
+        assert_eq!(pager.charged_bytes(), nl * pb, "shared page survives under B");
+        drop(kvb);
+        assert_eq!(pager.charged_bytes(), 0);
+    }
+
+    #[test]
+    fn truncate_frees_pages_for_reuse_and_purges_the_prefix_index() {
+        let pager = tiny_pager(4, false, None);
+        let prompt: Vec<i32> = (0..8).collect(); // 2 full pages
+        let a = pager.admit(&prompt, 12).unwrap().unwrap();
+        let mut kva = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kva, 8, 0.0);
+        pager.register_prefix(a, &prompt);
+        assert_eq!(lock_or_poisoned(&pager.state).prefix_index.len(), 2);
+        // Truncating into the second prompt page frees it (refs hit 0) and
+        // must drop the index entry that referenced it — a later admission
+        // may only share pages that still exist.
+        kva.truncate(4);
+        {
+            let st = lock_or_poisoned(&pager.state);
+            assert_eq!(st.prefix_index.len(), 1, "entry referencing the freed page dropped");
+            assert_eq!(st.free.len(), pager.layout().n_layers, "freed slots recycled");
+        }
+        // A 12-token prompt whose first 8 tokens match: without the purge
+        // it would map the freed 8-token entry's dead pages.
+        let long: Vec<i32> = (0..12).collect();
+        let b = pager.admit(&long, 12).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(b), 4, "only the surviving page is shared");
+        pager.release_session(b);
+    }
+
+    #[test]
+    fn admit_private_never_maps_registered_prefix_pages() {
+        let pager = tiny_pager(4, false, None);
+        let prompt: Vec<i32> = (0..9).collect(); // 2 full pages + 1 token
+        let a = pager.admit(&prompt, 12).unwrap().unwrap();
+        let mut kva = PagedKv::new(&pager, a);
+        prefill(&pager, &mut kva, 9, 0.0);
+        pager.register_prefix(a, &prompt);
+        // A sharing admit maps both full prompt pages; a private admit of
+        // the *same* prompt maps none — its rows will come from a
+        // different-precision forward (the speculative draft), and mixing
+        // grids through the index would corrupt whoever shared them.
+        let shared = pager.admit(&prompt, 12).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(shared), 8);
+        let private = pager.admit_private(&prompt, 12).unwrap().unwrap();
+        assert_eq!(pager.shared_positions(private), 0, "private sessions start cold");
+        assert_eq!(pager.session_pages(private), 0, "no pages mapped at private admission");
+        pager.release_session(shared);
+        pager.release_session(private);
+        // The private release touched nothing shared: A still reads back.
+        assert_eq!(pager.positions(a, 0), 9);
     }
 
     #[test]

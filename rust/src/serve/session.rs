@@ -76,6 +76,24 @@ impl DecodeSession {
         self.opt
     }
 
+    /// Roll the cache back to `positions` cached positions — the
+    /// speculative-decode rejection path (`serve::spec`). The discarded
+    /// tail is gone for good: storage shrinks (contiguous) or whole
+    /// pages are released (paged), and re-decoding from the kept prefix
+    /// is bit-identical to never having cached the tail.
+    pub fn truncate(&mut self, positions: usize) {
+        self.cache.truncate(positions);
+    }
+
+    /// Make the cache writable for `new_positions` more positions — a
+    /// no-op for contiguous caches, `Pager::prepare_step` for paged ones
+    /// (see [`KvCache::reserve`]). Standalone drivers (CLI single
+    /// session, `serve::spec`) call this before each prefill chunk; the
+    /// engine prepares its whole step's sessions itself.
+    pub fn reserve(&mut self, new_positions: usize) -> anyhow::Result<bool> {
+        self.cache.reserve(new_positions)
+    }
+
     /// Run the transformer blocks over `tokens` as the next positions,
     /// extending the cache; returns the new positions' residual rows.
     fn advance_blocks(&mut self, tokens: &[i32]) -> Mat {
@@ -104,8 +122,7 @@ impl DecodeSession {
     /// head is per-row).
     pub fn prefill_last(&mut self, tokens: &[i32]) -> Vec<f32> {
         let x = self.advance_blocks(tokens);
-        let last = x.rows_slice(x.rows - 1, x.rows);
-        forward::head_logits(&self.weights, &last).data
+        forward::head_logits_range(&self.weights, &x, x.rows - 1, x.rows).data
     }
 
     /// Decode one token at the next position; returns its logits row.

@@ -1,0 +1,581 @@
+//! Self-speculative decoding from the quantization grid.
+//!
+//! DartQuant's registry emits the *same checkpoint* at several
+//! precisions, which is exactly the pairing speculative decoding wants:
+//! a [`SpecSession`] wraps two [`DecodeSession`]s over the same weights
+//! — an aggressive packed low-bit **draft** (e.g. W4A4) that proposes
+//! `k` tokens per round, and a higher-precision **verifier** that scores
+//! all `k` proposals in one chunked-prefill-style batched step. Rotation
+//! keeps the low-bit token distribution close to the verifier's, which
+//! is what makes the cheap draft's proposals worth verifying.
+//!
+//! # Round protocol
+//!
+//! Both sessions hold independent [`KvCache`]s (contiguous or paged) and
+//! track the same committed token sequence. The invariant between
+//! rounds: each cache holds every committed token *except* a short
+//! pending tail (the newest committed token, plus — draft side, after an
+//! all-accept round — the proposal it never consumed).
+//!
+//! 1. **Propose.** The draft consumes its pending tail, then steps
+//!    `k − 1` more times, sampling (or argmaxing) each of its own logit
+//!    rows: proposals `d₁ … d_k`.
+//! 2. **Verify.** The verifier prefills `[t, d₁, …, d_k]` in one batched
+//!    step — `k + 1` positions, `k + 1` logit rows, each row the
+//!    verifier's distribution after consuming the tokens before it.
+//!    Greedy mode accepts the longest prefix where the verifier argmax
+//!    equals the proposal; sampled mode runs standard rejection sampling
+//!    (accept `d_j` with probability `min(1, p_j(d_j)/q_j(d_j))`), with
+//!    every random draw taken from the caller's seeded `Pcg64` in
+//!    deterministic round order. The round always commits one closing
+//!    token: the verifier's own choice at the first disagreement (the
+//!    residual sample in sampled mode), or its bonus row after `k`
+//!    accepts.
+//! 3. **Roll back.** Both caches truncate to the committed length minus
+//!    one ([`DecodeSession::truncate`]) — rejected positions vanish from
+//!    storage (contiguous rows shrink; whole pages are released), so the
+//!    next round starts from a cache bit-identical to one that never saw
+//!    the rejected tail.
+//!
+//! # Correctness contract
+//!
+//! Greedy speculative decode is **token-for-token identical** to the
+//! verifier decoding alone, at any `k`, worker count, shard count, and
+//! KV backend: the verifier consumes exactly the committed tokens in
+//! order, its chunked scoring prefill produces the same logits as
+//! one-token stepping (the chunked-prefill equivalence gated by
+//! `rust/tests/serving.rs`), every greedy pick uses the same tie-low
+//! argmax as [`sample_logits`], and rollback is bit-exact. Sampled mode
+//! preserves the verifier's distribution (standard rejection-sampling
+//! argument) and is deterministic per `(seed, k)` — the realized stream
+//! legitimately differs across `k`. The gating suite is
+//! `rust/tests/spec.rs`; protocol docs live in `docs/SERVING.md`.
+
+use super::session::{sample_logits, DecodeSession};
+use crate::util::prng::Pcg64;
+use anyhow::{ensure, Result};
+
+/// Speculation knobs — `Copy`, so it rides inside `EngineConfig`
+/// (`serve::engine` plumbs the draft weights separately: an
+/// `Arc<Weights>` cannot live in a `Copy` config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Draft tokens proposed per round (`k ≥ 1`). Per-round cost is one
+    /// draft step per proposal plus one batched verifier step; per-round
+    /// yield is `accepted + 1` committed tokens.
+    pub k: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { k: 4 }
+    }
+}
+
+/// Counters a [`SpecSession`] accumulates across rounds — the accept
+/// rate and effective tokens/round the `perf_spec` bench reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Speculative rounds run (excludes [`SpecSession::begin`] and the
+    /// final-token plain steps).
+    pub rounds: u64,
+    /// Draft tokens proposed.
+    pub proposed: u64,
+    /// Draft tokens the verifier accepted.
+    pub accepted: u64,
+    /// Positions pushed through the draft forward (prefill + steps).
+    pub draft_positions: u64,
+    /// Positions pushed through the verifier forward.
+    pub verify_positions: u64,
+    /// Non-speculative verifier steps (the ≤ 1-token headroom path).
+    pub plain_steps: u64,
+}
+
+impl SpecStats {
+    /// Accepted / proposed (0 when nothing was proposed).
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Committed tokens per speculative round (`accepted/rounds + 1`):
+    /// the effective speedup numerator — a plain decode commits exactly
+    /// 1 token per verifier step.
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64 + 1.0
+        }
+    }
+
+    /// Fold another session's counters into this one — how the engine
+    /// and `serve-bench` aggregate accept rate across retired sessions.
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.rounds += other.rounds;
+        self.proposed += other.proposed;
+        self.accepted += other.accepted;
+        self.draft_positions += other.draft_positions;
+        self.verify_positions += other.verify_positions;
+        self.plain_steps += other.plain_steps;
+    }
+}
+
+/// Softmax probabilities of one logits row at `temperature` — f64, the
+/// same max-shifted exponentials [`sample_logits`] integrates, so the
+/// rejection-sampling ratios line up with how tokens were drawn.
+fn softmax64(row: &[f32], temperature: f32) -> Vec<f64> {
+    let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let exps: Vec<f64> = row.iter().map(|&v| (((v - mx) / temperature) as f64).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / total).collect()
+}
+
+/// Sample an index from non-negative weights summing to `total` with one
+/// uniform draw `u01 ∈ [0, 1)` (same scan order as [`sample_logits`]).
+fn sample_weights(weights: &[f64], total: f64, u01: f64) -> usize {
+    let mut u = u01 * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 && w > 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Greedy pick: delegate to [`sample_logits`] at temperature 0 so ties
+/// break identically to plain decoding (lowest index). Draws nothing.
+fn argmax(row: &[f32]) -> i32 {
+    sample_logits(row, 0.0, &mut Pcg64::new(0)) as i32
+}
+
+/// Two decode sessions over the same checkpoint at two precisions,
+/// committing draft proposals the verifier agrees with (module docs).
+///
+/// ```no_run
+/// use dartquant::model::{FwdOptions, ModelConfig, Weights};
+/// use dartquant::quant::rtn_quantize_model_packed;
+/// use dartquant::serve::{DecodeSession, SpecSession};
+/// use dartquant::util::prng::Pcg64;
+/// use std::sync::Arc;
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ModelConfig::builtin("llama2-tiny")?;
+/// let verifier_w = Arc::new(Weights::default_synthetic(&cfg, 1));
+/// let draft_w = Arc::new(rtn_quantize_model_packed(&verifier_w, 4));
+/// let mut spec = SpecSession::new(
+///     DecodeSession::new(draft_w, FwdOptions::quant(4, 4, false)), // W4A4 draft
+///     DecodeSession::new(verifier_w, FwdOptions::FP),              // fp verifier
+///     4,                                                           // k
+/// );
+/// let out = spec.generate(&[1, 2, 3], 16, 0.0, &mut Pcg64::new(0))?;
+/// assert_eq!(out.len(), 16); // token-for-token the verifier's greedy stream
+/// # Ok(()) }
+/// ```
+pub struct SpecSession {
+    draft: DecodeSession,
+    verifier: DecodeSession,
+    k: usize,
+    /// Whether this session reserves paged working sets itself
+    /// ([`DecodeSession::reserve`] before every chunk). The engine turns
+    /// this off: it prepares all selected sessions' pages on the engine
+    /// thread before the step, with the full protected set.
+    auto_reserve: bool,
+    /// Committed tokens the draft cache has not consumed yet (1 between
+    /// rounds; 2 after an all-accept round — the unconsumed proposal
+    /// plus the bonus token).
+    draft_pending: Vec<i32>,
+    /// Committed tokens the verifier cache has not consumed yet (always
+    /// the single newest token between rounds).
+    verifier_pending: Vec<i32>,
+    primed: bool,
+    stats: SpecStats,
+}
+
+impl SpecSession {
+    /// Pair `draft` and `verifier` sessions at proposal width `k`. The
+    /// sessions must be over the same checkpoint (same vocab and
+    /// tokenization) — precisions are free to differ; that is the point.
+    pub fn new(draft: DecodeSession, verifier: DecodeSession, k: usize) -> SpecSession {
+        assert!(k >= 1, "speculation needs at least one proposal per round");
+        SpecSession {
+            draft,
+            verifier,
+            k,
+            auto_reserve: true,
+            draft_pending: Vec::new(),
+            verifier_pending: Vec::new(),
+            primed: false,
+            stats: SpecStats::default(),
+        }
+    }
+
+    /// [`SpecSession::new`] with paged reservation delegated to the
+    /// caller — the engine variant (see `auto_reserve`). The caller must
+    /// make both caches' working sets resident before `begin`/`round`,
+    /// sized by [`SpecSession::reserve_hint`].
+    pub fn engine_managed(draft: DecodeSession, verifier: DecodeSession, k: usize) -> SpecSession {
+        let mut s = SpecSession::new(draft, verifier, k);
+        s.auto_reserve = false;
+        s
+    }
+
+    /// Proposal width.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Whether [`SpecSession::begin`] has run.
+    pub fn primed(&self) -> bool {
+        self.primed
+    }
+
+    /// Verifier cache positions (the committed-prefix length the engine
+    /// accounts by).
+    pub fn verifier_positions(&self) -> usize {
+        self.verifier.positions()
+    }
+
+    /// Draft cache positions.
+    pub fn draft_positions(&self) -> usize {
+        self.draft.positions()
+    }
+
+    /// Mapped KV bytes across both caches.
+    pub fn cache_nbytes(&self) -> u64 {
+        self.draft.cache_nbytes() + self.verifier.cache_nbytes()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// Positions the next call will append as `(draft, verifier)` —
+    /// exact, so an engine-managed caller can pre-allocate pages without
+    /// over-reserving. `remaining` is the tokens still to generate
+    /// (must be ≥ 1); `prompt_len` sizes the initial prefill.
+    pub fn reserve_hint(&self, prompt_len: usize, remaining: usize) -> (usize, usize) {
+        if !self.primed {
+            return (
+                prompt_len - self.draft.positions(),
+                prompt_len - self.verifier.positions(),
+            );
+        }
+        let k = self.k.min(remaining.saturating_sub(1));
+        if k == 0 {
+            (0, self.verifier_pending.len())
+        } else {
+            (self.draft_pending.len() + k - 1, k + 1)
+        }
+    }
+
+    /// Prefill both caches with the prompt (each from its own cached
+    /// position — a paged verifier admitted onto shared prefix pages
+    /// prefills only its suffix) and commit the first token from the
+    /// verifier's final-row logits: bit-identical to how a plain session
+    /// opens, so speculation changes nothing about token 0.
+    pub fn begin(&mut self, prompt: &[i32], temperature: f32, rng: &mut Pcg64) -> Result<i32> {
+        assert!(!self.primed, "begin on a primed session");
+        assert!(!prompt.is_empty(), "speculation needs a prompt");
+        let vfrom = self.verifier.positions();
+        if self.auto_reserve {
+            ensure!(self.verifier.reserve(prompt.len() - vfrom)?, "verifier pages not resident");
+        }
+        let row = self.verifier.prefill_last(&prompt[vfrom..]);
+        self.stats.verify_positions += (prompt.len() - vfrom) as u64;
+        let t = sample_logits(&row, temperature, rng) as i32;
+        let dfrom = self.draft.positions();
+        if self.auto_reserve {
+            ensure!(self.draft.reserve(prompt.len() - dfrom)?, "draft pages not resident");
+        }
+        self.draft.prefill_last(&prompt[dfrom..]);
+        self.stats.draft_positions += (prompt.len() - dfrom) as u64;
+        self.draft_pending = vec![t];
+        self.verifier_pending = vec![t];
+        self.primed = true;
+        Ok(t)
+    }
+
+    /// One speculative round; returns the 1 ..= `min(k, remaining−1)+1`
+    /// tokens it committed (never more than `remaining`). With less than
+    /// 2 tokens of headroom the round degrades to one plain verifier
+    /// step — proposing past `remaining` would grow the caches past the
+    /// admission target for tokens nobody may emit.
+    pub fn round(&mut self, temperature: f32, rng: &mut Pcg64, remaining: usize) -> Result<Vec<i32>> {
+        assert!(self.primed, "round before begin");
+        if remaining == 0 {
+            return Ok(Vec::new());
+        }
+        let k = self.k.min(remaining - 1);
+        if k == 0 {
+            // Final token: a plain verifier step, exactly like
+            // non-speculative decode.
+            let chunk = std::mem::take(&mut self.verifier_pending);
+            if self.auto_reserve {
+                ensure!(self.verifier.reserve(chunk.len())?, "verifier pages not resident");
+            }
+            let row = self.verifier.prefill_last(&chunk);
+            self.stats.verify_positions += chunk.len() as u64;
+            self.stats.plain_steps += 1;
+            let t = sample_logits(&row, temperature, rng) as i32;
+            self.verifier_pending.push(t);
+            self.draft_pending.push(t);
+            return Ok(vec![t]);
+        }
+
+        // 1. Propose: consume the draft's pending tail, then step k − 1
+        //    more times; sampled mode keeps each draft distribution q_j
+        //    for the acceptance ratios.
+        let chunk = std::mem::take(&mut self.draft_pending);
+        if self.auto_reserve {
+            ensure!(self.draft.reserve(chunk.len() + k - 1)?, "draft pages not resident");
+        }
+        let mut proposals: Vec<i32> = Vec::with_capacity(k);
+        let mut qs: Vec<Vec<f64>> = Vec::new();
+        let mut row = self.draft.prefill_last(&chunk);
+        self.stats.draft_positions += (chunk.len() + k - 1) as u64;
+        for j in 0..k {
+            let d = if temperature > 0.0 {
+                let q = softmax64(&row, temperature);
+                let d = sample_weights(&q, 1.0, rng.uniform());
+                qs.push(q);
+                d as i32
+            } else {
+                argmax(&row)
+            };
+            proposals.push(d);
+            if j + 1 < k {
+                row = self.draft.step(d);
+            }
+        }
+
+        // 2. Verify: score the pending token + all k proposals in one
+        //    batched prefill; row j is the verifier's distribution after
+        //    consuming everything before it.
+        let base = self.verifier.positions();
+        let vchunk: Vec<i32> = self
+            .verifier_pending
+            .drain(..)
+            .chain(proposals.iter().copied())
+            .collect();
+        if self.auto_reserve {
+            ensure!(self.verifier.reserve(vchunk.len())?, "verifier pages not resident");
+        }
+        let logits = self.verifier.prefill(&vchunk);
+        self.stats.verify_positions += vchunk.len() as u64;
+
+        let mut accepted = 0usize;
+        let closing: i32;
+        if temperature <= 0.0 {
+            // Greedy: longest prefix of exact argmax agreement; the
+            // closing token is the verifier's pick at the first
+            // disagreement, or its bonus row after k accepts.
+            loop {
+                let v = argmax(logits.row(accepted));
+                if accepted < k && v == proposals[accepted] {
+                    accepted += 1;
+                } else {
+                    closing = v;
+                    break;
+                }
+            }
+        } else {
+            // Rejection sampling: accept d_j with prob min(1, p/q); on
+            // the first rejection sample the residual max(0, p − q).
+            // All draws come from `rng` in round order — deterministic
+            // per (seed, k).
+            let mut rejected_at: Option<usize> = None;
+            for j in 0..k {
+                let p = softmax64(logits.row(j), temperature);
+                let d = proposals[j] as usize;
+                if rng.uniform() < (p[d] / qs[j][d]).min(1.0) {
+                    accepted += 1;
+                } else {
+                    rejected_at = Some(j);
+                    break;
+                }
+            }
+            closing = match rejected_at {
+                Some(j) => {
+                    let p = softmax64(logits.row(j), temperature);
+                    let res: Vec<f64> =
+                        p.iter().zip(&qs[j]).map(|(&pv, &qv)| (pv - qv).max(0.0)).collect();
+                    let total: f64 = res.iter().sum();
+                    if total > 0.0 {
+                        sample_weights(&res, total, rng.uniform()) as i32
+                    } else {
+                        // p == q exactly: the residual is empty; any
+                        // draw from p preserves the distribution.
+                        sample_weights(&p, 1.0, rng.uniform()) as i32
+                    }
+                }
+                None => sample_logits(logits.row(k), temperature, rng) as i32,
+            };
+        }
+        self.stats.rounds += 1;
+        self.stats.proposed += k as u64;
+        self.stats.accepted += accepted as u64;
+
+        // 3. Roll back: both caches keep exactly the committed prefix
+        //    minus the (new) pending tail.
+        let keep = base + 1 + accepted;
+        self.verifier.truncate(keep);
+        if accepted == k {
+            // All accepted: the draft never consumed its own last
+            // proposal — it rides in the pending tail instead of costing
+            // a catch-up forward pass.
+            self.draft_pending = vec![proposals[k - 1], closing];
+        } else {
+            self.draft.truncate(keep);
+            self.draft_pending = vec![closing];
+        }
+        self.verifier_pending = vec![closing];
+
+        let mut out = proposals;
+        out.truncate(accepted);
+        out.push(closing);
+        Ok(out)
+    }
+
+    /// Generate `max_new` tokens after `prompt`: [`SpecSession::begin`]
+    /// once, then rounds until done. Greedy (`temperature <= 0`) output
+    /// is token-for-token the verifier's own stream; sampled output is
+    /// deterministic per `(seed, k)`.
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(max_new);
+        if max_new == 0 {
+            return Ok(out);
+        }
+        out.push(self.begin(prompt, temperature, rng)?);
+        while out.len() < max_new {
+            let committed = self.round(temperature, rng, max_new - out.len())?;
+            out.extend(committed);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{FwdOptions, ModelConfig, Weights};
+    use std::sync::Arc;
+
+    fn sessions(seed: u64) -> (DecodeSession, DecodeSession) {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, seed));
+        (
+            DecodeSession::new(Arc::clone(&w), FwdOptions::quant(4, 4, false)),
+            DecodeSession::new(w, FwdOptions::FP),
+        )
+    }
+
+    fn verifier_only(seed: u64, prompt: &[i32], max_new: usize) -> Vec<i32> {
+        let (_, mut v) = sessions(seed);
+        let mut rng = Pcg64::new(0);
+        let mut tok = sample_logits(&v.prefill_last(prompt), 0.0, &mut rng) as i32;
+        let mut out = vec![tok];
+        while out.len() < max_new {
+            tok = sample_logits(&v.step(tok), 0.0, &mut rng) as i32;
+            out.push(tok);
+        }
+        out
+    }
+
+    #[test]
+    fn greedy_stream_matches_the_verifier_alone() {
+        let prompt = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        let want = verifier_only(11, &prompt, 14);
+        for k in [1usize, 2, 4, 8] {
+            let (d, v) = sessions(11);
+            let mut spec = SpecSession::new(d, v, k);
+            let got = spec.generate(&prompt, 14, 0.0, &mut Pcg64::new(0)).unwrap();
+            assert_eq!(got, want, "k={k} diverged from the verifier-only stream");
+        }
+    }
+
+    #[test]
+    fn identical_precisions_accept_every_proposal() {
+        let cfg = ModelConfig::builtin("llama2-tiny").unwrap();
+        let w = Arc::new(Weights::default_synthetic(&cfg, 5));
+        let mk = || DecodeSession::new(Arc::clone(&w), FwdOptions::FP);
+        let mut spec = SpecSession::new(mk(), mk(), 4);
+        let out = spec.generate(&[7, 2, 9], 13, 0.0, &mut Pcg64::new(0)).unwrap();
+        assert_eq!(out.len(), 13);
+        let st = spec.stats();
+        assert_eq!(st.accepted, st.proposed, "draft ≡ verifier must accept everything");
+        assert!(st.proposed > 0);
+    }
+
+    #[test]
+    fn stats_account_every_committed_token() {
+        let (d, v) = sessions(3);
+        let mut spec = SpecSession::new(d, v, 3);
+        let out = spec.generate(&[1, 2, 3, 4], 17, 0.0, &mut Pcg64::new(0)).unwrap();
+        assert_eq!(out.len(), 17);
+        let st = spec.stats();
+        // begin commits 1; each round commits accepted+1; plain steps 1.
+        assert_eq!(1 + st.accepted + st.rounds + st.plain_steps, 17);
+        assert!(st.accept_rate() >= 0.0 && st.accept_rate() <= 1.0);
+        assert!(st.tokens_per_round() >= 1.0);
+    }
+
+    #[test]
+    fn round_never_overshoots_remaining() {
+        let (d, v) = sessions(9);
+        let mut spec = SpecSession::new(d, v, 8);
+        let mut rng = Pcg64::new(1);
+        spec.begin(&[5, 5, 5], 0.0, &mut rng).unwrap();
+        let got = spec.round(0.0, &mut rng, 2).unwrap();
+        assert!(got.len() <= 2, "round returned {} tokens for remaining=2", got.len());
+        let got = spec.round(0.0, &mut rng, 1).unwrap();
+        assert_eq!(got.len(), 1, "1-token headroom must take the plain-step path");
+        assert!(spec.stats().plain_steps >= 1);
+    }
+
+    #[test]
+    fn sampled_mode_is_deterministic_per_seed() {
+        let prompt = [2i32, 7, 1, 8];
+        for k in [1usize, 4] {
+            let run = |seed: u64| {
+                let (d, v) = sessions(13);
+                SpecSession::new(d, v, k)
+                    .generate(&prompt, 12, 0.8, &mut Pcg64::new(seed))
+                    .unwrap()
+            };
+            assert_eq!(run(42), run(42), "k={k}: same seed must replay the same stream");
+        }
+    }
+
+    #[test]
+    fn reserve_hint_is_exact_for_every_phase() {
+        let (d, v) = sessions(1);
+        let mut spec = SpecSession::new(d, v, 4);
+        assert_eq!(spec.reserve_hint(6, 10), (6, 6), "prefill phase: whole prompt");
+        let mut rng = Pcg64::new(0);
+        spec.begin(&[1, 2, 3, 4, 5, 6], 0.0, &mut rng).unwrap();
+        // Pending tails are 1 token each: draft consumes 1 + k − 1,
+        // verifier k + 1.
+        assert_eq!(spec.reserve_hint(6, 10), (4, 5));
+        assert_eq!(spec.reserve_hint(6, 3), (2, 3), "k capped by remaining − 1");
+        assert_eq!(spec.reserve_hint(6, 1), (0, 1), "plain-step phase");
+        // The hint must cover what the round actually appends.
+        let before = (spec.draft_positions(), spec.verifier_positions());
+        let hint = spec.reserve_hint(6, 10);
+        spec.round(0.0, &mut rng, 10).unwrap();
+        // After rollback positions can only have shrunk below the peak,
+        // which is exactly before + hint.
+        assert!(spec.draft_positions() <= before.0 + hint.0);
+        assert!(spec.verifier_positions() <= before.1 + hint.1);
+    }
+}

@@ -1,0 +1,89 @@
+//! Shared fixtures for the serving-side integration suites
+//! (`serving.rs`, `shard.rs`, `packed.rs`, `pager.rs`, `spec.rs`).
+//!
+//! Each suite compiles as its own crate and pulls this in with
+//! `mod common;`, so helpers unused by one suite are expected —
+//! hence the file-level `allow(dead_code)`.
+#![allow(dead_code)]
+
+use dartquant::coordinator::MemoryGate;
+use dartquant::data::{Corpus, Dialect};
+use dartquant::model::{ModelConfig, Weights};
+use dartquant::serve::{KvSlot, PagedKv, Pager};
+use dartquant::tensor::Mat;
+use std::sync::Arc;
+
+/// The table2 configs exercised by the quick bench grid (llama3-small
+/// adds grouped-query attention: 6 q heads over 2 kv heads).
+pub const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+
+/// 4-bit KV codes — the paper's serving point — for pager-level tests.
+pub const KV_LEVELS: f32 = 16.0;
+
+/// Synthetic weights plus a 48-token stream: the decode-parity fixture.
+/// Deterministic in (name, seed), like everything else here.
+pub fn model(name: &str, seed: u64) -> (Arc<Weights>, Vec<i32>) {
+    let cfg = ModelConfig::builtin(name).unwrap();
+    let w = Weights::default_synthetic(&cfg, seed);
+    let mut rng = dartquant::util::prng::Pcg64::new(seed ^ 0x5e55);
+    let toks: Vec<i32> = (0..48).map(|_| rng.below(cfg.vocab) as i32).collect();
+    (Arc::new(w), toks)
+}
+
+/// Grammar-initialized weights over the Wiki corpus — the pipeline
+/// suites' fixture (quantization needs a model whose statistics aren't
+/// pure noise).
+pub fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
+    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
+    let w = Weights::default_grammar(cfg, 1, corpus.successor()).unwrap();
+    (w, corpus)
+}
+
+pub fn tiny_cfg() -> ModelConfig {
+    ModelConfig::builtin("llama2-tiny").unwrap()
+}
+
+pub fn tiny_pager(page_positions: usize, spill: bool, budget: Option<u64>) -> Arc<Pager> {
+    Arc::new(Pager::new(
+        &tiny_cfg(),
+        KV_LEVELS,
+        page_positions,
+        spill,
+        Arc::new(MemoryGate::new(budget)),
+    ))
+}
+
+/// Prefill `kv` up to `to` positions through the `KvSlot` surface the
+/// way `block_step` does: prepare, then extend + write rows per layer.
+/// Row contents are a deterministic function of (seed, pos, head, i).
+pub fn prefill_rows(pager: &Arc<Pager>, kv: &mut PagedKv, to: usize, seed: f32) {
+    let from = kv.positions();
+    assert!(
+        pager.prepare_step(kv.sid(), to - from, &[kv.sid()]).unwrap(),
+        "prepare_step deferred a session the test expected to run"
+    );
+    let (nl, nkv, hd) = {
+        let l = pager.layout();
+        (l.n_layers, l.nkv, l.hd)
+    };
+    for l in 0..nl {
+        let slot = kv.layer_mut(l);
+        slot.extend(to - from);
+        for pos in from..to {
+            for head in 0..nkv {
+                let row: Vec<f32> = (0..hd)
+                    .map(|i| seed + (pos * nkv + head) as f32 + i as f32 * 0.5)
+                    .collect();
+                slot.set_k(pos, head, &row);
+                slot.set_v(pos, head, &row);
+            }
+        }
+    }
+}
+
+/// Decode one K head of one layer into a dense matrix.
+pub fn k_head(kv: &mut PagedKv, layer: usize, head: usize, hd: usize) -> Mat {
+    let mut out = Mat::zeros(kv.positions(), hd);
+    kv.layer_mut(layer).k_head_into(head, &mut out);
+    out
+}

@@ -8,18 +8,11 @@
 //! Runs natively (no artifacts needed).
 
 use dartquant::coordinator::Pipeline;
-use dartquant::data::{Corpus, Dialect};
 use dartquant::eval::{ppl_native, EvalSpec};
-use dartquant::model::{BitSetting, FwdOptions, ModelConfig, Weights};
+use dartquant::model::{BitSetting, FwdOptions, ModelConfig};
 
-fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
-    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let w = Weights::default_grammar(cfg, 1, corpus.successor()).unwrap();
-    (w, corpus)
-}
-
-/// The table2 configs exercised by the quick bench grid.
-const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+mod common;
+use common::{grammar, TABLE2_CONFIGS};
 
 #[test]
 fn packed_pipeline_shrinks_weights_and_matches_dense_ppl() {

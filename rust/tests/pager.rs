@@ -14,63 +14,12 @@
 //! Engine-level gates (paged decode ≡ contiguous decode) live in
 //! `rust/tests/serving.rs`; this file drives the pager directly.
 
-use dartquant::coordinator::MemoryGate;
-use dartquant::model::ModelConfig;
-use dartquant::serve::{KvSlot, PageLayout, PagedKv, Pager};
+use dartquant::serve::{PageLayout, PagedKv};
 use dartquant::tensor::Mat;
 use dartquant::util::propcheck::{gen, Runner};
-use std::sync::Arc;
 
-const KV_LEVELS: f32 = 16.0; // 4-bit KV codes — the paper's serving point
-
-fn tiny_cfg() -> ModelConfig {
-    ModelConfig::builtin("llama2-tiny").unwrap()
-}
-
-fn tiny_pager(page_positions: usize, spill: bool, budget: Option<u64>) -> Arc<Pager> {
-    Arc::new(Pager::new(
-        &tiny_cfg(),
-        KV_LEVELS,
-        page_positions,
-        spill,
-        Arc::new(MemoryGate::new(budget)),
-    ))
-}
-
-/// Prefill `kv` up to `to` positions through the `KvSlot` surface the
-/// way `block_step` does: prepare, then extend + write rows per layer.
-/// Row contents are a deterministic function of (seed, pos, head, i).
-fn prefill_rows(pager: &Arc<Pager>, kv: &mut PagedKv, to: usize, seed: f32) {
-    let from = kv.positions();
-    assert!(
-        pager.prepare_step(kv.sid(), to - from, &[kv.sid()]).unwrap(),
-        "prepare_step deferred a session the test expected to run"
-    );
-    let (nl, nkv, hd) = {
-        let l = pager.layout();
-        (l.n_layers, l.nkv, l.hd)
-    };
-    for l in 0..nl {
-        let slot = kv.layer_mut(l);
-        slot.extend(to - from);
-        for pos in from..to {
-            for head in 0..nkv {
-                let row: Vec<f32> = (0..hd)
-                    .map(|i| seed + (pos * nkv + head) as f32 + i as f32 * 0.5)
-                    .collect();
-                slot.set_k(pos, head, &row);
-                slot.set_v(pos, head, &row);
-            }
-        }
-    }
-}
-
-/// Decode one K head of one layer into a dense matrix.
-fn k_head(kv: &mut PagedKv, layer: usize, head: usize, hd: usize) -> Mat {
-    let mut out = Mat::zeros(kv.positions(), hd);
-    kv.layer_mut(layer).k_head_into(head, &mut out);
-    out
-}
+mod common;
+use common::{k_head, prefill_rows, tiny_cfg, tiny_pager, KV_LEVELS};
 
 #[test]
 fn layout_math_is_page_granular() {

@@ -27,17 +27,8 @@ use dartquant::tensor::Mat;
 use dartquant::util::propcheck::{gen, Runner};
 use std::sync::Arc;
 
-/// The table2 configs exercised by the quick bench grid (llama3-small
-/// adds grouped-query attention: 6 q heads over 2 kv heads).
-const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
-
-fn model(name: &str, seed: u64) -> (Arc<Weights>, Vec<i32>) {
-    let cfg = ModelConfig::builtin(name).unwrap();
-    let w = Weights::default_synthetic(&cfg, seed);
-    let mut rng = dartquant::util::prng::Pcg64::new(seed ^ 0x5e55);
-    let toks: Vec<i32> = (0..48).map(|_| rng.below(cfg.vocab) as i32).collect();
-    (Arc::new(w), toks)
-}
+mod common;
+use common::{model, TABLE2_CONFIGS};
 
 /// Per-position NLLs from a session fed `prefill_len` prompt tokens and
 /// then stepped one token at a time — the incremental counterpart of

@@ -14,25 +14,17 @@
 //! Runs natively (no artifacts needed).
 
 use dartquant::coordinator::{Pipeline, PipelineReport};
-use dartquant::data::{Corpus, Dialect};
 use dartquant::model::{forward_one, BitSetting, FwdOptions, ModelConfig, NoCapture, Weights};
 use dartquant::serve::{sample_logits, BatchEngine, DecodeSession, EngineConfig, GenRequest};
 use dartquant::util::prng::Pcg64;
 use std::sync::Arc;
 
-/// The table2 configs exercised by the quick bench grid (llama3-small
-/// adds grouped-query attention: 6 q heads over 2 kv heads).
-const TABLE2_CONFIGS: [&str; 2] = ["llama2-tiny", "llama3-small"];
+mod common;
+use common::{grammar, TABLE2_CONFIGS};
 
 /// The gate: every count must reproduce shards=1 bit-for-bit, including
 /// 7 (doesn't divide any head count or row count evenly).
 const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
-
-fn grammar(cfg: &ModelConfig) -> (Weights, Corpus) {
-    let corpus = Corpus::new(Dialect::Wiki, cfg.vocab, 7);
-    let w = Weights::default_grammar(cfg, 1, corpus.successor()).unwrap();
-    (w, corpus)
-}
 
 /// One quantization pipeline run at (method, shards, workers); packed
 /// storage so weight bytes compare the true low-bit footprint.

@@ -1,0 +1,381 @@
+//! Speculative-decoding equality gate (`serve::spec`):
+//!
+//! * **exact equality** — greedy speculative decode is token-for-token
+//!   identical to the verifier decoding alone, at every tested draft
+//!   window `k ∈ {1, 2, 4, 8}`, KV backend (contiguous, paged P=16),
+//!   worker count {1, 4}, and shard count — the tentpole contract,
+//! * **seeded sampling** — at temperature > 0 the realized stream is a
+//!   deterministic function of (seed, k), invariant to workers and
+//!   backend,
+//! * **degenerate shapes** — draft ≡ verifier precision accepts every
+//!   proposal; `k = 1`; prompts longer than the continuation,
+//! * **rollback** — a rejected round truncates both caches to state
+//!   observationally bit-identical to a fresh prefill of the accepted
+//!   prefix (same bytes, same positions, same continuation logits), and
+//!   paged mode releases the freed pages,
+//! * a `util::propcheck` property pins accepted-prefix length as
+//!   invariant to the KV backend.
+//!
+//! Runs natively (no artifacts needed).
+
+use dartquant::model::{FwdOptions, Weights};
+use dartquant::serve::{
+    BatchEngine, DecodeSession, EngineConfig, GenRequest, KvCache, PagedConfig, SpecConfig,
+    SpecSession,
+};
+use dartquant::util::prng::Pcg64;
+use dartquant::util::propcheck::{gen, Runner};
+use std::sync::Arc;
+
+mod common;
+use common::{model, tiny_pager, TABLE2_CONFIGS};
+
+/// A packed low-bit draft of the same checkpoint — the self-speculative
+/// setup the tentpole serves.
+fn packed_draft(w: &Arc<Weights>, bits: u8) -> Arc<Weights> {
+    Arc::new(dartquant::quant::rtn_quantize_model_packed(w, bits))
+}
+
+#[test]
+fn greedy_speculative_decode_is_token_identical_at_every_k_backend_and_worker_count() {
+    for name in TABLE2_CONFIGS {
+        let (w, toks) = model(name, 41);
+        let draft = packed_draft(&w, 4);
+        let base =
+            EngineConfig { opt: FwdOptions::quant(8, 8, false), seed: 3, ..Default::default() };
+        let requests: Vec<(Vec<i32>, usize)> =
+            (0..3).map(|i| (toks[i * 6..i * 6 + 6 + i].to_vec(), 5 + 2 * i)).collect();
+        let run = |speculate: Option<SpecConfig>, paged: Option<PagedConfig>, workers: usize| {
+            let mut e = BatchEngine::new(
+                Arc::clone(&w),
+                EngineConfig { speculate, paged, workers, ..base },
+            );
+            if speculate.is_some() {
+                e.set_draft(Arc::clone(&draft), FwdOptions::quant(4, 8, false));
+            }
+            for (prompt, max_new) in &requests {
+                e.submit(GenRequest { prompt: prompt.clone(), max_new: *max_new });
+            }
+            e.run().unwrap();
+            e
+        };
+        let oracle = run(None, None, 1);
+        for k in [1usize, 2, 4, 8] {
+            for paged in [None, Some(PagedConfig { page_positions: 16, spill: false })] {
+                for workers in [1usize, 4] {
+                    let e = run(Some(SpecConfig { k }), paged, workers);
+                    let ctx = format!(
+                        "{name} k={k} paged={} workers={workers}",
+                        paged.is_some()
+                    );
+                    assert_eq!(e.results(), oracle.results(), "{ctx}: tokens diverged");
+                    assert_eq!(
+                        e.canonical_events(),
+                        oracle.canonical_events(),
+                        "{ctx}: lifecycle diverged"
+                    );
+                    if let Some(pager) = e.pager() {
+                        assert_eq!(pager.charged_bytes(), 0, "{ctx}: pages leaked");
+                    }
+                    let stats = e.spec_stats().unwrap();
+                    assert!(stats.rounds > 0, "{ctx}: no speculative round ever ran");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_speculative_decode_is_shard_invariant() {
+    // The verifier's greedy stream is bit-identical at any shard count,
+    // so the speculative stream must be too — including when only the
+    // pair's forwards are sharded and the oracle's are not.
+    let (w, toks) = model("llama2-tiny", 44);
+    let draft = packed_draft(&w, 4);
+    let base = EngineConfig { opt: FwdOptions::quant(8, 8, false), seed: 7, ..Default::default() };
+    let mut oracle = BatchEngine::new(Arc::clone(&w), base);
+    oracle.submit(GenRequest { prompt: toks[..9].to_vec(), max_new: 8 });
+    oracle.run().unwrap();
+    for shards in [1usize, 2, 4] {
+        let opt = base.opt.with_shards(shards);
+        let mut e = BatchEngine::new(
+            Arc::clone(&w),
+            EngineConfig { opt, speculate: Some(SpecConfig { k: 4 }), ..base },
+        );
+        e.set_draft(Arc::clone(&draft), FwdOptions::quant(4, 8, false).with_shards(shards));
+        e.submit(GenRequest { prompt: toks[..9].to_vec(), max_new: 8 });
+        e.run().unwrap();
+        assert_eq!(e.results(), oracle.results(), "shards={shards}");
+    }
+}
+
+#[test]
+fn seeded_sampling_stream_is_deterministic_per_seed_at_any_k() {
+    // Temperature > 0: the realized stream is a deterministic function
+    // of (seed, k) — repeat runs, worker counts, and KV backends must
+    // reproduce it exactly. (Different k legitimately realizes different
+    // streams: the rejection-sampling draw order depends on k.)
+    let (w, toks) = model("llama2-tiny", 42);
+    let draft = packed_draft(&w, 4);
+    for k in [1usize, 2, 4, 8] {
+        let run = |paged: Option<PagedConfig>, workers: usize| {
+            let mut e = BatchEngine::new(
+                Arc::clone(&w),
+                EngineConfig {
+                    opt: FwdOptions::quant(8, 8, false),
+                    seed: 9,
+                    temperature: 0.8,
+                    speculate: Some(SpecConfig { k }),
+                    paged,
+                    workers,
+                    ..Default::default()
+                },
+            );
+            e.set_draft(Arc::clone(&draft), FwdOptions::quant(4, 8, false));
+            e.submit(GenRequest { prompt: toks[..7].to_vec(), max_new: 9 });
+            e.submit(GenRequest { prompt: toks[7..12].to_vec(), max_new: 6 });
+            e.run().unwrap().to_vec()
+        };
+        let want = run(None, 1);
+        assert!(want.iter().all(|r| r.error.is_none()), "k={k}");
+        assert_eq!(want[0].tokens.len(), 9, "k={k}: short stream");
+        assert_eq!(run(None, 1), want, "k={k}: rerun diverged");
+        assert_eq!(run(None, 4), want, "k={k}: workers changed the stream");
+        let paged = Some(PagedConfig { page_positions: 16, spill: false });
+        assert_eq!(run(paged, 1), want, "k={k}: paged backend changed the stream");
+        assert_eq!(run(paged, 4), want, "k={k}: paged × workers changed the stream");
+    }
+}
+
+#[test]
+fn identical_precisions_accept_every_proposal_through_the_engine() {
+    // Draft ≡ verifier (no set_draft): every proposal must accept, so
+    // total engine steps collapse well below one per token.
+    let (w, toks) = model("llama2-tiny", 45);
+    let mut e = BatchEngine::new(
+        Arc::clone(&w),
+        EngineConfig { speculate: Some(SpecConfig { k: 4 }), ..Default::default() },
+    );
+    e.submit(GenRequest { prompt: toks[..6].to_vec(), max_new: 12 });
+    e.run().unwrap();
+    let stats = e.spec_stats().unwrap();
+    assert_eq!(stats.accepted, stats.proposed, "identical models must all-accept");
+    assert!(stats.proposed > 0);
+    assert!(e.steps() < 12, "all-accept rounds must beat one-token-per-step");
+}
+
+#[test]
+fn prompts_longer_than_the_continuation_clamp_the_round() {
+    // max_new < k: rounds clamp to the remaining headroom (k_round =
+    // remaining − 1, down to the plain single-step path) and the stream
+    // still matches the verifier alone — in both backends.
+    let (w, toks) = model("llama2-tiny", 46);
+    let draft = packed_draft(&w, 4);
+    let base = EngineConfig { opt: FwdOptions::quant(8, 8, false), ..Default::default() };
+    for max_new in [1usize, 2, 3] {
+        let mut oracle = BatchEngine::new(Arc::clone(&w), base);
+        oracle.submit(GenRequest { prompt: toks[..20].to_vec(), max_new });
+        oracle.run().unwrap();
+        for paged in [None, Some(PagedConfig { page_positions: 16, spill: false })] {
+            let mut e = BatchEngine::new(
+                Arc::clone(&w),
+                EngineConfig { speculate: Some(SpecConfig { k: 8 }), paged, ..base },
+            );
+            e.set_draft(Arc::clone(&draft), FwdOptions::quant(4, 8, false));
+            e.submit(GenRequest { prompt: toks[..20].to_vec(), max_new });
+            e.run().unwrap();
+            assert_eq!(
+                e.results(),
+                oracle.results(),
+                "max_new={max_new} paged={}",
+                paged.is_some()
+            );
+        }
+    }
+}
+
+/// Build a standalone speculative pair over `pager`-less contiguous
+/// caches (`paged = false`) or one shared pager (`paged = true`, the
+/// draft admitted privately — different KV precision must never share
+/// prefix pages).
+fn standalone_pair(
+    w: &Arc<Weights>,
+    draft_w: &Arc<Weights>,
+    prompt: &[i32],
+    max_new: usize,
+    k: usize,
+    page_positions: Option<usize>,
+) -> SpecSession {
+    let vopt = FwdOptions::quant(8, 4, false); // 4-bit KV == common::KV_LEVELS
+    let dopt = FwdOptions::quant(4, 4, false);
+    match page_positions {
+        None => SpecSession::new(
+            DecodeSession::new(Arc::clone(draft_w), dopt),
+            DecodeSession::new(Arc::clone(w), vopt),
+            k,
+        ),
+        Some(p) => {
+            let pager = tiny_pager(p, false, None);
+            let target = (prompt.len() + max_new - 1).max(prompt.len());
+            let vsid = pager.admit(prompt, target).unwrap().unwrap();
+            let dsid = pager.admit_private(prompt, target).unwrap().unwrap();
+            SpecSession::new(
+                DecodeSession::with_cache(
+                    Arc::clone(draft_w),
+                    dopt,
+                    KvCache::paged(&pager, dsid),
+                ),
+                DecodeSession::with_cache(Arc::clone(w), vopt, KvCache::paged(&pager, vsid)),
+                k,
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_accepted_prefix_length_is_invariant_to_the_kv_backend() {
+    // The draft's proposals and the verifier's verdicts depend only on
+    // model math, never on how KV rows are stored — so per-run accept
+    // counts (and the tokens) must match between a contiguous pair and a
+    // paged pair at any page size.
+    let (w, toks) = model("llama2-tiny", 43);
+    let draft_w = packed_draft(&w, 4);
+    Runner::new().cases(10).run("accepted prefix is backend-invariant", |rng| {
+        let k = 1 + rng.below(8);
+        let plen = gen::size(rng, 2, 16);
+        let max_new = 1 + rng.below(10);
+        let page = [1usize, 4, 16][rng.below(3)];
+        let prompt = &toks[..plen];
+        let mut streams = Vec::new();
+        let mut stats = Vec::new();
+        for paged in [None, Some(page)] {
+            let mut spec = standalone_pair(&w, &draft_w, prompt, max_new, k, paged);
+            let mut rng2 = Pcg64::new(17);
+            let out = spec.generate(prompt, max_new, 0.0, &mut rng2).unwrap();
+            streams.push(out);
+            stats.push(spec.stats());
+        }
+        if streams[0] != streams[1] {
+            return Err(format!("tokens diverged: {:?} vs {:?}", streams[0], streams[1]));
+        }
+        if stats[0] != stats[1] {
+            return Err(format!(
+                "k={k} plen={plen} max_new={max_new} P={page}: stats diverged: {:?} vs {:?}",
+                stats[0], stats[1]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rejected_rounds_roll_both_caches_back_to_the_committed_prefix() {
+    // A draft from a *different* synthetic seed proposes near-random
+    // tokens, forcing rejections; greedy output must still be exactly
+    // the verifier's own stream, and the pending-tail accounting must
+    // land where the round protocol says it lands.
+    let (w, toks) = model("llama2-tiny", 47);
+    let (mismatched, _) = model("llama2-tiny", 48); // same config, different weights
+    let opt = FwdOptions::quant(8, 8, false);
+    let prompt = &toks[..8];
+    let max_new = 10;
+
+    // Verifier-alone oracle.
+    let mut solo = BatchEngine::new(Arc::clone(&w), EngineConfig { opt, ..Default::default() });
+    solo.submit(GenRequest { prompt: prompt.to_vec(), max_new });
+    let want = solo.run().unwrap()[0].tokens.clone();
+
+    let mut spec = SpecSession::new(
+        DecodeSession::new(Arc::clone(&mismatched), opt),
+        DecodeSession::new(Arc::clone(&w), opt),
+        4,
+    );
+    let out = spec.generate(prompt, max_new, 0.0, &mut Pcg64::new(0)).unwrap();
+    assert_eq!(out, want, "rejections must never leak draft tokens into the stream");
+    let stats = spec.stats();
+    assert!(
+        stats.accepted < stats.proposed,
+        "a mismatched draft should have been rejected at least once \
+         (accepted {} of {})",
+        stats.accepted,
+        stats.proposed
+    );
+    // Pending-tail invariant after the final commit: the verifier always
+    // holds every committed token but the newest; the draft's pending
+    // tail is 1 between rounds, 2 after an all-accept carry, plus at
+    // most 1 from a final plain step.
+    let committed = prompt.len() + out.len();
+    assert_eq!(spec.verifier_positions(), committed - 1);
+    let dpos = spec.draft_positions();
+    assert!(
+        (committed - 3..committed).contains(&dpos),
+        "draft positions {dpos} outside the pending-tail envelope of {committed}"
+    );
+
+    // Rolled-back caches account exactly like sessions that only ever
+    // prefilled the committed prefix each cache has consumed.
+    let seq: Vec<i32> = prompt.iter().chain(&out).copied().collect();
+    let mut fresh_d = DecodeSession::new(Arc::clone(&mismatched), opt);
+    fresh_d.prefill(&seq[..dpos]);
+    let mut fresh_v = DecodeSession::new(Arc::clone(&w), opt);
+    fresh_v.prefill(&seq[..committed - 1]);
+    assert_eq!(
+        spec.cache_nbytes(),
+        fresh_d.cache_nbytes() + fresh_v.cache_nbytes(),
+        "post-rollback bytes differ from fresh prefills of the same prefixes"
+    );
+}
+
+/// Rollback must leave a cache observationally identical to one that
+/// only ever prefilled the kept prefix: same byte accounting, same
+/// positions, and — the bit-for-bit part — identical logits for any
+/// continuation (logits integrate every cached row, so a single
+/// corrupted or stale-read row would diverge).
+#[test]
+fn truncate_is_indistinguishable_from_a_fresh_prefill_in_both_backends() {
+    let (w, toks) = model("llama2-tiny", 49);
+    let opt = FwdOptions::quant(8, 4, false); // 4-bit KV == common::KV_LEVELS
+    let (keep, full) = (6usize, 10usize);
+
+    // Contiguous.
+    let mut rolled = DecodeSession::new(Arc::clone(&w), opt);
+    rolled.prefill(&toks[..full]);
+    rolled.truncate(keep);
+    let mut fresh = DecodeSession::new(Arc::clone(&w), opt);
+    fresh.prefill(&toks[..keep]);
+    assert_eq!(rolled.positions(), fresh.positions());
+    assert_eq!(rolled.cache_nbytes(), fresh.cache_nbytes());
+    assert_eq!(
+        rolled.prefill(&toks[keep..full + 2]),
+        fresh.prefill(&toks[keep..full + 2]),
+        "contiguous: rolled-back cache decodes differently from a fresh prefill"
+    );
+
+    // Paged, P=4: keep=6 straddles a page boundary (1 full page + a
+    // partially-kept one); the dropped tail page must be released.
+    let pager = tiny_pager(4, false, None);
+    let lay_bytes = pager.layout().page_bytes() * pager.layout().n_layers as u64;
+    let sid = pager.admit(&toks[..full], full + 4).unwrap().unwrap();
+    let mut rolled = DecodeSession::with_cache(Arc::clone(&w), opt, KvCache::paged(&pager, sid));
+    rolled.reserve(full).unwrap();
+    rolled.prefill(&toks[..full]);
+    assert_eq!(pager.session_pages(sid), 3 * pager.layout().n_layers, "10 positions, P=4");
+    rolled.truncate(keep);
+    assert_eq!(
+        pager.session_pages(sid),
+        2 * pager.layout().n_layers,
+        "paged rollback must release the dropped tail page"
+    );
+    assert_eq!(pager.charged_bytes(), 2 * lay_bytes, "released pages leave the gate");
+    let fsid = pager.admit(&toks[..keep], keep + full + 2).unwrap().unwrap();
+    let mut fresh = DecodeSession::with_cache(Arc::clone(&w), opt, KvCache::paged(&pager, fsid));
+    fresh.reserve(keep).unwrap();
+    fresh.prefill(&toks[..keep]);
+    assert_eq!(rolled.positions(), fresh.positions());
+    assert_eq!(rolled.cache_nbytes(), fresh.cache_nbytes());
+    rolled.reserve(full + 2 - keep).unwrap();
+    let a = rolled.prefill(&toks[keep..full + 2]);
+    fresh.reserve(full + 2 - keep).unwrap();
+    let b = fresh.prefill(&toks[keep..full + 2]);
+    assert_eq!(a, b, "paged: rolled-back cache decodes differently from a fresh prefill");
+}

@@ -15,6 +15,9 @@
 #   perf_serve     native; BENCH_serve.json — paged KV vs contiguous
 #                  (sessions/GB, prefix hit rate, p99 step µs;
 #                  acceptance: shared-prefix ratio ≥ 2)
+#   perf_spec      native; BENCH_spec.json — self-speculative decoding
+#                  (accept rate, tokens/round, decode speedup; acceptance:
+#                  speculative streams token-identical to the verifier's)
 #   perf_streaming native; BENCH_streaming.json — out-of-core vs
 #                  in-memory pipeline cost + canonical byte-identity
 #   perf_hotpath / perf_scheduler need artifacts/ (PJRT executables);
@@ -35,6 +38,7 @@ echo "bench-json: DQ_WORKERS=$DQ_WORKERS receipts -> $DQ_BENCH_JSON"
 cargo bench --bench perf_gemm
 cargo bench --bench perf_decode
 cargo bench --bench perf_serve
+cargo bench --bench perf_spec
 cargo bench --bench perf_streaming
 if [ -d artifacts ]; then
     cargo bench --bench perf_hotpath
